@@ -1,0 +1,83 @@
+//! Bench: the L3 hot path — PJRT inference latency per artifact variant,
+//! frame-source + queue overhead, and end-to-end serving throughput.
+//!
+//! Requires `make artifacts`. Run with: `cargo bench --bench runtime_hotpath`
+
+use std::rc::Rc;
+
+use vaqf::coordinator::{serve, FrameSource, ServeConfig};
+use vaqf::runtime::{InferenceEngine, Manifest, PjrtBackend};
+use vaqf::util::bench::{report_metric, Bench};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = "artifacts";
+    let man = match Manifest::load(artifacts) {
+        Ok(m) => m,
+        Err(e) => {
+            println!("skipping runtime_hotpath: {e}");
+            return Ok(());
+        }
+    };
+    let mut engine = InferenceEngine::new()?;
+    for v in &man.variants {
+        engine.load_variant(v)?;
+    }
+    let engine = Rc::new(engine);
+
+    println!("== PJRT inference latency per variant ==");
+    let mut bench = Bench::new();
+    for v in &man.variants {
+        let source = FrameSource::new(v.config.clone(), man.seed, None);
+        let frame = source.make_frame(0);
+        let tag = v.tag.clone();
+        let e = Rc::clone(&engine);
+        let r = bench.run(&format!("pjrt infer {tag}"), || {
+            let _ = e.infer(&tag, &frame.patches).unwrap();
+        });
+        report_metric(
+            &format!("{tag} throughput"),
+            1.0 / r.mean_s(),
+            "frames/s",
+        );
+    }
+
+    println!("\n== frame source + queue overhead (no inference) ==");
+    let v0 = &man.variants[0];
+    let source = FrameSource::new(v0.config.clone(), man.seed, None);
+    bench.run("frame generation", || {
+        let _ = source.make_frame(1);
+    });
+
+    println!("\n== end-to-end serving (pjrt backend, micro_w1a8) ==");
+    if man.find("micro_w1a8").is_some() {
+        let cfg = ServeConfig {
+            offered_fps: 500.0,
+            frames: 200,
+            queue_depth: 8,
+            source_seed: man.seed,
+        };
+        let src = FrameSource::new(
+            man.find("micro_w1a8").unwrap().config.clone(),
+            man.seed,
+            Some(cfg.offered_fps),
+        );
+        let report = serve(
+            src,
+            Box::new(PjrtBackend {
+                engine: Rc::clone(&engine),
+                tag: "micro_w1a8".into(),
+            }),
+            &cfg,
+        )?;
+        println!("{}", report.render());
+        // Coordinator overhead: e2e latency minus device latency.
+        let oh = (report.e2e_latency.mean - report.device_latency.mean).max(0.0);
+        report_metric("coordinator overhead (mean)", oh * 1e3, "ms");
+        report_metric(
+            "coordinator overhead fraction",
+            100.0 * oh / report.e2e_latency.mean.max(1e-12),
+            "%",
+        );
+    }
+    Ok(())
+}

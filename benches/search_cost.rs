@@ -1,0 +1,48 @@
+//! Bench: the cost of the VAQF compilation step (paper §3: "several
+//! minutes to several hours" with Vivado in the loop; our analytical
+//! substitute runs in milliseconds-to-seconds) and the ≤4-round search
+//! guarantee.
+//!
+//! Run with: `cargo bench --bench search_cost`
+
+use vaqf::compiler::{compile, CompileRequest};
+use vaqf::hw::{zcu102, zcu111};
+use vaqf::model::VitPreset;
+use vaqf::util::bench::{report_metric, Bench};
+
+fn main() {
+    println!("== VAQF compilation-step cost ==\n");
+    let mut bench = Bench::heavy();
+    for model in VitPreset::all() {
+        for (dev_name, dev) in [("zcu102", zcu102()), ("zcu111", zcu111())] {
+            let req = CompileRequest {
+                model: model.config(),
+                device: dev,
+                target_fps: 24.0,
+            };
+            let name = format!("compile {} @24FPS on {dev_name}", req.model.name);
+            bench.run(&name, || {
+                let _ = compile(&req);
+            });
+        }
+    }
+
+    println!("\nsearch-round accounting (paper: ≤4 rounds for range 1..16):");
+    for fps in [5.0, 12.0, 24.0, 30.0, 40.0] {
+        let req = CompileRequest {
+            model: VitPreset::DeiTBase.config(),
+            device: zcu102(),
+            target_fps: fps,
+        };
+        match compile(&req) {
+            Ok(out) => {
+                report_metric(
+                    &format!("target {fps:>4.0} FPS → W1A{} rounds", out.act_bits),
+                    (out.rounds.len() - 1) as f64,
+                    "probes (excl. FR_max)",
+                );
+            }
+            Err(e) => println!("  target {fps:>4.0} FPS infeasible: {e}"),
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! Bench: regenerate paper Table 5 — resource utilization and performance
+//! of the VAQF-generated DeiT-base accelerators (W32A32 / W1A8 / W1A6) on
+//! the simulated ZCU102 — and time the generation itself.
+//!
+//! Run with: `cargo bench --bench table5_accelerators`
+
+use vaqf::compiler::{render_table5, table5_rows, PAPER_TABLE5};
+use vaqf::hw::zcu102;
+use vaqf::model::deit_base;
+use vaqf::util::bench::{report_metric, Bench};
+
+fn main() {
+    let dev = zcu102();
+    let model = deit_base();
+
+    println!("== Table 5 regeneration (DeiT-base on simulated ZCU102) ==\n");
+    let rows = table5_rows(&model, &dev, &[8, 6]);
+    println!("{}", render_table5(&rows, &dev));
+
+    println!("paper-vs-measured:");
+    for (label, paper_fps, paper_gops) in PAPER_TABLE5 {
+        if let Some(r) = rows.iter().find(|r| r.label == label) {
+            println!(
+                "  {label:<8} paper {paper_fps:>5.1} FPS / {paper_gops:>6.1} GOPS   ours {:>5.1} FPS / {:>6.1} GOPS   ratio {:.2}",
+                r.fps,
+                r.gops,
+                r.fps / paper_fps
+            );
+        }
+    }
+
+    // §6.3.1 derived claims.
+    let base = &rows[0];
+    let w1a8 = &rows[1];
+    let w1a6 = &rows[2];
+    println!("\nderived speedups (paper: 2.48x / 3.16x):");
+    report_metric("W1A8 / W32A32 FPS", w1a8.fps / base.fps, "x");
+    report_metric("W1A6 / W32A32 FPS", w1a6.fps / base.fps, "x");
+    println!("compute efficiency (paper GOPS/DSP: 0.221 / 0.551 / 1.628):");
+    for r in &rows {
+        report_metric(&format!("{} GOPS/DSP", r.label), r.gops_per_dsp, "");
+    }
+    println!("compute efficiency (paper GOPS/kLUT: 2.88 / 6.02 / 6.60):");
+    for r in &rows {
+        report_metric(&format!("{} GOPS/kLUT", r.label), r.gops_per_klut, "");
+    }
+
+    println!("\ntiming the generation pipeline:");
+    let mut bench = Bench::heavy();
+    bench.run("table5_rows (3 designs, full optimization)", || {
+        let _ = table5_rows(&model, &dev, &[8, 6]);
+    });
+}

@@ -1,0 +1,52 @@
+//! Bench: regenerate paper Table 6 — FPS / power / energy efficiency of
+//! our accelerators vs CPU / GPU / the BERT FPGA accelerator (quoted
+//! rows; DESIGN.md §Substitutions).
+//!
+//! Run with: `cargo bench --bench table6_efficiency`
+
+use vaqf::compiler::{render_table6, table5_rows, table6_rows};
+use vaqf::hw::zcu102;
+use vaqf::model::deit_base;
+use vaqf::util::bench::report_metric;
+
+fn main() {
+    let dev = zcu102();
+    let rows5 = table5_rows(&deit_base(), &dev, &[8, 6]);
+    let rows6 = table6_rows(&rows5);
+
+    println!("== Table 6 regeneration ==\n");
+    println!("{}", render_table6(&rows6));
+
+    // Paper claims: W1A6 has the best FPS/W of all implementations
+    // (4.05), 27.0× the CPU and 5.7× the GPU.
+    let ours_w1a6 = rows6
+        .iter()
+        .find(|r| r.implementation.contains("W1A6"))
+        .expect("w1a6 row");
+    let cpu = &rows6[0];
+    let gpu = &rows6[1];
+    println!("paper-vs-measured energy-efficiency ratios:");
+    report_metric(
+        "W1A6 FPS/W vs CPU (paper 27.0x)",
+        ours_w1a6.fps_per_w / cpu.fps_per_w,
+        "x",
+    );
+    report_metric(
+        "W1A6 FPS/W vs GPU (paper 5.7x)",
+        ours_w1a6.fps_per_w / gpu.fps_per_w,
+        "x",
+    );
+    let best = rows6
+        .iter()
+        .max_by(|a, b| a.fps_per_w.partial_cmp(&b.fps_per_w).unwrap())
+        .unwrap();
+    println!(
+        "\nbest FPS/W across all rows: {} ({:.2}) — paper: Ours W1A6 (4.05)",
+        best.implementation, best.fps_per_w
+    );
+    // Power trend (paper: 9.9 → 8.7 → 7.8 W).
+    println!("\npower (paper 9.9 / 8.7 / 7.8 W):");
+    for r in rows5.iter() {
+        report_metric(&format!("{} power", r.label), r.power_w, "W");
+    }
+}

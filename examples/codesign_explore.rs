@@ -1,0 +1,52 @@
+//! Co-design exploration: the motivating workload of the paper's intro —
+//! "which (model, board, frame-rate) combinations are deployable, and at
+//! what precision?"
+//!
+//! Sweeps DeiT-{tiny,small,base} across ZCU102 / ZCU111 / a small edge
+//! device and a ladder of real-time targets (video: 15/24/30/60 FPS),
+//! printing the feasibility frontier the way a deployment engineer would
+//! read it.
+//!
+//! Run with: `cargo run --release --example codesign_explore`
+
+use vaqf::compiler::{compile, CompileRequest};
+use vaqf::hw::DevicePreset;
+use vaqf::model::VitPreset;
+
+fn main() {
+    let targets = [15.0, 24.0, 30.0, 60.0];
+    println!("=== VAQF co-design exploration ===");
+    println!(
+        "cell = chosen activation precision (predicted FPS) | '—' = infeasible (FR_tgt > FR_max)\n"
+    );
+    for device in [DevicePreset::Zcu102, DevicePreset::Zcu111, DevicePreset::GenericEdge] {
+        let dev = device.device();
+        println!("device {}  ({} DSP, {}k LUT)", dev.name, dev.budget.dsp, dev.budget.lut / 1000);
+        print!("{:<12}", "model");
+        for t in targets {
+            print!(" | {t:>14.0} FPS");
+        }
+        println!();
+        for model in VitPreset::all() {
+            let cfg = model.config();
+            print!("{:<12}", cfg.name);
+            for &t in &targets {
+                let req = CompileRequest {
+                    model: cfg.clone(),
+                    device: dev.clone(),
+                    target_fps: t,
+                };
+                match compile(&req) {
+                    Ok(out) => print!(
+                        " | W1A{:<2} ({:>6.1}) ",
+                        out.act_bits, out.design.summary.fps
+                    ),
+                    Err(_) => print!(" | {:^14} ", "—"),
+                }
+            }
+            println!();
+        }
+        println!();
+    }
+    println!("reading: lower-precision cells trade accuracy (Table 2) for frame rate (Table 5).");
+}

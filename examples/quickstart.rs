@@ -1,0 +1,66 @@
+//! Quickstart: the full VAQF flow of paper Fig. 1 in ~30 lines.
+//!
+//! Input: a ViT structure (DeiT-base) + a target frame rate (24 FPS).
+//! Output: the activation precision, the accelerator parameters, and the
+//! generated accelerator description.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use vaqf::compiler::{compile, emit_config_json, emit_hls_cpp, CompileRequest};
+use vaqf::hw::zcu102;
+use vaqf::model::deit_base;
+
+fn main() -> anyhow::Result<()> {
+    // 1. The user provides the model structure and the desired frame rate.
+    let request = CompileRequest {
+        model: deit_base(),
+        device: zcu102(),
+        target_fps: 24.0,
+    };
+
+    // 2. The compilation step: feasibility (FR_max), ≤4-round binary
+    //    search over activation precision, accelerator parameter
+    //    optimization per §5.3.2.
+    let outcome = compile(&request)?;
+
+    println!("=== VAQF quickstart: DeiT-base @ 24 FPS on ZCU102 ===\n");
+    println!("FR_max (all-binary probe): {:.1} FPS", outcome.fr_max);
+    for round in &outcome.rounds {
+        println!(
+            "  search: {:>2}-bit activations → {:>5.1} FPS ({})",
+            round.bits,
+            round.fps,
+            if round.feasible { "ok" } else { "too slow" }
+        );
+    }
+
+    let s = &outcome.design.summary;
+    println!("\nchosen: W1A{} ", outcome.act_bits);
+    println!("  predicted frame rate : {:.1} FPS (target {:.0})", s.fps, request.target_fps);
+    println!("  throughput           : {:.1} GOPS", s.gops);
+    println!("  power                : {:.1} W  ({:.2} FPS/W)", s.power_w, s.fps_per_w);
+    println!(
+        "  resources            : {} DSP ({:.0}%), {:.0}k LUT ({:.0}%), {:.1} BRAM36 ({:.0}%)",
+        s.utilization.dsp,
+        s.utilization_pct.dsp,
+        s.utilization.lut as f64 / 1e3,
+        s.utilization_pct.lut,
+        s.utilization.bram18k as f64 / 2.0,
+        s.utilization_pct.bram18k
+    );
+
+    // 3. On the software side the chosen precision drives QAT
+    //    (python/compile/train.py); on the hardware side the parameters
+    //    drive the generated accelerator:
+    let structure = request.model.structure(Some(outcome.act_bits));
+    let cpp = emit_hls_cpp(&outcome, &structure, &request.device);
+    let header: String = cpp.lines().take(18).collect::<Vec<_>>().join("\n");
+    println!("\n--- generated HLS description (head) ---\n{header}\n...");
+
+    let config = emit_config_json(&outcome, &request.device);
+    println!(
+        "\n--- simulator config ---\n{}",
+        config.get("params").unwrap().pretty()
+    );
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""VAQF build-time Python stack (L1 Pallas kernels + L2 JAX model + AOT).
+
+Never imported at runtime: the Rust binary consumes only the HLO-text
+artifacts this package emits via ``python -m compile.aot``.
+"""

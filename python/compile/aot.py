@@ -1,0 +1,183 @@
+"""AOT export: lower the L2 model to HLO **text** for the Rust runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (one per model variant / precision):
+
+    artifacts/<name>_w<wb>a<ab>.hlo.txt      the lowered forward pass
+    artifacts/<name>_w<wb>a<ab>.params.bin   f32 LE dump of the flat params
+    artifacts/manifest.json                  shapes + metadata for Rust
+
+The lowered computation signature is ``(flat_params, patches) ->
+(logits,)`` so the Rust side feeds parameters as one literal. Parameters
+are drawn from the SplitMix64 stream shared with the Rust simulator
+(same seed ⇒ same model on both sides).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def flatten_params(params: dict) -> tuple[np.ndarray, list]:
+    """Flatten to one f32 vector + a spec [(name, shape, offset), ...]."""
+    chunks = []
+    spec = []
+    off = 0
+
+    def push(name: str, a: np.ndarray):
+        nonlocal off
+        a = np.asarray(a, dtype=np.float32)
+        chunks.append(a.ravel())
+        spec.append({"name": name, "shape": list(a.shape), "offset": off})
+        off += a.size
+
+    push("patch", params["patch"])
+    push("cls", params["cls"])
+    push("pos", params["pos"])
+    for i, lp in enumerate(params["layers"]):
+        for key in ("qkv", "proj", "mlp1", "mlp2"):
+            push(f"l{i}.{key}", lp[key])
+    push("head", params["head"])
+    return np.concatenate(chunks), spec
+
+
+def unflatten_params(flat: jnp.ndarray, spec: list, cfg: M.VitConfig) -> dict:
+    by_name = {}
+    for s in spec:
+        size = int(np.prod(s["shape"]))
+        by_name[s["name"]] = flat[s["offset"] : s["offset"] + size].reshape(s["shape"])
+    params = {
+        "patch": by_name["patch"],
+        "cls": by_name["cls"],
+        "pos": by_name["pos"],
+        "layers": [
+            {key: by_name[f"l{i}.{key}"] for key in ("qkv", "proj", "mlp1", "mlp2")}
+            for i in range(cfg.depth)
+        ],
+        "head": by_name["head"],
+    }
+    return params
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_variant(
+    cfg: M.VitConfig,
+    act_bits: int | None,
+    w_bits: int,
+    seed: int,
+    out_dir: str,
+    use_pallas: bool = True,
+) -> dict:
+    """Lower one (model, precision) variant; returns its manifest entry."""
+    params = M.init_params(cfg, seed)
+    flat, spec = flatten_params(params)
+
+    def fn(flat_params, patches):
+        p = unflatten_params(flat_params, spec, cfg)
+        return (
+            M.forward(
+                p,
+                patches,
+                cfg,
+                act_bits=act_bits,
+                w_bits=w_bits,
+                use_pallas=use_pallas,
+            ),
+        )
+
+    flat_spec = jax.ShapeDtypeStruct(flat.shape, jnp.float32)
+    patch_spec = jax.ShapeDtypeStruct((cfg.num_patches, cfg.patch_in), jnp.float32)
+    lowered = jax.jit(fn).lower(flat_spec, patch_spec)
+    hlo = to_hlo_text(lowered)
+
+    tag = f"{cfg.name}_w{w_bits}a{act_bits if act_bits else 32}"
+    hlo_path = os.path.join(out_dir, f"{tag}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+    params_path = os.path.join(out_dir, f"{tag}.params.bin")
+    with open(params_path, "wb") as f:
+        f.write(struct.pack(f"<{flat.size}f", *flat.tolist()))
+
+    return {
+        "tag": tag,
+        "model": cfg.name,
+        "act_bits": act_bits if act_bits else 32,
+        "w_bits": w_bits,
+        "seed": seed,
+        "hlo": os.path.basename(hlo_path),
+        "params": os.path.basename(params_path),
+        "param_count": int(flat.size),
+        "patches_shape": [cfg.num_patches, cfg.patch_in],
+        "num_classes": cfg.num_classes,
+        "config": {
+            "image_size": cfg.image_size,
+            "patch_size": cfg.patch_size,
+            "in_chans": cfg.in_chans,
+            "embed_dim": cfg.embed_dim,
+            "depth": cfg.depth,
+            "num_heads": cfg.num_heads,
+            "mlp_ratio": cfg.mlp_ratio,
+            "num_classes": cfg.num_classes,
+        },
+    }
+
+
+DEFAULT_SEED = 11
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=DEFAULT_SEED)
+    ap.add_argument(
+        "--full",
+        action="store_true",
+        help="also export DeiT-tiny (slow lowering; micro variants are the default)",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"seed": args.seed, "variants": []}
+    micro = M.micro_vit()
+    # The serving/cross-check variants: fp32 baseline + the paper's two
+    # headline precisions + the 1-bit FR_max probe.
+    for act_bits, w_bits in ((None, 32), (8, 1), (6, 1), (4, 1)):
+        entry = export_variant(micro, act_bits, w_bits, args.seed, args.out_dir)
+        print(f"exported {entry['tag']} ({entry['param_count']} params)")
+        manifest["variants"].append(entry)
+
+    if args.full:
+        tiny = M.deit_tiny()
+        for act_bits, w_bits in ((8, 1),):
+            entry = export_variant(tiny, act_bits, w_bits, args.seed, args.out_dir)
+            print(f"exported {entry['tag']}")
+            manifest["variants"].append(entry)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(manifest['variants'])} variants")
+
+
+if __name__ == "__main__":
+    main()

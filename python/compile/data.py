@@ -1,0 +1,68 @@
+"""Synthetic inputs & datasets.
+
+* :func:`synthetic_patches` — bit-exact mirror of
+  ``rust/src/sim/weights.rs::VitWeights::synthetic_patches`` (same PRNG
+  stream), used by the sim↔runtime cross-check.
+* :func:`make_dataset` — the structured 10-class image dataset replacing
+  ImageNet for the Table 2–4 accuracy experiments (DESIGN.md
+  §Substitutions): each class is a distinct 2-D frequency grating whose
+  phase/orientation jitters per sample, plus noise. Linear probes cannot
+  solve it from raw pixels at high noise; a small ViT can.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .model import VitConfig
+from .prng import SplitMix64
+
+
+def synthetic_patches(cfg: VitConfig, seed: int, frame_id: int) -> np.ndarray:
+    """(N_p, 3P²) uniform[-1,1) patches from the shared PRNG stream."""
+    n = cfg.num_patches * cfg.patch_in
+    rng = SplitMix64(seed ^ 0x5EED_F00D ^ ((frame_id * 0x9E37) & ((1 << 64) - 1)))
+    out = np.empty(n, dtype=np.float32)
+    for i in range(n):
+        out[i] = rng.next_f32_range(-1.0, 1.0)
+    return out.reshape(cfg.num_patches, cfg.patch_in)
+
+
+def make_dataset(
+    n_per_class: int,
+    num_classes: int,
+    image_size: int,
+    seed: int,
+    noise: float = 0.35,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Structured classification data: (images (N,H,W,3), labels (N,))."""
+    rng = np.random.default_rng(seed)
+    h = w = image_size
+    yy, xx = np.mgrid[0:h, 0:w].astype(np.float32) / image_size
+    images = []
+    labels = []
+    for c in range(num_classes):
+        freq = 1.5 + 1.1 * c
+        theta = np.pi * c / num_classes
+        for _ in range(n_per_class):
+            phase = rng.uniform(0, 2 * np.pi)
+            jitter = rng.uniform(-0.15, 0.15)
+            g = np.sin(
+                2 * np.pi * freq * (np.cos(theta + jitter) * xx + np.sin(theta + jitter) * yy)
+                + phase
+            )
+            img = np.stack(
+                [
+                    g,
+                    np.roll(g, c + 1, axis=0),
+                    -g * (0.5 + 0.05 * c),
+                ],
+                axis=-1,
+            ).astype(np.float32)
+            img += rng.normal(0, noise, img.shape).astype(np.float32)
+            images.append(img)
+            labels.append(c)
+    images = np.stack(images)
+    labels = np.asarray(labels, dtype=np.int32)
+    perm = rng.permutation(len(labels))
+    return images[perm], labels[perm]

@@ -1,0 +1,7 @@
+"""Pallas kernels (L1) + pure-jnp oracles."""
+
+from .attention import quant_attention
+from .binary_matmul import binary_matmul, vmem_bytes_estimate
+from . import ref
+
+__all__ = ["binary_matmul", "quant_attention", "vmem_bytes_estimate", "ref"]

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: quantized multi-head attention block.
+
+Fuses the paper's attention-layer sequence — quantized Q·Kᵀ, host-side
+1/√d scaling + softmax, re-quantization, quantized S·V — into one kernel
+gridded over heads (the P_h dimension of the paper's compute engine maps
+onto the Pallas grid).
+
+Quantization scales are *per-head dynamic max-abs*, matching both the
+pure-jnp oracle (``ref.quant_attention_ref`` vmapped over heads) and the
+per-head calibration the Rust simulator performs in
+``sim::engine::qq_matmul``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fq(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    qmax = float(max((1 << (bits - 1)) - 1, 1))
+    max_abs = jnp.max(jnp.abs(x))
+    scale = jnp.where(max_abs > 0, max_abs / qmax, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    return q * scale
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bits: int):
+    """One head: everything in VMEM (F ≤ a few hundred for ViT)."""
+    q = _fq(q_ref[0], bits)
+    k = _fq(k_ref[0], bits)
+    v = _fq(v_ref[0], bits)
+    mh = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.asarray(mh, dtype=q.dtype))
+    # Softmax (numerically-stable) — the "host" op, fused here since the
+    # TPU has no separate host; the quantization boundary is preserved.
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[0] = _fq(p, bits) @ v
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def quant_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, bits: int
+) -> jnp.ndarray:
+    """Quantized attention over heads.
+
+    q/k/v: (H, F, M_h) → (H, F, M_h).
+    """
+    h, f, mh = q.shape
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, bits=bits),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, f, mh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, f, mh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, f, mh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, f, mh), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, f, mh), q.dtype),
+        interpret=True,
+    )(q, k, v)

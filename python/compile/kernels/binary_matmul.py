@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: binary-weight quantized matmul.
+
+The paper's compute hot-spot is a binary-weight × b-bit-activation matrix
+multiply executed as LUT additions/subtractions on the FPGA. The TPU
+rethink (DESIGN.md §Hardware-Adaptation): keep the weights as a dense
+{−1,+1} sign matrix so the MXU runs a *regular* matmul over sign values,
+keep the activations on their integer grid (quantized on the VPU inside
+the kernel), and hoist both scales out of the inner loop — one multiply
+per output element, exactly like the paper hoists the ℓ1 scale out of the
+LUT array.
+
+Tiling: the grid walks (F/bf, M/bm) output blocks; each block streams the
+full K dimension through VMEM. On a real TPU the BlockSpec index maps
+below express the HBM→VMEM schedule the paper expressed with DDR→BRAM
+loop tiling; under ``interpret=True`` (mandatory on CPU — Mosaic
+custom-calls cannot execute here) the same index maps drive a NumPy
+evaluator, so correctness of the schedule is still exercised.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ preferred (MXU-friendly when
+    possible, but always exact so interpret-mode shapes stay static)."""
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+def _kernel(x_ref, w_ref, out_ref, *, qmax: float, inv_scale_ref, scale_ref):
+    """One (bf × bm) output block: quantize activations, MXU matmul over
+    sign weights, single fused dequantization multiply."""
+    x = x_ref[...]
+    # VPU: snap activations to their integer grid (values stay in f32 —
+    # integers up to qmax·K are exact in f32 for every supported b ≤ 16).
+    q = jnp.clip(jnp.round(x * inv_scale_ref[0]), -qmax - 1, qmax)
+    # MXU: dense matmul over {−1,+1} signs.
+    acc = q @ w_ref[...]
+    # Fused epilogue: act_scale · w_scale.
+    out_ref[...] = acc * scale_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_f", "block_m"))
+def binary_matmul(
+    x: jnp.ndarray,
+    w_signs: jnp.ndarray,
+    w_scale: jnp.ndarray,
+    bits: int,
+    block_f: int = 128,
+    block_m: int = 128,
+) -> jnp.ndarray:
+    """Quantized binary-weight matmul: ``fq_b(x) @ (±1 signs) · w_scale``.
+
+    x: (F, N) f32; w_signs: (N, M) in {−1,+1}; w_scale: scalar.
+    Activation scale is dynamic per-tensor max-abs (computed outside the
+    kernel — a global reduction), matching the oracle in ``ref.py`` and the
+    Rust integer datapath bit-for-bit in exact arithmetic.
+    """
+    f, n = x.shape
+    n2, m = w_signs.shape
+    assert n == n2, (x.shape, w_signs.shape)
+    qmax = float(max((1 << (bits - 1)) - 1, 1))
+
+    max_abs = jnp.max(jnp.abs(x))
+    act_scale = jnp.where(max_abs > 0, max_abs / qmax, 1.0)
+    inv_scale = jnp.where(max_abs > 0, qmax / max_abs, 1.0)
+
+    if bits == 1:
+        # Binary activations are a sign function, not a uniform grid.
+        xq = jnp.where(x > 0, 1.0, -1.0)
+        scale = jnp.mean(jnp.abs(x)) * w_scale
+        return (xq @ w_signs) * scale
+
+    bf = _pick_block(f, block_f)
+    bm = _pick_block(m, block_m)
+
+    kernel = functools.partial(_kernel, qmax=qmax)
+    out = pl.pallas_call(
+        lambda inv_ref, sc_ref, x_ref, w_ref, o_ref: kernel(
+            x_ref, w_ref, o_ref, inv_scale_ref=inv_ref, scale_ref=sc_ref
+        ),
+        grid=(f // bf, m // bm),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((bf, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, bm), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bf, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((f, m), x.dtype),
+        interpret=True,
+    )(
+        inv_scale.reshape(1),
+        (act_scale * w_scale).reshape(1),
+        x,
+        w_signs.astype(x.dtype),
+    )
+    return out
+
+
+def vmem_bytes_estimate(f: int, n: int, m: int, block_f: int = 128, block_m: int = 128) -> int:
+    """VMEM footprint of one grid step (f32): x block + w block + out block.
+
+    Used by DESIGN.md §Perf to check the double-buffered footprint fits a
+    TPU core's ~16 MiB VMEM — the analogue of the paper's Eq. 12 BRAM
+    bound.
+    """
+    bf = _pick_block(f, block_f)
+    bm = _pick_block(m, block_m)
+    return 4 * (bf * n + n * bm + bf * bm) * 2  # ×2 double buffering

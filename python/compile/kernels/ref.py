@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must match its reference here to float
+tolerance under ``interpret=True``; ``python/tests/test_kernel.py`` sweeps
+shapes/precisions (hypothesis) and asserts allclose.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..quantize import fake_quant_act, qmax_for
+
+
+def binary_matmul_ref(
+    x: jnp.ndarray, w_signs: jnp.ndarray, w_scale: jnp.ndarray, bits: int
+) -> jnp.ndarray:
+    """Reference binary-weight quantized matmul.
+
+    ``x``: (F, N) activations; ``w_signs``: (N, M) in {−1, +1};
+    ``w_scale``: scalar ℓ1/n factor; activations fake-quantized to
+    ``bits`` with dynamic max-abs calibration.
+    """
+    xq = fake_quant_act(x, bits)
+    return (xq @ w_signs) * w_scale
+
+
+def qq_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Reference quantized×quantized matmul (attention operands)."""
+    return fake_quant_act(a, bits) @ fake_quant_act(b, bits)
+
+
+def _softmax(x: jnp.ndarray) -> jnp.ndarray:
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def quant_attention_ref(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, bits: int
+) -> jnp.ndarray:
+    """Reference single-head quantized attention.
+
+    ``q``/``k``/``v``: (F, M_h). Scaling by 1/sqrt(M_h) after Q·Kᵀ, then
+    softmax, re-quantization of S, and S·V — exactly the on-host /
+    on-fabric split of paper §5.2.
+    """
+    mh = q.shape[-1]
+    s = qq_matmul_ref(q, jnp.swapaxes(k, -1, -2), bits) / jnp.sqrt(
+        jnp.asarray(mh, dtype=q.dtype)
+    )
+    return qq_matmul_ref(_softmax(s), v, bits)
+
+
+def act_quant_error_bound(x: jnp.ndarray, bits: int) -> float:
+    """Worst-case elementwise fake-quantization error (half a step)."""
+    if bits >= 32:
+        return 0.0
+    qmax = qmax_for(bits)
+    max_abs = float(jnp.max(jnp.abs(x)))
+    scale = max_abs / qmax if max_abs > 0 else 1.0
+    return scale / 2 + 1e-7

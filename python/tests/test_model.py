@@ -1,0 +1,103 @@
+"""L2 model semantics: shapes, Fig. 4 conv→FC equivalence, pallas-path
+parity, quantization behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def micro():
+    cfg = M.micro_vit(embed_dim=32, depth=2, num_heads=4)
+    params = M.init_params(cfg, seed=11)
+    rng = np.random.default_rng(0)
+    patches = jnp.asarray(rng.normal(size=(cfg.num_patches, cfg.patch_in)).astype(np.float32))
+    return cfg, params, patches
+
+
+def test_forward_shapes(micro):
+    cfg, params, patches = micro
+    logits = M.forward(params, patches, cfg)
+    assert logits.shape == (cfg.num_classes,)
+    batch = jnp.stack([patches, patches * 0.5])
+    lb = M.forward_batch(params, batch, cfg, act_bits=8, w_bits=1)
+    assert lb.shape == (2, cfg.num_classes)
+
+
+def test_patch_conv_fc_equivalence(micro):
+    """Fig. 4: the patch-embed conv (kernel=stride=P) equals the FC over
+    flattened patches."""
+    cfg, params, _ = micro
+    rng = np.random.default_rng(1)
+    img = jnp.asarray(rng.normal(size=(1, cfg.image_size, cfg.image_size, 3)).astype(np.float32))
+    patches = M.images_to_patches(img, cfg)[0]
+    fc_out = patches @ params["patch"]
+
+    # Direct strided conv with the same kernel layout (C, P, P) → M.
+    w = np.asarray(params["patch"]).reshape(3, cfg.patch_size, cfg.patch_size, cfg.embed_dim)
+    p = cfg.patch_size
+    conv_rows = []
+    for i in range(cfg.image_size // p):
+        for j in range(cfg.image_size // p):
+            window = np.asarray(img[0, i * p : (i + 1) * p, j * p : (j + 1) * p, :])
+            # window (P,P,C) → (C,P,P) to match images_to_patches layout.
+            flatw = np.transpose(window, (2, 0, 1)).reshape(-1)
+            conv_rows.append(flatw @ np.asarray(params["patch"]))
+    conv_out = np.stack(conv_rows)
+    np.testing.assert_allclose(np.asarray(fc_out), conv_out, rtol=1e-4, atol=1e-5)
+    _ = w
+
+
+def test_pallas_path_matches_jnp_path(micro):
+    cfg, params, patches = micro
+    for bits in (8, 6):
+        a = M.forward(params, patches, cfg, act_bits=bits, w_bits=1, use_pallas=False)
+        b = M.forward(params, patches, cfg, act_bits=bits, w_bits=1, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-3, atol=5e-3)
+
+
+def test_quantized_converges_to_fp_in_bits(micro):
+    cfg, params, patches = micro
+    l16 = M.forward(params, patches, cfg, act_bits=16, w_bits=1)
+    d = lambda x: float(jnp.linalg.norm(x - l16))
+    d12 = d(M.forward(params, patches, cfg, act_bits=12, w_bits=1))
+    d4 = d(M.forward(params, patches, cfg, act_bits=4, w_bits=1))
+    assert d12 < d4
+
+
+def test_binary_weights_change_function(micro):
+    cfg, params, patches = micro
+    fp = M.forward(params, patches, cfg)
+    bn = M.forward(params, patches, cfg, act_bits=None, w_bits=1)
+    assert float(jnp.linalg.norm(fp - bn)) > 0
+
+
+def test_ste_eval_matches_inference_path(micro):
+    """The QAT forward (ste=True) must produce the same values as the
+    inference fake-quant path (STE only changes gradients)."""
+    cfg, params, patches = micro
+    a = M.forward(params, patches, cfg, act_bits=6, w_bits=1, ste=False)
+    b = M.forward(params, patches, cfg, act_bits=6, w_bits=1, ste=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+def test_init_params_matches_rust_draw_order():
+    """First draws are the patch matrix — pinned against
+    sim::weights::known_answer_first_weight."""
+    from compile.prng import SplitMix64
+
+    cfg = M.deit_tiny()
+    params = M.init_params(cfg, seed=42)
+    r = SplitMix64(42)
+    expected = np.float32(np.float32(r.next_normal()) * np.float32(0.02))
+    assert params["patch"].flat[0] == expected
+
+
+def test_images_to_patches_shape():
+    cfg = M.micro_vit()
+    imgs = jnp.zeros((3, cfg.image_size, cfg.image_size, 3))
+    p = M.images_to_patches(imgs, cfg)
+    assert p.shape == (3, cfg.num_patches, cfg.patch_in)

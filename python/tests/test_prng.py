@@ -1,0 +1,57 @@
+"""Cross-language PRNG parity: these known-answer vectors are asserted
+verbatim by ``rust/src/util/rng.rs`` — if either side drifts, the
+sim↔runtime numerical cross-check is void."""
+
+import math
+
+from compile.prng import KAT_SEED, KAT_VALUES, SplitMix64, normal_array
+
+
+def test_known_answer_vector():
+    r = SplitMix64(KAT_SEED)
+    assert tuple(r.next_u64() for _ in range(3)) == KAT_VALUES
+
+
+def test_shuffle_parity_with_rust():
+    # Pinned in rust/src/util/rng.rs tests as well.
+    o = list(range(10))
+    SplitMix64(42).shuffle(o)
+    assert o == [8, 3, 6, 5, 4, 0, 9, 2, 1, 7]
+
+
+def test_next_below_parity():
+    r = SplitMix64(7)
+    assert [r.next_below(100) for _ in range(5)] == [38, 1, 90, 58, 45]
+
+
+def test_normals_match_rust_boxmuller():
+    r = SplitMix64(3)
+    vals = [r.next_normal() for _ in range(3)]
+    expected = [-0.6410515695, 0.8874808859, -1.1468789924]
+    for v, e in zip(vals, expected):
+        assert abs(v - e) < 1e-9
+
+
+def test_f64_in_unit_interval():
+    r = SplitMix64(9)
+    for _ in range(1000):
+        v = r.next_f64()
+        assert 0.0 <= v < 1.0
+
+
+def test_normal_array_is_f32_and_deterministic():
+    a = normal_array(SplitMix64(5), 64, 0.02)
+    b = normal_array(SplitMix64(5), 64, 0.02)
+    assert a.dtype.name == "float32"
+    assert (a == b).all()
+    assert abs(float(a.mean())) < 0.02
+
+
+def test_normal_moments():
+    r = SplitMix64(11)
+    xs = [r.next_normal() for _ in range(20000)]
+    mean = sum(xs) / len(xs)
+    var = sum((x - mean) ** 2 for x in xs) / len(xs)
+    assert abs(mean) < 0.03
+    assert abs(var - 1.0) < 0.05
+    assert all(math.isfinite(x) for x in xs)

@@ -1,0 +1,97 @@
+"""Quantization math (paper §4.2 / Eq. 5 / Eq. 6) — mirrors the Rust
+quant test suite."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.quantize import (
+    ProgressiveMask,
+    binarize,
+    binary_scale,
+    fake_quant_act,
+    progressive_schedule,
+    qmax_for,
+    ste_binarize,
+    ste_quant_act,
+)
+
+
+def test_binarize_scale_is_l1_over_n():
+    w = jnp.asarray([[1.0, -2.0], [3.0, -4.0]])
+    assert abs(float(binary_scale(w)) - 2.5) < 1e-6
+    b = np.asarray(binarize(w))
+    np.testing.assert_allclose(np.sign(b), [[1, -1], [1, -1]])
+
+
+def test_binarize_zero_maps_negative():
+    b = np.asarray(binarize(jnp.asarray([0.0, 0.5])))
+    assert b[0] < 0 and b[1] > 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.sampled_from([2, 4, 6, 8, 12, 16]), seed=st.integers(0, 1000))
+def test_fake_quant_roundtrip_error_bounded(bits, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=128).astype(np.float32) * 3)
+    y = fake_quant_act(x, bits)
+    step = float(jnp.max(jnp.abs(x))) / qmax_for(bits)
+    assert float(jnp.max(jnp.abs(x - y))) <= step / 2 + 1e-6
+
+
+def test_fake_quant_monotone_in_bits():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=256).astype(np.float32))
+    mse = lambda b: float(jnp.mean((fake_quant_act(x, b) - x) ** 2))
+    assert mse(8) <= mse(6) <= mse(4) <= mse(2)
+
+
+def test_ste_forward_equals_quantized():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=64).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(ste_quant_act(x, 6)), np.asarray(fake_quant_act(x, 6)), rtol=1e-7
+    )
+    w = jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(ste_binarize(w)), np.asarray(binarize(w)), rtol=1e-7
+    )
+
+
+def test_ste_gradient_passes_through():
+    import jax
+
+    g = jax.grad(lambda x: jnp.sum(ste_quant_act(x, 8) ** 2))(jnp.asarray([0.5, -1.0]))
+    # d/dx x² through STE = 2·q(x) ≈ 2x.
+    assert np.isfinite(np.asarray(g)).all()
+    assert abs(float(g[0]) - 1.0) < 0.1
+
+
+def test_progressive_mask_monotone_and_deterministic():
+    a = ProgressiveMask(100, 42)
+    b = ProgressiveMask(100, 42)
+    a.set_fraction(0.5)
+    b.set_fraction(0.5)
+    assert (a.dense() == b.dense()).all()
+    before = a.dense().copy()
+    a.set_fraction(0.25)  # monotone: no un-binarization
+    assert (a.dense() == before).all()
+    a.set_fraction(0.9)
+    after = a.dense()
+    assert (~before | after).all()
+    assert after.sum() == 90
+
+
+def test_progressive_blend_counts():
+    m = ProgressiveMask(16, 3)
+    m.set_fraction(0.5)
+    real = jnp.ones(16)
+    binary = -jnp.ones(16)
+    out = np.asarray(m.blend(real, binary))
+    assert (out == -1).sum() == 8
+
+
+def test_schedule_linear():
+    assert progressive_schedule(0, 300) == 0.0
+    assert progressive_schedule(299, 300) == 1.0
+    assert abs(progressive_schedule(150, 300) - 0.5017) < 1e-3

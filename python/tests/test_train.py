@@ -1,0 +1,87 @@
+"""QAT harness smoke + invariants (fast settings)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.data import make_dataset
+from compile.train import (
+    TrainConfig,
+    adamw_init,
+    adamw_update,
+    cosine_lr,
+    make_masks,
+    three_stage_train,
+)
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = M.micro_vit(embed_dim=16, depth=1, num_heads=2)
+    x, y = make_dataset(8, cfg.num_classes, cfg.image_size, seed=0, noise=0.5)
+    xt, yt = make_dataset(4, cfg.num_classes, cfg.image_size, seed=1, noise=0.5)
+    ds = (
+        (np.asarray(M.images_to_patches(jnp.asarray(x), cfg)), y),
+        (np.asarray(M.images_to_patches(jnp.asarray(xt), cfg)), yt),
+    )
+    return cfg, ds
+
+
+def test_three_stage_smoke(tiny_setup):
+    cfg, ds = tiny_setup
+    tc = TrainConfig(epochs_pretrain=2, epochs_binary=2, epochs_act=1, batch_size=16)
+    params, results = three_stage_train(cfg, tc, dataset=ds, act_bits=8)
+    assert [r.name for r in results] == [
+        "pretrain-w32a32",
+        "binary-w1a32 (progressive)",
+        "act-w1a8",
+    ]
+    for r in results:
+        assert 0.0 <= r.test_acc <= 1.0
+        assert all(np.isfinite(l) for l in r.loss_curve)
+
+
+def test_loss_decreases_during_pretrain(tiny_setup):
+    cfg, ds = tiny_setup
+    tc = TrainConfig(epochs_pretrain=6, epochs_binary=0, epochs_act=0, batch_size=16)
+    _, results = three_stage_train(cfg, tc, dataset=ds, act_bits=None)
+    curve = results[0].loss_curve
+    assert curve[-1] < curve[0], curve
+
+
+def test_ablation_toggles(tiny_setup):
+    cfg, ds = tiny_setup
+    tc = TrainConfig(epochs_pretrain=1, epochs_binary=1, epochs_act=0, batch_size=16)
+    tc.pretrain = False
+    _, r_nopre = three_stage_train(cfg, tc, dataset=ds, act_bits=None)
+    assert len(r_nopre) == 1  # no pretrain stage result
+    tc2 = TrainConfig(epochs_pretrain=1, epochs_binary=1, epochs_act=0, batch_size=16)
+    tc2.progressive = False
+    _, r_noprog = three_stage_train(cfg, tc2, dataset=ds, act_bits=None)
+    assert "abrupt" in r_noprog[-1].name
+
+
+def test_masks_cover_all_encoder_weights(tiny_setup):
+    cfg, _ = tiny_setup
+    params = M.init_params(cfg, seed=3)
+    masks = make_masks(params, seed=0)
+    assert len(masks) == cfg.depth
+    for lm, lp in zip(masks, params["layers"]):
+        for key in ("qkv", "proj", "mlp1", "mlp2"):
+            assert lm[key].n == int(np.prod(lp[key].shape))
+
+
+def test_adamw_moves_params():
+    params = {"w": jnp.ones((4,))}
+    grads = {"w": jnp.ones((4,))}
+    state = adamw_init(params)
+    new, state = adamw_update(params, grads, state, lr=0.1, wd=0.0)
+    assert float(jnp.max(jnp.abs(new["w"] - params["w"]))) > 0
+    assert state["t"] == 1
+
+
+def test_cosine_schedule_endpoints():
+    assert abs(cosine_lr(1.0, 0, 10) - 1.0) < 1e-9
+    assert cosine_lr(1.0, 10, 10) < 1e-9
+    assert 0.4 < cosine_lr(1.0, 5, 10) < 0.6

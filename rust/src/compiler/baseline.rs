@@ -1,0 +1,97 @@
+//! Baseline (W16A16) accelerator parameter optimization (paper §5.3).
+//!
+//! The baseline design is the starting point of every quantized design:
+//! `T_n = T_n^base`, `G = G^base`, and `T_m` initialized near `T_m^base`.
+//! We find `T_m^base`/`T_n^base` by exhaustive search over the (small,
+//! divisibility-constrained) parameter grid, minimizing the Eq. 13
+//! objective Σᵢ Jᵢ subject to the Eq. 14 resource constraints.
+
+use crate::hw::Device;
+use crate::model::VitStructure;
+use crate::perf::{model_cycles, resources_for, AcceleratorParams};
+
+/// Exhaustively optimize the baseline accelerator for an *unquantized*
+/// structure (act_bits = None).
+///
+/// The grid: `G` is fixed by the port width (§5.3.1: 16-bit data ⇒
+/// `G = S_port/16`), `P_h` by the head-count rule, `T_m` ranges over
+/// multiples of `G`, `T_n` over small values (the input-channel unroll is
+/// the expensive dimension: each extra lane costs `T_m·P_h` DSPs).
+pub fn optimize_baseline(structure: &VitStructure, device: &Device) -> AcceleratorParams {
+    assert!(
+        structure.act_bits.is_none(),
+        "baseline optimization runs on the unquantized structure"
+    );
+    let g = (device.axi_port_bits / 16) as u64;
+    let n_h = structure
+        .layers
+        .iter()
+        .map(|l| l.heads as u64)
+        .max()
+        .unwrap_or(1);
+    let p_h = AcceleratorParams::p_h_for(n_h);
+
+    let mut best: Option<(u64, AcceleratorParams)> = None;
+    // T_m: multiples of G up to 512; T_n: 1..=64 (DSP budget caps the
+    // product well before these bounds on real devices).
+    for t_m in (g..=512).step_by(g as usize) {
+        for t_n in 1..=64u64 {
+            let cand = AcceleratorParams::baseline(t_m, t_n, g, p_h);
+            let res = resources_for(structure, &cand, device);
+            if !res.feasible(device) {
+                continue;
+            }
+            let (cycles, _) = model_cycles(structure, &cand, device);
+            if best.as_ref().map(|(c, _)| cycles < *c).unwrap_or(true) {
+                best = Some((cycles, cand));
+            }
+        }
+    }
+    best.expect("no feasible baseline design — device too small for any tiling")
+        .1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{generic_edge, zcu102};
+    use crate::model::{deit_base, deit_small};
+    use crate::perf::summarize;
+
+    #[test]
+    fn baseline_is_feasible_and_nontrivial() {
+        let dev = zcu102();
+        let s = deit_base().structure(None);
+        let p = optimize_baseline(&s, &dev);
+        assert!(p.validate().is_ok());
+        let res = resources_for(&s, &p, &dev);
+        assert!(res.feasible(&dev));
+        // §5.3.1: G = 4 for 16-bit data on 64-bit ports.
+        assert_eq!(p.g, 4);
+        assert_eq!(p.p_h, 4); // N_h = 12 ⇒ P_h = 4
+        assert!(p.dsp_macs() > 100, "should use a real MAC array");
+    }
+
+    #[test]
+    fn baseline_fps_near_paper_table5() {
+        // Paper Table 5: W32A32 base design reaches 10.0 FPS on DeiT-base.
+        // Our analytical model should land in the same regime (±40%).
+        let dev = zcu102();
+        let s = deit_base().structure(None);
+        let p = optimize_baseline(&s, &dev);
+        let sum = summarize(&s, &p, &dev);
+        assert!(
+            sum.fps > 6.0 && sum.fps < 14.0,
+            "baseline fps = {:.1}, expected ≈10",
+            sum.fps
+        );
+    }
+
+    #[test]
+    fn smaller_device_gets_smaller_design() {
+        let s = deit_small().structure(None);
+        let big = optimize_baseline(&s, &zcu102());
+        let small = optimize_baseline(&s, &generic_edge());
+        assert!(small.dsp_macs() < big.dsp_macs());
+    }
+}

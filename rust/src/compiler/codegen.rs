@@ -1,0 +1,240 @@
+//! Accelerator description emission (Fig. 1: "Accelerator description
+//! (C++)" + the JSON config our cycle-level simulator consumes in place of
+//! a bitstream).
+//!
+//! The C++ output mirrors what the paper feeds Vivado HLS 2020.1: a
+//! templated compute engine with the tiling/unroll/pipeline pragmas set
+//! from the chosen [`AcceleratorParams`]. We do not synthesize it (no
+//! Vivado in this environment — see DESIGN.md §Substitutions); it is the
+//! faithful, human-checkable artifact of the co-design flow, and its
+//! parameter block is byte-identical to the JSON the simulator loads.
+
+use crate::hw::Device;
+use crate::model::VitStructure;
+use crate::perf::AcceleratorParams;
+use crate::util::json::Json;
+
+use super::search::CompileOutcome;
+
+/// Emit the JSON accelerator configuration (consumed by `sim::Accelerator`
+/// and archived next to the HLS source).
+pub fn emit_config_json(outcome: &CompileOutcome, device: &Device) -> Json {
+    let p = &outcome.design.params;
+    let s = &outcome.design.summary;
+    Json::obj()
+        .set("framework", "vaqf")
+        .set("model", s.model.as_str())
+        .set("device", device.name.as_str())
+        .set("act_bits", p.act_bits.map(u64::from).unwrap_or(16))
+        .set("weight_bits", if p.act_bits.is_some() { 1u64 } else { 16 })
+        .set(
+            "params",
+            Json::obj()
+                .set("t_m", p.t_m)
+                .set("t_n", p.t_n)
+                .set("t_m_q", p.t_m_q)
+                .set("t_n_q", p.t_n_q)
+                .set("g", p.g)
+                .set("g_q", p.g_q)
+                .set("p_h", p.p_h),
+        )
+        .set(
+            "predicted",
+            Json::obj()
+                .set("cycles_per_frame", s.cycles_per_frame)
+                .set("fps", s.fps)
+                .set("gops", s.gops)
+                .set("power_w", s.power_w)
+                .set("dsp", s.utilization.dsp)
+                .set("lut", s.utilization.lut)
+                .set("bram18k", s.utilization.bram18k)
+                .set("ff", s.utilization.ff),
+        )
+        .set(
+            "search",
+            Json::Arr(
+                outcome
+                    .rounds
+                    .iter()
+                    .map(|r| {
+                        Json::obj()
+                            .set("bits", u64::from(r.bits))
+                            .set("fps", r.fps)
+                            .set("feasible", r.feasible)
+                    })
+                    .collect(),
+            ),
+        )
+        .set("target_fps", outcome.target_fps)
+        .set("fr_max", outcome.fr_max)
+}
+
+/// Emit the Vivado-HLS-style C++ accelerator description.
+pub fn emit_hls_cpp(
+    outcome: &CompileOutcome,
+    structure: &VitStructure,
+    device: &Device,
+) -> String {
+    let p = &outcome.design.params;
+    let bits = p.act_bits.unwrap_or(16);
+    let f_max = structure.layers.iter().map(|l| l.f).max().unwrap_or(1);
+    let n_h = structure.layers.iter().map(|l| l.heads).max().unwrap_or(1);
+    format!(
+        r#"// ============================================================================
+// VAQF auto-generated ViT accelerator — DO NOT EDIT
+// model: {model}   device: {device}   precision: W{wbits}A{abits}
+// target: {target:.1} FPS   predicted: {fps:.1} FPS ({cycles} cycles/frame)
+// ============================================================================
+#include <ap_int.h>
+#include <hls_stream.h>
+
+// ---- accelerator parameters (paper Table 1) --------------------------------
+#define T_M    {t_m}    // output-channel tile, unquantized datapath
+#define T_N    {t_n}    // input-channel tile, unquantized datapath
+#define T_M_Q  {t_m_q}  // output-channel tile, quantized datapath
+#define T_N_Q  {t_n_q}  // input-channel tile, quantized datapath
+#define G      {g}      // packing factor, 16-bit data ({port}-bit AXI ports)
+#define G_Q    {g_q}    // packing factor, {abits}-bit activations
+#define P_H    {p_h}    // attention heads processed in parallel
+#define N_H    {n_h}    // max head count across layers
+#define F_MAX  {f_max}  // max token-sequence length
+
+typedef ap_int<16>      dtype;    // unquantized fixed-point (Q6.10)
+typedef ap_int<{abits}> qtype;    // quantized activation
+typedef ap_uint<1>      wtype;    // binary weight (sign bit)
+typedef ap_int<32>      acctype;  // MAC accumulator
+typedef ap_uint<{port}> axiword;  // packed AXI beat
+
+// ---- on-chip tile buffers (double-buffered, Eq. 12) -------------------------
+static dtype  in_buf  [2][N_H][T_N  ][F_MAX];
+static qtype  in_buf_q[2][N_H][T_N_Q][F_MAX];
+static dtype  wgt_buf [2][N_H][T_N  ][T_M];
+static wtype  wgt_buf_q[2][N_H][T_N_Q][T_M_Q];
+static acctype out_buf[N_H][T_M_Q > T_M ? T_M_Q : T_M][F_MAX];
+#pragma HLS array_partition variable=in_buf   cyclic factor=G   dim=3
+#pragma HLS array_partition variable=in_buf_q cyclic factor=G_Q dim=3
+#pragma HLS array_partition variable=wgt_buf  complete dim=2
+#pragma HLS array_partition variable=wgt_buf_q complete dim=2
+
+// ---- general compute engine (paper §5.1, Fig. 3b) ---------------------------
+// Handles both FC layers (one matmul; N split into N_H channel groups whose
+// partial sums are accumulated) and multi-head attention (per-head results
+// kept separate). `is_attention` is the control signal from §5.1.
+void compute_engine(bool quantized, bool is_attention, int f, int n_tiles) {{
+L1_token:
+    for (int t = 0; t < f; ++t) {{
+    L1h_headgrp:
+        for (int hg = 0; hg < N_H / P_H; ++hg) {{
+#pragma HLS pipeline II=1
+        L2_head:
+            for (int hp = 0; hp < P_H; ++hp) {{
+#pragma HLS unroll
+            L3_out:
+                for (int m = 0; m < (quantized ? T_M_Q : T_M); ++m) {{
+#pragma HLS unroll
+                L4_in:
+                    for (int n = 0; n < (quantized ? T_N_Q : T_N); ++n) {{
+#pragma HLS unroll
+                        int h = hg * P_H + hp;
+                        if (quantized) {{
+                            // Binary weight ⇒ add/sub, synthesized to LUTs
+                            // (paper §5.1: "replaced with additions and
+                            // subtractions ... implemented with LUTs").
+                            acctype v = (acctype)in_buf_q[0][h][n][t];
+                            out_buf[h][m][t] += wgt_buf_q[0][h][n][m] ? v : (acctype)-v;
+                        }} else {{
+                            // 16×16 MAC on a DSP48 slice.
+                            out_buf[h][m][t] += (acctype)in_buf[0][h][n][t]
+                                              * (acctype)wgt_buf[0][h][n][m];
+                        }}
+                    }}
+                }}
+            }}
+        }}
+    }}
+    // FC layers: reduce the N_H per-group partial sums (attention keeps them).
+    if (!is_attention) {{
+    reduce_groups:
+        for (int m = 0; m < (quantized ? T_M_Q : T_M); ++m)
+            for (int t = 0; t < f; ++t)
+                for (int h = 1; h < N_H; ++h)
+#pragma HLS pipeline II=1
+                    out_buf[0][m][t] += out_buf[h][m][t];
+    }}
+}}
+
+// ---- top-level: one ViT layer (paper Fig. 3c) -------------------------------
+void vit_layer(axiword *ddr_in, axiword *ddr_wgt, axiword *ddr_out,
+               bool quantized, bool is_attention,
+               int m_total, int n_total, int f) {{
+#pragma HLS interface m_axi port=ddr_in  bundle=gmem0 depth=1<<24
+#pragma HLS interface m_axi port=ddr_wgt bundle=gmem1 depth=1<<24
+#pragma HLS interface m_axi port=ddr_out bundle=gmem2 depth=1<<24
+    int tm = quantized ? T_M_Q : T_M;
+    int tn = quantized ? T_N_Q : T_N;
+    int n_tiles = (n_total + N_H * tn - 1) / (N_H * tn);
+    int m_tiles = (m_total + tm - 1) / tm;
+outer_m:
+    for (int mt = 0; mt < m_tiles; ++mt) {{
+    inner_n:
+        for (int nt = 0; nt < n_tiles; ++nt) {{
+            // Double buffering: loads for tile (nt+1) overlap compute on
+            // tile (nt) — Eq. 9's J_lc = max(J_in, J_wgt, J_cmpt).
+            // load_input(ddr_in, nt);  load_weight(ddr_wgt, mt, nt);
+            compute_engine(quantized, is_attention, f, n_tiles);
+        }}
+        // store_output(ddr_out, mt);  // Eq. 7's J_out, packed G/G_Q-wide
+    }}
+}}
+"#,
+        model = structure.config.name,
+        device = device.name,
+        wbits = if p.act_bits.is_some() { 1 } else { 16 },
+        abits = bits,
+        target = outcome.target_fps,
+        fps = outcome.design.summary.fps,
+        cycles = outcome.design.summary.cycles_per_frame,
+        t_m = p.t_m,
+        t_n = p.t_n,
+        t_m_q = p.t_m_q,
+        t_n_q = p.t_n_q,
+        g = p.g,
+        g_q = p.g_q,
+        p_h = p.p_h,
+        n_h = n_h,
+        f_max = f_max,
+        port = device.axi_port_bits,
+    )
+}
+
+/// Round-trip: parse an emitted JSON config back into parameters (used by
+/// the simulator CLI path and tests).
+pub fn params_from_json(j: &Json) -> anyhow::Result<AcceleratorParams> {
+    let p = j
+        .get("params")
+        .ok_or_else(|| anyhow::anyhow!("missing params"))?;
+    let field = |k: &str| -> anyhow::Result<u64> {
+        p.get(k)
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("missing params.{k}"))
+    };
+    let act_bits = j
+        .get("act_bits")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow::anyhow!("missing act_bits"))?;
+    let weight_bits = j.get("weight_bits").and_then(Json::as_u64).unwrap_or(16);
+    Ok(AcceleratorParams {
+        t_m: field("t_m")?,
+        t_n: field("t_n")?,
+        t_m_q: field("t_m_q")?,
+        t_n_q: field("t_n_q")?,
+        g: field("g")?,
+        g_q: field("g_q")?,
+        p_h: field("p_h")?,
+        act_bits: if weight_bits == 1 {
+            Some(act_bits as u8)
+        } else {
+            None
+        },
+    })
+}

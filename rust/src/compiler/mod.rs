@@ -1,0 +1,36 @@
+//! The VAQF compilation step (paper §3 + §5.3).
+//!
+//! Input: a ViT structure and a target frame rate. Output: the activation
+//! quantization precision (weights are binary) plus the accelerator
+//! parameter settings that satisfy the target, an HLS-style C++ accelerator
+//! description, and a JSON accelerator config consumed by the cycle-level
+//! simulator.
+//!
+//! Pipeline (Fig. 1):
+//!
+//! 1. [`optimize_baseline`] — derive `T_m^base`, `T_n^base`, `G^base` for
+//!    the unquantized W16A16 accelerator (§5.3).
+//! 2. [`compile`] — compute `FR_max` (activation precision 1 bit), check
+//!    feasibility against `FR_tgt`, then binary-search the precision range
+//!    1..=16 (≤ 4 rounds, §3) for the highest precision whose optimized
+//!    design still meets the target.
+//! 3. For each probed precision, [`optimize_for_bits`] applies the §5.3.2
+//!    initialization rules and the implementation-failure adjustment loop
+//!    (LUT overutilization ⇒ shrink `T_m` / grow `T_m^q`).
+//! 4. [`emit_hls_cpp`] / [`emit_config_json`] — emit the accelerator
+//!    description (Fig. 1's "accelerator description in C++ format").
+
+mod baseline;
+mod codegen;
+mod params;
+mod report;
+mod search;
+
+pub use baseline::optimize_baseline;
+pub use codegen::{emit_config_json, emit_hls_cpp, params_from_json};
+pub use params::{optimize_for_bits, DesignPoint};
+pub use report::{render_table5, render_table6, table5_rows, table6_rows, Table6Row, PAPER_TABLE5};
+pub use search::{compile, compile_multi, CompileOutcome, CompileRequest, SearchRound};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,158 @@
+//! Table 5 / Table 6 report generation.
+//!
+//! Renders the paper's evaluation tables from *our* compiled designs, with
+//! the paper's published numbers alongside for comparison. The CPU/GPU/BERT
+//! rows of Table 6 are closed-testbed constants quoted from the paper
+//! (DESIGN.md §Substitutions).
+
+use crate::hw::Device;
+use crate::model::VitConfig;
+use crate::perf::PerfSummary;
+
+use super::baseline::optimize_baseline;
+use super::params::optimize_for_bits;
+
+/// Paper Table 5 published reference values (DeiT-base on ZCU102).
+pub const PAPER_TABLE5: [(&str, f64, f64); 3] = [
+    // (precision, FPS, GOPS)
+    ("W32A32", 10.0, 345.8),
+    ("W1A8", 24.8, 861.2),
+    ("W1A6", 31.6, 1096.0),
+];
+
+/// Compute the Table 5 rows: the baseline design plus one design per
+/// requested activation precision.
+pub fn table5_rows(model: &VitConfig, device: &Device, precisions: &[u8]) -> Vec<PerfSummary> {
+    let unquant = model.structure(None);
+    let baseline = optimize_baseline(&unquant, device);
+    let mut rows = vec![crate::perf::summarize(&unquant, &baseline, device)];
+    for &bits in precisions {
+        let s = model.structure(Some(bits));
+        let d = optimize_for_bits(&s, &baseline, device, bits)
+            .expect("standard precisions must be feasible on the paper's board");
+        rows.push(d.summary);
+    }
+    rows
+}
+
+/// Render Table 5 ("Hardware resource utilization and performance of ViT
+/// accelerators with different frame rates and precisions").
+pub fn render_table5(rows: &[PerfSummary], device: &Device) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table 5 — {} accelerators on {} (paper values in parentheses)\n",
+        rows.first().map(|r| r.model.as_str()).unwrap_or("?"),
+        device.name
+    ));
+    out.push_str(
+        "Precision |   DSP        |  kLUT       | BRAM36      |  kFF      |   FPS  | GOPS   | GOPS/DSP | GOPS/kLUT\n",
+    );
+    out.push_str(&"-".repeat(112));
+    out.push('\n');
+    for r in rows {
+        let paper = PAPER_TABLE5.iter().find(|(l, _, _)| *l == r.label);
+        let fps_note = paper
+            .map(|(_, f, _)| format!(" ({f:.1})"))
+            .unwrap_or_default();
+        let gops_note = paper
+            .map(|(_, _, g)| format!(" ({g:.0})"))
+            .unwrap_or_default();
+        out.push_str(&format!(
+            "{:<9} | {:>4} ({:>2.0}%)  | {:>4.0} ({:>2.0}%) | {:>4.1} ({:>2.0}%) | {:>3.0} ({:>2.0}%) | {:>5.1}{fps_note} | {:>6.1}{gops_note} | {:>8.3} | {:>8.3}\n",
+            r.label,
+            r.utilization.dsp,
+            r.utilization_pct.dsp,
+            r.utilization.lut as f64 / 1000.0,
+            r.utilization_pct.lut,
+            r.utilization.bram18k as f64 / 2.0, // report as BRAM36 like the paper
+            r.utilization_pct.bram18k,
+            r.utilization.ff as f64 / 1000.0,
+            r.utilization_pct.ff,
+            r.fps,
+            r.gops,
+            r.gops_per_dsp,
+            r.gops_per_klut,
+        ));
+    }
+    out
+}
+
+/// One Table 6 row.
+#[derive(Debug, Clone)]
+pub struct Table6Row {
+    pub implementation: String,
+    pub fps: f64,
+    pub power_w: f64,
+    pub fps_per_w: f64,
+    /// `true` if measured by this framework, `false` if quoted from the
+    /// paper (closed testbeds).
+    pub measured: bool,
+}
+
+/// Compute Table 6: our measured designs + the paper's comparison rows.
+pub fn table6_rows(ours: &[PerfSummary]) -> Vec<Table6Row> {
+    let mut rows = vec![
+        Table6Row {
+            implementation: "CPU i7-9800X (paper)".into(),
+            fps: 15.3,
+            power_w: 100.0,
+            fps_per_w: 0.15,
+            measured: false,
+        },
+        Table6Row {
+            implementation: "GPU TITAN RTX (paper)".into(),
+            fps: 183.4,
+            power_w: 260.0,
+            fps_per_w: 0.71,
+            measured: false,
+        },
+        Table6Row {
+            implementation: "BERT ZCU102 (Liu et al., paper)".into(),
+            fps: 22.8,
+            power_w: 9.8,
+            fps_per_w: 2.32,
+            measured: false,
+        },
+        Table6Row {
+            implementation: "BERT ZCU111 (Liu et al., paper)".into(),
+            fps: 42.0,
+            power_w: 13.2,
+            fps_per_w: 3.18,
+            measured: false,
+        },
+    ];
+    for s in ours {
+        rows.push(Table6Row {
+            implementation: format!("Ours {} ({})", s.label, s.device),
+            fps: s.fps,
+            power_w: s.power_w,
+            fps_per_w: s.fps_per_w,
+            measured: true,
+        });
+    }
+    rows
+}
+
+/// Render Table 6 ("Performance comparison among FPGA accelerators, CPU and
+/// GPU").
+pub fn render_table6(rows: &[Table6Row]) -> String {
+    let mut out = String::new();
+    out.push_str("Table 6 — FPS / power / energy efficiency\n");
+    out.push_str(&format!(
+        "{:<34} | {:>8} | {:>9} | {:>8} | {}\n",
+        "Implementation", "FPS", "Power (W)", "FPS/W", "source"
+    ));
+    out.push_str(&"-".repeat(80));
+    out.push('\n');
+    for r in rows {
+        out.push_str(&format!(
+            "{:<34} | {:>8.1} | {:>9.1} | {:>8.2} | {}\n",
+            r.implementation,
+            r.fps,
+            r.power_w,
+            r.fps_per_w,
+            if r.measured { "measured" } else { "paper" }
+        ));
+    }
+    out
+}

@@ -1,0 +1,186 @@
+//! The precision search (paper §3).
+//!
+//! "The theoretical maximum frame rate ... FR_max can be obtained supposing
+//! the activation precision is 1-bit. ... FR_tgt ≤ FR_max means the
+//! accelerator supporting a frame rate no lower than FR_tgt can be
+//! implemented, and the appropriate precision is found through a binary
+//! search procedure. With a selection range of 1 to 16 bits, up to four
+//! rounds of search are conducted."
+
+use std::time::Instant;
+
+use crate::hw::Device;
+use crate::model::VitConfig;
+use crate::perf::AcceleratorParams;
+
+use super::baseline::optimize_baseline;
+use super::params::{optimize_for_bits, DesignPoint};
+
+/// What the user hands to `vaqf compile`.
+#[derive(Debug, Clone)]
+pub struct CompileRequest {
+    pub model: VitConfig,
+    pub device: Device,
+    /// Desired frame rate (`FR_tgt`).
+    pub target_fps: f64,
+}
+
+/// One probe of the binary search.
+#[derive(Debug, Clone)]
+pub struct SearchRound {
+    pub bits: u8,
+    pub fps: f64,
+    pub feasible: bool,
+}
+
+/// The result of the compilation step.
+#[derive(Debug, Clone)]
+pub struct CompileOutcome {
+    /// Chosen activation precision (highest precision meeting the target —
+    /// higher precision ⇒ higher accuracy, §3 picks the least-destructive
+    /// quantization that satisfies the frame rate).
+    pub act_bits: u8,
+    /// The optimized design at that precision.
+    pub design: DesignPoint,
+    /// The baseline (W16A16) parameters the search started from.
+    pub baseline: AcceleratorParams,
+    /// Theoretical maximum frame rate (1-bit activations).
+    pub fr_max: f64,
+    /// The target that was requested.
+    pub target_fps: f64,
+    /// Probe log (≤ 1 + 4 entries: the FR_max probe + binary search).
+    pub rounds: Vec<SearchRound>,
+    /// Wall-clock cost of the compilation step (paper: minutes–hours with
+    /// Vivado in the loop; here the analytical model makes it milliseconds).
+    pub compile_seconds: f64,
+}
+
+/// Run the VAQF compilation step.
+///
+/// Errors if `FR_tgt > FR_max` — the §3 infeasibility case ("the
+/// accelerator supporting a frame rate no lower than FR_tgt can be
+/// implemented" only when `FR_tgt ≤ FR_max`).
+pub fn compile(req: &CompileRequest) -> anyhow::Result<CompileOutcome> {
+    let t0 = Instant::now();
+    let unquant = req.model.structure(None);
+    let baseline = optimize_baseline(&unquant, &req.device);
+
+    let probe = |bits: u8| -> anyhow::Result<DesignPoint> {
+        let s = req.model.structure(Some(bits));
+        optimize_for_bits(&s, &baseline, &req.device, bits)
+    };
+
+    let mut rounds = Vec::new();
+
+    // Feasibility: FR_max at 1-bit activations.
+    let d1 = probe(1)?;
+    let fr_max = d1.summary.fps;
+    rounds.push(SearchRound {
+        bits: 1,
+        fps: fr_max,
+        feasible: fr_max >= req.target_fps,
+    });
+    anyhow::ensure!(
+        req.target_fps <= fr_max,
+        "target {:.1} FPS exceeds FR_max = {:.1} FPS for {} on {} — \
+         no activation precision can satisfy it",
+        req.target_fps,
+        fr_max,
+        req.model.name,
+        req.device.name
+    );
+
+    // Binary search over 1..=16 for the highest precision still meeting
+    // the target. Invariant: lo always feasible, hi+1 not (or untested).
+    let mut lo = 1u8;
+    let mut hi = 16u8;
+    let mut best: (u8, DesignPoint) = (1, d1);
+    while lo < hi {
+        // Bias the midpoint up: we want the *largest* feasible bits.
+        let mid = (lo + hi + 1) / 2;
+        let d = probe(mid)?;
+        let ok = d.summary.fps >= req.target_fps;
+        rounds.push(SearchRound {
+            bits: mid,
+            fps: d.summary.fps,
+            feasible: ok,
+        });
+        if ok {
+            best = (mid, d);
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+
+    let (act_bits, design) = best;
+    Ok(CompileOutcome {
+        act_bits,
+        design,
+        baseline,
+        fr_max,
+        target_fps: req.target_fps,
+        rounds,
+        compile_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Multi-target compilation (paper §3: "if there exist multiple frame rate
+/// targets, all the possible precisions can be evaluated").
+///
+/// Evaluates every precision 1..=16 once, then assigns each target the
+/// highest precision meeting it. Infeasible targets map to `None`. The
+/// shared sweep costs one design-optimization per precision instead of one
+/// binary search per target.
+pub fn compile_multi(
+    model: &VitConfig,
+    device: &Device,
+    targets: &[f64],
+) -> anyhow::Result<Vec<(f64, Option<CompileOutcome>)>> {
+    let t0 = Instant::now();
+    let unquant = model.structure(None);
+    let baseline = optimize_baseline(&unquant, device);
+
+    // One sweep over the precision range.
+    let mut designs: Vec<(u8, DesignPoint)> = Vec::new();
+    for bits in 1..=16u8 {
+        let s = model.structure(Some(bits));
+        if let Ok(d) = optimize_for_bits(&s, &baseline, device, bits) {
+            designs.push((bits, d));
+        }
+    }
+    anyhow::ensure!(!designs.is_empty(), "no feasible design at any precision");
+    let fr_max = designs
+        .iter()
+        .map(|(_, d)| d.summary.fps)
+        .fold(0.0f64, f64::max);
+
+    let mut out = Vec::with_capacity(targets.len());
+    for &target in targets {
+        // Highest precision meeting the target.
+        let pick = designs
+            .iter()
+            .filter(|(_, d)| d.summary.fps >= target)
+            .max_by_key(|(bits, _)| *bits);
+        out.push((
+            target,
+            pick.map(|(bits, d)| CompileOutcome {
+                act_bits: *bits,
+                design: d.clone(),
+                baseline,
+                fr_max,
+                target_fps: target,
+                rounds: designs
+                    .iter()
+                    .map(|(b, dd)| SearchRound {
+                        bits: *b,
+                        fps: dd.summary.fps,
+                        feasible: dd.summary.fps >= target,
+                    })
+                    .collect(),
+                compile_seconds: t0.elapsed().as_secs_f64(),
+            }),
+        ));
+    }
+    Ok(out)
+}

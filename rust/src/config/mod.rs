@@ -1,0 +1,189 @@
+//! JSON config system: custom models, devices and compile targets.
+//!
+//! Presets cover the paper's setups; this module lets a downstream user
+//! describe *their* ViT variant and FPGA without recompiling:
+//!
+//! ```json
+//! {
+//!   "model": { "name": "my-vit", "image_size": 224, "patch_size": 16,
+//!              "in_chans": 3, "embed_dim": 512, "depth": 8,
+//!              "num_heads": 8, "mlp_ratio": 4, "num_classes": 100 },
+//!   "device": { "name": "my-board", "dsp": 1728, "lut": 230400,
+//!               "bram18k": 1248, "ff": 460800, "clock_mhz": 200,
+//!               "axi_port_bits": 64, "axi_ports_in": 2,
+//!               "axi_ports_wgt": 2, "axi_ports_out": 2 },
+//!   "target_fps": 20.0
+//! }
+//! ```
+//!
+//! Missing sections fall back to presets (`deit-base`, `zcu102`).
+
+use std::path::Path;
+
+use crate::hw::{Device, DevicePreset, ResourceBudget};
+use crate::model::{VitConfig, VitPreset};
+use crate::util::json::Json;
+
+/// A fully-resolved compile target.
+#[derive(Debug, Clone)]
+pub struct Target {
+    pub model: VitConfig,
+    pub device: Device,
+    pub target_fps: f64,
+}
+
+impl Default for Target {
+    fn default() -> Self {
+        Target {
+            model: VitPreset::DeiTBase.config(),
+            device: DevicePreset::Zcu102.device(),
+            target_fps: 24.0,
+        }
+    }
+}
+
+fn get_usize(j: &Json, key: &str) -> anyhow::Result<usize> {
+    j.get(key)
+        .and_then(Json::as_u64)
+        .map(|v| v as usize)
+        .ok_or_else(|| anyhow::anyhow!("missing field `{key}`"))
+}
+
+fn get_u64(j: &Json, key: &str) -> anyhow::Result<u64> {
+    j.get(key)
+        .and_then(Json::as_u64)
+        .ok_or_else(|| anyhow::anyhow!("missing field `{key}`"))
+}
+
+/// Parse a model section. A bare string selects a preset.
+pub fn model_from_json(j: &Json) -> anyhow::Result<VitConfig> {
+    if let Some(name) = j.as_str() {
+        return VitPreset::from_name(name)
+            .map(|p| p.config())
+            .ok_or_else(|| anyhow::anyhow!("unknown model preset `{name}`"));
+    }
+    Ok(VitConfig {
+        name: j
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("custom")
+            .to_string(),
+        image_size: get_usize(j, "image_size")?,
+        patch_size: get_usize(j, "patch_size")?,
+        in_chans: get_usize(j, "in_chans")?,
+        embed_dim: get_usize(j, "embed_dim")?,
+        depth: get_usize(j, "depth")?,
+        num_heads: get_usize(j, "num_heads")?,
+        mlp_ratio: get_usize(j, "mlp_ratio")?,
+        num_classes: get_usize(j, "num_classes")?,
+    })
+}
+
+/// Parse a device section. A bare string selects a preset.
+pub fn device_from_json(j: &Json) -> anyhow::Result<Device> {
+    if let Some(name) = j.as_str() {
+        return DevicePreset::from_name(name)
+            .map(|p| p.device())
+            .ok_or_else(|| anyhow::anyhow!("unknown device preset `{name}`"));
+    }
+    let defaults = DevicePreset::Zcu102.device();
+    Ok(Device {
+        name: j
+            .get("name")
+            .and_then(Json::as_str)
+            .unwrap_or("custom")
+            .to_string(),
+        budget: ResourceBudget {
+            dsp: get_u64(j, "dsp")?,
+            lut: get_u64(j, "lut")?,
+            bram18k: get_u64(j, "bram18k")?,
+            ff: get_u64(j, "ff")?,
+        },
+        clock_mhz: get_u64(j, "clock_mhz")?,
+        axi_port_bits: get_u64(j, "axi_port_bits")? as u32,
+        axi_ports_in: j.get("axi_ports_in").and_then(Json::as_u64).unwrap_or(2),
+        axi_ports_wgt: j.get("axi_ports_wgt").and_then(Json::as_u64).unwrap_or(2),
+        axi_ports_out: j.get("axi_ports_out").and_then(Json::as_u64).unwrap_or(2),
+        r_dsp: j
+            .get("r_dsp")
+            .and_then(Json::as_f64)
+            .unwrap_or(defaults.r_dsp),
+        r_lut: j
+            .get("r_lut")
+            .and_then(Json::as_f64)
+            .unwrap_or(defaults.r_lut),
+        static_power_w: j
+            .get("static_power_w")
+            .and_then(Json::as_f64)
+            .unwrap_or(defaults.static_power_w),
+    })
+}
+
+/// Parse a full target document.
+pub fn target_from_json(j: &Json) -> anyhow::Result<Target> {
+    let mut t = Target::default();
+    if let Some(m) = j.get("model") {
+        t.model = model_from_json(m)?;
+    }
+    if let Some(d) = j.get("device") {
+        t.device = device_from_json(d)?;
+    }
+    if let Some(f) = j.get("target_fps").and_then(Json::as_f64) {
+        t.target_fps = f;
+    }
+    Ok(t)
+}
+
+/// Load a target config file.
+pub fn load_target(path: impl AsRef<Path>) -> anyhow::Result<Target> {
+    let text = std::fs::read_to_string(path.as_ref())?;
+    target_from_json(&Json::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_by_string() {
+        let j = Json::parse(r#"{"model": "deit-small", "device": "zcu111", "target_fps": 40}"#)
+            .unwrap();
+        let t = target_from_json(&j).unwrap();
+        assert_eq!(t.model.name, "deit-small");
+        assert_eq!(t.device.name, "zcu111");
+        assert_eq!(t.target_fps, 40.0);
+    }
+
+    #[test]
+    fn custom_model_and_device() {
+        let j = Json::parse(
+            r#"{
+              "model": {"name": "my-vit", "image_size": 64, "patch_size": 8,
+                        "in_chans": 3, "embed_dim": 128, "depth": 4,
+                        "num_heads": 4, "mlp_ratio": 4, "num_classes": 10},
+              "device": {"name": "b", "dsp": 900, "lut": 100000,
+                         "bram18k": 600, "ff": 200000, "clock_mhz": 100,
+                         "axi_port_bits": 64}
+            }"#,
+        )
+        .unwrap();
+        let t = target_from_json(&j).unwrap();
+        assert_eq!(t.model.embed_dim, 128);
+        assert_eq!(t.model.tokens(), 65);
+        assert_eq!(t.device.budget.dsp, 900);
+        assert_eq!(t.target_fps, 24.0); // default
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let j = Json::parse(r#"{"model": {"name": "x"}}"#).unwrap();
+        assert!(target_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let t = target_from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(t.model.name, "deit-base");
+        assert_eq!(t.device.name, "zcu102");
+    }
+}

@@ -1,0 +1,185 @@
+//! Adaptive precision scaling — an extension beyond the paper.
+//!
+//! VAQF compiles one accelerator per frame-rate target. The paper's §3
+//! notes that "if there exist multiple frame rate targets, all the
+//! possible precisions can be evaluated"; this module takes the next step
+//! the conclusion gestures at ("generalized to other frame rate targets"):
+//! keep the precision *ladder* resident and switch at runtime based on the
+//! observed service rate — degrade to fewer activation bits when the
+//! current variant cannot sustain the offered rate (e.g. thermal
+//! throttling, co-tenants, higher-resolution input), climb back up when
+//! there is headroom. Accuracy is sacrificed exactly when — and only when
+//! — the real-time contract would otherwise break, mirroring the
+//! compile-time trade-off at serve time.
+
+use crate::runtime::InferenceBackend;
+
+/// Hysteresis controller over a precision ladder.
+///
+/// Ladder entries are ordered highest-precision-first. The controller
+/// watches a sliding window of (device-latency, deadline) observations:
+///
+/// * sustained misses (latency > deadline on ≥ `down_frac` of the window)
+///   ⇒ step down (lower precision, faster variant);
+/// * sustained headroom (latency < `up_margin`·deadline on the whole
+///   window) ⇒ step up (higher precision, better accuracy).
+pub struct AdaptivePrecision {
+    /// (label, backend), highest precision first.
+    ladder: Vec<(String, Box<dyn InferenceBackend>)>,
+    current: usize,
+    window: Vec<bool>, // true = missed deadline
+    headroom: Vec<bool>,
+    window_len: usize,
+    down_frac: f64,
+    up_margin: f64,
+    pub switches: Vec<(u64, usize)>,
+    frames_seen: u64,
+}
+
+impl AdaptivePrecision {
+    pub fn new(ladder: Vec<(String, Box<dyn InferenceBackend>)>) -> AdaptivePrecision {
+        assert!(!ladder.is_empty());
+        AdaptivePrecision {
+            ladder,
+            current: 0,
+            window: Vec::new(),
+            headroom: Vec::new(),
+            window_len: 8,
+            down_frac: 0.5,
+            up_margin: 0.5,
+            switches: Vec::new(),
+            frames_seen: 0,
+        }
+    }
+
+    pub fn current_label(&self) -> &str {
+        &self.ladder[self.current].0
+    }
+
+    pub fn current_index(&self) -> usize {
+        self.current
+    }
+
+    /// Run one frame under a deadline; returns (logits, device seconds,
+    /// ladder index used).
+    pub fn infer(
+        &mut self,
+        patches: &[f32],
+        deadline_s: f64,
+    ) -> anyhow::Result<(Vec<f32>, f64, usize)> {
+        let used = self.current;
+        let (logits, device_s) = self.ladder[used].1.infer(patches)?;
+        self.frames_seen += 1;
+        self.observe(device_s, deadline_s);
+        Ok((logits, device_s, used))
+    }
+
+    fn observe(&mut self, device_s: f64, deadline_s: f64) {
+        self.window.push(device_s > deadline_s);
+        self.headroom.push(device_s < deadline_s * self.up_margin);
+        if self.window.len() < self.window_len {
+            return;
+        }
+        let misses = self.window.iter().filter(|&&m| m).count() as f64;
+        if misses / self.window.len() as f64 >= self.down_frac
+            && self.current + 1 < self.ladder.len()
+        {
+            self.current += 1;
+            self.switches.push((self.frames_seen, self.current));
+        } else if self.headroom.iter().all(|&h| h) && self.current > 0 {
+            self.current -= 1;
+            self.switches.push((self.frames_seen, self.current));
+        }
+        self.window.clear();
+        self.headroom.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Backend with a scriptable latency.
+    struct FakeBackend {
+        latency_s: f64,
+    }
+
+    impl InferenceBackend for FakeBackend {
+        fn name(&self) -> String {
+            format!("fake@{}", self.latency_s)
+        }
+        fn infer(&self, _patches: &[f32]) -> anyhow::Result<(Vec<f32>, f64)> {
+            Ok((vec![0.0; 4], self.latency_s))
+        }
+    }
+
+    fn ladder(lat_hi: f64, lat_lo: f64) -> AdaptivePrecision {
+        AdaptivePrecision::new(vec![
+            ("W1A8".into(), Box::new(FakeBackend { latency_s: lat_hi })),
+            ("W1A4".into(), Box::new(FakeBackend { latency_s: lat_lo })),
+        ])
+    }
+
+    #[test]
+    fn starts_at_highest_precision() {
+        let ap = ladder(0.01, 0.001);
+        assert_eq!(ap.current_label(), "W1A8");
+    }
+
+    #[test]
+    fn steps_down_under_sustained_misses() {
+        // Deadline 5 ms, W1A8 takes 10 ms ⇒ misses ⇒ must degrade.
+        let mut ap = ladder(0.010, 0.001);
+        for _ in 0..8 {
+            ap.infer(&[0.0], 0.005).unwrap();
+        }
+        assert_eq!(ap.current_label(), "W1A4", "switches: {:?}", ap.switches);
+    }
+
+    #[test]
+    fn steps_back_up_with_headroom() {
+        let mut ap = ladder(0.002, 0.001);
+        // Force down first.
+        ap.current = 1;
+        for _ in 0..8 {
+            ap.infer(&[0.0], 0.005).unwrap(); // 1 ms ≪ 0.5·5 ms ⇒ headroom
+        }
+        assert_eq!(ap.current_label(), "W1A8");
+    }
+
+    #[test]
+    fn stays_put_in_the_comfortable_band() {
+        // 4 ms against a 5 ms deadline: no miss, but no 2× headroom either.
+        let mut ap = ladder(0.004, 0.001);
+        for _ in 0..32 {
+            ap.infer(&[0.0], 0.005).unwrap();
+        }
+        assert_eq!(ap.current_label(), "W1A8");
+        assert!(ap.switches.is_empty());
+    }
+
+    #[test]
+    fn never_steps_below_ladder_bottom() {
+        let mut ap = ladder(0.010, 0.009);
+        for _ in 0..64 {
+            ap.infer(&[0.0], 0.001).unwrap(); // everything misses
+        }
+        assert_eq!(ap.current_index(), 1, "must clamp at the bottom");
+    }
+
+    #[test]
+    fn oscillation_is_damped_by_windowing() {
+        // Alternating hit/miss at exactly the threshold should not flap
+        // every frame: switches only happen at window boundaries.
+        let mut ap = ladder(0.006, 0.001);
+        for i in 0..32 {
+            let deadline = if i % 2 == 0 { 0.004 } else { 0.1 };
+            ap.infer(&[0.0], deadline).unwrap();
+        }
+        assert!(
+            ap.switches.len() <= 32 / 8,
+            "at most one switch per window: {:?}",
+            ap.switches
+        );
+    }
+}

@@ -1,0 +1,110 @@
+//! Serving metrics: latency distribution, achieved FPS, drop accounting.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::{LatencyHistogram, Summary};
+
+/// Collected during a serve run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// End-to-end (emit → logits) latency per completed frame.
+    pub e2e: Vec<f64>,
+    /// Backend (device) latency per completed frame.
+    pub device: Vec<f64>,
+    pub completed: u64,
+    pub dropped: u64,
+    pub offered: u64,
+}
+
+impl Metrics {
+    pub fn record(&mut self, e2e_s: f64, device_s: f64) {
+        self.e2e.push(e2e_s);
+        self.device.push(device_s);
+        self.completed += 1;
+    }
+}
+
+/// Final report of a serving run.
+#[derive(Debug, Clone)]
+pub struct ServingReport {
+    pub backend: String,
+    pub offered_fps: f64,
+    pub achieved_fps: f64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub drop_rate: f64,
+    pub e2e_latency: Summary,
+    pub device_latency: Summary,
+    pub wall_seconds: f64,
+}
+
+impl ServingReport {
+    pub fn build(
+        backend: String,
+        metrics: &Metrics,
+        started: Instant,
+        offered_fps: f64,
+    ) -> ServingReport {
+        let wall = started.elapsed().as_secs_f64();
+        let mut hist = LatencyHistogram::default();
+        for &l in &metrics.e2e {
+            hist.record(l);
+        }
+        ServingReport {
+            backend,
+            offered_fps,
+            achieved_fps: metrics.completed as f64 / wall,
+            completed: metrics.completed,
+            dropped: metrics.dropped,
+            drop_rate: metrics.dropped as f64 / metrics.offered.max(1) as f64,
+            e2e_latency: Summary::from(&metrics.e2e),
+            device_latency: Summary::from(&metrics.device),
+            wall_seconds: wall,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("backend", self.backend.as_str())
+            .set("offered_fps", self.offered_fps)
+            .set("achieved_fps", self.achieved_fps)
+            .set("completed", self.completed)
+            .set("dropped", self.dropped)
+            .set("drop_rate", self.drop_rate)
+            .set(
+                "e2e_latency_ms",
+                Json::obj()
+                    .set("p50", self.e2e_latency.p50 * 1e3)
+                    .set("p95", self.e2e_latency.p95 * 1e3)
+                    .set("p99", self.e2e_latency.p99 * 1e3)
+                    .set("mean", self.e2e_latency.mean * 1e3),
+            )
+            .set(
+                "device_latency_ms",
+                Json::obj()
+                    .set("p50", self.device_latency.p50 * 1e3)
+                    .set("mean", self.device_latency.mean * 1e3),
+            )
+            .set("wall_seconds", self.wall_seconds)
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "backend {b}\n  offered {o:.1} FPS → achieved {a:.1} FPS  \
+             (completed {c}, dropped {d} = {dr:.1}%)\n  \
+             e2e latency  p50 {p50:.2} ms  p95 {p95:.2} ms  p99 {p99:.2} ms\n  \
+             device latency  mean {dm:.2} ms\n",
+            b = self.backend,
+            o = self.offered_fps,
+            a = self.achieved_fps,
+            c = self.completed,
+            d = self.dropped,
+            dr = 100.0 * self.drop_rate,
+            p50 = self.e2e_latency.p50 * 1e3,
+            p95 = self.e2e_latency.p95 * 1e3,
+            p99 = self.e2e_latency.p99 * 1e3,
+            dm = self.device_latency.mean * 1e3,
+        )
+    }
+}

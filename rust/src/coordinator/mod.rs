@@ -1,0 +1,32 @@
+//! Frame-serving coordinator (L3 runtime path).
+//!
+//! VAQF's end product is a *real-time* inference accelerator — the paper's
+//! contract is "`FR_tgt` frames per second, sustained". This module is the
+//! serving loop that exercises that contract end to end:
+//!
+//! ```text
+//! FrameSource ──► BoundedQueue (drop-oldest backpressure) ──► worker
+//!    (offered FPS)                                        (backend.infer)
+//!                                                              │
+//!                                     Metrics ◄── latency, drops, achieved FPS
+//! ```
+//!
+//! Backends implement [`crate::runtime::InferenceBackend`]: either the
+//! PJRT functional reference or the cycle-level FPGA simulator (which can
+//! pace wall-clock to the simulated latency, so the serving report
+//! reflects the *accelerator's* real-time behaviour).
+
+mod adaptive;
+mod metrics;
+mod queue;
+mod server;
+mod source;
+
+pub use adaptive::AdaptivePrecision;
+pub use metrics::{Metrics, ServingReport};
+pub use queue::BoundedQueue;
+pub use server::{serve, ServeConfig};
+pub use source::{Frame, FrameSource};
+
+#[cfg(test)]
+mod tests;

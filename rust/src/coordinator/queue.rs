@@ -1,0 +1,96 @@
+//! Bounded MPSC frame queue with drop-oldest backpressure.
+//!
+//! A real-time video pipeline must shed load rather than grow latency
+//! unboundedly: when the accelerator falls behind, the *oldest* queued
+//! frame is dropped (its information is stale) and the new one admitted.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Bounded queue; `push` never blocks (drops oldest on overflow), `pop`
+/// blocks until an item or shutdown.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+    capacity: usize,
+    dropped: AtomicU64,
+    pushed: AtomicU64,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        BoundedQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::with_capacity(capacity),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            capacity,
+            dropped: AtomicU64::new(0),
+            pushed: AtomicU64::new(0),
+        }
+    }
+
+    /// Admit an item, dropping the oldest if full. Returns `true` if a
+    /// drop occurred.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return false;
+        }
+        let mut dropped = false;
+        if g.items.len() == self.capacity {
+            g.items.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            dropped = true;
+        }
+        g.items.push_back(item);
+        self.pushed.fetch_add(1, Ordering::Relaxed);
+        drop(g);
+        self.cv.notify_one();
+        dropped
+    }
+
+    /// Blocking pop; `None` once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Close: wake all consumers; queued items still drain.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    pub fn pushed(&self) -> u64 {
+        self.pushed.load(Ordering::Relaxed)
+    }
+}

@@ -1,0 +1,77 @@
+//! The serving loop: source thread → bounded queue → worker thread.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::runtime::InferenceBackend;
+
+use super::metrics::{Metrics, ServingReport};
+use super::queue::BoundedQueue;
+use super::source::{Frame, FrameSource};
+
+/// Serve-run configuration.
+pub struct ServeConfig {
+    /// Frames the source offers per second.
+    pub offered_fps: f64,
+    /// Total frames to offer.
+    pub frames: u64,
+    /// Queue depth before drop-oldest kicks in (a real-time pipeline keeps
+    /// this small — 2 means "at most one stale frame waiting").
+    pub queue_depth: usize,
+    pub source_seed: u64,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            offered_fps: 30.0,
+            frames: 90,
+            queue_depth: 2,
+            source_seed: 11,
+        }
+    }
+}
+
+/// Run the full serving pipeline against `backend`; blocks until all
+/// offered frames are either served or dropped.
+pub fn serve(
+    mut source: FrameSource,
+    backend: Box<dyn InferenceBackend>,
+    cfg: &ServeConfig,
+) -> anyhow::Result<ServingReport> {
+    let queue: Arc<BoundedQueue<Frame>> = Arc::new(BoundedQueue::new(cfg.queue_depth));
+    let started = Instant::now();
+
+    // Source thread: paced frame production with drop-oldest admission.
+    let q_prod = Arc::clone(&queue);
+    let frames = cfg.frames;
+    let producer = std::thread::spawn(move || {
+        for _ in 0..frames {
+            let frame = source.next_frame();
+            q_prod.push(frame);
+        }
+        q_prod.close();
+    });
+
+    // Worker: single consumer (the accelerator executes layers serially;
+    // batching across frames is not part of the paper's design, which
+    // targets frame latency).
+    let mut metrics = Metrics::default();
+    while let Some(frame) = queue.pop() {
+        let (logits, device_s) = backend.infer(&frame.patches)?;
+        debug_assert!(logits.iter().all(|v| v.is_finite()));
+        metrics.record(frame.emitted_at.elapsed().as_secs_f64(), device_s);
+    }
+    producer
+        .join()
+        .map_err(|_| anyhow::anyhow!("source thread panicked"))?;
+
+    metrics.offered = queue.pushed();
+    metrics.dropped = queue.dropped();
+    Ok(ServingReport::build(
+        backend.name(),
+        &metrics,
+        started,
+        cfg.offered_fps,
+    ))
+}

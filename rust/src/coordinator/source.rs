@@ -1,0 +1,69 @@
+//! Synthetic video source: frames at a configurable offered rate.
+
+use std::time::{Duration, Instant};
+
+use crate::model::VitConfig;
+use crate::util::rng::SplitMix64;
+
+/// One video frame, already in the Fig. 4 flattened-patch layout.
+#[derive(Debug, Clone)]
+pub struct Frame {
+    pub id: u64,
+    /// Row-major `N_p × (3·P²)`.
+    pub patches: Vec<f32>,
+    /// When the source emitted it (for end-to-end latency accounting).
+    pub emitted_at: Instant,
+}
+
+/// Deterministic synthetic camera. Frame contents use the same PRNG
+/// stream family as `sim::weights::synthetic_patches`, so a given
+/// `(seed, frame_id)` is reproducible across runs and backends.
+pub struct FrameSource {
+    config: VitConfig,
+    seed: u64,
+    next_id: u64,
+    /// Inter-frame interval (None ⇒ emit as fast as pulled).
+    interval: Option<Duration>,
+    last_emit: Option<Instant>,
+}
+
+impl FrameSource {
+    pub fn new(config: VitConfig, seed: u64, offered_fps: Option<f64>) -> FrameSource {
+        FrameSource {
+            config,
+            seed,
+            next_id: 0,
+            interval: offered_fps.map(|f| Duration::from_secs_f64(1.0 / f)),
+            last_emit: None,
+        }
+    }
+
+    /// Produce the next frame, sleeping to honour the offered rate.
+    pub fn next_frame(&mut self) -> Frame {
+        if let (Some(interval), Some(last)) = (self.interval, self.last_emit) {
+            let elapsed = last.elapsed();
+            if elapsed < interval {
+                std::thread::sleep(interval - elapsed);
+            }
+        }
+        let frame = self.make_frame(self.next_id);
+        self.next_id += 1;
+        self.last_emit = Some(Instant::now());
+        frame
+    }
+
+    /// Generate frame `id` without pacing (pure function of (seed, id)).
+    pub fn make_frame(&self, id: u64) -> Frame {
+        let np = self.config.num_patches();
+        let pin = self.config.in_chans * self.config.patch_size * self.config.patch_size;
+        let mut rng = SplitMix64::new(self.seed ^ 0x5EED_F00D ^ id.wrapping_mul(0x9E37));
+        let patches = (0..np * pin)
+            .map(|_| rng.next_f32_range(-1.0, 1.0))
+            .collect();
+        Frame {
+            id,
+            patches,
+            emitted_at: Instant::now(),
+        }
+    }
+}

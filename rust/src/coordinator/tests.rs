@@ -1,0 +1,154 @@
+use std::sync::Arc;
+
+use crate::hw::zcu102;
+use crate::model::VitConfig;
+use crate::perf::AcceleratorParams;
+use crate::runtime::{InferenceBackend, SimBackend};
+use crate::sim::{generate_weights, ModelExecutor};
+
+use super::*;
+
+fn micro() -> VitConfig {
+    VitConfig {
+        name: "micro".into(),
+        image_size: 32,
+        patch_size: 8,
+        in_chans: 3,
+        embed_dim: 32,
+        depth: 1,
+        num_heads: 4,
+        mlp_ratio: 4,
+        num_classes: 10,
+    }
+}
+
+fn sim_backend(realtime: bool) -> Box<dyn InferenceBackend> {
+    let cfg = micro();
+    let w = generate_weights(&cfg, 11);
+    let g_q = AcceleratorParams::g_q_for(64, 8);
+    let params = AcceleratorParams {
+        t_m: 16,
+        t_n: 2,
+        t_m_q: 16,
+        t_n_q: 2 * g_q / 4,
+        g: 4,
+        g_q,
+        p_h: 4,
+        act_bits: Some(8),
+    };
+    Box::new(SimBackend {
+        executor: ModelExecutor::new(w, Some(8), params, zcu102()),
+        realtime,
+    })
+}
+
+#[test]
+fn queue_drop_oldest() {
+    let q: BoundedQueue<u32> = BoundedQueue::new(2);
+    assert!(!q.push(1));
+    assert!(!q.push(2));
+    assert!(q.push(3)); // drops 1
+    assert_eq!(q.pop(), Some(2));
+    assert_eq!(q.pop(), Some(3));
+    q.close();
+    assert_eq!(q.pop(), None);
+    assert_eq!(q.dropped(), 1);
+    assert_eq!(q.pushed(), 3);
+}
+
+#[test]
+fn queue_close_drains() {
+    let q: BoundedQueue<u32> = BoundedQueue::new(4);
+    q.push(1);
+    q.push(2);
+    q.close();
+    assert_eq!(q.pop(), Some(1));
+    assert_eq!(q.pop(), Some(2));
+    assert_eq!(q.pop(), None);
+    assert!(!q.push(9), "push after close is refused");
+    assert_eq!(q.len(), 0);
+}
+
+#[test]
+fn source_frames_are_deterministic() {
+    let s1 = FrameSource::new(micro(), 7, None);
+    let s2 = FrameSource::new(micro(), 7, None);
+    assert_eq!(s1.make_frame(3).patches, s2.make_frame(3).patches);
+    assert_ne!(s1.make_frame(3).patches, s1.make_frame(4).patches);
+}
+
+#[test]
+fn source_paces_offered_rate() {
+    let mut s = FrameSource::new(micro(), 1, Some(200.0));
+    let t0 = std::time::Instant::now();
+    for _ in 0..5 {
+        let _ = s.next_frame();
+    }
+    // 5 frames at 200 FPS ≥ 20 ms.
+    assert!(t0.elapsed().as_secs_f64() >= 0.015);
+}
+
+#[test]
+fn serve_completes_all_frames_when_backend_is_fast() {
+    // queue_depth = frames: no eviction possible, every frame completes
+    // (shedding behaviour is covered by the next test).
+    let cfg = ServeConfig {
+        offered_fps: 500.0,
+        frames: 20,
+        queue_depth: 20,
+        source_seed: 11,
+    };
+    let source = FrameSource::new(micro(), 11, Some(cfg.offered_fps));
+    let report = serve(source, sim_backend(false), &cfg).unwrap();
+    assert_eq!(report.completed + report.dropped, 20);
+    assert_eq!(report.dropped, 0, "deep queue must not drop");
+    assert!(report.e2e_latency.p50 > 0.0);
+    let j = report.to_json().pretty();
+    assert!(j.contains("achieved_fps"));
+}
+
+#[test]
+fn serve_sheds_load_when_backend_is_slow() {
+    // Offered far above what the real-time simulated accelerator can do:
+    // drops must occur and achieved FPS ≈ the accelerator's rate.
+    struct SlowBackend;
+    impl InferenceBackend for SlowBackend {
+        fn name(&self) -> String {
+            "slow".into()
+        }
+        fn infer(&self, _p: &[f32]) -> anyhow::Result<(Vec<f32>, f64)> {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            Ok((vec![0.0; 10], 0.02))
+        }
+    }
+    let cfg = ServeConfig {
+        offered_fps: 400.0,
+        frames: 40,
+        queue_depth: 2,
+        source_seed: 1,
+    };
+    let source = FrameSource::new(micro(), 1, Some(cfg.offered_fps));
+    let report = serve(source, Box::new(SlowBackend), &cfg).unwrap();
+    assert!(report.dropped > 0, "must shed load: {report:?}");
+    assert!(
+        report.achieved_fps < 80.0,
+        "achieved {} should be near 50",
+        report.achieved_fps
+    );
+    assert_eq!(report.completed + report.dropped, 40);
+}
+
+#[test]
+fn realtime_sim_backend_paces_to_device_latency() {
+    let b = sim_backend(true);
+    let s = FrameSource::new(micro(), 11, None);
+    let frame = s.make_frame(0);
+    let t0 = std::time::Instant::now();
+    let (_, device_s) = b.infer(&frame.patches).unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+    assert!(
+        wall >= device_s,
+        "realtime backend must not finish before the simulated device ({wall} < {device_s})"
+    );
+    let _ = Arc::new(());
+}

@@ -1,0 +1,107 @@
+//! Resource inventories and utilization accounting.
+
+
+
+/// Countable resources on an FPGA fabric.
+///
+/// BRAMs are counted in 18k-bit blocks (the unit of Eq. 12); Table 5 of the
+/// paper reports BRAM36 (= 2 × BRAM18k), and the report generator converts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResourceBudget {
+    pub dsp: u64,
+    pub lut: u64,
+    pub bram18k: u64,
+    pub ff: u64,
+}
+
+/// A concrete utilization (same units as [`ResourceBudget`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Utilization {
+    pub dsp: u64,
+    pub lut: u64,
+    pub bram18k: u64,
+    pub ff: u64,
+}
+
+/// Utilization as percentages of a budget.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct UtilizationPct {
+    pub dsp: f64,
+    pub lut: f64,
+    pub bram18k: f64,
+    pub ff: f64,
+}
+
+impl Utilization {
+    pub fn percent(&self, b: &ResourceBudget) -> UtilizationPct {
+        let pct = |u: u64, t: u64| 100.0 * u as f64 / t as f64;
+        UtilizationPct {
+            dsp: pct(self.dsp, b.dsp),
+            lut: pct(self.lut, b.lut),
+            bram18k: pct(self.bram18k, b.bram18k),
+            ff: pct(self.ff, b.ff),
+        }
+    }
+
+    /// Whether this utilization fits within the raw budget.
+    pub fn fits(&self, b: &ResourceBudget) -> bool {
+        self.dsp <= b.dsp && self.lut <= b.lut && self.bram18k <= b.bram18k && self.ff <= b.ff
+    }
+
+    /// Component-wise addition.
+    pub fn plus(&self, other: &Utilization) -> Utilization {
+        Utilization {
+            dsp: self.dsp + other.dsp,
+            lut: self.lut + other.lut,
+            bram18k: self.bram18k + other.bram18k,
+            ff: self.ff + other.ff,
+        }
+    }
+}
+
+/// An FPGA device the accelerator is compiled for.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Device {
+    pub name: String,
+    pub budget: ResourceBudget,
+    /// Operating frequency in MHz (§6.1: 150 MHz on ZCU102 to avoid timing
+    /// violations).
+    pub clock_mhz: u64,
+    /// Width of one AXI data port in bits (`S_port`, §5.3.1; 64 on ZCU102).
+    pub axi_port_bits: u32,
+    /// AXI ports available for input tiles (`p_in` of Eq. 7).
+    pub axi_ports_in: u64,
+    /// AXI ports for weight tiles (`p_wgt`).
+    pub axi_ports_wgt: u64,
+    /// AXI ports for output tiles (`p_out`).
+    pub axi_ports_out: u64,
+    /// Max fraction of DSPs usable for MAC arrays (`r_dsp`, Eq. 14) —
+    /// leaves headroom for address generation and control.
+    pub r_dsp: f64,
+    /// Max fraction of LUTs usable for quantized MAC arrays (`r_lut`).
+    /// Exceeding this is how placement/routing failures manifest (§3:
+    /// "usually resulting from overutilization of LUTs").
+    pub r_lut: f64,
+    /// Static (idle) power draw in watts, for the Table 6 power model.
+    pub static_power_w: f64,
+}
+
+impl Device {
+    /// Clock period in seconds.
+    pub fn clock_period_s(&self) -> f64 {
+        1.0 / (self.clock_mhz as f64 * 1e6)
+    }
+
+    /// Cycles → seconds at this device's clock.
+    pub fn cycles_to_seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 * self.clock_period_s()
+    }
+
+    /// Seconds → frame rate.
+    pub fn fps(&self, cycles_per_frame: u64) -> f64 {
+        if cycles_per_frame == 0 {
+            return f64::INFINITY;
+        }
+        1.0 / self.cycles_to_seconds(cycles_per_frame)
+    }
+}

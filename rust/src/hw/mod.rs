@@ -1,0 +1,59 @@
+//! FPGA device models (paper §6.1: Xilinx ZCU102, 150 MHz; generalizable to
+//! other devices — we also ship ZCU111 for the Table 6 comparison point).
+
+mod device;
+mod presets;
+
+pub use device::{Device, ResourceBudget, Utilization, UtilizationPct};
+pub use presets::{generic_edge, zcu102, zcu111, DevicePreset};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zcu102_inventory_matches_paper() {
+        let d = zcu102();
+        // §6.1: "Xilinx ZCU102 FPGA platform with 2520 DSPs and 274k LUTs".
+        assert_eq!(d.budget.dsp, 2520);
+        assert_eq!(d.budget.lut, 274_080);
+        assert_eq!(d.clock_mhz, 150);
+        // ZCU102 has 912 BRAM36 = 1824 BRAM18k blocks.
+        assert_eq!(d.budget.bram18k, 1824);
+    }
+
+    #[test]
+    fn axi_word_capacity() {
+        let d = zcu102();
+        assert_eq!(d.axi_port_bits, 64);
+    }
+
+    #[test]
+    fn utilization_percentages() {
+        let d = zcu102();
+        let u = Utilization {
+            dsp: 1564,
+            lut: 143_000,
+            bram18k: 1131,
+            ff: 110_000,
+        };
+        let pct = u.percent(&d.budget);
+        assert!((pct.dsp - 62.06).abs() < 0.1);
+        assert!((pct.lut - 52.17).abs() < 0.2);
+    }
+
+    #[test]
+    fn fits_checks_every_resource() {
+        let d = generic_edge();
+        let ok = Utilization { dsp: 1, lut: 1, bram18k: 1, ff: 1 };
+        assert!(ok.fits(&d.budget));
+        let over = Utilization { dsp: d.budget.dsp + 1, ..ok };
+        assert!(!over.fits(&d.budget));
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert_eq!(DevicePreset::from_name("zcu102").unwrap().device().name, "zcu102");
+        assert!(DevicePreset::from_name("nonexistent").is_none());
+    }
+}

@@ -1,0 +1,54 @@
+//! # VAQF — automatic software–hardware co-design for low-bit Vision Transformers
+//!
+//! Rust reproduction of *"VAQF: Fully Automatic Software-Hardware Co-Design
+//! Framework for Low-Bit Vision Transformer"* (Sun et al., 2022).
+//!
+//! VAQF takes a ViT structure and a target frame rate and automatically
+//! produces:
+//!
+//! 1. the **activation quantization precision** (weights are binary) required
+//!    to hit the frame-rate target, found with a ≤4-round binary search over
+//!    1..=16 bits (paper §3), and
+//! 2. the **accelerator parameter settings** — tiling sizes `T_m`/`T_n`
+//!    (and the quantized-path `T_m^q`/`T_n^q`), data-packing factors
+//!    `G`/`G^q`, and head parallelism `P_h` — that realize it on a given
+//!    FPGA device (paper §5.3).
+//!
+//! The physical Xilinx ZCU102 board and Vivado HLS flow of the paper are
+//! replaced by two substrates built in this crate (see `DESIGN.md` §5):
+//!
+//! * [`perf`] — the paper's analytical resource/latency model (Eqs. 7–14),
+//! * [`sim`]  — a cycle-level, *functional* simulator of the generated
+//!   accelerator (Fig. 3) whose numerics are cross-checked against the
+//!   AOT-compiled JAX model executed through [`runtime`] (PJRT CPU).
+//!
+//! The crate layout mirrors the paper:
+//!
+//! | module | paper section |
+//! |---|---|
+//! | [`model`] | §4.1 ViT structure, Fig. 2, Fig. 4 conv→FC |
+//! | [`quant`] | §4.2 binarization, activation quantization, §5.3.1 packing |
+//! | [`hw`] | §6.1 device inventories (ZCU102 et al.) |
+//! | [`perf`] | §5.3.3 Eqs. 7–14 + throughput/power models |
+//! | [`compiler`] | §3 + §5.3.2 the VAQF compilation step |
+//! | [`sim`] | §5.1/§5.2 compute engine + layer processing |
+//! | [`runtime`] | PJRT execution of AOT artifacts (functional reference) |
+//! | [`coordinator`] | frame-serving loop: queue → batcher → backend |
+//! | [`config`] | TOML/JSON config system for models/devices/targets |
+
+pub mod compiler;
+pub mod config;
+pub mod coordinator;
+pub mod hw;
+pub mod model;
+pub mod perf;
+pub mod quant;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Clock cycles — the unit of the analytical model and the simulator.
+pub type Cycles = u64;

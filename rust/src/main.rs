@@ -1,0 +1,284 @@
+//! `vaqf` — command-line entry point for the co-design framework.
+//!
+//! ```text
+//! vaqf compile  --model deit-base --device zcu102 --target-fps 24 [--emit-dir DIR]
+//! vaqf search   --model deit-base --device zcu102          # sweep 1..=16 bits
+//! vaqf report   --table5 | --table6 [--device zcu102]
+//! vaqf codegen  --model deit-base --target-fps 24 --out accel.cpp
+//! vaqf simulate --bits 8 --frames 3                        # functional micro sim
+//! vaqf serve    --variant micro_w1a8 --backend sim|pjrt --fps 30 --frames 90
+//! ```
+
+use vaqf::compiler::{
+    compile, emit_config_json, emit_hls_cpp, optimize_baseline, optimize_for_bits, render_table5,
+    render_table6, table5_rows, table6_rows, CompileRequest,
+};
+use vaqf::coordinator::{serve, FrameSource, ServeConfig};
+use vaqf::hw::DevicePreset;
+use vaqf::model::{VitConfig, VitPreset};
+use vaqf::perf::AcceleratorParams;
+use vaqf::runtime::{InferenceBackend, InferenceEngine, Manifest, PjrtBackend, SimBackend};
+use vaqf::sim::{generate_weights, ModelExecutor};
+use vaqf::util::cli::Args;
+
+fn model_arg(args: &Args) -> anyhow::Result<VitConfig> {
+    let name = args.get_or("model", "deit-base");
+    VitPreset::from_name(name)
+        .map(|p| p.config())
+        .ok_or_else(|| anyhow::anyhow!("unknown model `{name}` (deit-tiny/small/base)"))
+}
+
+fn device_arg(args: &Args) -> anyhow::Result<vaqf::hw::Device> {
+    let name = args.get_or("device", "zcu102");
+    DevicePreset::from_name(name)
+        .map(|p| p.device())
+        .ok_or_else(|| anyhow::anyhow!("unknown device `{name}` (zcu102/zcu111/generic-edge)"))
+}
+
+fn cmd_compile(args: &Args) -> anyhow::Result<()> {
+    let req = CompileRequest {
+        model: model_arg(args)?,
+        device: device_arg(args)?,
+        target_fps: args.get_f64("target-fps")?.unwrap_or(24.0),
+    };
+    let out = compile(&req)?;
+    println!(
+        "model {} on {} @ target {:.1} FPS",
+        req.model.name, req.device.name, req.target_fps
+    );
+    println!("  FR_max (1-bit activations): {:.1} FPS", out.fr_max);
+    for r in &out.rounds {
+        println!(
+            "  probe {:>2}-bit → {:>6.1} FPS  {}",
+            r.bits,
+            r.fps,
+            if r.feasible { "meets target" } else { "too slow" }
+        );
+    }
+    let s = &out.design.summary;
+    println!(
+        "chosen precision: W1A{} — {:.1} FPS, {:.1} GOPS, {:.1} W, \
+         DSP {} LUT {} BRAM36 {:.1}",
+        out.act_bits,
+        s.fps,
+        s.gops,
+        s.power_w,
+        s.utilization.dsp,
+        s.utilization.lut,
+        s.utilization.bram18k as f64 / 2.0
+    );
+    println!(
+        "  params: T_m={} T_n={} T_m^q={} T_n^q={} G={} G^q={} P_h={} ({} adjustments)",
+        out.design.params.t_m,
+        out.design.params.t_n,
+        out.design.params.t_m_q,
+        out.design.params.t_n_q,
+        out.design.params.g,
+        out.design.params.g_q,
+        out.design.params.p_h,
+        out.design.adjustments
+    );
+    println!("  compilation step: {:.3}s", out.compile_seconds);
+
+    if let Some(dir) = args.get("emit-dir") {
+        std::fs::create_dir_all(dir)?;
+        let structure = req.model.structure(Some(out.act_bits));
+        let cpp = emit_hls_cpp(&out, &structure, &req.device);
+        let json = emit_config_json(&out, &req.device).pretty();
+        let base = format!("{}/{}_w1a{}", dir, req.model.name, out.act_bits);
+        std::fs::write(format!("{base}.cpp"), cpp)?;
+        std::fs::write(format!("{base}.json"), json)?;
+        println!("  emitted {base}.cpp and {base}.json");
+    }
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> anyhow::Result<()> {
+    let model = model_arg(args)?;
+    let device = device_arg(args)?;
+    let base = optimize_baseline(&model.structure(None), &device);
+    let bs = vaqf::perf::summarize(&model.structure(None), &base, &device);
+    println!(
+        "{} on {} — baseline W16A16: {:.1} FPS ({} DSP)",
+        model.name, device.name, bs.fps, bs.utilization.dsp
+    );
+    println!(
+        "{:>4} {:>8} {:>9} {:>8} {:>7} {:>7}",
+        "bits", "FPS", "GOPS", "power W", "DSP", "kLUT"
+    );
+    for bits in 1..=16u8 {
+        match optimize_for_bits(&model.structure(Some(bits)), &base, &device, bits) {
+            Ok(d) => println!(
+                "{:>4} {:>8.1} {:>9.1} {:>8.1} {:>7} {:>7.0}",
+                bits,
+                d.summary.fps,
+                d.summary.gops,
+                d.summary.power_w,
+                d.summary.utilization.dsp,
+                d.summary.utilization.lut as f64 / 1000.0
+            ),
+            Err(e) => println!("{bits:>4} infeasible: {e}"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let model = model_arg(args)?;
+    let device = device_arg(args)?;
+    let rows = table5_rows(&model, &device, &[8, 6]);
+    if args.has_flag("table6") {
+        println!("{}", render_table6(&table6_rows(&rows)));
+    } else {
+        println!("{}", render_table5(&rows, &device));
+    }
+    Ok(())
+}
+
+fn cmd_codegen(args: &Args) -> anyhow::Result<()> {
+    let req = CompileRequest {
+        model: model_arg(args)?,
+        device: device_arg(args)?,
+        target_fps: args.get_f64("target-fps")?.unwrap_or(24.0),
+    };
+    let out = compile(&req)?;
+    let structure = req.model.structure(Some(out.act_bits));
+    let cpp = emit_hls_cpp(&out, &structure, &req.device);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, cpp)?;
+            println!("wrote {path}");
+        }
+        None => println!("{cpp}"),
+    }
+    Ok(())
+}
+
+fn micro_config() -> VitConfig {
+    VitConfig {
+        name: "micro".into(),
+        image_size: 32,
+        patch_size: 8,
+        in_chans: 3,
+        embed_dim: 32,
+        depth: 2,
+        num_heads: 4,
+        mlp_ratio: 4,
+        num_classes: 10,
+    }
+}
+
+fn micro_params(bits: Option<u8>, device: &vaqf::hw::Device) -> AcceleratorParams {
+    match bits {
+        None => AcceleratorParams::baseline(16, 2, 4, 4),
+        Some(b) => {
+            let g_q = AcceleratorParams::g_q_for(device.axi_port_bits, b);
+            AcceleratorParams {
+                t_m: 16,
+                t_n: 2,
+                t_m_q: 16,
+                t_n_q: (2 * g_q / 4).max(1),
+                g: 4,
+                g_q,
+                p_h: 4,
+                act_bits: Some(b),
+            }
+        }
+    }
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let device = device_arg(args)?;
+    let bits = args.get_u64("bits")?.map(|b| b as u8);
+    let frames = args.get_u64("frames")?.unwrap_or(3);
+    let cfg = micro_config();
+    let weights = generate_weights(&cfg, args.get_u64("seed")?.unwrap_or(11));
+    let exec = ModelExecutor::new(weights.clone(), bits, micro_params(bits, &device), device);
+    for i in 0..frames {
+        let patches = weights.synthetic_patches(i);
+        let (logits, trace) = exec.run_frame(&patches);
+        let top = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        println!(
+            "frame {i}: class {top}  {} cycles  {:.2} ms simulated  ({:.1} sim-FPS)",
+            trace.total_cycles,
+            trace.latency_s * 1e3,
+            trace.fps()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let variant = args.get_or("variant", "micro_w1a8");
+    let backend_kind = args.get_or("backend", "sim");
+    let cfg = ServeConfig {
+        offered_fps: args.get_f64("fps")?.unwrap_or(30.0),
+        frames: args.get_u64("frames")?.unwrap_or(90),
+        queue_depth: args.get_u64("queue-depth")?.unwrap_or(2) as usize,
+        source_seed: args.get_u64("seed")?.unwrap_or(11),
+    };
+    let device = device_arg(args)?;
+
+    let man = Manifest::load(artifacts)?;
+    let entry = man
+        .find(variant)
+        .ok_or_else(|| anyhow::anyhow!("variant {variant} not in manifest"))?;
+    let source = FrameSource::new(entry.config.clone(), cfg.source_seed, Some(cfg.offered_fps));
+
+    let backend: Box<dyn InferenceBackend> = match backend_kind {
+        "pjrt" => {
+            let mut engine = InferenceEngine::new()?;
+            engine.load_variant(entry)?;
+            Box::new(PjrtBackend {
+                engine: std::rc::Rc::new(engine),
+                tag: variant.to_string(),
+            })
+        }
+        "sim" => {
+            let weights = generate_weights(&entry.config, entry.seed);
+            let params = micro_params(entry.act_bits_opt(), &device);
+            Box::new(SimBackend {
+                executor: ModelExecutor::new(weights, entry.act_bits_opt(), params, device),
+                realtime: args.has_flag("realtime"),
+            })
+        }
+        other => anyhow::bail!("unknown backend {other} (sim|pjrt)"),
+    };
+
+    let report = serve(source, backend, &cfg)?;
+    println!("{}", report.render());
+    if args.has_flag("json") {
+        println!("{}", report.to_json().pretty());
+    }
+    Ok(())
+}
+
+const USAGE: &str = "usage: vaqf <compile|search|report|codegen|simulate|serve> [--options]
+see README.md for per-command options";
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+    let result = match cmd {
+        "compile" => cmd_compile(&args),
+        "search" => cmd_search(&args),
+        "report" => cmd_report(&args),
+        "codegen" => cmd_codegen(&args),
+        "simulate" => cmd_simulate(&args),
+        "serve" => cmd_serve(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

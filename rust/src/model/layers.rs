@@ -1,0 +1,164 @@
+//! Layer descriptors consumed by the perf model, compiler, and simulator.
+
+
+
+/// What kind of matmul a layer performs (paper §5.1).
+///
+/// An FC layer performs a single `F×N @ N×M` matrix multiplication; a
+/// multi-head attention layer repeats an `F×N @ N×M` multiplication across
+/// `heads` attention heads. The compute engine is shared: FC inputs are split
+/// into `N_h` channel groups, `P_h` of which are processed in parallel, and
+/// the per-group partial sums are accumulated (attention keeps them
+/// separate). A control signal selects the behaviour — here that signal is
+/// the `LayerKind`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// Patch-embedding convolution, converted to an FC layer (Fig. 4): the
+    /// kernel size equals the stride equals the patch size, so every input
+    /// pixel is read exactly once and the conv degenerates to a matmul over
+    /// flattened patches.
+    PatchEmbed,
+    /// A plain fully-connected layer (QKV projections, attention output
+    /// projection, the two MLP linears, the classifier head).
+    Fc,
+    /// Scaled dot-product `Q @ K^T` — per-head `F×M_h @ M_h×F`.
+    AttnQk,
+    /// Attention-weighted value gather `S @ V` — per-head `F×F @ F×M_h`.
+    AttnSv,
+}
+
+impl LayerKind {
+    /// `true` for the multi-head attention matmuls, where the compute
+    /// engine's γ term (Eq. 7) is `N_h − 1` and per-head results are kept.
+    pub fn is_attention(self) -> bool {
+        matches!(self, LayerKind::AttnQk | LayerKind::AttnSv)
+    }
+}
+
+/// Numeric precision of a tensor as seen by the accelerator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// 16-bit fixed point — the on-hardware representation of "unquantized"
+    /// (software fp32) data in the baseline accelerator (paper §5.3).
+    Fixed16,
+    /// Binary (±scale) weights — 1 bit on the wire (paper Eq. 5).
+    Binary,
+    /// Uniform `bits`-wide quantized activations, 1..=16.
+    Int(u8),
+}
+
+impl Precision {
+    /// Bit width on the wire / in BRAM.
+    pub fn bits(self) -> u32 {
+        match self {
+            Precision::Fixed16 => 16,
+            Precision::Binary => 1,
+            Precision::Int(b) => b as u32,
+        }
+    }
+
+    /// Whether this operand takes the quantized (LUT add/sub) datapath
+    /// rather than the 16-bit DSP datapath.
+    pub fn is_quantized(self) -> bool {
+        !matches!(self, Precision::Fixed16)
+    }
+}
+
+/// Host-side operation between matmul layers (paper §5.2: scaling, softmax
+/// and GELU run on the host CPU; LayerNorm params stay 16-bit on hardware).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostOp {
+    LayerNorm,
+    Softmax,
+    Gelu,
+    /// Skip-connection addition with the stored normalization input
+    /// (paper §5.2.1).
+    SkipAdd,
+    /// `1/sqrt(D)` attention scaling.
+    Scale,
+}
+
+/// One matmul layer as the accelerator sees it.
+///
+/// Dimension conventions follow Table 1 of the paper:
+/// * `m` — number of output channels (columns of the weight matrix),
+/// * `n` — number of input channels (rows of the weight matrix),
+/// * `f` — number of token sequences (rows of the activation matrix),
+/// * `heads` — `N_h` for this layer: the true head count for attention
+///   matmuls, and the channel-group count the engine splits FC inputs into.
+#[derive(Debug, Clone)]
+pub struct LayerDesc {
+    /// Human-readable name, e.g. `enc3.mlp1`.
+    pub name: String,
+    pub kind: LayerKind,
+    /// Output channels `M`.
+    pub m: usize,
+    /// Input channels `N`.
+    pub n: usize,
+    /// Token sequences `F`.
+    pub f: usize,
+    /// Head count `N_h` (see struct docs).
+    pub heads: usize,
+    /// Precision of the input activations (α in Eq. 7 is 1 iff this and
+    /// `weights` are quantized).
+    pub inputs: Precision,
+    /// Precision of the weights (binary for quantized encoder layers; for
+    /// the attention matmuls the "weight" operand is itself a quantized
+    /// activation tile — K or V).
+    pub weights: Precision,
+    /// Precision of the output activations (β in Eq. 7).
+    pub outputs: Precision,
+    /// Host ops executed after this layer (latency accounted separately).
+    pub host_ops: Vec<HostOp>,
+}
+
+impl LayerDesc {
+    /// α of Eqs. 7/10: 1 iff inputs *and* weights take the quantized path.
+    pub fn alpha(&self) -> bool {
+        self.inputs.is_quantized() && self.weights.is_quantized()
+    }
+
+    /// β of Eqs. 7/11: 1 iff outputs are stored quantized.
+    pub fn beta(&self) -> bool {
+        self.outputs.is_quantized()
+    }
+
+    /// γ of Eq. 7: `N_h − 1` for attention layers (per-head outputs are all
+    /// stored), else 0.
+    pub fn gamma(&self) -> usize {
+        if self.kind.is_attention() {
+            self.heads - 1
+        } else {
+            0
+        }
+    }
+
+    /// Multiply-accumulate count for one inference of this layer.
+    ///
+    /// For FC layers the `N` input channels cover all heads (the engine
+    /// splits them), so the MAC count is simply `F·N·M`. For attention
+    /// layers each of the `heads` heads performs an independent `F×N @ N×M`
+    /// product.
+    pub fn macs(&self) -> u64 {
+        let per_head = self.f as u64 * self.n as u64 * self.m as u64;
+        if self.kind.is_attention() {
+            per_head * self.heads as u64
+        } else {
+            per_head
+        }
+    }
+
+    /// Operation count (1 MAC = 2 ops), the unit of the paper's GOPS numbers.
+    pub fn ops(&self) -> u64 {
+        self.macs() * 2
+    }
+
+    /// Number of weight elements (0 weight *parameters* for attention
+    /// matmuls — their "weights" are activations).
+    pub fn weight_params(&self) -> u64 {
+        match self.kind {
+            LayerKind::AttnQk | LayerKind::AttnSv => 0,
+            _ => self.n as u64 * self.m as u64,
+        }
+    }
+}

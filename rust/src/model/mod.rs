@@ -1,0 +1,19 @@
+//! ViT model structure descriptions (paper §4.1, Figs. 2 & 4).
+//!
+//! The accelerator sees a ViT as a *sequence of matrix-multiply layers*
+//! interleaved with cheap host-side ops (LayerNorm, softmax, GELU, scaling,
+//! skip-additions — paper §5.2 runs these on the host CPU of the FPGA).
+//! This module turns a [`VitConfig`] into that sequence: one
+//! [`LayerDesc`] per matmul with the `(M, N, F, heads)` dimensions the
+//! performance model (Eqs. 7–12) and the simulator consume.
+
+mod layers;
+mod presets;
+mod vit;
+
+pub use layers::{HostOp, LayerDesc, LayerKind, Precision};
+pub use presets::{deit_base, deit_small, deit_tiny, VitPreset};
+pub use vit::{patch_embed_as_fc, VitConfig, VitStructure};
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,80 @@
+//! Named model presets (paper §6.1/§6.2.2: DeiT-tiny/small/base without the
+//! distillation token, 224×224 inputs, ImageNet-1K head).
+
+use super::vit::VitConfig;
+
+/// A named, ready-made ViT configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VitPreset {
+    DeiTTiny,
+    DeiTSmall,
+    DeiTBase,
+}
+
+impl VitPreset {
+    pub fn config(self) -> VitConfig {
+        match self {
+            VitPreset::DeiTTiny => deit_tiny(),
+            VitPreset::DeiTSmall => deit_small(),
+            VitPreset::DeiTBase => deit_base(),
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name.to_ascii_lowercase().as_str() {
+            "deit-tiny" | "tiny" => Some(VitPreset::DeiTTiny),
+            "deit-small" | "small" => Some(VitPreset::DeiTSmall),
+            "deit-base" | "base" => Some(VitPreset::DeiTBase),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [VitPreset; 3] {
+        [VitPreset::DeiTTiny, VitPreset::DeiTSmall, VitPreset::DeiTBase]
+    }
+}
+
+/// DeiT-tiny: M=192, L=12, N_h=3 (~5M params).
+pub fn deit_tiny() -> VitConfig {
+    VitConfig {
+        name: "deit-tiny".into(),
+        image_size: 224,
+        patch_size: 16,
+        in_chans: 3,
+        embed_dim: 192,
+        depth: 12,
+        num_heads: 3,
+        mlp_ratio: 4,
+        num_classes: 1000,
+    }
+}
+
+/// DeiT-small: M=384, L=12, N_h=6 (~22M params).
+pub fn deit_small() -> VitConfig {
+    VitConfig {
+        name: "deit-small".into(),
+        image_size: 224,
+        patch_size: 16,
+        in_chans: 3,
+        embed_dim: 384,
+        depth: 12,
+        num_heads: 6,
+        mlp_ratio: 4,
+        num_classes: 1000,
+    }
+}
+
+/// DeiT-base: M=768, L=12, N_h=12 (~86M params) — the paper's default.
+pub fn deit_base() -> VitConfig {
+    VitConfig {
+        name: "deit-base".into(),
+        image_size: 224,
+        patch_size: 16,
+        in_chans: 3,
+        embed_dim: 768,
+        depth: 12,
+        num_heads: 12,
+        mlp_ratio: 4,
+        num_classes: 1000,
+    }
+}

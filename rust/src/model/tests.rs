@@ -1,0 +1,102 @@
+use super::*;
+
+#[test]
+fn deit_base_dimensions_match_paper() {
+    let cfg = deit_base();
+    assert_eq!(cfg.num_patches(), 196);
+    assert_eq!(cfg.tokens(), 197);
+    assert_eq!(cfg.head_dim(), 64);
+}
+
+#[test]
+fn deit_param_counts_match_published_sizes() {
+    // Paper: DeiT-base 86M, DeiT-small 22M, DeiT-tiny 5M.
+    let base = deit_base().param_count() as f64 / 1e6;
+    let small = deit_small().param_count() as f64 / 1e6;
+    let tiny = deit_tiny().param_count() as f64 / 1e6;
+    assert!((base - 86.0).abs() < 1.5, "base = {base}M");
+    assert!((small - 22.0).abs() < 0.8, "small = {small}M");
+    assert!((tiny - 5.0).abs() < 0.8, "tiny = {tiny}M");
+}
+
+#[test]
+fn deit_base_macs_match_published_flops() {
+    // DeiT-base @224 is ~17.6 GMACs ⇒ ~35.2 GOPs, consistent with the
+    // paper's 345.8 GOPS at 10.0 FPS (= 34.6 GOP/frame).
+    let s = deit_base().structure(None);
+    let gmacs = s.total_macs() as f64 / 1e9;
+    assert!((gmacs - 17.6).abs() < 0.5, "gmacs = {gmacs}");
+    let gops_frame = s.total_ops() as f64 / 1e9;
+    assert!((gops_frame - 34.6).abs() < 1.5, "gop/frame = {gops_frame}");
+}
+
+#[test]
+fn structure_layer_count() {
+    // patch embed + 6 matmuls per encoder layer × 12 + head.
+    let s = deit_base().structure(Some(8));
+    assert_eq!(s.layers.len(), 1 + 6 * 12 + 1);
+}
+
+#[test]
+fn quantization_assignment_follows_paper() {
+    let s = deit_base().structure(Some(8));
+    // First and last layers are unquantized (§4.2 Implementation Details).
+    assert!(!s.layers.first().unwrap().alpha());
+    assert!(!s.layers.last().unwrap().alpha());
+    // All encoder matmuls are quantized.
+    for l in &s.layers[1..s.layers.len() - 1] {
+        assert!(l.alpha(), "{} should be quantized", l.name);
+    }
+    // Layers feeding LayerNorm/skip store unquantized outputs (§5.2.1).
+    for l in &s.layers {
+        if l.host_ops.contains(&HostOp::SkipAdd) {
+            assert!(!l.beta(), "{} feeds a skip-add; outputs must be 16-bit", l.name);
+        }
+    }
+}
+
+#[test]
+fn unquantized_structure_has_no_quantized_layers() {
+    let s = deit_base().structure(None);
+    assert_eq!(s.quantized_layers().count(), 0);
+}
+
+#[test]
+fn attention_gamma_and_macs() {
+    let s = deit_base().structure(Some(8));
+    let qk = s.layers.iter().find(|l| l.name == "enc0.attn_qk").unwrap();
+    assert_eq!(qk.gamma(), 11);
+    assert_eq!(qk.m, 197);
+    assert_eq!(qk.n, 64);
+    // 12 heads × 197×64×197 MACs.
+    assert_eq!(qk.macs(), 12 * 197 * 64 * 197);
+    let qkv = s.layers.iter().find(|l| l.name == "enc0.qkv").unwrap();
+    assert_eq!(qkv.gamma(), 0);
+    assert_eq!(qkv.macs(), 197 * 768 * (3 * 768));
+}
+
+#[test]
+fn patch_embed_conv_to_fc_dims() {
+    let l = patch_embed_as_fc(&deit_base());
+    // 3·16² = 768 input channels, M=768 outputs, 196 patches.
+    assert_eq!(l.n, 768);
+    assert_eq!(l.m, 768);
+    assert_eq!(l.f, 196);
+}
+
+#[test]
+fn space_usage_reproduces_32x_reduction() {
+    // Table 2: 86M×32 → 86M×1. Binarization shrinks the encoder weights
+    // (the overwhelming majority) by 32×; total must shrink by >20×.
+    let fp = deit_base().structure(None).space_usage_bits() as f64;
+    let bin = deit_base().structure(Some(8)).space_usage_bits() as f64;
+    assert!(fp / bin > 20.0, "reduction = {}", fp / bin);
+}
+
+#[test]
+fn presets_roundtrip_names() {
+    for p in VitPreset::all() {
+        let cfg = p.config();
+        assert_eq!(VitPreset::from_name(&cfg.name), Some(p));
+    }
+}

@@ -1,0 +1,271 @@
+//! ViT configuration → accelerator layer sequence (paper §4.1, §5.2).
+
+
+
+use super::layers::{HostOp, LayerDesc, LayerKind, Precision};
+
+/// Architectural hyper-parameters of a ViT (DeiT) classifier.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VitConfig {
+    /// Model family name, e.g. `deit-base`.
+    pub name: String,
+    /// Input image height/width (images are resized to squares, §6.1).
+    pub image_size: usize,
+    /// Patch size `P`; the patch-embed conv has kernel = stride = `P`.
+    pub patch_size: usize,
+    /// Input channels (3 for RGB).
+    pub in_chans: usize,
+    /// Hidden (embedding) dimension `M`.
+    pub embed_dim: usize,
+    /// Number of encoder layers `L`.
+    pub depth: usize,
+    /// Attention heads `N_h`.
+    pub num_heads: usize,
+    /// MLP expansion ratio (4 for DeiT).
+    pub mlp_ratio: usize,
+    /// Classifier classes `C`.
+    pub num_classes: usize,
+}
+
+impl VitConfig {
+    /// Number of image patches `N_p = H·W / P²`.
+    pub fn num_patches(&self) -> usize {
+        (self.image_size / self.patch_size) * (self.image_size / self.patch_size)
+    }
+
+    /// Token count `F = N_p + 1` (CLS token prepended, Eq. 1).
+    pub fn tokens(&self) -> usize {
+        self.num_patches() + 1
+    }
+
+    /// Per-head dimension `M_h = M / N_h`.
+    pub fn head_dim(&self) -> usize {
+        self.embed_dim / self.num_heads
+    }
+
+    /// Total trainable parameters (approximate, matches the usual "86M for
+    /// DeiT-base" accounting: embeddings + encoder weights/biases + head).
+    pub fn param_count(&self) -> u64 {
+        let m = self.embed_dim as u64;
+        let f = self.tokens() as u64;
+        let patch_in = (self.in_chans * self.patch_size * self.patch_size) as u64;
+        let mlp_hidden = (self.embed_dim * self.mlp_ratio) as u64;
+        let classes = self.num_classes as u64;
+
+        let patch_embed = patch_in * m + m; // conv weight + bias
+        let pos_cls = f * m + m; // positional embedding + CLS token
+        // Per encoder layer: QKV (3·M·M + 3·M), proj (M·M + M),
+        // MLP (M·4M + 4M + 4M·M + M), two LayerNorms (2·2M).
+        let per_layer = 3 * (m * m + m)
+            + (m * m + m)
+            + (m * mlp_hidden + mlp_hidden)
+            + (mlp_hidden * m + m)
+            + 2 * 2 * m;
+        let head = m * classes + classes + 2 * m; // final LN + classifier
+        patch_embed + pos_cls + self.depth as u64 * per_layer + head
+    }
+
+    /// Expand into the full accelerator layer sequence, with quantization
+    /// assignments for activation precision `act_bits` (`None` ⇒ unquantized
+    /// W32A32-on-software / W16A16-on-hardware baseline).
+    ///
+    /// Per paper §4.2 *Implementation Details*: the patch embedding and the
+    /// output head stay full-precision; every matmul inside the encoder
+    /// (QKV, Q·Kᵀ, S·V, projection, MLP1, MLP2) is quantized — binary
+    /// weights, `act_bits` activations. LayerNorm inputs stay 16-bit
+    /// (§5.2.1), which is why layers feeding a LayerNorm/skip store
+    /// *unquantized* outputs.
+    pub fn structure(&self, act_bits: Option<u8>) -> VitStructure {
+        let m = self.embed_dim;
+        let f = self.tokens();
+        let nh = self.num_heads;
+        let mh = self.head_dim();
+        let mlp_hidden = m * self.mlp_ratio;
+
+        let (act, wgt) = match act_bits {
+            Some(b) => (Precision::Int(b), Precision::Binary),
+            None => (Precision::Fixed16, Precision::Fixed16),
+        };
+
+        let mut layers = Vec::new();
+
+        // Patch embedding: conv(P×P, stride P) ≡ FC over flattened patches
+        // (Fig. 4). Never quantized. Its output feeds the first LayerNorm,
+        // so outputs are stored 16-bit.
+        layers.push(patch_embed_as_fc(self));
+
+        for l in 0..self.depth {
+            let p = |s: &str| format!("enc{l}.{s}");
+            // QKV: inputs are the (quantized) LayerNorm outputs. Outputs Q,K,V
+            // feed the attention matmuls, so they are stored quantized.
+            layers.push(LayerDesc {
+                name: p("qkv"),
+                kind: LayerKind::Fc,
+                m: 3 * m,
+                n: m,
+                f,
+                heads: nh,
+                inputs: act,
+                weights: wgt,
+                outputs: act,
+                host_ops: vec![],
+            });
+            // Q·Kᵀ per head: F×M_h @ M_h×F. The "weight" operand is the
+            // quantized K tile. Softmax + 1/sqrt(D) scaling run on the host,
+            // and the softmax output is re-quantized for S·V.
+            layers.push(LayerDesc {
+                name: p("attn_qk"),
+                kind: LayerKind::AttnQk,
+                m: f,
+                n: mh,
+                f,
+                heads: nh,
+                inputs: act,
+                weights: act,
+                outputs: act,
+                host_ops: vec![HostOp::Scale, HostOp::Softmax],
+            });
+            // S·V per head: F×F @ F×M_h.
+            layers.push(LayerDesc {
+                name: p("attn_sv"),
+                kind: LayerKind::AttnSv,
+                m: mh,
+                n: f,
+                f,
+                heads: nh,
+                inputs: act,
+                weights: act,
+                outputs: act,
+                host_ops: vec![],
+            });
+            // Output projection. Its result enters the skip-add + LayerNorm,
+            // so it is stored 16-bit (unquantized outputs, §5.2.1).
+            layers.push(LayerDesc {
+                name: p("proj"),
+                kind: LayerKind::Fc,
+                m,
+                n: m,
+                f,
+                heads: nh,
+                inputs: act,
+                weights: wgt,
+                outputs: Precision::Fixed16,
+                host_ops: vec![HostOp::SkipAdd, HostOp::LayerNorm],
+            });
+            // MLP1 expands M → 4M; GELU on host; output re-quantized for MLP2.
+            layers.push(LayerDesc {
+                name: p("mlp1"),
+                kind: LayerKind::Fc,
+                m: mlp_hidden,
+                n: m,
+                f,
+                heads: nh,
+                inputs: act,
+                weights: wgt,
+                outputs: act,
+                host_ops: vec![HostOp::Gelu],
+            });
+            // MLP2 reduces 4M → M; feeds skip-add + next LayerNorm ⇒ 16-bit out.
+            layers.push(LayerDesc {
+                name: p("mlp2"),
+                kind: LayerKind::Fc,
+                m,
+                n: mlp_hidden,
+                f,
+                heads: nh,
+                inputs: act,
+                weights: wgt,
+                outputs: Precision::Fixed16,
+                host_ops: vec![HostOp::SkipAdd, HostOp::LayerNorm],
+            });
+        }
+
+        // Classifier head on the CLS token (F = 1). Never quantized.
+        layers.push(LayerDesc {
+            name: "head".into(),
+            kind: LayerKind::Fc,
+            m: self.num_classes,
+            n: m,
+            f: 1,
+            heads: nh,
+            inputs: Precision::Fixed16,
+            weights: Precision::Fixed16,
+            outputs: Precision::Fixed16,
+            host_ops: vec![],
+        });
+
+        VitStructure {
+            config: self.clone(),
+            act_bits,
+            layers,
+        }
+    }
+}
+
+/// Patch-embed conv expressed as an FC layer (paper Fig. 4).
+///
+/// Kernel size = stride = patch size ⇒ each input element is used exactly
+/// once as the kernel slides, so reshaping the input to
+/// `N_p × (C·P²)` and the kernel to `(C·P²) × M` yields an exactly
+/// equivalent matrix multiplication.
+pub fn patch_embed_as_fc(cfg: &VitConfig) -> LayerDesc {
+    LayerDesc {
+        name: "patch_embed".into(),
+        kind: LayerKind::PatchEmbed,
+        m: cfg.embed_dim,
+        n: cfg.in_chans * cfg.patch_size * cfg.patch_size,
+        f: cfg.num_patches(),
+        heads: cfg.num_heads,
+        inputs: Precision::Fixed16,
+        weights: Precision::Fixed16,
+        outputs: Precision::Fixed16,
+        host_ops: vec![HostOp::LayerNorm],
+    }
+}
+
+/// A fully-expanded model: the accelerator's view of one ViT variant.
+#[derive(Debug, Clone)]
+pub struct VitStructure {
+    pub config: VitConfig,
+    /// Activation precision (None = unquantized baseline).
+    pub act_bits: Option<u8>,
+    pub layers: Vec<LayerDesc>,
+}
+
+impl VitStructure {
+    /// Total MACs for one inference.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Total operations (2·MACs) — the paper's GOPS accounting unit.
+    pub fn total_ops(&self) -> u64 {
+        self.layers.iter().map(|l| l.ops()).sum()
+    }
+
+    /// Model size in bits given this quantization regime (Table 2 "Space
+    /// Usage" column): binary weights cost 1 bit each; unquantized models
+    /// cost 32 bits per parameter. The non-binarized parameters (patch
+    /// embed, head, LayerNorm, biases, embeddings) are counted at full
+    /// precision in both regimes.
+    pub fn space_usage_bits(&self) -> u64 {
+        let total = self.config.param_count();
+        match self.act_bits {
+            None => total * 32,
+            Some(_) => {
+                // Binarized: the encoder linear weights (QKV, proj, MLP).
+                let m = self.config.embed_dim as u64;
+                let hidden = (self.config.embed_dim * self.config.mlp_ratio) as u64;
+                let per_layer = 3 * m * m + m * m + m * hidden + hidden * m;
+                let binarized = self.config.depth as u64 * per_layer;
+                let rest = total - binarized;
+                binarized + rest * 32
+            }
+        }
+    }
+
+    /// Layers that take the quantized datapath.
+    pub fn quantized_layers(&self) -> impl Iterator<Item = &LayerDesc> {
+        self.layers.iter().filter(|l| l.alpha())
+    }
+}

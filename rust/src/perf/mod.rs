@@ -1,0 +1,28 @@
+//! Analytical resource / latency model (paper §5.3.3, Eqs. 7–14).
+//!
+//! This module is the quantitative core of VAQF's compilation step: given a
+//! [`crate::model::VitStructure`], an accelerator parameterization
+//! ([`AcceleratorParams`]) and a [`crate::hw::Device`], it predicts
+//!
+//! * per-layer and per-frame clock cycles (Eqs. 7–11, [`cycles`]),
+//! * BRAM / DSP / LUT / FF utilization (Eq. 12 + §5.3.3, [`resources`]),
+//! * frame rate, throughput and compute efficiency ([`summary`]),
+//! * board power for the Table 6 comparison ([`power`]).
+//!
+//! The same equations drive the compiler's precision search and are
+//! cross-validated against the cycle-level simulator (`benches/sim_vs_model`).
+
+mod cycles;
+mod params;
+mod power;
+mod resources;
+mod summary;
+
+pub use cycles::{layer_cycles, layer_cycles_opt, model_cycles, model_cycles_opt, LayerCycles, ModelOptions};
+pub use params::AcceleratorParams;
+pub use power::{power_watts, PowerModel};
+pub use resources::{lut_cost_per_mac, resources_for, ResourceModel};
+pub use summary::{summarize, PerfSummary};
+
+#[cfg(test)]
+mod tests;

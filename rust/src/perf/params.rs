@@ -1,0 +1,136 @@
+//! Accelerator parameterization (paper Table 1).
+
+
+
+use crate::quant::pack_factor;
+
+/// The tunable parameters of a generated accelerator.
+///
+/// Two groups (paper §5.3.2): `t_m`/`t_n`/`g` drive the unquantized (16-bit,
+/// DSP) datapath; `t_m_q`/`t_n_q`/`g_q` drive the quantized (binary-weight,
+/// LUT add/sub) datapath. `p_h` — the number of attention heads processed in
+/// parallel — is shared. `act_bits` records the activation precision the
+/// design was generated for (`None` = unquantized baseline accelerator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AcceleratorParams {
+    /// Output-channel tile for unquantized data (`T_m`).
+    pub t_m: u64,
+    /// Input-channel tile for unquantized data (`T_n`).
+    pub t_n: u64,
+    /// Output-channel tile for quantized data (`T_m^q`).
+    pub t_m_q: u64,
+    /// Input-channel tile for quantized data (`T_n^q`).
+    pub t_n_q: u64,
+    /// Packing factor for unquantized (16-bit) data (`G`).
+    pub g: u64,
+    /// Packing factor for quantized data (`G^q`).
+    pub g_q: u64,
+    /// Heads processed in parallel (`P_h`).
+    pub p_h: u64,
+    /// Activation precision this design supports (1..=16), `None` for the
+    /// unquantized baseline.
+    pub act_bits: Option<u8>,
+}
+
+impl AcceleratorParams {
+    /// The baseline (W16A16) accelerator parameterization: no quantized
+    /// datapath, so the quantized-group parameters alias the unquantized
+    /// ones (the equations then degenerate correctly since α=β=0 for every
+    /// layer).
+    pub fn baseline(t_m: u64, t_n: u64, g: u64, p_h: u64) -> AcceleratorParams {
+        AcceleratorParams {
+            t_m,
+            t_n,
+            t_m_q: t_m,
+            t_n_q: t_n,
+            g,
+            g_q: g,
+            p_h,
+            act_bits: None,
+        }
+    }
+
+    /// Derive the quantized-group packing factor from the port width and
+    /// activation precision (§5.3.1), e.g. `⌊64/8⌋ = 8`, `⌊64/6⌋ = 10`.
+    pub fn g_q_for(port_bits: u32, act_bits: u8) -> u64 {
+        pack_factor(port_bits, act_bits as u32) as u64
+    }
+
+    /// The paper's `P_h` rule (§5.3.2): "usually a value that can divide
+    /// N_h exactly. If N_h = 6, P_h is set to 3; if N_h = 8 or 12, P_h is 4"
+    /// — i.e. the largest divisor of `n_h` that is ≤ 4.
+    pub fn p_h_for(n_h: u64) -> u64 {
+        (1..=4u64.min(n_h)).rev().find(|p| n_h % p == 0).unwrap_or(1)
+    }
+
+    /// Parallel MAC lanes on the DSP (unquantized) datapath: `T_m·P_h·T_n`.
+    pub fn dsp_macs(&self) -> u64 {
+        self.t_m * self.p_h * self.t_n
+    }
+
+    /// Parallel MAC lanes on the LUT (quantized) datapath:
+    /// `T_m^q·P_h·T_n^q`.
+    pub fn lut_macs(&self) -> u64 {
+        self.t_m_q * self.p_h * self.t_n_q
+    }
+
+    /// Sanity-check structural invariants the compiler must maintain
+    /// (§5.3.2: `T_m`, `T_m^q` divisible by `G` and `G^q` for output
+    /// storage).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.t_m > 0 && self.t_n > 0, "empty tiles");
+        anyhow::ensure!(self.g > 0 && self.g_q > 0, "empty packing factors");
+        anyhow::ensure!(self.p_h > 0, "p_h must be positive");
+        anyhow::ensure!(
+            self.t_m % self.g == 0,
+            "T_m={} not divisible by G={}",
+            self.t_m,
+            self.g
+        );
+        if self.act_bits.is_some() {
+            anyhow::ensure!(
+                self.t_m % self.g_q == 0,
+                "T_m={} not divisible by G^q={}",
+                self.t_m,
+                self.g_q
+            );
+            anyhow::ensure!(
+                self.t_m_q % self.g_q == 0,
+                "T_m^q={} not divisible by G^q={}",
+                self.t_m_q,
+                self.g_q
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p_h_rule_matches_paper_examples() {
+        assert_eq!(AcceleratorParams::p_h_for(6), 3);
+        assert_eq!(AcceleratorParams::p_h_for(8), 4);
+        assert_eq!(AcceleratorParams::p_h_for(12), 4);
+        assert_eq!(AcceleratorParams::p_h_for(3), 3);
+        assert_eq!(AcceleratorParams::p_h_for(1), 1);
+        assert_eq!(AcceleratorParams::p_h_for(7), 1);
+    }
+
+    #[test]
+    fn g_q_examples() {
+        assert_eq!(AcceleratorParams::g_q_for(64, 8), 8);
+        assert_eq!(AcceleratorParams::g_q_for(64, 6), 10);
+        assert_eq!(AcceleratorParams::g_q_for(64, 1), 64);
+    }
+
+    #[test]
+    fn validate_divisibility() {
+        let mut p = AcceleratorParams::baseline(32, 16, 4, 4);
+        assert!(p.validate().is_ok());
+        p.t_m = 33;
+        assert!(p.validate().is_err());
+    }
+}

@@ -1,0 +1,87 @@
+//! Board power model for the Table 6 comparison.
+//!
+//! The paper measured 9.9 W (W32A32), 8.7 W (W1A8) and 7.8 W (W1A6) on the
+//! ZCU102. Power *decreases* as precision drops even though LUT usage
+//! grows, because work migrates from the power-hungry DSP datapath to the
+//! LUT add/sub datapath and each resource is only active during the cycles
+//! its datapath is executing. We therefore model
+//!
+//! `P = P_static + p_dsp·N_dsp·a_dsp + p_lut·N_lut·a_lut + p_bram·N_bram`
+//!
+//! where the activity factors `a_dsp`/`a_lut` are the fraction of frame
+//! cycles spent in unquantized / quantized layers respectively. The three
+//! coefficients are calibrated against the paper's three measurements
+//! (see `tests.rs::power_model_matches_paper_within_tolerance`).
+
+use crate::hw::Device;
+use crate::model::VitStructure;
+
+use super::cycles::model_cycles;
+use super::params::AcceleratorParams;
+use super::resources::ResourceModel;
+
+/// Calibrated unit powers (watts per resource at 100% activity, 150 MHz).
+#[derive(Debug, Clone, Copy)]
+pub struct PowerModel {
+    pub per_dsp_w: f64,
+    pub per_klut_w: f64,
+    pub per_bram18_w: f64,
+    /// Dynamic power of one LUT MAC lane *per operand bit of width*, at
+    /// full activity — an 8-bit add/sub lane toggles ~8/6 the logic of a
+    /// 6-bit one, which is how the paper's W1A8 burns more watts than
+    /// W1A6 despite similar LUT counts.
+    pub per_lutmac_bit_w: f64,
+}
+
+impl Default for PowerModel {
+    fn default() -> Self {
+        // Calibrated to the ZCU102 measurements in Table 6 (±0.6 W):
+        // 9.9 W (W32A32), 8.7 W (W1A8), 7.8 W (W1A6).
+        PowerModel {
+            per_dsp_w: 3.4e-3,
+            per_klut_w: 14.0e-3,
+            per_bram18_w: 1.6e-3,
+            per_lutmac_bit_w: 0.056e-3,
+        }
+    }
+}
+
+/// Estimate average board power for a design executing `structure`.
+pub fn power_watts(
+    structure: &VitStructure,
+    params: &AcceleratorParams,
+    resources: &ResourceModel,
+    device: &Device,
+    model: &PowerModel,
+) -> f64 {
+    // Activity split: fraction of cycles in quantized vs unquantized layers.
+    let (total, per_layer) = model_cycles(structure, params, device);
+    let q_cycles: u64 = structure
+        .layers
+        .iter()
+        .zip(&per_layer)
+        .filter(|(l, _)| l.alpha())
+        .map(|(_, c)| c.total)
+        .sum();
+    let a_lut = if total > 0 { q_cycles as f64 / total as f64 } else { 0.0 };
+    let a_dsp = 1.0 - a_lut;
+
+    let lut_macs = if params.act_bits.is_some() {
+        params.lut_macs()
+    } else {
+        0
+    };
+    // Stored activation width (container-aware, same derivation as the
+    // resource model).
+    let b_eff = if params.act_bits.is_some() {
+        (u64::from(device.axi_port_bits) / params.g_q).max(1) as f64
+    } else {
+        16.0
+    };
+
+    device.static_power_w
+        + model.per_dsp_w * resources.dsp as f64 * (0.25 + 0.75 * a_dsp)
+        + model.per_klut_w * (resources.lut as f64 / 1000.0) * (0.35 + 0.65 * a_lut.min(1.0))
+        + model.per_lutmac_bit_w * lut_macs as f64 * b_eff * a_lut
+        + model.per_bram18_w * resources.total_bram() as f64
+}

@@ -1,0 +1,143 @@
+//! Resource-utilization model — Eq. 12 (BRAM), the DSP count rule and the
+//! LUT cost model of Eq. 14, plus an FF estimate.
+//!
+//! BRAM is sized for the worst-case layer (the same physical buffers are
+//! reused by quantized and unquantized layers, §5.3.2, so each of
+//! `B_in`/`B_wgt`/`B_out` is the max over both datapaths and over layers).
+
+use crate::hw::{Device, Utilization};
+use crate::model::VitStructure;
+
+use super::params::AcceleratorParams;
+
+const BRAM_BITS: u64 = 18 * 1024;
+
+#[inline]
+fn cdiv(a: u64, b: u64) -> u64 {
+    a.div_ceil(b)
+}
+
+/// LUT cost `C_lut` for one MAC with quantized operands (Eq. 14).
+///
+/// A binary-weight MAC is a `b`-bit conditional add/sub feeding a guarded
+/// accumulator: roughly one LUT per operand bit plus carry/select overhead.
+/// For binary×binary (the FR_max probe) an XNOR+popcount lane costs ~2 LUTs.
+/// Coefficients calibrated so the generated W1A8/W1A6 designs land near the
+/// paper's Table 5 utilization (see EXPERIMENTS.md).
+pub fn lut_cost_per_mac(act_bits: u8) -> u64 {
+    match act_bits {
+        1 => 2,
+        b => b as u64 + 4,
+    }
+}
+
+/// Full utilization estimate for a design.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResourceModel {
+    /// BRAM18k for input/weight/output tile buffers (Eq. 12, incl. the ×2
+    /// double-buffering factor).
+    pub bram_in: u64,
+    pub bram_wgt: u64,
+    pub bram_out: u64,
+    /// DSPs for the unquantized MAC array: `T_m·P_h·T_n` (§5.3.3).
+    pub dsp: u64,
+    /// LUTs: control/AXI base + DSP-array glue + the quantized MAC array
+    /// `C_lut·T_m^q·P_h·T_n^q` + datapath-select muxing.
+    pub lut: u64,
+    /// Flip-flop estimate (pipeline registers scale with both MAC arrays).
+    pub ff: u64,
+}
+
+/// Fixed LUT overhead: AXI DMA engines, FSM control, host interface.
+const LUT_BASE: u64 = 42_000;
+/// LUT glue per DSP MAC lane (operand muxes, accumulator select).
+const LUT_PER_DSP: u64 = 46;
+/// FF base + per-lane pipeline registers.
+const FF_BASE: u64 = 28_000;
+const FF_PER_DSP: u64 = 42;
+const FF_PER_LUT_MAC: u64 = 6;
+
+impl ResourceModel {
+    pub fn total_bram(&self) -> u64 {
+        self.bram_in + self.bram_wgt + self.bram_out
+    }
+
+    pub fn utilization(&self) -> Utilization {
+        Utilization {
+            dsp: self.dsp,
+            lut: self.lut,
+            bram18k: self.total_bram(),
+            ff: self.ff,
+        }
+    }
+
+    /// The feasibility constraints of Eq. 14. LUT overutilization is what
+    /// makes Vivado placement/routing fail in the paper (§3) — here it is
+    /// the predicate the compiler's adjustment loop reacts to.
+    pub fn feasible(&self, device: &Device) -> bool {
+        self.total_bram() <= device.budget.bram18k
+            && self.dsp as f64 <= device.budget.dsp as f64 * device.r_dsp
+            && self.lut as f64 <= device.budget.lut as f64 * device.r_lut
+            && self.ff <= device.budget.ff
+    }
+}
+
+/// Evaluate Eq. 12 + the DSP/LUT/FF models for `params` over `structure`.
+pub fn resources_for(
+    structure: &VitStructure,
+    params: &AcceleratorParams,
+    device: &Device,
+) -> ResourceModel {
+    let g = params.g;
+    let g_q = params.g_q;
+    let (t_m, t_n, t_m_q, t_n_q) = (params.t_m, params.t_n, params.t_m_q, params.t_n_q);
+    // Stored activation width: derived from the packing factor, so designs
+    // that pad b-bit values into wider containers (compiler::params) are
+    // costed at the container width.
+    let b_q = if params.act_bits.is_some() {
+        (u64::from(device.axi_port_bits) / g_q).max(1)
+    } else {
+        16
+    };
+    let quantized = params.act_bits.is_some();
+
+    // Worst-case F and N_h across layers (buffers are shared, §5.3.2).
+    let f_max = structure.layers.iter().map(|l| l.f as u64).max().unwrap_or(1);
+    let n_h = structure.layers.iter().map(|l| l.heads as u64).max().unwrap_or(1);
+
+    // Eq. 12. The unquantized term always exists (first/last layers); the
+    // quantized term only if the design has a quantized datapath.
+    let unq_in = cdiv(t_n, g) * cdiv(f_max * g * 16, BRAM_BITS);
+    let q_in = cdiv(t_n_q, g_q) * cdiv(f_max * g_q * b_q, BRAM_BITS);
+    let bram_in = 2 * n_h * if quantized { unq_in.max(q_in) } else { unq_in };
+
+    let unq_wgt = cdiv(t_n, g) * cdiv(t_m * g * 16, BRAM_BITS);
+    // Quantized weights are binary: G^q packed sign bits per word.
+    let q_wgt = cdiv(t_n_q, g_q) * cdiv(t_m_q * g_q, BRAM_BITS);
+    let bram_wgt = 2 * n_h * if quantized { unq_wgt.max(q_wgt) } else { unq_wgt };
+
+    let unq_out = cdiv(t_m, g) * cdiv(f_max * g * 16, BRAM_BITS);
+    let q_out = cdiv(t_m_q, g_q) * cdiv(f_max * g_q * b_q, BRAM_BITS);
+    let bram_out = 2 * n_h * if quantized { unq_out.max(q_out) } else { unq_out };
+
+    let dsp = params.dsp_macs();
+    let lut_macs = if quantized { params.lut_macs() } else { 0 };
+    let c_lut = lut_cost_per_mac(b_q.min(16) as u8);
+    let lut = LUT_BASE
+        + LUT_PER_DSP * dsp
+        + c_lut * lut_macs
+        // Datapath-select logic when both paths exist (§6.3.1 mentions the
+        // "extra logic to select between unquantized or quantized
+        // operations").
+        + if quantized { 8_000 } else { 0 };
+    let ff = FF_BASE + FF_PER_DSP * dsp + FF_PER_LUT_MAC * lut_macs;
+
+    ResourceModel {
+        bram_in,
+        bram_wgt,
+        bram_out,
+        dsp,
+        lut,
+        ff,
+    }
+}

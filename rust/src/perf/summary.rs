@@ -1,0 +1,73 @@
+//! Design-level performance summary: the quantities Table 5 reports.
+
+
+
+use crate::hw::{Device, Utilization, UtilizationPct};
+use crate::model::VitStructure;
+
+use super::cycles::model_cycles;
+use super::params::AcceleratorParams;
+use super::power::{power_watts, PowerModel};
+use super::resources::resources_for;
+
+/// Everything Table 5 / Table 6 need for one accelerator design.
+#[derive(Debug, Clone)]
+pub struct PerfSummary {
+    /// Design label, e.g. `W1A8`.
+    pub label: String,
+    pub model: String,
+    pub device: String,
+    pub params: AcceleratorParams,
+    /// Predicted cycles per frame (Σᵢ Jᵢ + host).
+    pub cycles_per_frame: u64,
+    /// Frames per second at the device clock.
+    pub fps: f64,
+    /// Throughput in GOPS (ops = 2·MACs, the paper's accounting).
+    pub gops: f64,
+    /// Compute efficiency: GOPS per DSP.
+    pub gops_per_dsp: f64,
+    /// Compute efficiency: GOPS per thousand LUTs.
+    pub gops_per_klut: f64,
+    /// Board power (W) and energy efficiency (FPS/W) for Table 6.
+    pub power_w: f64,
+    pub fps_per_w: f64,
+    pub utilization: Utilization,
+    pub utilization_pct: UtilizationPct,
+}
+
+/// Precision label in the paper's `W{q_w}A{q_a}` convention.
+pub fn precision_label(act_bits: Option<u8>) -> String {
+    match act_bits {
+        None => "W32A32".into(),
+        Some(b) => format!("W1A{b}"),
+    }
+}
+
+/// Build the full summary for one design.
+pub fn summarize(
+    structure: &VitStructure,
+    params: &AcceleratorParams,
+    device: &Device,
+) -> PerfSummary {
+    let (cycles, _) = model_cycles(structure, params, device);
+    let res = resources_for(structure, params, device);
+    let fps = device.fps(cycles);
+    let gops = structure.total_ops() as f64 * fps / 1e9;
+    let power = power_watts(structure, params, &res, device, &PowerModel::default());
+    let util = res.utilization();
+    PerfSummary {
+        label: precision_label(params.act_bits),
+        model: structure.config.name.clone(),
+        device: device.name.clone(),
+        params: *params,
+        cycles_per_frame: cycles,
+        fps,
+        gops,
+        gops_per_dsp: gops / res.dsp.max(1) as f64,
+        gops_per_klut: gops / (res.lut as f64 / 1000.0),
+        power_w: power,
+        fps_per_w: fps / power,
+        utilization: util,
+        utilization_pct: util.percent(&device.budget),
+    }
+}

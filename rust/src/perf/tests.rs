@@ -1,0 +1,159 @@
+use crate::hw::zcu102;
+use crate::model::{deit_base, LayerKind};
+
+use super::*;
+
+fn base_params() -> AcceleratorParams {
+    AcceleratorParams::baseline(96, 4, 4, 4)
+}
+
+fn quant_params(bits: u8) -> AcceleratorParams {
+    let g_q = AcceleratorParams::g_q_for(64, bits);
+    AcceleratorParams {
+        t_m: 80,
+        t_n: 4,
+        t_m_q: 160,
+        t_n_q: 4 * g_q / 4,
+        g: 4,
+        g_q,
+        p_h: 4,
+        act_bits: Some(bits),
+    }
+}
+
+#[test]
+fn eq7_manual_check_mlp1() {
+    // Hand-evaluated Eq. 7–11 for DeiT-base enc0.mlp1 (M=3072, N=768,
+    // F=197, N_h=12) under the baseline params on ZCU102
+    // (p_in=4, p_wgt=2, p_out=2).
+    let dev = zcu102();
+    let s = deit_base().structure(None);
+    let mlp1 = s.layers.iter().find(|l| l.name == "enc0.mlp1").unwrap();
+    let c = layer_cycles(mlp1, &base_params(), &dev);
+    // j_in = 12 · ⌈4/4⌉ · ⌈197/4⌉ = 12·1·50 = 600
+    assert_eq!(c.j_in, 600);
+    // j_wgt = 12 · 1 · ⌈96/2⌉ = 576
+    assert_eq!(c.j_wgt, 576);
+    // j_cmpt = 197 · ⌈12/4⌉ = 591
+    assert_eq!(c.j_cmpt, 591);
+    assert_eq!(c.j_lc, 600);
+    // in_tiles = ⌈768/(12·4)⌉ = 16 ⇒ j_s = 16·600 + 591 = 10191
+    assert_eq!(c.j_s, 10191);
+    // out_tiles = ⌈3072/96⌉ = 32, j_out = ⌈96/4⌉·⌈197/2⌉ = 24·99 = 2376
+    assert_eq!(c.j_out, 2376);
+    assert_eq!(c.total, 32 * 10191 + 2376);
+}
+
+#[test]
+fn attention_gamma_inflates_output_stores() {
+    let dev = zcu102();
+    let s = deit_base().structure(None);
+    let qk = s.layers.iter().find(|l| l.kind == LayerKind::AttnQk).unwrap();
+    let fc = s.layers.iter().find(|l| l.name == "enc0.proj").unwrap();
+    let cqk = layer_cycles(qk, &base_params(), &dev);
+    let cfc = layer_cycles(fc, &base_params(), &dev);
+    // Same T_m/G/F ⇒ j_out ratio is exactly (1+γ) = N_h.
+    assert_eq!(cqk.j_out, cfc.j_out * 12);
+}
+
+#[test]
+fn quantization_reduces_cycles() {
+    let dev = zcu102();
+    let base = deit_base().structure(None);
+    let (c_base, _) = model_cycles(&base, &base_params(), &dev);
+    for bits in [8u8, 6] {
+        let s = deit_base().structure(Some(bits));
+        let (c_q, _) = model_cycles(&s, &quant_params(bits), &dev);
+        assert!(
+            c_q < c_base,
+            "W1A{bits} ({c_q}) should be faster than baseline ({c_base})"
+        );
+    }
+    // And 6-bit beats 8-bit (more packing, bigger T_m^q possible).
+    let (c8, _) = model_cycles(&deit_base().structure(Some(8)), &quant_params(8), &dev);
+    let (c6, _) = model_cycles(&deit_base().structure(Some(6)), &quant_params(6), &dev);
+    assert!(c6 < c8, "W1A6 ({c6}) should beat W1A8 ({c8})");
+}
+
+#[test]
+fn bram_model_counts_double_buffering() {
+    let dev = zcu102();
+    let s = deit_base().structure(None);
+    let r = resources_for(&s, &base_params(), &dev);
+    // Every buffer count is even (the ×2 in Eq. 12).
+    assert_eq!(r.bram_in % 2, 0);
+    assert_eq!(r.bram_wgt % 2, 0);
+    assert_eq!(r.bram_out % 2, 0);
+    assert!(r.total_bram() > 0);
+}
+
+#[test]
+fn dsp_count_is_tm_ph_tn() {
+    let dev = zcu102();
+    let s = deit_base().structure(None);
+    let p = base_params();
+    let r = resources_for(&s, &p, &dev);
+    assert_eq!(r.dsp, p.t_m * p.p_h * p.t_n);
+}
+
+#[test]
+fn lut_cost_monotone_in_bits() {
+    assert!(lut_cost_per_mac(1) < lut_cost_per_mac(6));
+    assert!(lut_cost_per_mac(6) < lut_cost_per_mac(8));
+    assert!(lut_cost_per_mac(8) < lut_cost_per_mac(16));
+}
+
+#[test]
+fn feasibility_rejects_oversized_designs() {
+    let dev = zcu102();
+    let s = deit_base().structure(Some(8));
+    let mut p = quant_params(8);
+    p.t_m_q = 4000;
+    p.t_n_q = 512;
+    let r = resources_for(&s, &p, &dev);
+    assert!(!r.feasible(&dev), "absurd design must not fit");
+}
+
+#[test]
+fn summary_consistency() {
+    let dev = zcu102();
+    let s = deit_base().structure(Some(8));
+    let sum = summarize(&s, &quant_params(8), &dev);
+    assert_eq!(sum.label, "W1A8");
+    // FPS and cycles must be consistent with the clock.
+    let fps_from_cycles = 150e6 / sum.cycles_per_frame as f64;
+    assert!((sum.fps - fps_from_cycles).abs() < 1e-9);
+    // GOPS = ops/frame × fps.
+    let gops = s.total_ops() as f64 * sum.fps / 1e9;
+    assert!((sum.gops - gops).abs() < 1e-9);
+    assert!(sum.power_w > dev.static_power_w);
+    assert!(sum.fps_per_w > 0.0);
+}
+
+#[test]
+fn power_decreases_with_lower_precision() {
+    // Table 6 trend: 9.9 W (W32A32) > 8.7 W (W1A8) > 7.8 W (W1A6): moving
+    // work from DSPs to LUT add/sub lowers power.
+    let dev = zcu102();
+    let p32 = summarize(&deit_base().structure(None), &base_params(), &dev);
+    let p8 = summarize(&deit_base().structure(Some(8)), &quant_params(8), &dev);
+    let mut qp6 = quant_params(6);
+    // W1A6 frees DSPs (paper: 673 used): shrink the unquantized array.
+    qp6.t_m = 40;
+    let p6 = summarize(&deit_base().structure(Some(6)), &qp6, &dev);
+    assert!(p8.power_w < p32.power_w, "{} !< {}", p8.power_w, p32.power_w);
+    assert!(p6.power_w < p8.power_w, "{} !< {}", p6.power_w, p8.power_w);
+}
+
+#[test]
+fn host_cycles_are_small_fraction() {
+    // §5.2: host ops introduce "very small latency overhead".
+    let dev = zcu102();
+    let s = deit_base().structure(None);
+    let (total, per_layer) = model_cycles(&s, &base_params(), &dev);
+    let host: u64 = per_layer.iter().map(|c| c.host).sum();
+    assert!(
+        (host as f64) < 0.12 * total as f64,
+        "host {host} vs total {total}"
+    );
+}

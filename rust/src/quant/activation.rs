@@ -1,0 +1,146 @@
+//! Uniform b-bit activation quantization (paper §4.2: "reduce the
+//! activations into low-precision", b chosen by the compiler from 1..=16).
+
+
+
+/// A symmetric uniform quantizer for activations.
+///
+/// Values are mapped to signed integers in `[-2^(b-1), 2^(b-1) - 1]` with a
+/// single power-free scale (`x ≈ q · scale`). Symmetric signed quantization
+/// matches what the accelerator's add/sub datapath expects: a binary weight
+/// flips the sign of the integer activation and the scales fold together at
+/// output dequantization.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActQuantizer {
+    pub bits: u8,
+    pub scale: f32,
+}
+
+/// A quantized activation tensor: integers plus the quantizer that made
+/// them.
+#[derive(Debug, Clone)]
+pub struct QuantizedTensor {
+    pub q: Vec<i32>,
+    pub quantizer: ActQuantizer,
+}
+
+impl ActQuantizer {
+    /// Calibrate a quantizer for `bits`-wide signed storage over `data`
+    /// (max-abs calibration, the standard QAT forward-pass choice).
+    pub fn calibrate(bits: u8, data: &[f32]) -> ActQuantizer {
+        assert!((1..=16).contains(&bits), "activation bits must be 1..=16");
+        let max_abs = data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let qmax = ((1i64 << (bits - 1)) - 1).max(1) as f32;
+        let scale = if max_abs > 0.0 { max_abs / qmax } else { 1.0 };
+        ActQuantizer { bits, scale }
+    }
+
+    /// Integer range limits for this width.
+    pub fn qrange(&self) -> (i32, i32) {
+        if self.bits == 1 {
+            // 1-bit activations are ±1 (binary activations, the FR_max case).
+            (-1, 1)
+        } else {
+            let hi = (1i64 << (self.bits - 1)) - 1;
+            (-(hi as i32) - 1, hi as i32)
+        }
+    }
+
+    /// Quantize one value to its integer grid point.
+    pub fn quantize_one(&self, x: f32) -> i32 {
+        let (lo, hi) = self.qrange();
+        if self.bits == 1 {
+            return if x > 0.0 { 1 } else { -1 };
+        }
+        let q = (x / self.scale).round() as i64;
+        q.clamp(lo as i64, hi as i64) as i32
+    }
+
+    /// Dequantize an integer grid point.
+    pub fn dequantize_one(&self, q: i32) -> f32 {
+        q as f32 * self.scale
+    }
+
+    /// Quantize a whole tensor.
+    pub fn quantize(&self, data: &[f32]) -> QuantizedTensor {
+        QuantizedTensor {
+            q: data.iter().map(|&x| self.quantize_one(x)).collect(),
+            quantizer: *self,
+        }
+    }
+
+    /// Fake-quantization: quantize then dequantize (the QAT forward pass).
+    pub fn fake_quantize(&self, data: &[f32]) -> Vec<f32> {
+        data.iter()
+            .map(|&x| self.dequantize_one(self.quantize_one(x)))
+            .collect()
+    }
+
+    /// Worst-case absolute rounding error (half a step, plus clipping which
+    /// max-abs calibration avoids).
+    pub fn step(&self) -> f32 {
+        self.scale
+    }
+}
+
+impl QuantizedTensor {
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.q.iter().map(|&q| self.quantizer.dequantize_one(q)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let data: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) / 100.0).collect();
+        for bits in [4u8, 6, 8, 12, 16] {
+            let q = ActQuantizer::calibrate(bits, &data);
+            let deq = q.fake_quantize(&data);
+            for (x, y) in data.iter().zip(&deq) {
+                assert!(
+                    (x - y).abs() <= q.step() / 2.0 + 1e-6,
+                    "bits={bits} x={x} y={y} step={}",
+                    q.step()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn higher_precision_is_never_worse() {
+        let data: Vec<f32> = (0..512).map(|i| ((i * 97 % 31) as f32 - 15.0) / 7.0).collect();
+        let mse = |bits: u8| -> f64 {
+            let q = ActQuantizer::calibrate(bits, &data);
+            q.fake_quantize(&data)
+                .iter()
+                .zip(&data)
+                .map(|(y, x)| ((x - y) as f64).powi(2))
+                .sum::<f64>()
+        };
+        assert!(mse(8) <= mse(6));
+        assert!(mse(6) <= mse(4));
+        assert!(mse(4) <= mse(2));
+    }
+
+    #[test]
+    fn one_bit_activations_are_signs() {
+        let q = ActQuantizer::calibrate(1, &[0.3, -0.7, 2.0]);
+        assert_eq!(q.quantize(&[0.3, -0.7, 2.0, 0.0]).q, vec![1, -1, 1, -1]);
+    }
+
+    #[test]
+    fn qrange_widths() {
+        assert_eq!(ActQuantizer { bits: 8, scale: 1.0 }.qrange(), (-128, 127));
+        assert_eq!(ActQuantizer { bits: 6, scale: 1.0 }.qrange(), (-32, 31));
+        assert_eq!(ActQuantizer { bits: 16, scale: 1.0 }.qrange(), (-32768, 32767));
+    }
+
+    #[test]
+    fn zero_data_does_not_panic() {
+        let q = ActQuantizer::calibrate(8, &[0.0; 16]);
+        assert_eq!(q.quantize(&[0.0; 4]).q, vec![0; 4]);
+    }
+}

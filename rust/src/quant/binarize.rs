@@ -1,0 +1,102 @@
+//! Weight binarization (paper Eq. 5, following XNOR-Net / ReActNet).
+
+
+
+/// A binarized weight matrix: signs plus one ℓ1 scaling factor.
+///
+/// `w_b = (‖W_r‖₁ / n) · sign(w_r)` — the scaling factor minimizes the ℓ2
+/// difference between the binary and real-valued matrices. On hardware only
+/// the sign bits travel (1 bit/weight); the scale folds into the output
+/// dequantization, which is exactly why quantized MACs reduce to additions
+/// and subtractions (paper §1, §5.1).
+#[derive(Debug, Clone)]
+pub struct BinaryMatrix {
+    /// Row-major sign bits; `true` ⇒ +1, `false` ⇒ −1.
+    pub signs: Vec<bool>,
+    /// `‖W_r‖₁ / n`.
+    pub scale: f32,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl BinaryMatrix {
+    /// Reconstruct the dense ±scale matrix (the dequantized view used by
+    /// functional references).
+    pub fn to_dense(&self) -> Vec<f32> {
+        self.signs
+            .iter()
+            .map(|&s| if s { self.scale } else { -self.scale })
+            .collect()
+    }
+
+    /// Sign at `(row, col)` as ±1.
+    pub fn sign_at(&self, row: usize, col: usize) -> i32 {
+        if self.signs[row * self.cols + col] {
+            1
+        } else {
+            -1
+        }
+    }
+
+    /// Storage cost in bits (1 per weight + one f32 scale).
+    pub fn storage_bits(&self) -> u64 {
+        self.signs.len() as u64 + 32
+    }
+}
+
+/// Binarize a row-major `rows × cols` real-valued matrix per Eq. 5.
+///
+/// Note the paper's convention: `w_r > 0 → +scale`, `w_r ≤ 0 → −scale`
+/// (zero maps to −scale).
+pub fn binarize(weights: &[f32], rows: usize, cols: usize) -> BinaryMatrix {
+    assert_eq!(weights.len(), rows * cols, "shape mismatch");
+    let n = weights.len() as f32;
+    let l1: f32 = weights.iter().map(|w| w.abs()).sum();
+    let scale = if n > 0.0 { l1 / n } else { 0.0 };
+    let signs = weights.iter().map(|&w| w > 0.0).collect();
+    BinaryMatrix {
+        signs,
+        scale,
+        rows,
+        cols,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_is_l1_over_n() {
+        let w = [1.0f32, -2.0, 3.0, -4.0];
+        let b = binarize(&w, 2, 2);
+        assert!((b.scale - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn signs_follow_eq5_zero_maps_negative() {
+        let w = [0.5f32, -0.5, 0.0, 2.0];
+        let b = binarize(&w, 2, 2);
+        assert_eq!(b.to_dense().iter().map(|v| v.signum()).collect::<Vec<_>>(), vec![1.0, -1.0, -1.0, 1.0]);
+    }
+
+    #[test]
+    fn binarization_minimizes_l2_among_scales() {
+        // The l1/n scale is the analytic argmin of ‖W − s·sign(W)‖₂;
+        // perturbing it must not reduce the error.
+        let w: Vec<f32> = (0..64).map(|i| ((i * 37 % 13) as f32 - 6.0) / 3.0).collect();
+        let b = binarize(&w, 8, 8);
+        let err = |s: f32| -> f32 {
+            w.iter()
+                .zip(&b.signs)
+                .map(|(&wr, &sg)| {
+                    let wb = if sg { s } else { -s };
+                    (wr - wb) * (wr - wb)
+                })
+                .sum()
+        };
+        let e0 = err(b.scale);
+        assert!(e0 <= err(b.scale * 1.1) + 1e-5);
+        assert!(e0 <= err(b.scale * 0.9) + 1e-5);
+    }
+}

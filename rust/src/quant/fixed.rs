@@ -1,0 +1,71 @@
+//! 16-bit fixed point — the hardware representation of "unquantized" data.
+//!
+//! Paper §5.3: "a baseline accelerator is realized for unquantized models,
+//! whose 32-bit floating-point parameters and activations are represented
+//! with 16-bit fixed-point numbers ... without accuracy loss on hardware."
+//! We use Q6.10 (1 sign + 5 integer + 10 fractional bits): ViT activations
+//! after LayerNorm are O(1–10), and 2⁻¹⁰ ≈ 1e-3 resolution loses no top-1
+//! accuracy — matching the paper's claim.
+
+/// Fractional bits of the Q-format.
+pub const FIXED16_FRAC_BITS: u32 = 10;
+
+/// A 16-bit fixed-point value (Q6.10).
+pub type Fixed16 = i16;
+
+/// Convert f32 → Q6.10 with saturation.
+pub fn to_fixed16(x: f32) -> Fixed16 {
+    let scaled = (x * (1 << FIXED16_FRAC_BITS) as f32).round();
+    scaled.clamp(i16::MIN as f32, i16::MAX as f32) as i16
+}
+
+/// Convert Q6.10 → f32.
+pub fn from_fixed16(q: Fixed16) -> f32 {
+    q as f32 / (1 << FIXED16_FRAC_BITS) as f32
+}
+
+/// Fixed-point multiply-accumulate into a 32-bit accumulator (what one DSP
+/// slice does per cycle in the unquantized datapath).
+#[inline]
+pub fn fixed_mac(acc: i64, a: Fixed16, b: Fixed16) -> i64 {
+    acc + (a as i64) * (b as i64)
+}
+
+/// Renormalize a Q20 accumulator (product of two Q10s) back to Q10.
+#[inline]
+pub fn acc_to_fixed16(acc: i64) -> Fixed16 {
+    let shifted = acc >> FIXED16_FRAC_BITS;
+    shifted.clamp(i16::MIN as i64, i16::MAX as i64) as i16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_resolution() {
+        for x in [-3.25f32, 0.0, 0.5, 1.0 / 1024.0, 7.9] {
+            let err = (from_fixed16(to_fixed16(x)) - x).abs();
+            assert!(err <= 0.5 / 1024.0 + 1e-7, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn saturates_out_of_range() {
+        assert_eq!(to_fixed16(1e6), i16::MAX);
+        assert_eq!(to_fixed16(-1e6), i16::MIN);
+    }
+
+    #[test]
+    fn mac_matches_float_within_resolution() {
+        let a = [0.5f32, -1.25, 2.0, 0.125];
+        let b = [1.5f32, 0.75, -0.5, 3.0];
+        let mut acc = 0i64;
+        for (&x, &y) in a.iter().zip(&b) {
+            acc = fixed_mac(acc, to_fixed16(x), to_fixed16(y));
+        }
+        let float: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let fx = from_fixed16(acc_to_fixed16(acc));
+        assert!((fx - float).abs() < 0.01, "fx={fx} float={float}");
+    }
+}

@@ -1,0 +1,27 @@
+//! Quantization library (paper §4.2 + §5.3.1).
+//!
+//! Everything numeric the accelerator and the training recipe need:
+//!
+//! * [`binarize`] — XNOR-Net-style weight binarization with the ℓ1 scaling
+//!   factor (Eq. 5),
+//! * [`activation`] — uniform b-bit activation quantization,
+//! * [`fixed`] — the 16-bit fixed-point representation used for
+//!   "unquantized" data on hardware (§5.3),
+//! * [`packing`] — the AXI-word data-packing scheme (§5.3.1) including the
+//!   `S_port` non-divisible case (`G^q = ⌊64/6⌋ = 10`, 60 of 64 bits used),
+//! * [`progressive`] — the progressive binarization mask of Eq. 6.
+
+mod activation;
+mod binarize;
+mod fixed;
+mod packing;
+mod progressive;
+
+pub use activation::{ActQuantizer, QuantizedTensor};
+pub use binarize::{binarize, BinaryMatrix};
+pub use fixed::{acc_to_fixed16, fixed_mac, from_fixed16, to_fixed16, Fixed16, FIXED16_FRAC_BITS};
+pub use packing::{pack_factor, pack_words, unpack_words, PackedBuffer};
+pub use progressive::{progressive_schedule, ProgressiveMask};
+
+#[cfg(test)]
+mod tests;

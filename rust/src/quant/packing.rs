@@ -1,0 +1,132 @@
+//! Data packing (paper §5.3.1).
+//!
+//! Multiple low-precision values are concatenated into one AXI word so
+//! BRAM usage drops by up to `G×` and input/output transfer cycles by `G×`.
+//! The packing factor is `G = ⌊S_port / bits⌋`; when `S_port` is not
+//! divisible by the bit width, the remainder bits go unused — the paper's
+//! 6-bit example: `G^q = ⌊64/6⌋ = 10`, only 60 of the 64 bits exploited.
+
+/// Packing factor for `bits`-wide values on a `port_bits`-wide AXI port.
+pub fn pack_factor(port_bits: u32, bits: u32) -> u32 {
+    assert!(bits >= 1 && bits <= port_bits, "bits={bits} port={port_bits}");
+    port_bits / bits
+}
+
+/// A buffer of packed AXI words plus the packing geometry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedBuffer {
+    pub words: Vec<u64>,
+    pub bits: u32,
+    pub factor: u32,
+    /// Number of logical values packed (≤ words.len() · factor).
+    pub len: usize,
+}
+
+/// Pack signed integers (must fit in `bits` two's-complement) into 64-bit
+/// AXI words, `factor` per word, LSB-first.
+pub fn pack_words(values: &[i32], bits: u32, port_bits: u32) -> PackedBuffer {
+    let factor = pack_factor(port_bits, bits);
+    let mask: u64 = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    let lo = -(1i64 << (bits - 1));
+    let hi = (1i64 << (bits - 1)) - 1;
+    let mut words = Vec::with_capacity(values.len().div_ceil(factor as usize));
+    for chunk in values.chunks(factor as usize) {
+        let mut w = 0u64;
+        for (i, &v) in chunk.iter().enumerate() {
+            debug_assert!(
+                (v as i64) >= lo && (v as i64) <= hi || bits == 1,
+                "value {v} out of {bits}-bit range"
+            );
+            let enc = if bits == 1 {
+                // 1-bit encoding: sign bit (1 ⇒ +1, 0 ⇒ −1).
+                u64::from(v > 0)
+            } else {
+                (v as i64 as u64) & mask
+            };
+            w |= enc << (i as u32 * bits);
+        }
+        words.push(w);
+    }
+    PackedBuffer {
+        words,
+        bits,
+        factor,
+        len: values.len(),
+    }
+}
+
+/// Unpack back to signed integers (sign-extending each field).
+pub fn unpack_words(buf: &PackedBuffer) -> Vec<i32> {
+    let mut out = Vec::with_capacity(buf.len);
+    let bits = buf.bits;
+    'outer: for &w in &buf.words {
+        for i in 0..buf.factor {
+            if out.len() == buf.len {
+                break 'outer;
+            }
+            let field = (w >> (i * bits)) & if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+            let v = if bits == 1 {
+                if field == 1 {
+                    1
+                } else {
+                    -1
+                }
+            } else {
+                // Sign-extend.
+                let shift = 64 - bits;
+                (((field << shift) as i64) >> shift) as i32
+            };
+            out.push(v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_packing_factors() {
+        // §5.3.1: S_port=64 ⇒ G=4 for 16-bit, G^q=8 for 8-bit,
+        // G^q=10 for 6-bit (60/64 bits used).
+        assert_eq!(pack_factor(64, 16), 4);
+        assert_eq!(pack_factor(64, 8), 8);
+        assert_eq!(pack_factor(64, 6), 10);
+        assert_eq!(pack_factor(64, 1), 64);
+        assert_eq!(pack_factor(64, 4), 16);
+    }
+
+    #[test]
+    fn roundtrip_8bit() {
+        let vals: Vec<i32> = (-128..128).collect();
+        let packed = pack_words(&vals, 8, 64);
+        assert_eq!(packed.words.len(), 32);
+        assert_eq!(unpack_words(&packed), vals);
+    }
+
+    #[test]
+    fn roundtrip_6bit_with_remainder_bits() {
+        let vals: Vec<i32> = (0..23).map(|i| (i % 63) - 32).collect();
+        let packed = pack_words(&vals, 6, 64);
+        // 23 values at 10/word ⇒ 3 words.
+        assert_eq!(packed.words.len(), 3);
+        assert_eq!(unpack_words(&packed), vals);
+    }
+
+    #[test]
+    fn roundtrip_1bit_signs() {
+        let vals = vec![1, -1, -1, 1, 1, 1, -1];
+        let packed = pack_words(&vals, 1, 64);
+        assert_eq!(packed.words.len(), 1);
+        assert_eq!(unpack_words(&packed), vals);
+    }
+
+    #[test]
+    fn bram_reduction_is_factor_g() {
+        // 1024 8-bit values: unpacked they'd need 1024 words; packed, 128.
+        let vals = vec![7i32; 1024];
+        let packed = pack_words(&vals, 8, 64);
+        assert_eq!(packed.words.len() * packed.factor as usize, 1024);
+    }
+}

@@ -1,0 +1,126 @@
+//! Progressive binary training mask (paper Eq. 6).
+//!
+//! During QAT, `p%` of the weight elements are binarized and the rest stay
+//! full-precision: `W_p = M_p · W_b + (1 − M_p) · W_r`. `p` starts at 0,
+//! grows linearly with the epoch, and reaches 100% at the end of training.
+//! The Python training harness mirrors this implementation exactly (same
+//! hash-based element ordering) so both sides select identical masks for a
+//! given seed — see `python/compile/quantize.py`.
+
+use crate::util::rng::SplitMix64;
+
+/// A progressive-binarization mask over a flat weight tensor.
+#[derive(Debug, Clone)]
+pub struct ProgressiveMask {
+    /// Element indices in the (seeded) order they get binarized.
+    order: Vec<u32>,
+    /// Currently binarized prefix length.
+    binarized: usize,
+}
+
+impl ProgressiveMask {
+    /// Create a mask for `len` elements with a deterministic shuffle.
+    pub fn new(len: usize, seed: u64) -> ProgressiveMask {
+        let mut order: Vec<u32> = (0..len as u32).collect();
+        let mut rng = SplitMix64::new(seed);
+        rng.shuffle(&mut order);
+        ProgressiveMask { order, binarized: 0 }
+    }
+
+    /// Set the binarized fraction `p ∈ [0, 1]`. Monotone: lowering `p`
+    /// does not un-binarize already-selected elements (matching the paper's
+    /// "grows linearly ... achieves 100%" schedule, which never regresses).
+    pub fn set_fraction(&mut self, p: f64) {
+        let target = ((self.order.len() as f64) * p.clamp(0.0, 1.0)).round() as usize;
+        self.binarized = self.binarized.max(target.min(self.order.len()));
+    }
+
+    /// Current fraction binarized.
+    pub fn fraction(&self) -> f64 {
+        if self.order.is_empty() {
+            return 1.0;
+        }
+        self.binarized as f64 / self.order.len() as f64
+    }
+
+    /// Dense 0/1 mask (`1` = binarized), Eq. 6's `M_p`.
+    pub fn dense(&self) -> Vec<bool> {
+        let mut m = vec![false; self.order.len()];
+        for &i in &self.order[..self.binarized] {
+            m[i as usize] = true;
+        }
+        m
+    }
+
+    /// Apply Eq. 6: blend binary and real weights under the current mask.
+    pub fn blend(&self, real: &[f32], binary: &[f32]) -> Vec<f32> {
+        assert_eq!(real.len(), self.order.len());
+        assert_eq!(binary.len(), self.order.len());
+        let mask = self.dense();
+        real.iter()
+            .zip(binary)
+            .zip(mask)
+            .map(|((&r, &b), m)| if m { b } else { r })
+            .collect()
+    }
+}
+
+/// The paper's linear schedule: fraction binarized at `epoch` of
+/// `total_epochs` (0 at start, 1.0 at the last epoch).
+pub fn progressive_schedule(epoch: usize, total_epochs: usize) -> f64 {
+    if total_epochs <= 1 {
+        return 1.0;
+    }
+    (epoch as f64 / (total_epochs - 1) as f64).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_endpoints() {
+        assert_eq!(progressive_schedule(0, 300), 0.0);
+        assert_eq!(progressive_schedule(299, 300), 1.0);
+        assert!(progressive_schedule(150, 300) > 0.49);
+        assert!(progressive_schedule(150, 300) < 0.52);
+    }
+
+    #[test]
+    fn mask_is_monotone() {
+        let mut m = ProgressiveMask::new(100, 42);
+        m.set_fraction(0.5);
+        let d1 = m.dense();
+        m.set_fraction(0.75);
+        let d2 = m.dense();
+        for (a, b) in d1.iter().zip(&d2) {
+            assert!(!a || *b, "binarized element got un-binarized");
+        }
+        // Lowering p is a no-op.
+        m.set_fraction(0.1);
+        assert_eq!(m.dense(), d2);
+    }
+
+    #[test]
+    fn blend_selects_per_mask() {
+        let mut m = ProgressiveMask::new(4, 7);
+        m.set_fraction(0.5);
+        let real = [1.0f32, 2.0, 3.0, 4.0];
+        let bin = [-1.0f32, -1.0, -1.0, -1.0];
+        let out = m.blend(&real, &bin);
+        let n_bin = out.iter().filter(|&&v| v == -1.0).count();
+        assert_eq!(n_bin, 2);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = ProgressiveMask::new(64, 123);
+        let mut b = ProgressiveMask::new(64, 123);
+        a.set_fraction(0.3);
+        b.set_fraction(0.3);
+        assert_eq!(a.dense(), b.dense());
+        let mut c = ProgressiveMask::new(64, 124);
+        c.set_fraction(0.3);
+        assert_ne!(a.dense(), c.dense());
+    }
+}

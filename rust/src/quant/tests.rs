@@ -1,0 +1,104 @@
+//! Cross-cutting quantization tests: binary-weight matmul as add/sub, the
+//! end-to-end property the accelerator datapath relies on.
+
+use super::*;
+
+/// Reference f32 matmul.
+fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += a[i * k + p] * b[p * n + j];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+#[test]
+fn binary_matmul_reduces_to_add_sub() {
+    // x @ W_b == scale * Σ ±x — the LUT add/sub datapath (paper §5.1).
+    let k = 16;
+    let n = 8;
+    let x: Vec<f32> = (0..k).map(|i| (i as f32 - 8.0) / 4.0).collect();
+    let w: Vec<f32> = (0..k * n).map(|i| ((i * 31 % 17) as f32 - 8.0) / 5.0).collect();
+    let wb = binarize(&w, k, n);
+
+    // Dense path: x @ dense(W_b).
+    let dense = matmul_f32(&x, &wb.to_dense(), 1, k, n);
+
+    // Add/sub path: accumulate ±x_p per output channel, scale once.
+    for j in 0..n {
+        let mut acc = 0.0f32;
+        for p in 0..k {
+            if wb.sign_at(p, j) > 0 {
+                acc += x[p];
+            } else {
+                acc -= x[p];
+            }
+        }
+        let got = acc * wb.scale;
+        assert!((got - dense[j]).abs() < 1e-4, "col {j}: {got} vs {}", dense[j]);
+    }
+}
+
+#[test]
+fn quantized_binary_matmul_integer_datapath() {
+    // Full integer pipeline: quantize activations to b bits, accumulate
+    // integer ±q, dequantize with act_scale · w_scale. Error must be
+    // bounded by the activation quantization error propagated through the
+    // matmul (k · step/2 · scale per output).
+    let k = 32;
+    let n = 4;
+    let x: Vec<f32> = (0..k).map(|i| ((i * 13 % 29) as f32 - 14.0) / 7.0).collect();
+    let w: Vec<f32> = (0..k * n).map(|i| ((i * 7 % 23) as f32 - 11.0) / 9.0).collect();
+    let wb = binarize(&w, k, n);
+
+    for bits in [6u8, 8] {
+        let aq = ActQuantizer::calibrate(bits, &x);
+        let xq = aq.quantize(&x);
+        let exact = matmul_f32(&aq.fake_quantize(&x), &wb.to_dense(), 1, k, n);
+        for j in 0..n {
+            let mut acc: i64 = 0;
+            for p in 0..k {
+                acc += (xq.q[p] as i64) * (wb.sign_at(p, j) as i64);
+            }
+            let got = acc as f32 * aq.scale * wb.scale;
+            assert!(
+                (got - exact[j]).abs() < 1e-3,
+                "bits={bits} col {j}: {got} vs {}", exact[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn packed_transport_preserves_matmul_result() {
+    // Pack quantized activations into AXI words, unpack, matmul — results
+    // must be identical to the unpacked integer path.
+    let k = 60; // exercises the 6-bit 10-per-word remainder case
+    let x: Vec<f32> = (0..k).map(|i| ((i * 11 % 19) as f32 - 9.0) / 3.0).collect();
+    let aq = ActQuantizer::calibrate(6, &x);
+    let xq = aq.quantize(&x);
+    let packed = pack_words(&xq.q, 6, 64);
+    assert_eq!(unpack_words(&packed), xq.q);
+}
+
+#[test]
+fn fixed16_baseline_represents_unquantized_path() {
+    // §5.3: W16A16 on hardware represents W32A32 on software "without
+    // accuracy loss" — check a small matmul agrees to Q10 resolution.
+    let k = 8;
+    let x: Vec<f32> = (0..k).map(|i| (i as f32) / 4.0 - 1.0).collect();
+    let w: Vec<f32> = (0..k).map(|i| ((i * 3 % 5) as f32) / 2.0 - 1.0).collect();
+    let exact: f32 = x.iter().zip(&w).map(|(a, b)| a * b).sum();
+    let mut acc = 0i64;
+    for (&a, &b) in x.iter().zip(&w) {
+        acc = fixed_mac(acc, to_fixed16(a), to_fixed16(b));
+    }
+    let got = from_fixed16(acc_to_fixed16(acc));
+    assert!((got - exact).abs() < 0.02, "{got} vs {exact}");
+}

@@ -1,0 +1,201 @@
+//! The PJRT inference engine.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::Cycles;
+
+use super::manifest::{Manifest, VariantEntry};
+
+/// One compiled model variant: executable + resident parameter literal.
+pub struct VariantRuntime {
+    pub entry: VariantEntry,
+    exe: xla::PjRtLoadedExecutable,
+    /// Parameters stay on-device (CPU PJRT buffer) across calls — loading
+    /// them per frame would dominate the hot path.
+    params: xla::PjRtBuffer,
+}
+
+/// Multi-variant inference engine over one PJRT client.
+pub struct InferenceEngine {
+    client: xla::PjRtClient,
+    variants: HashMap<String, VariantRuntime>,
+}
+
+impl InferenceEngine {
+    /// Create a CPU PJRT client with no variants loaded.
+    ///
+    /// NOTE on stability: the image's prebuilt xla_extension 0.5.1
+    /// intermittently (~20%) SIGSEGVs inside XLA's CPU compilation
+    /// pipeline when compiling ViT-sized HLO modules on this host —
+    /// reproducible independent of this crate. Compilation is
+    /// deterministic, so the workspace installs a process-level
+    /// retry-on-SIGSEGV cargo runner (`tools/flaky_xla_runner.sh`) rather
+    /// than pinning `--xla_backend_optimization_level=0`, which would slow
+    /// the execute hot path ~25×.
+    pub fn new() -> anyhow::Result<InferenceEngine> {
+        Ok(InferenceEngine {
+            client: xla::PjRtClient::cpu()?,
+            variants: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact variant, park its parameters on device.
+    pub fn load_variant(&mut self, entry: &VariantEntry) -> anyhow::Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            entry
+                .hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+
+        let raw = std::fs::read(&entry.params_path)?;
+        anyhow::ensure!(
+            raw.len() == entry.param_count * 4,
+            "params file {} has {} bytes, want {}",
+            entry.params_path.display(),
+            raw.len(),
+            entry.param_count * 4
+        );
+        let flat: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        let lit = xla::Literal::vec1(&flat);
+        let params = self
+            .client
+            .buffer_from_host_literal(None, &lit)?;
+
+        self.variants.insert(
+            entry.tag.clone(),
+            VariantRuntime {
+                entry: entry.clone(),
+                exe,
+                params,
+            },
+        );
+        Ok(())
+    }
+
+    /// Load every variant in a manifest.
+    pub fn load_manifest(&mut self, dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let man = Manifest::load(dir)?;
+        for v in &man.variants {
+            self.load_variant(v)?;
+        }
+        Ok(man)
+    }
+
+    pub fn tags(&self) -> Vec<&str> {
+        self.variants.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn variant(&self, tag: &str) -> Option<&VariantRuntime> {
+        self.variants.get(tag)
+    }
+
+    /// Run one frame through `tag`: `patches` is row-major
+    /// `N_p × (3·P²)`. Returns the logits.
+    pub fn infer(&self, tag: &str, patches: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let v = self
+            .variants
+            .get(tag)
+            .ok_or_else(|| anyhow::anyhow!("variant {tag} not loaded"))?;
+        let (np, pin) = v.entry.patches_shape;
+        anyhow::ensure!(
+            patches.len() == np * pin,
+            "patches len {} != {np}×{pin}",
+            patches.len()
+        );
+        let lit = xla::Literal::vec1(patches).reshape(&[np as i64, pin as i64])?;
+        let input = self.client.buffer_from_host_literal(None, &lit)?;
+        let result = v.exe.execute_b(&[&v.params, &input])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True ⇒ 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Hot-path latency helper: run `frames` inferences, return per-frame
+    /// seconds (used by the runtime_hotpath bench and the coordinator).
+    pub fn time_frames(
+        &self,
+        tag: &str,
+        patches: &[f32],
+        frames: usize,
+    ) -> anyhow::Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(frames);
+        for _ in 0..frames {
+            let t0 = std::time::Instant::now();
+            let _ = self.infer(tag, patches)?;
+            out.push(t0.elapsed().as_secs_f64());
+        }
+        Ok(out)
+    }
+}
+
+/// What a backend must provide to the serving coordinator: logits plus the
+/// "device" latency. For the PJRT backend the latency is wall-clock; for
+/// the simulated-FPGA backend it is simulated cycles at the device clock.
+///
+/// Deliberately NOT `Send`: the PJRT client wraps thread-affine C
+/// pointers, so the coordinator keeps inference on the calling thread and
+/// spawns only the frame source.
+pub trait InferenceBackend {
+    fn name(&self) -> String;
+    fn infer(&self, patches: &[f32]) -> anyhow::Result<(Vec<f32>, f64)>;
+}
+
+/// PJRT-backed implementation of [`InferenceBackend`].
+pub struct PjrtBackend {
+    pub engine: std::rc::Rc<InferenceEngine>,
+    pub tag: String,
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.tag)
+    }
+
+    fn infer(&self, patches: &[f32]) -> anyhow::Result<(Vec<f32>, f64)> {
+        let t0 = std::time::Instant::now();
+        let logits = self.engine.infer(&self.tag, patches)?;
+        Ok((logits, t0.elapsed().as_secs_f64()))
+    }
+}
+
+/// Simulated-FPGA implementation of [`InferenceBackend`] (functional
+/// numerics + simulated latency at the accelerator clock).
+pub struct SimBackend {
+    pub executor: crate::sim::ModelExecutor,
+    /// Pace wall-clock to the simulated latency (realistic serving) or run
+    /// as fast as the host allows (throughput studies).
+    pub realtime: bool,
+}
+
+impl InferenceBackend for SimBackend {
+    fn name(&self) -> String {
+        format!(
+            "sim-fpga:{}@{}",
+            self.executor.config.name, self.executor.device.name
+        )
+    }
+
+    fn infer(&self, patches: &[f32]) -> anyhow::Result<(Vec<f32>, f64)> {
+        let (logits, trace) = self.executor.run_frame(patches);
+        if self.realtime {
+            std::thread::sleep(std::time::Duration::from_secs_f64(trace.latency_s));
+        }
+        Ok((logits, trace.latency_s))
+    }
+}
+
+/// Convert simulated cycles to seconds at a clock (helper re-export).
+pub fn cycles_to_seconds(cycles: Cycles, clock_mhz: u64) -> f64 {
+    cycles as f64 / (clock_mhz as f64 * 1e6)
+}

@@ -1,0 +1,125 @@
+//! `artifacts/manifest.json` — what the AOT step exported.
+
+use std::path::{Path, PathBuf};
+
+use crate::model::VitConfig;
+use crate::util::json::Json;
+
+/// One exported model variant.
+#[derive(Debug, Clone)]
+pub struct VariantEntry {
+    pub tag: String,
+    pub model: String,
+    /// 32 for the unquantized baseline, else the activation precision.
+    pub act_bits: u8,
+    pub w_bits: u8,
+    pub seed: u64,
+    pub hlo_path: PathBuf,
+    pub params_path: PathBuf,
+    pub param_count: usize,
+    pub patches_shape: (usize, usize),
+    pub num_classes: usize,
+    pub config: VitConfig,
+}
+
+impl VariantEntry {
+    /// The `act_bits` in the crate's `Option` convention.
+    pub fn act_bits_opt(&self) -> Option<u8> {
+        if self.w_bits == 1 {
+            Some(self.act_bits)
+        } else {
+            None
+        }
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub seed: u64,
+    pub variants: Vec<VariantEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("reading {}/manifest.json: {e} — run `make artifacts`", dir.display()))?;
+        let j = Json::parse(&text)?;
+        let seed = j
+            .get("seed")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing seed"))?;
+        let mut variants = Vec::new();
+        for v in j
+            .get("variants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing variants"))?
+        {
+            let s = |k: &str| -> anyhow::Result<String> {
+                Ok(v.get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("variant missing {k}"))?
+                    .to_string())
+            };
+            let n = |k: &str| -> anyhow::Result<u64> {
+                v.get(k)
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow::anyhow!("variant missing {k}"))
+            };
+            let cfg = v
+                .get("config")
+                .ok_or_else(|| anyhow::anyhow!("variant missing config"))?;
+            let cn = |k: &str| -> anyhow::Result<usize> {
+                cfg.get(k)
+                    .and_then(Json::as_u64)
+                    .map(|x| x as usize)
+                    .ok_or_else(|| anyhow::anyhow!("config missing {k}"))
+            };
+            let shape = v
+                .get("patches_shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("variant missing patches_shape"))?;
+            variants.push(VariantEntry {
+                tag: s("tag")?,
+                model: s("model")?,
+                act_bits: n("act_bits")? as u8,
+                w_bits: n("w_bits")? as u8,
+                seed: n("seed")?,
+                hlo_path: dir.join(s("hlo")?),
+                params_path: dir.join(s("params")?),
+                param_count: n("param_count")? as usize,
+                patches_shape: (
+                    shape[0].as_u64().unwrap_or(0) as usize,
+                    shape[1].as_u64().unwrap_or(0) as usize,
+                ),
+                num_classes: n("num_classes")? as usize,
+                config: VitConfig {
+                    name: s("model")?,
+                    image_size: cn("image_size")?,
+                    patch_size: cn("patch_size")?,
+                    in_chans: cn("in_chans")?,
+                    embed_dim: cn("embed_dim")?,
+                    depth: cn("depth")?,
+                    num_heads: cn("num_heads")?,
+                    mlp_ratio: cn("mlp_ratio")?,
+                    num_classes: cn("num_classes")?,
+                },
+            });
+        }
+        Ok(Manifest { seed, variants, dir })
+    }
+
+    pub fn find(&self, tag: &str) -> Option<&VariantEntry> {
+        self.variants.iter().find(|v| v.tag == tag)
+    }
+
+    /// Find by (model, act_bits) in the crate convention.
+    pub fn find_precision(&self, model: &str, act_bits: Option<u8>) -> Option<&VariantEntry> {
+        self.variants
+            .iter()
+            .find(|v| v.model == model && v.act_bits_opt() == act_bits)
+    }
+}

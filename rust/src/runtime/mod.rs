@@ -1,0 +1,12 @@
+//! PJRT runtime: load and execute the AOT artifacts from `make artifacts`.
+//!
+//! The Rust half of the AOT bridge (see `/opt/xla-example/load_hlo`): HLO
+//! *text* from `python/compile/aot.py` → `HloModuleProto::from_text_file`
+//! → `PjRtClient::cpu().compile` → `execute`. One compiled executable per
+//! model variant; Python never runs on this path.
+
+mod engine;
+mod manifest;
+
+pub use engine::{cycles_to_seconds, InferenceBackend, InferenceEngine, PjrtBackend, SimBackend, VariantRuntime};
+pub use manifest::{Manifest, VariantEntry};

@@ -1,0 +1,182 @@
+//! The general compute engine (paper §5.1): functional datapaths.
+//!
+//! Three matmul flavours, matching the hardware's operand types:
+//!
+//! * [`ComputeEngine::fc_fixed16`] — unquantized layers (patch embed,
+//!   head): operands converted to Q6.10 fixed point, 32-bit accumulation
+//!   on the DSP path — including the fixed-point rounding a real board
+//!   would exhibit.
+//! * [`ComputeEngine::fc_binary`] — binary-weight FC layers: activations
+//!   quantized to `b`-bit integers, weights are ±1 signs, the MAC array is
+//!   pure add/sub (LUT path), one scale multiply at the end
+//!   (`act_scale · w_scale`).
+//! * [`ComputeEngine::qq_matmul`] — attention matmuls (`Q·Kᵀ`, `S·V`):
+//!   both operands are `b`-bit quantized activations; integer products,
+//!   dequantized with the product of the two scales.
+//!
+//! All paths return exact f32 reconstructions of the integer/fixed-point
+//! results, so the executor's outputs are what the board would produce.
+
+use crate::hw::Device;
+use crate::perf::AcceleratorParams;
+use crate::quant::{acc_to_fixed16, binarize, fixed_mac, from_fixed16, to_fixed16, ActQuantizer, BinaryMatrix};
+
+/// Functional result of one engine invocation.
+#[derive(Debug, Clone)]
+pub struct MatmulResult {
+    /// Row-major `f × m` output.
+    pub out: Vec<f32>,
+    /// Number of MAC operations executed (cross-checked against
+    /// `LayerDesc::macs`).
+    pub macs: u64,
+}
+
+/// The compute engine: holds the accelerator parameterization (the tiling
+/// doesn't change the math, but the quantization geometry — `act_bits` —
+/// does).
+#[derive(Debug, Clone)]
+pub struct ComputeEngine {
+    pub params: AcceleratorParams,
+    pub device: Device,
+}
+
+impl ComputeEngine {
+    pub fn new(params: AcceleratorParams, device: Device) -> ComputeEngine {
+        ComputeEngine { params, device }
+    }
+
+    /// Unquantized FC on the DSP path: `x (f×n) @ w (n×m)`, Q6.10 in,
+    /// 32-bit accumulate, Q6.10 out.
+    pub fn fc_fixed16(&self, x: &[f32], w: &[f32], f: usize, n: usize, m: usize) -> MatmulResult {
+        assert_eq!(x.len(), f * n);
+        assert_eq!(w.len(), n * m);
+        let xq: Vec<i16> = x.iter().map(|&v| to_fixed16(v)).collect();
+        let wq: Vec<i16> = w.iter().map(|&v| to_fixed16(v)).collect();
+        let mut out = vec![0.0f32; f * m];
+        // Hot path (§Perf): i-p-j loop order with a per-row i64 accumulator
+        // keeps the inner loop streaming over the contiguous weight row —
+        // ~3.5× over the naive i-j-p order (see EXPERIMENTS.md §Perf).
+        let mut acc_row = vec![0i64; m];
+        for i in 0..f {
+            acc_row.fill(0);
+            let xrow = &xq[i * n..(i + 1) * n];
+            for (p, &xv) in xrow.iter().enumerate() {
+                if xv == 0 {
+                    continue;
+                }
+                let xv = xv as i64;
+                let wrow = &wq[p * m..(p + 1) * m];
+                for (acc, &wv) in acc_row.iter_mut().zip(wrow) {
+                    *acc += xv * wv as i64;
+                }
+            }
+            for (o, &acc) in out[i * m..(i + 1) * m].iter_mut().zip(&acc_row) {
+                *o = from_fixed16(acc_to_fixed16(acc));
+            }
+        }
+        let _ = fixed_mac; // (kept for the scalar-datapath unit tests)
+        MatmulResult {
+            out,
+            macs: (f * n * m) as u64,
+        }
+    }
+
+    /// Binary-weight FC on the LUT path: activations quantized to
+    /// `act_bits`, weights ±1, integer add/sub accumulation.
+    pub fn fc_binary(&self, x: &[f32], w: &BinaryMatrix, f: usize) -> MatmulResult {
+        let n = w.rows;
+        let m = w.cols;
+        assert_eq!(x.len(), f * n);
+        let bits = self.params.act_bits.expect("quantized engine needs act_bits");
+        let q = ActQuantizer::calibrate(bits, x);
+        let xq = q.quantize(x);
+        let mut out = vec![0.0f32; f * m];
+        let scale = q.scale * w.scale;
+        // Hot path (§Perf): materialize the signs as ±1 i32 once (LUT-array
+        // analog: the sign bits are resident in BRAM), then stream the
+        // contiguous sign row in the inner loop — branch-free add/sub.
+        let signs: Vec<i32> = w.signs.iter().map(|&s| if s { 1 } else { -1 }).collect();
+        let mut acc_row = vec![0i64; m];
+        for i in 0..f {
+            acc_row.fill(0);
+            let xrow = &xq.q[i * n..(i + 1) * n];
+            for (p, &qv) in xrow.iter().enumerate() {
+                if qv == 0 {
+                    continue;
+                }
+                let qv = qv as i64;
+                let srow = &signs[p * m..(p + 1) * m];
+                for (acc, &s) in acc_row.iter_mut().zip(srow) {
+                    *acc += qv * s as i64;
+                }
+            }
+            for (o, &acc) in out[i * m..(i + 1) * m].iter_mut().zip(&acc_row) {
+                *o = acc as f32 * scale;
+            }
+        }
+        MatmulResult {
+            out,
+            macs: (f * n * m) as u64,
+        }
+    }
+
+    /// Quantized×quantized matmul (attention): `a (f×k) @ b (k×m)`, both
+    /// operands quantized to `act_bits` with their own dynamic scales.
+    pub fn qq_matmul(&self, a: &[f32], b: &[f32], f: usize, k: usize, m: usize) -> MatmulResult {
+        assert_eq!(a.len(), f * k);
+        assert_eq!(b.len(), k * m);
+        let bits = self.params.act_bits.expect("quantized engine needs act_bits");
+        let qa = ActQuantizer::calibrate(bits, a);
+        let qb = ActQuantizer::calibrate(bits, b);
+        let aq = qa.quantize(a);
+        let bq = qb.quantize(b);
+        let scale = qa.scale * qb.scale;
+        let mut out = vec![0.0f32; f * m];
+        // Hot path (§Perf): same i-p-j streaming order as fc_binary.
+        let mut acc_row = vec![0i64; m];
+        for i in 0..f {
+            acc_row.fill(0);
+            let arow = &aq.q[i * k..(i + 1) * k];
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0 {
+                    continue;
+                }
+                let av = av as i64;
+                let brow = &bq.q[p * m..(p + 1) * m];
+                for (acc, &bv) in acc_row.iter_mut().zip(brow) {
+                    *acc += av * bv as i64;
+                }
+            }
+            for (o, &acc) in out[i * m..(i + 1) * m].iter_mut().zip(&acc_row) {
+                *o = acc as f32 * scale;
+            }
+        }
+        MatmulResult {
+            out,
+            macs: (f * k * m) as u64,
+        }
+    }
+
+    /// Reference double-precision matmul (for engine self-tests).
+    pub fn reference(a: &[f32], b: &[f32], f: usize, k: usize, m: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; f * m];
+        for i in 0..f {
+            for j in 0..m {
+                let mut acc = 0.0f64;
+                for p in 0..k {
+                    acc += a[i * k + p] as f64 * b[p * m + j] as f64;
+                }
+                out[i * m + j] = acc as f32;
+            }
+        }
+        out
+    }
+}
+
+/// Convenience: binarize-then-run for tests.
+pub fn binary_matmul_ref(x: &[f32], w: &[f32], f: usize, n: usize, m: usize, bits: u8) -> Vec<f32> {
+    let wb = binarize(w, n, m);
+    let q = ActQuantizer::calibrate(bits, x);
+    let xf = q.fake_quantize(x);
+    ComputeEngine::reference(&xf, &wb.to_dense(), f, n, m)
+}

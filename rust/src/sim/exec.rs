@@ -1,0 +1,266 @@
+//! Whole-model execution on the simulated accelerator.
+//!
+//! Orchestrates the compute engine over the ViT layer sequence exactly as
+//! the board would: matmuls on the fabric, everything else (LayerNorm,
+//! softmax, GELU, scaling, skip-adds) on the host CPU (§5.2). The forward
+//! semantics are mirrored line-for-line by `python/compile/model.py`, so
+//! logits from this executor can be compared against the AOT-compiled JAX
+//! model run through the PJRT runtime.
+
+use crate::hw::Device;
+use crate::model::{VitConfig, VitStructure};
+use crate::perf::{layer_cycles, AcceleratorParams};
+use crate::Cycles;
+
+use super::engine::ComputeEngine;
+use super::timing::{layer_timing, LayerTiming};
+use super::weights::VitWeights;
+
+/// Per-layer execution record.
+#[derive(Debug, Clone)]
+pub struct LayerTrace {
+    pub name: String,
+    pub engine_cycles: Cycles,
+    pub host_cycles: Cycles,
+    pub macs: u64,
+    pub timing: LayerTiming,
+}
+
+/// Whole-frame execution record.
+#[derive(Debug, Clone)]
+pub struct ExecTrace {
+    pub layers: Vec<LayerTrace>,
+    pub total_cycles: Cycles,
+    /// Frame latency in seconds at the device clock.
+    pub latency_s: f64,
+}
+
+impl ExecTrace {
+    pub fn fps(&self) -> f64 {
+        1.0 / self.latency_s
+    }
+}
+
+/// Executes frames on a simulated accelerator instance.
+pub struct ModelExecutor {
+    pub config: VitConfig,
+    pub structure: VitStructure,
+    pub weights: VitWeights,
+    pub engine: ComputeEngine,
+    pub device: Device,
+    quantized: bool,
+}
+
+impl ModelExecutor {
+    pub fn new(
+        weights: VitWeights,
+        act_bits: Option<u8>,
+        params: AcceleratorParams,
+        device: Device,
+    ) -> ModelExecutor {
+        assert_eq!(
+            params.act_bits, act_bits,
+            "accelerator was generated for a different precision"
+        );
+        let config = weights.config.clone();
+        ModelExecutor {
+            structure: config.structure(act_bits),
+            engine: ComputeEngine::new(params, device.clone()),
+            device,
+            config,
+            weights,
+            quantized: act_bits.is_some(),
+        }
+    }
+
+    /// Run one frame (`patches`: row-major `N_p × (3·P²)`); returns logits
+    /// (`num_classes`) and the cycle trace.
+    pub fn run_frame(&self, patches: &[f32]) -> (Vec<f32>, ExecTrace) {
+        let cfg = &self.config;
+        let m = cfg.embed_dim;
+        let f = cfg.tokens();
+        let np = cfg.num_patches();
+        let nh = cfg.num_heads;
+        let mh = cfg.head_dim();
+        let hidden = m * cfg.mlp_ratio;
+        let w = &self.weights;
+
+        let mut traces: Vec<LayerTrace> = Vec::new();
+        let mut li = 0usize; // index into structure.layers
+        let mut record = |idx: &mut usize, macs: u64, executor: &ModelExecutor| {
+            let desc = &executor.structure.layers[*idx];
+            debug_assert_eq!(macs, desc.macs(), "MAC mismatch for {}", desc.name);
+            let timing = layer_timing(desc, &executor.engine.params, &executor.device);
+            let host = layer_cycles(desc, &executor.engine.params, &executor.device).host;
+            let t = LayerTrace {
+                name: desc.name.clone(),
+                engine_cycles: timing.total,
+                host_cycles: host,
+                macs,
+                timing,
+            };
+            *idx += 1;
+            t
+        };
+
+        // ---- patch embedding (always fixed16) + CLS/pos (host) ----------
+        let patch_in = cfg.in_chans * cfg.patch_size * cfg.patch_size;
+        let pe = self.engine.fc_fixed16(patches, &w.patch, np, patch_in, m);
+        traces.push(record(&mut li, pe.macs, self));
+        let mut x = vec![0.0f32; f * m];
+        x[..m].copy_from_slice(&w.cls);
+        x[m..].copy_from_slice(&pe.out);
+        for (xi, pi) in x.iter_mut().zip(&w.pos) {
+            *xi += pi;
+        }
+
+        // ---- encoder layers ----------------------------------------------
+        for lw in &w.layers {
+            // LN1 (host) → QKV.
+            let h = layer_norm(&x, f, m);
+            let qkv = if self.quantized {
+                self.engine.fc_binary(&h, &lw.qkv_bin, f)
+            } else {
+                self.engine.fc_fixed16(&h, &lw.qkv, f, m, 3 * m)
+            };
+            traces.push(record(&mut li, qkv.macs, self));
+
+            // Split heads: q/k/v live at column blocks [0,M), [M,2M), [2M,3M).
+            let scale = 1.0 / (mh as f32).sqrt();
+            let mut attn_concat = vec![0.0f32; f * m];
+            let mut qk_macs = 0u64;
+            let mut sv_macs = 0u64;
+            for hd in 0..nh {
+                let qcol = hd * mh;
+                let kcol = m + hd * mh;
+                let vcol = 2 * m + hd * mh;
+                let slice = |col: usize| -> Vec<f32> {
+                    let mut out = vec![0.0f32; f * mh];
+                    for i in 0..f {
+                        out[i * mh..(i + 1) * mh]
+                            .copy_from_slice(&qkv.out[i * 3 * m + col..i * 3 * m + col + mh]);
+                    }
+                    out
+                };
+                let q = slice(qcol);
+                let k = slice(kcol);
+                let v = slice(vcol);
+                // Kᵀ: mh × f.
+                let mut kt = vec![0.0f32; mh * f];
+                for i in 0..f {
+                    for j in 0..mh {
+                        kt[j * f + i] = k[i * mh + j];
+                    }
+                }
+                // Q·Kᵀ on the engine, then host scaling + softmax.
+                let s_raw = if self.quantized {
+                    self.engine.qq_matmul(&q, &kt, f, mh, f)
+                } else {
+                    self.engine.fc_fixed16(&q, &kt, f, mh, f)
+                };
+                qk_macs += s_raw.macs;
+                let mut s = s_raw.out;
+                for v in s.iter_mut() {
+                    *v *= scale;
+                }
+                softmax_rows(&mut s, f, f);
+                // S·V on the engine.
+                let o = if self.quantized {
+                    self.engine.qq_matmul(&s, &v, f, f, mh)
+                } else {
+                    self.engine.fc_fixed16(&s, &v, f, f, mh)
+                };
+                sv_macs += o.macs;
+                for i in 0..f {
+                    attn_concat[i * m + hd * mh..i * m + (hd + 1) * mh]
+                        .copy_from_slice(&o.out[i * mh..(i + 1) * mh]);
+                }
+            }
+            traces.push(record(&mut li, qk_macs, self));
+            traces.push(record(&mut li, sv_macs, self));
+
+            // Projection + skip.
+            let proj = if self.quantized {
+                self.engine.fc_binary(&attn_concat, &lw.proj_bin, f)
+            } else {
+                self.engine.fc_fixed16(&attn_concat, &lw.proj, f, m, m)
+            };
+            traces.push(record(&mut li, proj.macs, self));
+            for (xi, pi) in x.iter_mut().zip(&proj.out) {
+                *xi += pi;
+            }
+
+            // LN2 → MLP → skip.
+            let h2 = layer_norm(&x, f, m);
+            let m1 = if self.quantized {
+                self.engine.fc_binary(&h2, &lw.mlp1_bin, f)
+            } else {
+                self.engine.fc_fixed16(&h2, &lw.mlp1, f, m, hidden)
+            };
+            traces.push(record(&mut li, m1.macs, self));
+            let g: Vec<f32> = m1.out.iter().map(|&v| gelu(v)).collect();
+            let m2 = if self.quantized {
+                self.engine.fc_binary(&g, &lw.mlp2_bin, f)
+            } else {
+                self.engine.fc_fixed16(&g, &lw.mlp2, f, hidden, m)
+            };
+            traces.push(record(&mut li, m2.macs, self));
+            for (xi, mi) in x.iter_mut().zip(&m2.out) {
+                *xi += mi;
+            }
+        }
+
+        // ---- head: LN(x[0]) @ W_out (always fixed16) ----------------------
+        let cls_repr = layer_norm(&x[..m], 1, m);
+        let logits = self
+            .engine
+            .fc_fixed16(&cls_repr, &w.head, 1, m, cfg.num_classes);
+        traces.push(record(&mut li, logits.macs, self));
+        assert_eq!(li, self.structure.layers.len(), "layer walk drifted");
+
+        let total: Cycles = traces.iter().map(|t| t.engine_cycles + t.host_cycles).sum();
+        let trace = ExecTrace {
+            latency_s: self.device.cycles_to_seconds(total),
+            total_cycles: total,
+            layers: traces,
+        };
+        (logits.out, trace)
+    }
+}
+
+/// Non-affine LayerNorm over the last dimension, eps = 1e-6 (matches
+/// `model.py::layer_norm`).
+pub fn layer_norm(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let mean = row.iter().sum::<f32>() / cols as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / cols as f32;
+        let inv = 1.0 / (var + 1e-6).sqrt();
+        for c in 0..cols {
+            out[r * cols + c] = (row[c] - mean) * inv;
+        }
+    }
+    out
+}
+
+/// Row-wise softmax (host op).
+pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    for r in 0..rows {
+        let row = &mut x[r * cols..(r + 1) * cols];
+        let max = row.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// GELU, tanh approximation (JAX's default `approximate=True`).
+pub fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + ((0.7978845608 * (x + 0.044715 * x * x * x)) as f64).tanh() as f32)
+}

@@ -1,0 +1,37 @@
+//! Cycle-level, functional simulator of the generated ViT accelerator
+//! (paper Figs. 3–4 — our substitute for the physical ZCU102, see
+//! DESIGN.md §Substitutions).
+//!
+//! Two concerns, deliberately coupled the way the RTL couples them:
+//!
+//! * **Function** — [`ComputeEngine`] executes each layer's matrix
+//!   multiplication through the *actual* tiled datapaths: the 16-bit
+//!   fixed-point DSP path for unquantized layers and the integer
+//!   add/sub path (binary weights ⇒ sign-flips) for quantized ones,
+//!   with real data packing on the simulated AXI transfers. Numerics are
+//!   faithful to what the emitted HLS would compute, and are cross-checked
+//!   against the AOT-compiled JAX model via the PJRT runtime
+//!   (`rust/tests/sim_vs_runtime.rs`).
+//! * **Timing** — [`layer_timing`] walks the same tile schedule and
+//!   advances an event timeline (load / compute / store with double
+//!   buffering), giving per-layer cycle counts that the `sim_vs_model`
+//!   bench compares against the analytical Eqs. 7–11 (they agree closely
+//!   but not exactly — the timeline models pipeline fill/drain that the
+//!   closed form rounds).
+//!
+//! [`ModelExecutor`] runs a whole ViT through the engine, handling the
+//! host-CPU ops (LayerNorm, softmax, GELU, skip-adds — §5.2) exactly like
+//! the embedded ARM host would, and returns logits + a cycle trace.
+
+mod engine;
+mod exec;
+mod timing;
+mod weights;
+
+pub use engine::{ComputeEngine, MatmulResult};
+pub use exec::{ExecTrace, LayerTrace, ModelExecutor};
+pub use timing::{layer_timing, model_timing, LayerTiming};
+pub use weights::{generate_weights, LayerWeights, VitWeights};
+
+#[cfg(test)]
+mod tests;

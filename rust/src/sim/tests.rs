@@ -1,0 +1,223 @@
+use crate::hw::zcu102;
+use crate::model::{deit_base, deit_tiny, VitConfig};
+use crate::perf::{model_cycles, AcceleratorParams};
+use crate::quant::binarize;
+
+use super::engine::binary_matmul_ref;
+use super::timing::model_timing;
+use super::*;
+
+/// A ViT small enough for exhaustive functional simulation.
+fn micro_vit() -> VitConfig {
+    VitConfig {
+        name: "micro".into(),
+        image_size: 32,
+        patch_size: 8,
+        in_chans: 3,
+        embed_dim: 32,
+        depth: 2,
+        num_heads: 4,
+        mlp_ratio: 4,
+        num_classes: 10,
+    }
+}
+
+fn micro_params(bits: Option<u8>) -> AcceleratorParams {
+    match bits {
+        None => AcceleratorParams::baseline(16, 2, 4, 4),
+        Some(b) => {
+            let g_q = AcceleratorParams::g_q_for(64, b);
+            AcceleratorParams {
+                t_m: 16,
+                t_n: 2,
+                t_m_q: 16,
+                t_n_q: 2 * g_q / 4,
+                g: 4,
+                g_q,
+                p_h: 4,
+                act_bits: Some(b),
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_fixed16_matches_reference() {
+    let e = ComputeEngine::new(micro_params(None), zcu102());
+    let f = 5;
+    let n = 16;
+    let m = 8;
+    let mut rng = crate::util::rng::SplitMix64::new(3);
+    let x: Vec<f32> = (0..f * n).map(|_| rng.next_f32_range(-2.0, 2.0)).collect();
+    let w: Vec<f32> = (0..n * m).map(|_| rng.next_f32_range(-1.0, 1.0)).collect();
+    let got = e.fc_fixed16(&x, &w, f, n, m);
+    let want = ComputeEngine::reference(&x, &w, f, n, m);
+    for (g, r) in got.out.iter().zip(&want) {
+        assert!((g - r).abs() < 0.05, "{g} vs {r}");
+    }
+    assert_eq!(got.macs, (f * n * m) as u64);
+}
+
+#[test]
+fn engine_binary_matches_fake_quant_reference() {
+    let e = ComputeEngine::new(micro_params(Some(8)), zcu102());
+    let f = 4;
+    let n = 24;
+    let m = 6;
+    let mut rng = crate::util::rng::SplitMix64::new(4);
+    let x: Vec<f32> = (0..f * n).map(|_| rng.next_f32_range(-1.5, 1.5)).collect();
+    let w: Vec<f32> = (0..n * m).map(|_| rng.next_f32_range(-0.2, 0.2)).collect();
+    let wb = binarize(&w, n, m);
+    let got = e.fc_binary(&x, &wb, f);
+    let want = binary_matmul_ref(&x, &w, f, n, m, 8);
+    for (g, r) in got.out.iter().zip(&want) {
+        assert!((g - r).abs() < 1e-3, "{g} vs {r}");
+    }
+}
+
+#[test]
+fn executor_runs_micro_vit_all_precisions() {
+    let cfg = micro_vit();
+    let w = generate_weights(&cfg, 11);
+    let patches = w.synthetic_patches(0);
+    for bits in [None, Some(8), Some(6), Some(4)] {
+        let exec = ModelExecutor::new(w.clone(), bits, micro_params(bits), zcu102());
+        let (logits, trace) = exec.run_frame(&patches);
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        assert!(trace.total_cycles > 0);
+        assert_eq!(trace.layers.len(), 1 + 6 * 2 + 1);
+        // Logits must differ across precisions but not wildly.
+        assert!(logits.iter().any(|&v| v != 0.0));
+    }
+}
+
+#[test]
+fn quantized_logits_approach_fp_logits_with_more_bits() {
+    let cfg = micro_vit();
+    let w = generate_weights(&cfg, 5);
+    let patches = w.synthetic_patches(1);
+    let fp = ModelExecutor::new(w.clone(), None, micro_params(None), zcu102());
+    let (logits_fp, _) = fp.run_frame(&patches);
+    // Binary weights change the function substantially (this is untrained
+    // — Table 3 shows even trained models drop); what must hold is that
+    // *activation* precision converges: W1A12 closer to W1A16 than W1A4 is.
+    let run = |bits: u8| {
+        let e = ModelExecutor::new(w.clone(), Some(bits), micro_params(Some(bits)), zcu102());
+        e.run_frame(&patches).0
+    };
+    let l16 = run(16);
+    let dist = |a: &[f32], b: &[f32]| -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f32>().sqrt()
+    };
+    let d12 = dist(&run(12), &l16);
+    let d4 = dist(&run(4), &l16);
+    assert!(
+        d12 < d4,
+        "12-bit ({d12}) should be closer to 16-bit than 4-bit ({d4})"
+    );
+    // And the fp logits are finite & distinct from quantized ones.
+    assert!(dist(&logits_fp, &l16) > 0.0);
+}
+
+#[test]
+fn timeline_agrees_with_analytical_model() {
+    // The event timeline and Eqs. 7–11 must agree within 15% on the
+    // engine cycles for the real designs (they model the same schedule;
+    // differences are ragged-tile and drain effects).
+    let dev = zcu102();
+    for bits in [None, Some(8), Some(6)] {
+        let s = deit_base().structure(bits);
+        let params = match bits {
+            None => AcceleratorParams::baseline(96, 4, 4, 4),
+            Some(b) => {
+                let g_q = AcceleratorParams::g_q_for(64, b);
+                AcceleratorParams {
+                    t_m: 16,
+                    t_n: 4,
+                    t_m_q: 160,
+                    t_n_q: 4 * g_q / 4,
+                    g: 4,
+                    g_q,
+                    p_h: 4,
+                    act_bits: bits,
+                }
+            }
+        };
+        let (analytic, per_layer) = model_cycles(&s, &params, &dev);
+        let host: u64 = per_layer.iter().map(|c| c.host).sum();
+        let analytic_engine = analytic - host;
+        let (timeline, _) = model_timing(&s, &params, &dev);
+        let ratio = timeline as f64 / analytic_engine as f64;
+        assert!(
+            (0.85..=1.15).contains(&ratio),
+            "bits={bits:?}: timeline {timeline} vs analytic {analytic_engine} (ratio {ratio:.3})"
+        );
+    }
+}
+
+#[test]
+fn trace_macs_match_structure() {
+    let cfg = micro_vit();
+    let w = generate_weights(&cfg, 2);
+    let exec = ModelExecutor::new(w.clone(), Some(8), micro_params(Some(8)), zcu102());
+    let (_, trace) = exec.run_frame(&w.synthetic_patches(3));
+    let expected = cfg.structure(Some(8)).total_macs();
+    let got: u64 = trace.layers.iter().map(|l| l.macs).sum();
+    assert_eq!(got, expected);
+}
+
+#[test]
+fn deterministic_execution() {
+    let cfg = micro_vit();
+    let w = generate_weights(&cfg, 9);
+    let p = w.synthetic_patches(7);
+    let exec = ModelExecutor::new(w.clone(), Some(6), micro_params(Some(6)), zcu102());
+    let (a, ta) = exec.run_frame(&p);
+    let (b, tb) = exec.run_frame(&p);
+    assert_eq!(a, b);
+    assert_eq!(ta.total_cycles, tb.total_cycles);
+}
+
+#[test]
+fn softmax_and_layernorm_invariants() {
+    let mut s = vec![1.0f32, 2.0, 3.0, 4.0, -1.0, 0.0, 1.0, 2.0];
+    super::exec::softmax_rows(&mut s, 2, 4);
+    for r in 0..2 {
+        let sum: f32 = s[r * 4..(r + 1) * 4].iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+    }
+    let x = vec![1.0f32, 2.0, 3.0, 4.0];
+    let ln = super::exec::layer_norm(&x, 1, 4);
+    let mean: f32 = ln.iter().sum::<f32>() / 4.0;
+    let var: f32 = ln.iter().map(|v| v * v).sum::<f32>() / 4.0;
+    assert!(mean.abs() < 1e-6);
+    assert!((var - 1.0).abs() < 1e-3);
+}
+
+#[test]
+fn tiny_model_timing_scales_with_precision() {
+    // On the simulated board a W1A6 executor must finish frames faster
+    // than W1A8, which must beat the fixed16 baseline (Table 5 trend at
+    // micro scale).
+    let cfg = deit_tiny();
+    let dev = zcu102();
+    let base = crate::compiler::optimize_baseline(&cfg.structure(None), &dev);
+    let mut cycles_prev = u64::MAX;
+    for bits in [None, Some(8), Some(6)] {
+        let params = match bits {
+            None => base,
+            Some(b) => {
+                crate::compiler::optimize_for_bits(&cfg.structure(Some(b)), &base, &dev, b)
+                    .unwrap()
+                    .params
+            }
+        };
+        let (cycles, _) = model_timing(&cfg.structure(bits), &params, &dev);
+        assert!(
+            cycles < cycles_prev,
+            "bits={bits:?} cycles={cycles} prev={cycles_prev}"
+        );
+        cycles_prev = cycles;
+    }
+}

@@ -1,0 +1,128 @@
+//! Event-timeline cycle accounting for one layer's tile schedule.
+//!
+//! Walks the exact loop structure of the generated accelerator (Fig. 3c):
+//! for each output tile, the input/weight loads of input-tile `k+1`
+//! overlap the compute of tile `k` (double buffering), and the store of
+//! output tile `j` overlaps the accumulation of tile `j+1`. The analytical
+//! Eqs. 7–11 are the closed form of this walk under "all tiles are full";
+//! the timeline also models the ragged last tiles, so the two agree within
+//! a few percent (quantified by `benches/sim_vs_model.rs`).
+
+use crate::hw::Device;
+use crate::model::LayerDesc;
+use crate::perf::AcceleratorParams;
+use crate::Cycles;
+
+#[inline]
+fn cdiv(a: u64, b: u64) -> u64 {
+    a.div_ceil(b)
+}
+
+/// Cycle breakdown from the timeline walk.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerTiming {
+    pub total: Cycles,
+    /// Cycles the engine spent with loads as the critical path.
+    pub load_bound: Cycles,
+    /// Cycles with compute as the critical path.
+    pub compute_bound: Cycles,
+    /// Cycles with output stores as the critical path.
+    pub store_bound: Cycles,
+    pub out_tiles: u64,
+    pub in_tiles: u64,
+}
+
+/// Walk the tile schedule of `layer` under `params` and return the cycle
+/// accounting.
+pub fn layer_timing(layer: &LayerDesc, params: &AcceleratorParams, device: &Device) -> LayerTiming {
+    let alpha = layer.alpha();
+    let beta = layer.beta();
+    let gamma = layer.gamma() as u64;
+    let n_h = layer.heads as u64;
+    let f = layer.f as u64;
+    let m = layer.m as u64;
+    let n = layer.n as u64;
+
+    let (t_n_eff, g_in) = if alpha {
+        (params.t_n_q, params.g_q)
+    } else {
+        (params.t_n, params.g)
+    };
+    let t_m_eff = if alpha { params.t_m_q } else { params.t_m };
+    let g_out = if beta { params.g_q } else { params.g };
+
+    let in_tiles = cdiv(n, n_h * t_n_eff);
+    let out_tiles = cdiv(m, t_m_eff);
+    let binary_weights = matches!(layer.weights, crate::model::Precision::Binary);
+
+    let mut t = LayerTiming {
+        in_tiles,
+        out_tiles,
+        ..Default::default()
+    };
+
+    // Per-tile-group compute latency (Eq. 8): F tokens stream through the
+    // array, one head-group per pass.
+    let j_cmpt = f * cdiv(n_h, params.p_h);
+
+    let mut now: Cycles = 0;
+    let mut store_free_at: Cycles = 0; // when the store unit finishes the previous output tile
+
+    for ot in 0..out_tiles {
+        let tile_m = (m - ot * t_m_eff).min(t_m_eff);
+        // Accumulate over input tiles with double-buffered loads.
+        let mut compute_done = now;
+        for it in 0..in_tiles {
+            let tile_n = (n - it * (n_h * t_n_eff)).min(n_h * t_n_eff);
+            let rows = cdiv(tile_n, n_h); // per-head input channels this tile
+            let j_in = n_h * cdiv(rows, g_in) * cdiv(f, device.axi_ports_in);
+            let j_wgt = if binary_weights {
+                n_h * cdiv(rows * tile_m, u64::from(device.axi_port_bits) * device.axi_ports_wgt)
+            } else {
+                n_h * cdiv(rows, g_in) * cdiv(tile_m, device.axi_ports_wgt)
+            };
+            let load = j_in.max(j_wgt);
+            // Double buffering: the load of tile `it` ran during compute of
+            // tile `it-1`; the engine stalls on whichever is longer.
+            let step = load.max(j_cmpt);
+            if load >= j_cmpt {
+                t.load_bound += step;
+            } else {
+                t.compute_bound += step;
+            }
+            compute_done += step;
+            let _ = it;
+        }
+        // Pipeline drain of the last tile group.
+        compute_done += j_cmpt;
+        t.compute_bound += j_cmpt;
+
+        // Store: (1+γ) head-outputs, packed g_out per word; can only start
+        // once compute is done and the store unit is free.
+        let j_out = (1 + gamma) * cdiv(tile_m, g_out) * cdiv(f, device.axi_ports_out);
+        let store_start = compute_done.max(store_free_at);
+        if store_free_at > compute_done {
+            // The engine had to wait for the store unit — store-bound time.
+            t.store_bound += store_free_at - compute_done;
+        }
+        store_free_at = store_start + j_out;
+        now = store_start; // next tile's compute may proceed under the store
+    }
+
+    t.total = store_free_at;
+    t
+}
+
+/// Timeline walk over a whole structure.
+pub fn model_timing(
+    structure: &crate::model::VitStructure,
+    params: &AcceleratorParams,
+    device: &Device,
+) -> (Cycles, Vec<LayerTiming>) {
+    let per: Vec<LayerTiming> = structure
+        .layers
+        .iter()
+        .map(|l| layer_timing(l, params, device))
+        .collect();
+    (per.iter().map(|t| t.total).sum(), per)
+}

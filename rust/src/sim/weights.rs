@@ -1,0 +1,154 @@
+//! Deterministic ViT weight generation.
+//!
+//! Weights are drawn from a seeded [`SplitMix64`] stream in a fixed order,
+//! mirrored exactly by `python/compile/prng.py` + `model.py`, so the Rust
+//! simulator and the AOT-compiled JAX model compute over *identical*
+//! parameters — the precondition for the sim-vs-runtime numerical
+//! cross-check. Biases are zero and LayerNorms are non-affine (γ=1, β=0)
+//! on both sides to keep the contract small.
+
+use crate::model::VitConfig;
+use crate::quant::{binarize, BinaryMatrix};
+use crate::util::rng::SplitMix64;
+
+/// Per-encoder-layer weights (real-valued masters + binarized views).
+#[derive(Debug, Clone)]
+pub struct LayerWeights {
+    /// `M × 3M` (row-major, input-channel major like all matrices here).
+    pub qkv: Vec<f32>,
+    /// `M × M`.
+    pub proj: Vec<f32>,
+    /// `M × 4M`.
+    pub mlp1: Vec<f32>,
+    /// `4M × M`.
+    pub mlp2: Vec<f32>,
+    pub qkv_bin: BinaryMatrix,
+    pub proj_bin: BinaryMatrix,
+    pub mlp1_bin: BinaryMatrix,
+    pub mlp2_bin: BinaryMatrix,
+}
+
+/// All model parameters.
+#[derive(Debug, Clone)]
+pub struct VitWeights {
+    pub config: VitConfig,
+    pub seed: u64,
+    /// Patch-embedding FC: `(3P²) × M`.
+    pub patch: Vec<f32>,
+    /// CLS token `M`.
+    pub cls: Vec<f32>,
+    /// Positional embedding `F × M`.
+    pub pos: Vec<f32>,
+    pub layers: Vec<LayerWeights>,
+    /// Classifier head `M × C`.
+    pub head: Vec<f32>,
+}
+
+/// Draw `len` values from `N(0, std²)`.
+fn normal_vec(rng: &mut SplitMix64, len: usize, std: f32) -> Vec<f32> {
+    (0..len).map(|_| rng.next_normal() as f32 * std).collect()
+}
+
+/// Generate the full parameter set for `config` from `seed`.
+///
+/// Draw order (must match `python/compile/model.py::init_params`):
+/// patch, cls, pos, then per layer (qkv, proj, mlp1, mlp2), then head.
+/// Std 0.02 everywhere (the ViT trunc-normal init, untruncated).
+pub fn generate_weights(config: &VitConfig, seed: u64) -> VitWeights {
+    let mut rng = SplitMix64::new(seed);
+    let m = config.embed_dim;
+    let f = config.tokens();
+    let patch_in = config.in_chans * config.patch_size * config.patch_size;
+    let hidden = m * config.mlp_ratio;
+    let std = 0.02;
+
+    let patch = normal_vec(&mut rng, patch_in * m, std);
+    let cls = normal_vec(&mut rng, m, std);
+    let pos = normal_vec(&mut rng, f * m, std);
+    let mut layers = Vec::with_capacity(config.depth);
+    for _ in 0..config.depth {
+        let qkv = normal_vec(&mut rng, m * 3 * m, std);
+        let proj = normal_vec(&mut rng, m * m, std);
+        let mlp1 = normal_vec(&mut rng, m * hidden, std);
+        let mlp2 = normal_vec(&mut rng, hidden * m, std);
+        layers.push(LayerWeights {
+            qkv_bin: binarize(&qkv, m, 3 * m),
+            proj_bin: binarize(&proj, m, m),
+            mlp1_bin: binarize(&mlp1, m, hidden),
+            mlp2_bin: binarize(&mlp2, hidden, m),
+            qkv,
+            proj,
+            mlp1,
+            mlp2,
+        });
+    }
+    let head = normal_vec(&mut rng, m * config.num_classes, std);
+
+    VitWeights {
+        config: config.clone(),
+        seed,
+        patch,
+        cls,
+        pos,
+        layers,
+        head,
+    }
+}
+
+impl VitWeights {
+    /// A deterministic synthetic input patch matrix `N_p × (3P²)` (the
+    /// Fig. 4 flattened-patches view), drawn from the same PRNG family
+    /// with an input-specific stream.
+    pub fn synthetic_patches(&self, frame_id: u64) -> Vec<f32> {
+        let np = self.config.num_patches();
+        let patch_in = self.config.in_chans * self.config.patch_size * self.config.patch_size;
+        let mut rng = SplitMix64::new(self.seed ^ 0x5EED_F00D ^ frame_id.wrapping_mul(0x9E37));
+        (0..np * patch_in)
+            .map(|_| rng.next_f32_range(-1.0, 1.0))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::deit_tiny;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let mut small = deit_tiny();
+        small.depth = 2;
+        let a = generate_weights(&small, 1);
+        let b = generate_weights(&small, 1);
+        let c = generate_weights(&small, 2);
+        assert_eq!(a.patch, b.patch);
+        assert_eq!(a.layers[1].mlp2, b.layers[1].mlp2);
+        assert_ne!(a.patch, c.patch);
+    }
+
+    #[test]
+    fn shapes() {
+        let mut cfg = deit_tiny();
+        cfg.depth = 1;
+        let w = generate_weights(&cfg, 7);
+        assert_eq!(w.patch.len(), 768 * 192);
+        assert_eq!(w.pos.len(), 197 * 192);
+        assert_eq!(w.layers[0].qkv.len(), 192 * 576);
+        assert_eq!(w.head.len(), 192 * 1000);
+        assert_eq!(w.layers[0].qkv_bin.rows, 192);
+        assert_eq!(w.layers[0].qkv_bin.cols, 576);
+    }
+
+    #[test]
+    fn known_answer_first_weight() {
+        // Pinned: python/compile/prng.py asserts the same first draw.
+        let cfg = deit_tiny();
+        let w = generate_weights(&cfg, 42);
+        // First normal from SplitMix64(42) via Box–Muller, × 0.02.
+        let expected = {
+            let mut r = crate::util::rng::SplitMix64::new(42);
+            r.next_normal() as f32 * 0.02
+        };
+        assert_eq!(w.patch[0], expected);
+    }
+}

@@ -1,0 +1,114 @@
+//! In-tree micro/macro benchmark harness (offline build: no criterion).
+//!
+//! Every `benches/*.rs` target uses [`Bench`] to time closures with warmup,
+//! report mean/p50/p99, and emit machine-readable JSON next to the
+//! human-readable table so EXPERIMENTS.md can quote exact numbers.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// One timed benchmark run.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Bench harness: fixed warmup, then either a fixed iteration count or a
+/// time budget.
+pub struct Bench {
+    pub warmup_iters: u64,
+    pub min_iters: u64,
+    pub max_iters: u64,
+    pub budget: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            budget: Duration::from_secs(2),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        Bench::default()
+    }
+
+    /// Quick configuration for expensive (multi-ms) benchmarks.
+    pub fn heavy() -> Bench {
+        Bench {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 50,
+            budget: Duration::from_secs(3),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, recording the result under `name`. Returns the result.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        let mut iters = 0u64;
+        while iters < self.min_iters
+            || (start.elapsed() < self.budget && iters < self.max_iters)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+            iters += 1;
+        }
+        samples.sort();
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let pick = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+        let result = BenchResult {
+            name: name.to_string(),
+            iters,
+            mean,
+            p50: pick(0.5),
+            p99: pick(0.99),
+            min: samples[0],
+        };
+        println!(
+            "  {:<44} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p99  ({} iters)",
+            result.name, result.mean, result.p50, result.p99, result.iters
+        );
+        self.results.push(result.clone());
+        result
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Format a throughput-style derived metric line.
+pub fn report_metric(name: &str, value: f64, unit: &str) {
+    println!("  {name:<44} {value:>12.3} {unit}");
+}
+
+/// Summarize a vector of f64 samples (for non-time metrics).
+pub fn summarize_f64(samples: &[f64]) -> Summary {
+    Summary::from(samples)
+}

@@ -1,0 +1,103 @@
+//! Tiny argv parser (offline build: no clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args; the
+//! `vaqf` binary builds its subcommand dispatch on top.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals in order + `--key [value]` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str) -> anyhow::Result<Option<f64>> {
+        self.get(key)
+            .map(|v| v.parse::<f64>().map_err(|e| anyhow::anyhow!("--{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, key: &str) -> anyhow::Result<Option<u64>> {
+        self.get(key)
+            .map(|v| v.parse::<u64>().map_err(|e| anyhow::anyhow!("--{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        // Convention: positionals before bare flags (a bare `--flag` eats a
+        // following non-dashed token as its value, so flags go last or use
+        // `--key=value`).
+        let a = argv("compile out.json --model deit-base --target-fps=30 --verbose");
+        assert_eq!(a.positional, vec!["compile", "out.json"]);
+        assert_eq!(a.get("model"), Some("deit-base"));
+        assert_eq!(a.get("target-fps"), Some("30"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = argv("serve --fps 24 --sim");
+        assert_eq!(a.get_f64("fps").unwrap(), Some(24.0));
+        assert!(a.has_flag("sim"));
+    }
+
+    #[test]
+    fn numeric_errors_are_reported() {
+        let a = argv("--fps abc");
+        assert!(a.get_f64("fps").is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Self-contained utilities (the build is fully offline, so anything not in
+//! the xla crate's vendored dependency closure is implemented here).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,126 @@
+//! Small statistics helpers shared by benches and the coordinator metrics.
+
+/// Five-number-ish summary of a sample set.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            };
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = sorted.len();
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let q = |p: f64| sorted[(((n - 1) as f64) * p) as usize];
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: q(0.5),
+            p95: q(0.95),
+            p99: q(0.99),
+            max: sorted[n - 1],
+        }
+    }
+}
+
+/// Online histogram with fixed log-spaced buckets (latencies in seconds).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// Bucket upper bounds in seconds.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    samples: Vec<f64>,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        // 100 µs .. ~100 s, quarter-decade steps.
+        let mut bounds = Vec::new();
+        let mut b = 1e-4;
+        while b < 100.0 {
+            bounds.push(b);
+            b *= 1.7782794; // 10^(1/4)
+        }
+        let n = bounds.len();
+        LatencyHistogram {
+            bounds,
+            counts: vec![0; n + 1],
+            samples: Vec::new(),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, seconds: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| seconds <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.samples.push(seconds);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn summary(&self) -> Summary {
+        Summary::from(&self.samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_known_data() {
+        let s = Summary::from(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn empty_summary_is_zeros() {
+        let s = Summary::from(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let mut h = LatencyHistogram::default();
+        for v in [0.001, 0.002, 0.5, 10.0] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.summary().max - 10.0).abs() < 1e-12);
+    }
+}

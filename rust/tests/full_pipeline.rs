@@ -1,0 +1,129 @@
+//! Integration: the whole co-design pipeline without artifacts —
+//! compile → codegen → config round-trip → simulator instantiation →
+//! serving — across models and devices.
+
+use vaqf::compiler::{compile, emit_config_json, emit_hls_cpp, CompileRequest};
+use vaqf::config::{load_target, target_from_json};
+use vaqf::coordinator::{serve, FrameSource, ServeConfig};
+use vaqf::hw::{zcu102, zcu111};
+use vaqf::model::{deit_small, VitConfig};
+use vaqf::runtime::SimBackend;
+use vaqf::sim::{generate_weights, ModelExecutor};
+use vaqf::util::json::Json;
+
+#[test]
+fn compile_codegen_simulate_roundtrip() {
+    // 1. Compile for a mid target.
+    let req = CompileRequest {
+        model: deit_small(),
+        device: zcu102(),
+        target_fps: 30.0,
+    };
+    let out = compile(&req).expect("deit-small @30FPS must be feasible on zcu102");
+    assert!(out.design.summary.fps >= 30.0);
+
+    // 2. Codegen both artifacts.
+    let s = req.model.structure(Some(out.act_bits));
+    let cpp = emit_hls_cpp(&out, &s, &req.device);
+    assert!(cpp.contains("vit_layer") && cpp.contains("compute_engine"));
+    let cfg_json = emit_config_json(&out, &req.device);
+
+    // 3. Round-trip the config through text and rebuild the params.
+    let text = cfg_json.pretty();
+    let parsed = Json::parse(&text).unwrap();
+    let params = vaqf::compiler::params_from_json(&parsed).unwrap();
+    assert_eq!(params, out.design.params);
+
+    // 4. Instantiate a (micro) simulator with a same-precision design and
+    //    serve frames through it — the accelerator the codegen describes.
+    let micro = VitConfig {
+        name: "micro".into(),
+        image_size: 32,
+        patch_size: 8,
+        in_chans: 3,
+        embed_dim: 32,
+        depth: 1,
+        num_heads: 4,
+        mlp_ratio: 4,
+        num_classes: 10,
+    };
+    let weights = generate_weights(&micro, 3);
+    let g_q = vaqf::perf::AcceleratorParams::g_q_for(64, out.act_bits);
+    let sim_params = vaqf::perf::AcceleratorParams {
+        t_m: 16,
+        t_n: 2,
+        t_m_q: 16,
+        t_n_q: (2 * g_q / 4).max(1),
+        g: 4,
+        g_q,
+        p_h: 4,
+        act_bits: Some(out.act_bits),
+    };
+    let exec = ModelExecutor::new(weights, Some(out.act_bits), sim_params, zcu102());
+    let serve_cfg = ServeConfig {
+        offered_fps: 300.0,
+        frames: 12,
+        queue_depth: 12,
+        source_seed: 5,
+    };
+    let source = FrameSource::new(micro, 5, Some(serve_cfg.offered_fps));
+    let report = serve(
+        source,
+        Box::new(SimBackend {
+            executor: exec,
+            realtime: false,
+        }),
+        &serve_cfg,
+    )
+    .unwrap();
+    assert_eq!(report.completed, 12);
+}
+
+#[test]
+fn config_file_to_compile() {
+    let doc = r#"{"model": "deit-tiny", "device": "zcu111", "target_fps": 60}"#;
+    let t = target_from_json(&Json::parse(doc).unwrap()).unwrap();
+    let out = compile(&CompileRequest {
+        model: t.model,
+        device: t.device,
+        target_fps: t.target_fps,
+    })
+    .expect("deit-tiny @60FPS on zcu111");
+    assert!(out.design.summary.fps >= 60.0);
+}
+
+#[test]
+fn config_file_loading_from_disk() {
+    let dir = std::env::temp_dir().join("vaqf_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("target.json");
+    std::fs::write(
+        &path,
+        r#"{"model": "deit-small", "device": "zcu102", "target_fps": 12}"#,
+    )
+    .unwrap();
+    let t = load_target(&path).unwrap();
+    assert_eq!(t.model.name, "deit-small");
+    assert_eq!(t.target_fps, 12.0);
+}
+
+#[test]
+fn cross_device_feasibility_is_consistent() {
+    // Anything feasible on zcu102 must be feasible on the larger zcu111
+    // at the same target.
+    for fps in [10.0, 24.0] {
+        let on102 = compile(&CompileRequest {
+            model: deit_small(),
+            device: zcu102(),
+            target_fps: fps,
+        });
+        let on111 = compile(&CompileRequest {
+            model: deit_small(),
+            device: zcu111(),
+            target_fps: fps,
+        });
+        if on102.is_ok() {
+            assert!(on111.is_ok(), "zcu111 ⊇ zcu102 at {fps} FPS");
+        }
+    }
+}
