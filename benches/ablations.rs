@@ -1,6 +1,9 @@
 //! Bench: design-choice ablations (DESIGN.md §3) — quantify each §5
 //! optimization technique by disabling it in the latency model and
-//! re-measuring the three Table-5 designs.
+//! re-measuring the three Table-5 designs, plus the *measured* software
+//! analog: scalar vs bit-packed simulator kernels per quantized design
+//! (the same §5.3.1 packing idea, observed as host wall-clock instead of
+//! modeled cycles). Results land in `BENCH_ablations.json`.
 //!
 //! Run with: `cargo bench --bench ablations`
 
@@ -8,7 +11,10 @@ use vaqf::compiler::{optimize_baseline, optimize_for_bits};
 use vaqf::hw::zcu102;
 use vaqf::model::deit_base;
 use vaqf::perf::{model_cycles_opt, AcceleratorParams, ModelOptions};
-use vaqf::util::bench::report_metric;
+use vaqf::quant::binarize;
+use vaqf::sim::{Backend, ComputeEngine};
+use vaqf::util::bench::{bench_output_path, Bench, JsonReport};
+use vaqf::util::rng::SplitMix64;
 
 fn main() {
     let dev = zcu102();
@@ -97,6 +103,7 @@ fn main() {
     println!("paper argues.");
 
     // Contribution summary for EXPERIMENTS.md.
+    let mut report = JsonReport::new("ablations", "full");
     println!();
     for (i, (label, bits, params)) in designs.iter().enumerate() {
         let s = model.structure(*bits);
@@ -111,11 +118,49 @@ fn main() {
         )
         .0;
         let full = model_cycles_opt(&s, params, &dev, &ModelOptions::default()).0;
-        report_metric(
+        report.metric(
             &format!("{label}: packing speedup contribution"),
             no_pack as f64 / full as f64,
             "x",
         );
         let _ = i;
+    }
+
+    // Measured analog on the simulator itself: the same bit-packing idea,
+    // observed as host wall-clock. One DeiT-base qkv layer (197×768 @
+    // 768×2304) per quantized design, scalar kernels vs packed.
+    println!("\n== measured simulator kernels: scalar vs packed per design ==\n");
+    let mut bench = Bench::heavy();
+    let mut rng = SplitMix64::new(42);
+    let (f, n, m) = (197usize, 768usize, 2304usize);
+    let x: Vec<f32> = (0..f * n).map(|_| rng.next_f32_range(-1.5, 1.5)).collect();
+    let w: Vec<f32> = (0..n * m).map(|_| rng.next_f32_range(-0.2, 0.2)).collect();
+    let wb = binarize(&w, n, m);
+    for (label, bits, params) in &designs {
+        if bits.is_none() {
+            continue; // W32A32 has no binary-weight datapath
+        }
+        let scalar = ComputeEngine::new(*params, dev.clone())
+            .with_backend(Backend::Scalar)
+            .with_threads(1);
+        let packed = ComputeEngine::new(*params, dev.clone())
+            .with_backend(Backend::Packed)
+            .with_threads(1);
+        let rs = bench.run(&format!("{label} fc_binary qkv scalar"), || {
+            let _ = scalar.fc_binary(&x, &wb, f);
+        });
+        report.result(&rs);
+        let rp = bench.run(&format!("{label} fc_binary qkv packed"), || {
+            let _ = packed.fc_binary(&x, &wb, f);
+        });
+        report.result(&rp);
+        report.metric(
+            &format!("{label}: measured packed kernel speedup"),
+            rs.mean_s() / rp.mean_s(),
+            "x",
+        );
+    }
+    if let Err(e) = report.write(bench_output_path("BENCH_ablations.json")) {
+        eprintln!("could not write BENCH_ablations.json: {e}");
     }
 }

@@ -12,16 +12,23 @@
 //!               "bram18k": 1248, "ff": 460800, "clock_mhz": 200,
 //!               "axi_port_bits": 64, "axi_ports_in": 2,
 //!               "axi_ports_wgt": 2, "axi_ports_out": 2 },
-//!   "target_fps": 20.0
+//!   "target_fps": 20.0,
+//!   "backend": "packed",
+//!   "threads": 8
 //! }
 //! ```
 //!
 //! Missing sections fall back to presets (`deit-base`, `zcu102`).
+//! `backend` selects the simulator's kernel implementation
+//! (`"scalar"` | `"packed"`, default packed — bit-exact either way) and
+//! `threads` its row-parallel fan-out (`0` ⇒ `VAQF_THREADS` /
+//! available parallelism).
 
 use std::path::Path;
 
 use crate::hw::{Device, DevicePreset, ResourceBudget};
 use crate::model::{VitConfig, VitPreset};
+use crate::sim::Backend;
 use crate::util::json::Json;
 
 /// A fully-resolved compile target.
@@ -30,6 +37,10 @@ pub struct Target {
     pub model: VitConfig,
     pub device: Device,
     pub target_fps: f64,
+    /// Simulator kernel backend (throughput choice, never results).
+    pub backend: Backend,
+    /// Simulator row-parallel worker count (`0` ⇒ environment default).
+    pub threads: usize,
 }
 
 impl Default for Target {
@@ -38,6 +49,8 @@ impl Default for Target {
             model: VitPreset::DeiTBase.config(),
             device: DevicePreset::Zcu102.device(),
             target_fps: 24.0,
+            backend: Backend::from_env(),
+            threads: 0,
         }
     }
 }
@@ -131,6 +144,13 @@ pub fn target_from_json(j: &Json) -> anyhow::Result<Target> {
     if let Some(f) = j.get("target_fps").and_then(Json::as_f64) {
         t.target_fps = f;
     }
+    if let Some(b) = j.get("backend").and_then(Json::as_str) {
+        t.backend = Backend::from_name(b)
+            .ok_or_else(|| anyhow::anyhow!("unknown backend `{b}` (scalar|packed)"))?;
+    }
+    if let Some(n) = j.get("threads").and_then(Json::as_u64) {
+        t.threads = n as usize;
+    }
     Ok(t)
 }
 
@@ -185,5 +205,17 @@ mod tests {
         let t = target_from_json(&Json::parse("{}").unwrap()).unwrap();
         assert_eq!(t.model.name, "deit-base");
         assert_eq!(t.device.name, "zcu102");
+        assert_eq!(t.threads, 0);
+    }
+
+    #[test]
+    fn backend_and_threads_parse() {
+        let t = target_from_json(&Json::parse(r#"{"backend": "scalar", "threads": 4}"#).unwrap())
+            .unwrap();
+        assert_eq!(t.backend, Backend::Scalar);
+        assert_eq!(t.threads, 4);
+        let t = target_from_json(&Json::parse(r#"{"backend": "packed"}"#).unwrap()).unwrap();
+        assert_eq!(t.backend, Backend::Packed);
+        assert!(target_from_json(&Json::parse(r#"{"backend": "simd"}"#).unwrap()).is_err());
     }
 }

@@ -5,9 +5,17 @@
 //! vaqf search   --model deit-base --device zcu102          # sweep 1..=16 bits
 //! vaqf report   --table5 | --table6 [--device zcu102]
 //! vaqf codegen  --model deit-base --target-fps 24 --out accel.cpp
-//! vaqf simulate --bits 8 --frames 3                        # functional micro sim
+//! vaqf simulate --bits 8 --frames 3 [--backend scalar|packed] [--threads N]
+//!               [--config target.json]
 //! vaqf serve    --variant micro_w1a8 --backend sim|pjrt --fps 30 --frames 90
+//!               [--kernels scalar|packed] [--threads N]
 //! ```
+//!
+//! `--backend`/`--kernels scalar|packed` selects the simulator's compute
+//! kernels (bit-exact; packed is the fast default) and `--threads` its
+//! row-parallel fan-out — both also settable via `VAQF_BACKEND` /
+//! `VAQF_THREADS`, or for `simulate` via `--config target.json`
+//! (`config::Target`'s `backend`/`threads`/`model`/`device` fields).
 
 use vaqf::compiler::{
     compile, emit_config_json, emit_hls_cpp, optimize_baseline, optimize_for_bits, render_table5,
@@ -18,7 +26,7 @@ use vaqf::hw::DevicePreset;
 use vaqf::model::{VitConfig, VitPreset};
 use vaqf::perf::AcceleratorParams;
 use vaqf::runtime::{InferenceBackend, InferenceEngine, Manifest, PjrtBackend, SimBackend};
-use vaqf::sim::{generate_weights, ModelExecutor};
+use vaqf::sim::{generate_weights, Backend, ModelExecutor};
 use vaqf::util::cli::Args;
 
 fn model_arg(args: &Args) -> anyhow::Result<VitConfig> {
@@ -187,13 +195,50 @@ fn micro_params(bits: Option<u8>, device: &vaqf::hw::Device) -> AcceleratorParam
     }
 }
 
+/// Parse the simulator kernel options: backend under `key` plus
+/// `--threads` (0 ⇒ environment default).
+fn kernel_opts(args: &Args, key: &str) -> anyhow::Result<(Option<Backend>, usize)> {
+    let backend = args
+        .get(key)
+        .map(|name| {
+            Backend::from_name(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown kernel backend `{name}` (scalar|packed)"))
+        })
+        .transpose()?;
+    let threads = args.get_u64("threads")?.unwrap_or(0) as usize;
+    Ok((backend, threads))
+}
+
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let device = device_arg(args)?;
+    // `--config target.json` supplies model/device/backend/threads
+    // (config::Target); explicit CLI flags override its fields.
+    let target = args.get("config").map(vaqf::config::load_target).transpose()?;
+    let device = match (&target, args.get("device")) {
+        (Some(t), None) => t.device.clone(),
+        _ => device_arg(args)?,
+    };
+    let cfg = match &target {
+        Some(t) => t.model.clone(),
+        None => micro_config(),
+    };
     let bits = args.get_u64("bits")?.map(|b| b as u8);
     let frames = args.get_u64("frames")?.unwrap_or(3);
-    let cfg = micro_config();
+    let (mut backend, mut threads) = kernel_opts(args, "backend")?;
+    if let Some(t) = &target {
+        if backend.is_none() {
+            backend = Some(t.backend);
+        }
+        if threads == 0 {
+            threads = t.threads;
+        }
+    }
     let weights = generate_weights(&cfg, args.get_u64("seed")?.unwrap_or(11));
-    let exec = ModelExecutor::new(weights.clone(), bits, micro_params(bits, &device), device);
+    let mut exec =
+        ModelExecutor::new(weights.clone(), bits, micro_params(bits, &device), device)
+            .with_threads(threads);
+    if let Some(b) = backend {
+        exec = exec.with_backend(b);
+    }
     for i in 0..frames {
         let patches = weights.synthetic_patches(i);
         let (logits, trace) = exec.run_frame(&patches);
@@ -243,8 +288,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "sim" => {
             let weights = generate_weights(&entry.config, entry.seed);
             let params = micro_params(entry.act_bits_opt(), &device);
+            let (kernels, threads) = kernel_opts(args, "kernels")?;
+            let mut executor =
+                ModelExecutor::new(weights, entry.act_bits_opt(), params, device)
+                    .with_threads(threads);
+            if let Some(b) = kernels {
+                executor = executor.with_backend(b);
+            }
             Box::new(SimBackend {
-                executor: ModelExecutor::new(weights, entry.act_bits_opt(), params, device),
+                executor,
                 realtime: args.has_flag("realtime"),
             })
         }

@@ -1,6 +1,6 @@
 //! Weight binarization (paper Eq. 5, following XNOR-Net / ReActNet).
 
-
+use super::packing::{pack_sign_planes, SignPlanes};
 
 /// A binarized weight matrix: signs plus one ℓ1 scaling factor.
 ///
@@ -41,6 +41,12 @@ impl BinaryMatrix {
     /// Storage cost in bits (1 per weight + one f32 scale).
     pub fn storage_bits(&self) -> u64 {
         self.signs.len() as u64 + 32
+    }
+
+    /// Column-major 64-lane packed view of the signs — the operand layout
+    /// of the packed XNOR/popcount compute backend (`sim::kernels`).
+    pub fn packed_signs(&self) -> SignPlanes {
+        pack_sign_planes(&self.signs, self.rows, self.cols)
     }
 }
 

@@ -9,6 +9,8 @@
 //!   "unquantized" data on hardware (§5.3),
 //! * [`packing`] — the AXI-word data-packing scheme (§5.3.1) including the
 //!   `S_port` non-divisible case (`G^q = ⌊64/6⌋ = 10`, 60 of 64 bits used),
+//!   plus the bit-plane packing + popcount dot kernels the packed compute
+//!   backend (`sim::kernels`) is built on,
 //! * [`progressive`] — the progressive binarization mask of Eq. 6.
 
 mod activation;
@@ -20,7 +22,11 @@ mod progressive;
 pub use activation::{ActQuantizer, QuantizedTensor};
 pub use binarize::{binarize, BinaryMatrix};
 pub use fixed::{acc_to_fixed16, fixed_mac, from_fixed16, to_fixed16, Fixed16, FIXED16_FRAC_BITS};
-pub use packing::{pack_factor, pack_words, unpack_words, PackedBuffer};
+pub use packing::{
+    field_mask, lane_words, pack_bit_planes, pack_col_planes, pack_factor, pack_sign_bits,
+    pack_sign_planes, pack_words, plane_coeff, popcount_and_dot, unpack_bit_planes, unpack_words,
+    xnor_sign_dot, BitPlanes, ColPlanes, PackedBuffer, SignPlanes,
+};
 pub use progressive::{progressive_schedule, ProgressiveMask};
 
 #[cfg(test)]

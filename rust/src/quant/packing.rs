@@ -1,15 +1,37 @@
-//! Data packing (paper §5.3.1).
+//! Data packing (paper §5.3.1) — both flavours the accelerator exploits:
 //!
-//! Multiple low-precision values are concatenated into one AXI word so
-//! BRAM usage drops by up to `G×` and input/output transfer cycles by `G×`.
-//! The packing factor is `G = ⌊S_port / bits⌋`; when `S_port` is not
-//! divisible by the bit width, the remainder bits go unused — the paper's
-//! 6-bit example: `G^q = ⌊64/6⌋ = 10`, only 60 of the 64 bits exploited.
+//! * **AXI-word packing** ([`pack_words`]/[`unpack_words`]): multiple
+//!   low-precision values concatenated into one AXI word so BRAM usage
+//!   drops by up to `G×` and input/output transfer cycles by `G×`. The
+//!   packing factor is `G = ⌊S_port / bits⌋`; when `S_port` is not
+//!   divisible by the bit width the remainder bits go unused — the paper's
+//!   6-bit example: `G^q = ⌊64/6⌋ = 10`, only 60 of the 64 bits exploited.
+//! * **Bit-plane packing** ([`SignPlanes`], [`BitPlanes`], [`ColPlanes`]):
+//!   the compute-path view of the same idea. Binary weights are 64 signs
+//!   per `u64` lane word; a `b`-bit activation vector is `b` bit-planes of
+//!   lane words. A multiply-accumulate against ±1 weights then collapses
+//!   to AND/XNOR + `count_ones()` with a per-plane shift-accumulate —
+//!   exactly the LUT add/sub datapath of §5.1, and the kernel the packed
+//!   simulator backend (`sim::kernels`) runs on.
+//!
+//! All bit-plane encodings are exact over the quantizer's integer range,
+//! so the packed kernels are bit-identical to the scalar reference
+//! (asserted by `rust/tests/property_suite.rs`).
 
 /// Packing factor for `bits`-wide values on a `port_bits`-wide AXI port.
 pub fn pack_factor(port_bits: u32, bits: u32) -> u32 {
     assert!(bits >= 1 && bits <= port_bits, "bits={bits} port={port_bits}");
     port_bits / bits
+}
+
+/// Mask selecting the low `bits` of a `u64` field, handling the
+/// `bits == 64` case where `(1 << bits) - 1` would overflow.
+pub fn field_mask(bits: u32) -> u64 {
+    if bits >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << bits) - 1
+    }
 }
 
 /// A buffer of packed AXI words plus the packing geometry.
@@ -26,7 +48,7 @@ pub struct PackedBuffer {
 /// AXI words, `factor` per word, LSB-first.
 pub fn pack_words(values: &[i32], bits: u32, port_bits: u32) -> PackedBuffer {
     let factor = pack_factor(port_bits, bits);
-    let mask: u64 = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    let mask = field_mask(bits);
     let lo = -(1i64 << (bits - 1));
     let hi = (1i64 << (bits - 1)) - 1;
     let mut words = Vec::with_capacity(values.len().div_ceil(factor as usize));
@@ -59,12 +81,13 @@ pub fn pack_words(values: &[i32], bits: u32, port_bits: u32) -> PackedBuffer {
 pub fn unpack_words(buf: &PackedBuffer) -> Vec<i32> {
     let mut out = Vec::with_capacity(buf.len);
     let bits = buf.bits;
+    let mask = field_mask(bits);
     'outer: for &w in &buf.words {
         for i in 0..buf.factor {
             if out.len() == buf.len {
                 break 'outer;
             }
-            let field = (w >> (i * bits)) & if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+            let field = (w >> (i * bits)) & mask;
             let v = if bits == 1 {
                 if field == 1 {
                     1
@@ -82,6 +105,285 @@ pub fn unpack_words(buf: &PackedBuffer) -> Vec<i32> {
     out
 }
 
+// ---------------------------------------------------------------------------
+// Bit-plane packing: the compute-path kernels.
+// ---------------------------------------------------------------------------
+
+/// Number of 64-lane words covering `n` elements.
+#[inline]
+pub fn lane_words(n: usize) -> usize {
+    n.div_ceil(64)
+}
+
+/// Shift-accumulate coefficient of two's-complement plane `b` out of
+/// `bits`: `+2^b` for the magnitude planes, `−2^(bits−1)` for the sign
+/// plane (so `q = Σ_b coeff(b) · bit_b(q)` exactly).
+#[inline]
+pub fn plane_coeff(b: u32, bits: u32) -> i64 {
+    debug_assert!(b < bits && bits >= 2);
+    if b == bits - 1 {
+        -(1i64 << b)
+    } else {
+        1i64 << b
+    }
+}
+
+/// Σ popcount(a & b) over two equal-length lane-word slices — the packed
+/// dot product of two 0/1 bit vectors.
+#[inline]
+pub fn popcount_and_dot(a: &[u64], b: &[u64]) -> i64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut pop = 0u32;
+    for (&x, &y) in a.iter().zip(b) {
+        pop += (x & y).count_ones();
+    }
+    pop as i64
+}
+
+/// Dot product of two ±1 vectors stored as sign bitmaps (bit = 1 ⇒ +1)
+/// over `n` valid lanes: XNOR matches signs, so the dot is
+/// `2·popcount(XNOR) − n`. Invalid high lanes of the last word must be
+/// masked because XNOR sets them (0 ⊕̄ 0 = 1).
+#[inline]
+pub fn xnor_sign_dot(a: &[u64], b: &[u64], n: usize) -> i64 {
+    debug_assert_eq!(a.len(), lane_words(n));
+    debug_assert_eq!(b.len(), lane_words(n));
+    let mut pop = 0u32;
+    for (w, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let valid = n - w * 64;
+        let mask = field_mask(valid.min(64) as u32);
+        pop += (!(x ^ y) & mask).count_ones();
+    }
+    2 * pop as i64 - n as i64
+}
+
+/// Pack the signs of an integer slice (> 0 ⇒ bit set) into lane words —
+/// the 1-bit activation encoding (±1, matching `ActQuantizer` at
+/// `bits == 1`, which never produces 0).
+pub fn pack_sign_bits(q: &[i32]) -> Vec<u64> {
+    let mut words = vec![0u64; lane_words(q.len())];
+    for (p, &v) in q.iter().enumerate() {
+        if v > 0 {
+            words[p / 64] |= 1 << (p % 64);
+        }
+    }
+    words
+}
+
+/// Binary-weight sign planes packed column-major in 64-wide lanes: for
+/// output column `j`, `col(j)` holds the sign bits of all `rows` weights
+/// feeding that output (bit = 1 ⇒ +1), ready for a popcount dot against
+/// activation bit-planes. This is the layout the BRAM-resident LUT array
+/// holds on the board.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SignPlanes {
+    words: Vec<u64>,
+    words_per_col: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Pack a row-major `rows × cols` sign matrix (`true` ⇒ +1) column-major.
+pub fn pack_sign_planes(signs: &[bool], rows: usize, cols: usize) -> SignPlanes {
+    assert_eq!(signs.len(), rows * cols, "shape mismatch");
+    let wpc = lane_words(rows);
+    let mut words = vec![0u64; cols * wpc];
+    for p in 0..rows {
+        let row = &signs[p * cols..(p + 1) * cols];
+        let word = p / 64;
+        let bit = 1u64 << (p % 64);
+        for (j, &s) in row.iter().enumerate() {
+            if s {
+                words[j * wpc + word] |= bit;
+            }
+        }
+    }
+    SignPlanes {
+        words,
+        words_per_col: wpc,
+        rows,
+        cols,
+    }
+}
+
+impl SignPlanes {
+    /// Lane words of column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[u64] {
+        &self.words[j * self.words_per_col..(j + 1) * self.words_per_col]
+    }
+
+    pub fn words_per_col(&self) -> usize {
+        self.words_per_col
+    }
+}
+
+/// Two's-complement bit-planes of one integer vector (an activation row):
+/// plane `b` is the lane-word bitmap of bit `b` of each element's `bits`-
+/// wide encoding. `q = Σ_b plane_coeff(b) · plane_b` exactly, so packed
+/// kernels reconstruct the scalar accumulator bit-for-bit.
+///
+/// `bits == 1` uses the ±1 sign encoding instead (bit = 1 ⇒ +1), matching
+/// `ActQuantizer`'s 1-bit convention; consumers dot it with
+/// [`xnor_sign_dot`] rather than plane accumulation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitPlanes {
+    planes: Vec<u64>,
+    words_per_plane: usize,
+    pub bits: u32,
+    pub len: usize,
+    /// Per-plane popcount Σ_p bit_b(q_p) — the column-independent term of
+    /// the ±1-weight dot (`Σ q·s = Σ_b coeff·(2·pop(plane∧W) − total)`).
+    pub totals: Vec<i64>,
+}
+
+/// Decompose `q` into [`BitPlanes`] (values must fit `bits`
+/// two's-complement for `bits ≥ 2`; ±1 for `bits == 1`).
+pub fn pack_bit_planes(q: &[i32], bits: u32) -> BitPlanes {
+    assert!((1..=16).contains(&bits), "activation bits must be 1..=16");
+    let wpp = lane_words(q.len());
+    if bits == 1 {
+        let planes = pack_sign_bits(q);
+        let totals = vec![planes.iter().map(|w| w.count_ones() as i64).sum()];
+        return BitPlanes {
+            planes,
+            words_per_plane: wpp,
+            bits,
+            len: q.len(),
+            totals,
+        };
+    }
+    let mask = field_mask(bits);
+    let mut planes = vec![0u64; bits as usize * wpp];
+    let mut totals = vec![0i64; bits as usize];
+    for (p, &v) in q.iter().enumerate() {
+        debug_assert!(
+            (v as i64) >= -(1i64 << (bits - 1)) && (v as i64) <= (1i64 << (bits - 1)) - 1,
+            "value {v} out of {bits}-bit range"
+        );
+        let mut enc = (v as i64 as u64) & mask;
+        let word = p / 64;
+        let bit = 1u64 << (p % 64);
+        while enc != 0 {
+            let b = enc.trailing_zeros();
+            planes[b as usize * wpp + word] |= bit;
+            totals[b as usize] += 1;
+            enc &= enc - 1;
+        }
+    }
+    BitPlanes {
+        planes,
+        words_per_plane: wpp,
+        bits,
+        len: q.len(),
+        totals,
+    }
+}
+
+impl BitPlanes {
+    /// Lane words of plane `b`.
+    #[inline]
+    pub fn plane(&self, b: u32) -> &[u64] {
+        &self.planes[b as usize * self.words_per_plane..(b as usize + 1) * self.words_per_plane]
+    }
+
+    pub fn words_per_plane(&self) -> usize {
+        self.words_per_plane
+    }
+}
+
+/// Reconstruct the integer vector from its bit-planes (inverse of
+/// [`pack_bit_planes`] — the round-trip property the test suite sweeps).
+pub fn unpack_bit_planes(bp: &BitPlanes) -> Vec<i32> {
+    let mut out = Vec::with_capacity(bp.len);
+    if bp.bits == 1 {
+        let plane = bp.plane(0);
+        for p in 0..bp.len {
+            let set = plane[p / 64] >> (p % 64) & 1 == 1;
+            out.push(if set { 1 } else { -1 });
+        }
+        return out;
+    }
+    for p in 0..bp.len {
+        let mut v = 0i64;
+        for b in 0..bp.bits {
+            if bp.plane(b)[p / 64] >> (p % 64) & 1 == 1 {
+                v += plane_coeff(b, bp.bits);
+            }
+        }
+        out.push(v as i32);
+    }
+    out
+}
+
+/// A quantized matrix packed as per-column bit-planes: for output column
+/// `j` and plane `b`, `col_plane(j, b)` is the lane-word bitmap of bit `b`
+/// of all `rows` elements of that column. The right-hand operand layout of
+/// the packed quantized×quantized matmul: the product of two exact
+/// two's-complement decompositions is a double sum of AND-popcount dots.
+///
+/// `bits == 1` stores the ±1 sign bitmap (one plane per column).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ColPlanes {
+    words: Vec<u64>,
+    words_per_col: usize,
+    pub bits: u32,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Pack a row-major `rows × cols` integer matrix into per-column planes.
+pub fn pack_col_planes(q: &[i32], rows: usize, cols: usize, bits: u32) -> ColPlanes {
+    assert_eq!(q.len(), rows * cols, "shape mismatch");
+    assert!((1..=16).contains(&bits), "activation bits must be 1..=16");
+    let planes = if bits == 1 { 1 } else { bits as usize };
+    let wpc = lane_words(rows);
+    let mut words = vec![0u64; cols * planes * wpc];
+    let mask = field_mask(bits);
+    for p in 0..rows {
+        let row = &q[p * cols..(p + 1) * cols];
+        let word = p / 64;
+        let bit = 1u64 << (p % 64);
+        for (j, &v) in row.iter().enumerate() {
+            if bits == 1 {
+                if v > 0 {
+                    words[j * wpc + word] |= bit;
+                }
+                continue;
+            }
+            let mut enc = (v as i64 as u64) & mask;
+            let base = j * planes * wpc + word;
+            while enc != 0 {
+                let b = enc.trailing_zeros() as usize;
+                words[base + b * wpc] |= bit;
+                enc &= enc - 1;
+            }
+        }
+    }
+    ColPlanes {
+        words,
+        words_per_col: wpc,
+        bits,
+        rows,
+        cols,
+    }
+}
+
+impl ColPlanes {
+    /// Lane words of plane `b` of column `j`.
+    #[inline]
+    pub fn col_plane(&self, j: usize, b: u32) -> &[u64] {
+        let planes = if self.bits == 1 { 1 } else { self.bits as usize };
+        debug_assert!((b as usize) < planes);
+        let start = (j * planes + b as usize) * self.words_per_col;
+        &self.words[start..start + self.words_per_col]
+    }
+
+    pub fn words_per_col(&self) -> usize {
+        self.words_per_col
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -95,6 +397,14 @@ mod tests {
         assert_eq!(pack_factor(64, 6), 10);
         assert_eq!(pack_factor(64, 1), 64);
         assert_eq!(pack_factor(64, 4), 16);
+    }
+
+    #[test]
+    fn field_mask_covers_full_word() {
+        assert_eq!(field_mask(1), 1);
+        assert_eq!(field_mask(8), 0xFF);
+        assert_eq!(field_mask(63), u64::MAX >> 1);
+        assert_eq!(field_mask(64), u64::MAX);
     }
 
     #[test]
@@ -128,5 +438,94 @@ mod tests {
         let vals = vec![7i32; 1024];
         let packed = pack_words(&vals, 8, 64);
         assert_eq!(packed.words.len() * packed.factor as usize, 1024);
+    }
+
+    #[test]
+    fn bit_planes_roundtrip_and_totals() {
+        let vals: Vec<i32> = (-64..64).chain([127, -128, 0, 1, -1]).collect();
+        let bp = pack_bit_planes(&vals, 8);
+        assert_eq!(unpack_bit_planes(&bp), vals);
+        // Plane totals count set bits per plane.
+        for b in 0..8 {
+            let want = vals
+                .iter()
+                .filter(|&&v| (v as i64 as u64 & field_mask(8)) >> b & 1 == 1)
+                .count() as i64;
+            assert_eq!(bp.totals[b as usize], want, "plane {b}");
+        }
+    }
+
+    #[test]
+    fn sign_planes_match_row_major_signs() {
+        // 3×5 matrix with a recognizable pattern.
+        let rows = 3;
+        let cols = 5;
+        let signs: Vec<bool> = (0..rows * cols).map(|i| i % 3 == 0).collect();
+        let sp = pack_sign_planes(&signs, rows, cols);
+        assert_eq!(sp.words_per_col(), 1);
+        for j in 0..cols {
+            for p in 0..rows {
+                let bit = sp.col(j)[p / 64] >> (p % 64) & 1 == 1;
+                assert_eq!(bit, signs[p * cols + j], "({p},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn popcount_dot_equals_scalar_dot() {
+        // 0/1 vectors of length 150 (crosses a word boundary).
+        let n = 150;
+        let a: Vec<i32> = (0..n).map(|i| (i * 7 % 3 == 0) as i32).collect();
+        let b: Vec<i32> = (0..n).map(|i| (i * 5 % 4 == 0) as i32).collect();
+        let pa = {
+            let mut w = vec![0u64; lane_words(n)];
+            for (i, &v) in a.iter().enumerate() {
+                if v == 1 {
+                    w[i / 64] |= 1 << (i % 64);
+                }
+            }
+            w
+        };
+        let pb = {
+            let mut w = vec![0u64; lane_words(n)];
+            for (i, &v) in b.iter().enumerate() {
+                if v == 1 {
+                    w[i / 64] |= 1 << (i % 64);
+                }
+            }
+            w
+        };
+        let want: i64 = a.iter().zip(&b).map(|(&x, &y)| (x * y) as i64).sum();
+        assert_eq!(popcount_and_dot(&pa, &pb), want);
+    }
+
+    #[test]
+    fn xnor_dot_equals_sign_dot() {
+        let n = 100;
+        let a: Vec<i32> = (0..n).map(|i| if i % 3 == 0 { 1 } else { -1 }).collect();
+        let b: Vec<i32> = (0..n).map(|i| if i % 7 < 3 { 1 } else { -1 }).collect();
+        let want: i64 = a.iter().zip(&b).map(|(&x, &y)| (x * y) as i64).sum();
+        let got = xnor_sign_dot(&pack_sign_bits(&a), &pack_sign_bits(&b), n);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn col_planes_reconstruct_matrix() {
+        let rows = 70; // crosses a word boundary
+        let cols = 3;
+        let bits = 5;
+        let q: Vec<i32> = (0..rows * cols).map(|i| (i as i32 * 11 % 31) - 15).collect();
+        let cp = pack_col_planes(&q, rows, cols, bits);
+        for j in 0..cols {
+            for p in 0..rows {
+                let mut v = 0i64;
+                for b in 0..bits {
+                    if cp.col_plane(j, b)[p / 64] >> (p % 64) & 1 == 1 {
+                        v += plane_coeff(b, bits);
+                    }
+                }
+                assert_eq!(v as i32, q[p * cols + j], "({p},{j})");
+            }
+        }
     }
 }

@@ -1,4 +1,10 @@
 //! The PJRT inference engine.
+//!
+//! Compiled in two flavours: with the `pjrt` cargo feature the real
+//! xla_extension-backed engine below; without it (the default offline
+//! build) a stub with the same API whose constructor returns an error, so
+//! every caller that guards on `Manifest::load`/`InferenceEngine::new`
+//! skips gracefully and the rest of the crate builds with no xla dep.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -8,6 +14,7 @@ use crate::Cycles;
 use super::manifest::{Manifest, VariantEntry};
 
 /// One compiled model variant: executable + resident parameter literal.
+#[cfg(feature = "pjrt")]
 pub struct VariantRuntime {
     pub entry: VariantEntry,
     exe: xla::PjRtLoadedExecutable,
@@ -17,11 +24,13 @@ pub struct VariantRuntime {
 }
 
 /// Multi-variant inference engine over one PJRT client.
+#[cfg(feature = "pjrt")]
 pub struct InferenceEngine {
     client: xla::PjRtClient,
     variants: HashMap<String, VariantRuntime>,
 }
 
+#[cfg(feature = "pjrt")]
 impl InferenceEngine {
     /// Create a CPU PJRT client with no variants loaded.
     ///
@@ -136,6 +145,68 @@ impl InferenceEngine {
             out.push(t0.elapsed().as_secs_f64());
         }
         Ok(out)
+    }
+}
+
+/// Stub variant record for builds without the `pjrt` feature.
+#[cfg(not(feature = "pjrt"))]
+pub struct VariantRuntime {
+    pub entry: VariantEntry,
+}
+
+/// Stub engine for builds without the `pjrt` feature: same API, but
+/// [`InferenceEngine::new`] always errors, so callers fall back to the
+/// simulator backend or skip (all in-tree callers check the artifacts
+/// manifest and/or this constructor before doing PJRT work).
+#[cfg(not(feature = "pjrt"))]
+pub struct InferenceEngine {
+    variants: HashMap<String, VariantRuntime>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl InferenceEngine {
+    pub fn new() -> anyhow::Result<InferenceEngine> {
+        anyhow::bail!(
+            "PJRT runtime not compiled in: the `pjrt` feature additionally \
+             requires declaring the `xla` dependency on an image that ships \
+             xla_extension — see the feature notes in rust/Cargo.toml"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (built without the pjrt feature)".to_string()
+    }
+
+    pub fn load_variant(&mut self, entry: &VariantEntry) -> anyhow::Result<()> {
+        anyhow::bail!("cannot load variant {}: built without the pjrt feature", entry.tag)
+    }
+
+    pub fn load_manifest(&mut self, dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        anyhow::bail!(
+            "cannot load manifest {}: built without the pjrt feature",
+            dir.as_ref().display()
+        )
+    }
+
+    pub fn tags(&self) -> Vec<&str> {
+        self.variants.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn variant(&self, tag: &str) -> Option<&VariantRuntime> {
+        self.variants.get(tag)
+    }
+
+    pub fn infer(&self, tag: &str, _patches: &[f32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::bail!("cannot infer {tag}: built without the pjrt feature")
+    }
+
+    pub fn time_frames(
+        &self,
+        tag: &str,
+        _patches: &[f32],
+        _frames: usize,
+    ) -> anyhow::Result<Vec<f64>> {
+        anyhow::bail!("cannot time {tag}: built without the pjrt feature")
     }
 }
 

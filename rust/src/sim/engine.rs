@@ -16,10 +16,25 @@
 //!
 //! All paths return exact f32 reconstructions of the integer/fixed-point
 //! results, so the executor's outputs are what the board would produce.
+//!
+//! Two interchangeable kernel backends execute the integer math (see
+//! [`Backend`] and `sim::kernels`): the original scalar streaming loops
+//! (the reference oracle) and the bit-packed XNOR/popcount datapath that
+//! models the LUT array the way the hardware actually computes — 64
+//! weights per `u64` word. Both are bit-exact; the packed one is the
+//! default because it is several times faster on every quantized layer.
+//! All three flavours additionally fan out across the frame dimension
+//! (`threads`, default from `VAQF_THREADS`/`available_parallelism`).
 
 use crate::hw::Device;
 use crate::perf::AcceleratorParams;
-use crate::quant::{acc_to_fixed16, binarize, fixed_mac, from_fixed16, to_fixed16, ActQuantizer, BinaryMatrix};
+use crate::quant::{
+    binarize, fixed_mac, pack_col_planes, to_fixed16, ActQuantizer, BinaryMatrix,
+};
+use crate::util::parallel::{default_threads, for_each_row_chunk, MAX_THREADS};
+
+use super::kernels;
+pub use super::kernels::Backend;
 
 /// Functional result of one engine invocation.
 #[derive(Debug, Clone)]
@@ -33,47 +48,63 @@ pub struct MatmulResult {
 
 /// The compute engine: holds the accelerator parameterization (the tiling
 /// doesn't change the math, but the quantization geometry — `act_bits` —
-/// does).
+/// does) plus the host-side execution strategy (kernel backend + thread
+/// fan-out), which changes throughput only, never results.
 #[derive(Debug, Clone)]
 pub struct ComputeEngine {
     pub params: AcceleratorParams,
     pub device: Device,
+    /// Kernel implementation (scalar reference vs bit-packed popcount).
+    pub backend: Backend,
+    /// Row-parallel worker count (≥ 1; resolved at construction).
+    pub threads: usize,
 }
 
 impl ComputeEngine {
+    /// Engine with the environment-default backend (`VAQF_BACKEND`,
+    /// default packed) and thread count (`VAQF_THREADS`, default
+    /// available parallelism).
     pub fn new(params: AcceleratorParams, device: Device) -> ComputeEngine {
-        ComputeEngine { params, device }
+        ComputeEngine {
+            params,
+            device,
+            backend: Backend::from_env(),
+            threads: default_threads(),
+        }
+    }
+
+    /// Builder-style backend override.
+    pub fn with_backend(mut self, backend: Backend) -> ComputeEngine {
+        self.backend = backend;
+        self
+    }
+
+    /// Builder-style thread-count override (`0` ⇒ environment default;
+    /// explicit values are clamped to [`MAX_THREADS`] like the defaults).
+    pub fn with_threads(mut self, threads: usize) -> ComputeEngine {
+        self.threads = if threads == 0 {
+            default_threads()
+        } else {
+            threads.clamp(1, MAX_THREADS)
+        };
+        self
     }
 
     /// Unquantized FC on the DSP path: `x (f×n) @ w (n×m)`, Q6.10 in,
-    /// 32-bit accumulate, Q6.10 out.
+    /// 32-bit accumulate, Q6.10 out. Fixed16 has no sub-word planes to
+    /// exploit, so both backends run the same scalar kernel; rows still
+    /// fan out across threads.
     pub fn fc_fixed16(&self, x: &[f32], w: &[f32], f: usize, n: usize, m: usize) -> MatmulResult {
         assert_eq!(x.len(), f * n);
         assert_eq!(w.len(), n * m);
         let xq: Vec<i16> = x.iter().map(|&v| to_fixed16(v)).collect();
         let wq: Vec<i16> = w.iter().map(|&v| to_fixed16(v)).collect();
         let mut out = vec![0.0f32; f * m];
-        // Hot path (§Perf): i-p-j loop order with a per-row i64 accumulator
-        // keeps the inner loop streaming over the contiguous weight row —
-        // ~3.5× over the naive i-j-p order (see EXPERIMENTS.md §Perf).
-        let mut acc_row = vec![0i64; m];
-        for i in 0..f {
-            acc_row.fill(0);
-            let xrow = &xq[i * n..(i + 1) * n];
-            for (p, &xv) in xrow.iter().enumerate() {
-                if xv == 0 {
-                    continue;
-                }
-                let xv = xv as i64;
-                let wrow = &wq[p * m..(p + 1) * m];
-                for (acc, &wv) in acc_row.iter_mut().zip(wrow) {
-                    *acc += xv * wv as i64;
-                }
-            }
-            for (o, &acc) in out[i * m..(i + 1) * m].iter_mut().zip(&acc_row) {
-                *o = from_fixed16(acc_to_fixed16(acc));
-            }
-        }
+        let work = (f * n * m) as u64;
+        for_each_row_chunk(&mut out, f, m, self.threads, work, |row0, chunk| {
+            let rows = chunk.len() / m;
+            kernels::fixed16_rows(&xq[row0 * n..(row0 + rows) * n], &wq, n, m, chunk);
+        });
         let _ = fixed_mac; // (kept for the scalar-datapath unit tests)
         MatmulResult {
             out,
@@ -92,26 +123,41 @@ impl ComputeEngine {
         let xq = q.quantize(x);
         let mut out = vec![0.0f32; f * m];
         let scale = q.scale * w.scale;
-        // Hot path (§Perf): materialize the signs as ±1 i32 once (LUT-array
-        // analog: the sign bits are resident in BRAM), then stream the
-        // contiguous sign row in the inner loop — branch-free add/sub.
-        let signs: Vec<i32> = w.signs.iter().map(|&s| if s { 1 } else { -1 }).collect();
-        let mut acc_row = vec![0i64; m];
-        for i in 0..f {
-            acc_row.fill(0);
-            let xrow = &xq.q[i * n..(i + 1) * n];
-            for (p, &qv) in xrow.iter().enumerate() {
-                if qv == 0 {
-                    continue;
-                }
-                let qv = qv as i64;
-                let srow = &signs[p * m..(p + 1) * m];
-                for (acc, &s) in acc_row.iter_mut().zip(srow) {
-                    *acc += qv * s as i64;
-                }
+        let work = (f * n * m) as u64;
+        match self.backend {
+            Backend::Scalar => {
+                // Materialize the signs as ±1 i32 once (LUT-array analog:
+                // the sign bits are resident in BRAM), then stream the
+                // contiguous sign row in the inner loop — branch-free
+                // add/sub.
+                let signs: Vec<i32> = w.signs.iter().map(|&s| if s { 1 } else { -1 }).collect();
+                for_each_row_chunk(&mut out, f, m, self.threads, work, |row0, chunk| {
+                    let rows = chunk.len() / m;
+                    kernels::binary_rows_scalar(
+                        &xq.q[row0 * n..(row0 + rows) * n],
+                        &signs,
+                        n,
+                        m,
+                        scale,
+                        chunk,
+                    );
+                });
             }
-            for (o, &acc) in out[i * m..(i + 1) * m].iter_mut().zip(&acc_row) {
-                *o = acc as f32 * scale;
+            Backend::Packed => {
+                // Pack the sign matrix once per call (64 weights / word);
+                // the cost is one bit-sweep of W vs f bit-sweeps of
+                // compute, ≤ 1/f of the matmul.
+                let planes = w.packed_signs();
+                for_each_row_chunk(&mut out, f, m, self.threads, work, |row0, chunk| {
+                    let rows = chunk.len() / m;
+                    kernels::binary_rows_packed(
+                        &xq.q[row0 * n..(row0 + rows) * n],
+                        &planes,
+                        bits as u32,
+                        scale,
+                        chunk,
+                    );
+                });
             }
         }
         MatmulResult {
@@ -132,24 +178,31 @@ impl ComputeEngine {
         let bq = qb.quantize(b);
         let scale = qa.scale * qb.scale;
         let mut out = vec![0.0f32; f * m];
-        // Hot path (§Perf): same i-p-j streaming order as fc_binary.
-        let mut acc_row = vec![0i64; m];
-        for i in 0..f {
-            acc_row.fill(0);
-            let arow = &aq.q[i * k..(i + 1) * k];
-            for (p, &av) in arow.iter().enumerate() {
-                if av == 0 {
-                    continue;
-                }
-                let av = av as i64;
-                let brow = &bq.q[p * m..(p + 1) * m];
-                for (acc, &bv) in acc_row.iter_mut().zip(brow) {
-                    *acc += av * bv as i64;
-                }
-            }
-            for (o, &acc) in out[i * m..(i + 1) * m].iter_mut().zip(&acc_row) {
-                *o = acc as f32 * scale;
-            }
+        let work = (f * k * m) as u64;
+        if self.backend == Backend::Packed && kernels::qq_packed_profitable(bits as u32) {
+            let planes = pack_col_planes(&bq.q, k, m, bits as u32);
+            for_each_row_chunk(&mut out, f, m, self.threads, work, |row0, chunk| {
+                let rows = chunk.len() / m;
+                kernels::qq_rows_packed(
+                    &aq.q[row0 * k..(row0 + rows) * k],
+                    &planes,
+                    bits as u32,
+                    scale,
+                    chunk,
+                );
+            });
+        } else {
+            for_each_row_chunk(&mut out, f, m, self.threads, work, |row0, chunk| {
+                let rows = chunk.len() / m;
+                kernels::qq_rows_scalar(
+                    &aq.q[row0 * k..(row0 + rows) * k],
+                    &bq.q,
+                    k,
+                    m,
+                    scale,
+                    chunk,
+                );
+            });
         }
         MatmulResult {
             out,

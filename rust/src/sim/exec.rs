@@ -12,7 +12,7 @@ use crate::model::{VitConfig, VitStructure};
 use crate::perf::{layer_cycles, AcceleratorParams};
 use crate::Cycles;
 
-use super::engine::ComputeEngine;
+use super::engine::{Backend, ComputeEngine};
 use super::timing::{layer_timing, LayerTiming};
 use super::weights::VitWeights;
 
@@ -71,6 +71,21 @@ impl ModelExecutor {
             weights,
             quantized: act_bits.is_some(),
         }
+    }
+
+    /// Builder-style override of the engine's kernel backend (scalar
+    /// reference vs bit-packed popcount — results are identical, see
+    /// `sim::kernels`).
+    pub fn with_backend(mut self, backend: Backend) -> ModelExecutor {
+        self.engine.backend = backend;
+        self
+    }
+
+    /// Builder-style override of the engine's row-parallel worker count
+    /// (`0` ⇒ environment default via `VAQF_THREADS`).
+    pub fn with_threads(mut self, threads: usize) -> ModelExecutor {
+        self.engine = self.engine.with_threads(threads);
+        self
     }
 
     /// Run one frame (`patches`: row-major `N_p × (3·P²)`); returns logits

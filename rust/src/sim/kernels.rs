@@ -1,0 +1,266 @@
+//! Matmul kernels for the compute engine: the scalar reference datapaths
+//! and the bit-packed XNOR/popcount datapaths (§5.1 + §5.3.1).
+//!
+//! Each kernel computes a contiguous block of output rows — the unit the
+//! row-parallel driver (`util::parallel`) fans out across threads. Both
+//! backends accumulate in `i64` and convert once at the end, and integer
+//! addition is associative, so **scalar and packed results are
+//! bit-identical** — the scalar path stays as the reference oracle
+//! (`rust/tests/property_suite.rs` sweeps the equivalence).
+//!
+//! The packed binary-FC kernel is the software analog of the LUT array:
+//! weight signs live as column-major 64-lane bitmaps (`SignPlanes`), the
+//! activation row is decomposed into two's-complement bit-planes, and
+//! each plane's ±1 dot is `2·popcount(plane ∧ signs) − popcount(plane)`
+//! (equivalently `popcount(XNOR masked to the plane)`), shift-accumulated
+//! with the plane coefficient. One 64-bit AND+popcount replaces 64 scalar
+//! multiply-adds, so per-output work drops from `n` MACs to
+//! `bits · ⌈n/64⌉` word ops — ≥ 4× for every `bits ≤ 16`, ~8× at the
+//! paper's W1A8 operating point (measured in `benches/runtime_hotpath.rs`,
+//! recorded in BENCH_hotpath.json; methodology in EXPERIMENTS.md §Perf).
+
+use std::fmt;
+
+use crate::quant::{
+    acc_to_fixed16, from_fixed16, pack_bit_planes, plane_coeff, popcount_and_dot, xnor_sign_dot,
+    ColPlanes, SignPlanes,
+};
+
+/// Which compute datapath implementation the engine runs.
+///
+/// * `Scalar` — the original element-streaming integer loops: the
+///   reference oracle, kept bit-exact forever.
+/// * `Packed` — bit-plane + popcount kernels over `u64` lane words (the
+///   default): same results, a fraction of the work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    Scalar,
+    #[default]
+    Packed,
+}
+
+impl Backend {
+    /// Parse a backend name (CLI/config/env surface).
+    pub fn from_name(name: &str) -> Option<Backend> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Backend::Scalar),
+            "packed" => Some(Backend::Packed),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Packed => "packed",
+        }
+    }
+
+    /// Default backend, overridable with `VAQF_BACKEND=scalar|packed`.
+    pub fn from_env() -> Backend {
+        std::env::var("VAQF_BACKEND")
+            .ok()
+            .and_then(|v| Backend::from_name(&v))
+            .unwrap_or_default()
+    }
+}
+
+impl fmt::Display for Backend {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Fixed-point DSP path: `xq` holds `rows × n` Q6.10 inputs, `wq` the full
+/// `n × m` weight matrix; writes `rows × m` into `out`.
+// Hot path (§Perf): i-p-j loop order with a per-row i64 accumulator keeps
+// the inner loop streaming over the contiguous weight row — ~3.5× over the
+// naive i-j-p order (see EXPERIMENTS.md §Perf).
+pub(crate) fn fixed16_rows(xq: &[i16], wq: &[i16], n: usize, m: usize, out: &mut [f32]) {
+    let rows = out.len() / m;
+    debug_assert_eq!(xq.len(), rows * n);
+    let mut acc_row = vec![0i64; m];
+    for i in 0..rows {
+        acc_row.fill(0);
+        let xrow = &xq[i * n..(i + 1) * n];
+        for (p, &xv) in xrow.iter().enumerate() {
+            if xv == 0 {
+                continue;
+            }
+            let xv = xv as i64;
+            let wrow = &wq[p * m..(p + 1) * m];
+            for (acc, &wv) in acc_row.iter_mut().zip(wrow) {
+                *acc += xv * wv as i64;
+            }
+        }
+        for (o, &acc) in out[i * m..(i + 1) * m].iter_mut().zip(&acc_row) {
+            *o = from_fixed16(acc_to_fixed16(acc));
+        }
+    }
+}
+
+/// Binary-weight FC, scalar reference: `signs` is the row-major ±1
+/// materialization of the weight matrix (LUT-array analog: sign bits
+/// resident in BRAM), streamed contiguously in the inner loop.
+pub(crate) fn binary_rows_scalar(
+    xq: &[i32],
+    signs: &[i32],
+    n: usize,
+    m: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    let rows = out.len() / m;
+    debug_assert_eq!(xq.len(), rows * n);
+    let mut acc_row = vec![0i64; m];
+    for i in 0..rows {
+        acc_row.fill(0);
+        let xrow = &xq[i * n..(i + 1) * n];
+        for (p, &qv) in xrow.iter().enumerate() {
+            if qv == 0 {
+                continue;
+            }
+            let qv = qv as i64;
+            let srow = &signs[p * m..(p + 1) * m];
+            for (acc, &s) in acc_row.iter_mut().zip(srow) {
+                *acc += qv * s as i64;
+            }
+        }
+        for (o, &acc) in out[i * m..(i + 1) * m].iter_mut().zip(&acc_row) {
+            *o = acc as f32 * scale;
+        }
+    }
+}
+
+/// Binary-weight FC, packed: activation bit-planes × column sign bitmaps.
+///
+/// Per row: `Σ_p q_p·s_p = Σ_b coeff(b)·(2·pop(plane_b ∧ W_j) − total_b)`
+/// `= 2·Σ_b coeff(b)·pop(plane_b ∧ W_j) − row_const` — the `row_const`
+/// is column-independent and hoisted. `bits == 1` degenerates to the pure
+/// XNOR form (both operands ±1).
+pub(crate) fn binary_rows_packed(
+    xq: &[i32],
+    w: &SignPlanes,
+    bits: u32,
+    scale: f32,
+    out: &mut [f32],
+) {
+    let n = w.rows;
+    let m = w.cols;
+    let rows = out.len() / m;
+    debug_assert_eq!(xq.len(), rows * n);
+    for i in 0..rows {
+        let xrow = &xq[i * n..(i + 1) * n];
+        let orow = &mut out[i * m..(i + 1) * m];
+        let bp = pack_bit_planes(xrow, bits);
+        if bits == 1 {
+            let arow = bp.plane(0);
+            for (j, o) in orow.iter_mut().enumerate() {
+                let acc = xnor_sign_dot(arow, w.col(j), n);
+                *o = acc as f32 * scale;
+            }
+            continue;
+        }
+        let row_const: i64 = (0..bits)
+            .map(|b| plane_coeff(b, bits) * bp.totals[b as usize])
+            .sum();
+        for (j, o) in orow.iter_mut().enumerate() {
+            let col = w.col(j);
+            let mut plus = 0i64;
+            for b in 0..bits {
+                if bp.totals[b as usize] == 0 {
+                    continue; // empty plane: popcount would be 0 anyway
+                }
+                plus += plane_coeff(b, bits) * popcount_and_dot(bp.plane(b), col);
+            }
+            let acc = 2 * plus - row_const;
+            *o = acc as f32 * scale;
+        }
+    }
+}
+
+/// Quantized×quantized matmul, scalar reference (attention datapath).
+pub(crate) fn qq_rows_scalar(
+    aq: &[i32],
+    bq: &[i32],
+    k: usize,
+    m: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    let rows = out.len() / m;
+    debug_assert_eq!(aq.len(), rows * k);
+    let mut acc_row = vec![0i64; m];
+    for i in 0..rows {
+        acc_row.fill(0);
+        let arow = &aq[i * k..(i + 1) * k];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let av = av as i64;
+            let brow = &bq[p * m..(p + 1) * m];
+            for (acc, &bv) in acc_row.iter_mut().zip(brow) {
+                *acc += av * bv as i64;
+            }
+        }
+        for (o, &acc) in out[i * m..(i + 1) * m].iter_mut().zip(&acc_row) {
+            *o = acc as f32 * scale;
+        }
+    }
+}
+
+/// Quantized×quantized matmul, packed: both operands decompose exactly
+/// into two's-complement planes, so the dot is a double shift-accumulate
+/// of AND-popcounts: `Σ_p a_p·b_p = Σ_{b1,b2} c(b1)·c(b2)·pop(A_b1 ∧ B_b2)`.
+pub(crate) fn qq_rows_packed(
+    aq: &[i32],
+    b: &ColPlanes,
+    bits: u32,
+    scale: f32,
+    out: &mut [f32],
+) {
+    let k = b.rows;
+    let m = b.cols;
+    let rows = out.len() / m;
+    debug_assert_eq!(aq.len(), rows * k);
+    for i in 0..rows {
+        let arow = &aq[i * k..(i + 1) * k];
+        let orow = &mut out[i * m..(i + 1) * m];
+        let ap = pack_bit_planes(arow, bits);
+        if bits == 1 {
+            let asigns = ap.plane(0);
+            for (j, o) in orow.iter_mut().enumerate() {
+                let acc = xnor_sign_dot(asigns, b.col_plane(j, 0), k);
+                *o = acc as f32 * scale;
+            }
+            continue;
+        }
+        for (j, o) in orow.iter_mut().enumerate() {
+            let mut acc = 0i64;
+            for b1 in 0..bits {
+                if ap.totals[b1 as usize] == 0 {
+                    continue;
+                }
+                let pa = ap.plane(b1);
+                let c1 = plane_coeff(b1, bits);
+                for b2 in 0..bits {
+                    let d = popcount_and_dot(pa, b.col_plane(j, b2));
+                    if d != 0 {
+                        acc += c1 * plane_coeff(b2, bits) * d;
+                    }
+                }
+            }
+            *o = acc as f32 * scale;
+        }
+    }
+}
+
+/// Whether the packed qq datapath beats the scalar one: plane-pair work is
+/// `bits² · ⌈k/64⌉` word ops per output vs `k` scalar MACs, so the packed
+/// form wins while `bits² < 64` (with margin for pack overhead). Above the
+/// crossover the Packed backend runs the scalar qq loop — results are
+/// identical either way, this is purely a throughput choice.
+pub(crate) fn qq_packed_profitable(bits: u32) -> bool {
+    bits == 1 || bits * bits <= 48
+}

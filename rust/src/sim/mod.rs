@@ -22,13 +22,19 @@
 //! [`ModelExecutor`] runs a whole ViT through the engine, handling the
 //! host-CPU ops (LayerNorm, softmax, GELU, skip-adds — §5.2) exactly like
 //! the embedded ARM host would, and returns logits + a cycle trace.
+//!
+//! The engine executes its integer math through one of two bit-exact
+//! kernel [`Backend`]s (`kernels`): the scalar streaming loops (reference
+//! oracle) or the default bit-packed XNOR/popcount datapath, with
+//! row-parallel fan-out across the frame dimension in both.
 
 mod engine;
 mod exec;
+mod kernels;
 mod timing;
 mod weights;
 
-pub use engine::{ComputeEngine, MatmulResult};
+pub use engine::{Backend, ComputeEngine, MatmulResult};
 pub use exec::{ExecTrace, LayerTrace, ModelExecutor};
 pub use timing::{layer_timing, model_timing, LayerTiming};
 pub use weights::{generate_weights, LayerWeights, VitWeights};

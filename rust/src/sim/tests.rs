@@ -168,6 +168,28 @@ fn trace_macs_match_structure() {
 }
 
 #[test]
+fn backends_agree_bitexactly_on_whole_model() {
+    // The packed XNOR/popcount backend must reproduce the scalar oracle
+    // bit-for-bit through a full forward pass — logits AND cycle trace —
+    // at every precision, for any thread count.
+    let cfg = micro_vit();
+    let w = generate_weights(&cfg, 13);
+    let patches = w.synthetic_patches(2);
+    for bits in [Some(8), Some(6), Some(4), Some(1), None] {
+        let scalar = ModelExecutor::new(w.clone(), bits, micro_params(bits), zcu102())
+            .with_backend(Backend::Scalar)
+            .with_threads(1);
+        let packed = ModelExecutor::new(w.clone(), bits, micro_params(bits), zcu102())
+            .with_backend(Backend::Packed)
+            .with_threads(3);
+        let (ls, ts) = scalar.run_frame(&patches);
+        let (lp, tp) = packed.run_frame(&patches);
+        assert_eq!(ls, lp, "bits={bits:?}: packed backend diverged");
+        assert_eq!(ts.total_cycles, tp.total_cycles, "bits={bits:?}");
+    }
+}
+
+#[test]
 fn deterministic_execution() {
     let cfg = micro_vit();
     let w = generate_weights(&cfg, 9);

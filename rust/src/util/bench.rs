@@ -4,8 +4,10 @@
 //! report mean/p50/p99, and emit machine-readable JSON next to the
 //! human-readable table so EXPERIMENTS.md can quote exact numbers.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::Summary;
 
 /// One timed benchmark run.
@@ -22,6 +24,17 @@ pub struct BenchResult {
 impl BenchResult {
     pub fn mean_s(&self) -> f64 {
         self.mean.as_secs_f64()
+    }
+
+    /// Machine-readable view (seconds as f64).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("iters", self.iters)
+            .set("mean_s", self.mean.as_secs_f64())
+            .set("p50_s", self.p50.as_secs_f64())
+            .set("p99_s", self.p99.as_secs_f64())
+            .set("min_s", self.min.as_secs_f64())
     }
 }
 
@@ -106,6 +119,79 @@ impl Bench {
 /// Format a throughput-style derived metric line.
 pub fn report_metric(name: &str, value: f64, unit: &str) {
     println!("  {name:<44} {value:>12.3} {unit}");
+}
+
+/// Repo-root location for a `BENCH_*.json` file. Cargo runs bench
+/// binaries with the working directory set to the *package* dir
+/// (`rust/`), so a bare relative write would land the report one level
+/// too deep; resolve against the manifest dir's parent instead.
+pub fn bench_output_path(file: &str) -> std::path::PathBuf {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(manifest).join(file)
+}
+
+/// Collector pairing timed results with derived metrics, persisted as a
+/// `BENCH_*.json` next to the human-readable table so EXPERIMENTS.md (and
+/// the perf trajectory across PRs) can quote exact numbers.
+#[derive(Default)]
+pub struct JsonReport {
+    bench: String,
+    mode: String,
+    results: Vec<BenchResult>,
+    metrics: Vec<(String, f64, String)>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str, mode: &str) -> JsonReport {
+        JsonReport {
+            bench: bench.to_string(),
+            mode: mode.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Record a timed result (typically right after `Bench::run`).
+    pub fn result(&mut self, r: &BenchResult) {
+        self.results.push(r.clone());
+    }
+
+    /// Print a derived metric line AND record it.
+    pub fn metric(&mut self, name: &str, value: f64, unit: &str) {
+        report_metric(name, value, unit);
+        self.metrics.push((name.to_string(), value, unit.to_string()));
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("bench", self.bench.as_str())
+            .set("mode", self.mode.as_str())
+            .set(
+                "results",
+                Json::Arr(self.results.iter().map(BenchResult::to_json).collect()),
+            )
+            .set(
+                "metrics",
+                Json::Arr(
+                    self.metrics
+                        .iter()
+                        .map(|(n, v, u)| {
+                            Json::obj()
+                                .set("name", n.as_str())
+                                .set("value", *v)
+                                .set("unit", u.as_str())
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    /// Write the report to `path` (pretty JSON + trailing newline).
+    pub fn write(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().pretty() + "\n")?;
+        println!("\nwrote {}", path.display());
+        Ok(())
+    }
 }
 
 /// Summarize a vector of f64 samples (for non-time metrics).

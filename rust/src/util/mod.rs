@@ -4,5 +4,6 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod parallel;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,134 @@
+//! Row-parallel execution over the frame dimension (offline build: no
+//! rayon — scoped `std::thread` fan-out).
+//!
+//! The simulator's matmuls are embarrassingly parallel across output rows
+//! (each frame token's output row depends only on that token's inputs),
+//! so all three datapaths split the output matrix into contiguous row
+//! chunks and run one chunk per thread. Chunks are disjoint and every
+//! per-row computation is identical to the serial order, so parallel
+//! results are bit-for-bit the serial results.
+//!
+//! Thread count resolution (highest priority first): explicit engine
+//! override → `VAQF_THREADS` env var → `std::thread::available_parallelism`,
+//! clamped to [`MAX_THREADS`].
+
+/// Upper bound on the fan-out — beyond this, chunk sizes drop below the
+/// per-thread spawn cost for every model in the preset zoo.
+pub const MAX_THREADS: usize = 64;
+
+/// Minimum estimated scalar ops per worker before spawning pays: threads
+/// are spawned fresh per matmul call (no pool), so a worker must amortize
+/// ~tens of µs of spawn/join cost. Below this the call runs inline —
+/// micro-model layers stay serial, DeiT-scale layers fan out.
+pub const MIN_WORK_PER_THREAD: u64 = 1 << 21;
+
+/// Resolve the default worker count: `VAQF_THREADS` if set and parseable,
+/// else the machine's available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("VAQF_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.clamp(1, MAX_THREADS);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, MAX_THREADS)
+}
+
+/// Split `out` (row-major `rows × cols`) into contiguous row chunks and
+/// invoke `body(first_row, chunk)` on each — across up to `threads`
+/// scoped threads, inline when one worker suffices. `work` is the
+/// caller's estimate of total scalar ops (e.g. `f·n·m` MACs); the actual
+/// fan-out is capped so each worker gets at least
+/// [`MIN_WORK_PER_THREAD`], which keeps small layers on the calling
+/// thread instead of paying per-call spawn cost. `body` must fill its
+/// chunk purely from `first_row..first_row + chunk.len() / cols`; chunk
+/// boundaries never change numeric results.
+pub fn for_each_row_chunk<F>(
+    out: &mut [f32],
+    rows: usize,
+    cols: usize,
+    threads: usize,
+    work: u64,
+    body: F,
+) where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert_eq!(out.len(), rows * cols, "output shape mismatch");
+    if out.is_empty() {
+        return;
+    }
+    let worth = (work / MIN_WORK_PER_THREAD).min(MAX_THREADS as u64) as usize;
+    let threads = threads.clamp(1, MAX_THREADS).min(worth.max(1)).min(rows);
+    if threads == 1 {
+        body(0, out);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(threads);
+    let body = &body;
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut row0 = 0usize;
+        while !rest.is_empty() {
+            let take_rows = chunk_rows.min(rows - row0);
+            let (head, tail) = rest.split_at_mut(take_rows * cols);
+            if tail.is_empty() {
+                // Run the last chunk on the calling thread instead of
+                // idling while workers finish.
+                body(row0, head);
+            } else {
+                scope.spawn(move || body(row0, head));
+            }
+            rest = tail;
+            row0 += take_rows;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_matches_serial_for_all_thread_counts() {
+        let rows = 37;
+        let cols = 5;
+        let fill = |row0: usize, chunk: &mut [f32]| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                let r = row0 + i / cols;
+                let c = i % cols;
+                *v = (r * 1000 + c) as f32;
+            }
+        };
+        let mut want = vec![0.0f32; rows * cols];
+        fill(0, &mut want);
+        for threads in [1, 2, 3, 8, 37, 64] {
+            // Large `work` forces real fan-out; tiny `work` must stay
+            // serial — results identical either way.
+            for work in [u64::MAX, 1] {
+                let mut got = vec![0.0f32; rows * cols];
+                for_each_row_chunk(&mut got, rows, cols, threads, work, fill);
+                assert_eq!(got, want, "threads={threads} work={work}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_single_row_edges() {
+        let mut empty: Vec<f32> = vec![];
+        for_each_row_chunk(&mut empty, 0, 4, 8, u64::MAX, |_, _| panic!("no chunks expected"));
+        let mut one = vec![0.0f32; 3];
+        for_each_row_chunk(&mut one, 1, 3, 8, u64::MAX, |row0, chunk| {
+            assert_eq!(row0, 0);
+            chunk.fill(1.0);
+        });
+        assert_eq!(one, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn default_threads_is_bounded() {
+        let n = default_threads();
+        assert!((1..=MAX_THREADS).contains(&n));
+    }
+}

@@ -1,16 +1,19 @@
 //! Property-based test suite (in-tree generator: SplitMix64 — the offline
-//! build has no proptest). Each property sweeps a randomized space of
-//! layers / parameter sets / devices and asserts an invariant of the
-//! analytical model, the quantization math, the compiler, or the
-//! simulator. Failures print the seed for replay.
+//! build has no proptest, so the strategy→assert idiom of
+//! `proptest`-style suites is hand-rolled). Each property sweeps a
+//! randomized space of layers / parameter sets / devices and asserts an
+//! invariant of the analytical model, the quantization math, the
+//! compiler, or the simulator. Failures print the seed for replay.
 
 use vaqf::hw::{zcu102, Device, ResourceBudget};
 use vaqf::model::{HostOp, LayerDesc, LayerKind, Precision, VitConfig};
 use vaqf::perf::{
     layer_cycles, layer_cycles_opt, model_cycles, resources_for, AcceleratorParams, ModelOptions,
 };
-use vaqf::quant::{binarize, pack_words, unpack_words, ActQuantizer};
-use vaqf::sim::{layer_timing, ComputeEngine};
+use vaqf::quant::{
+    binarize, pack_bit_planes, pack_words, unpack_bit_planes, unpack_words, ActQuantizer,
+};
+use vaqf::sim::{layer_timing, Backend, ComputeEngine};
 use vaqf::util::rng::SplitMix64;
 
 // ---------------------------------------------------------------------------
@@ -396,6 +399,116 @@ fn prop_engine_binary_matches_dense_fake_quant() {
                 "trial {trial} elem {i}: {a} vs {b} (bits={bits} f={f} n={n} m={m})"
             );
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed-backend properties: the bit-plane encodings round-trip, and the
+// packed XNOR/popcount kernels are BIT-EXACT against the scalar oracle
+// over random shapes, precisions, seeds and thread counts.
+// ---------------------------------------------------------------------------
+
+fn engine_with(bits: u8, backend: Backend, threads: usize) -> ComputeEngine {
+    let g_q = AcceleratorParams::g_q_for(64, bits);
+    let params = AcceleratorParams {
+        t_m: 8,
+        t_n: 2,
+        t_m_q: 8,
+        t_n_q: 2,
+        g: 4,
+        g_q,
+        p_h: 1,
+        act_bits: Some(bits),
+    };
+    ComputeEngine::new(params, zcu102())
+        .with_backend(backend)
+        .with_threads(threads)
+}
+
+#[test]
+fn prop_bitplane_roundtrip_all_widths() {
+    let mut rng = SplitMix64::new(200);
+    for bits in 1..=16u32 {
+        for _ in 0..20 {
+            let n = 1 + rng.next_below(300) as usize;
+            let vals: Vec<i32> = (0..n)
+                .map(|_| {
+                    if bits == 1 {
+                        if rng.next_below(2) == 1 {
+                            1
+                        } else {
+                            -1
+                        }
+                    } else {
+                        let hi = (1i64 << (bits - 1)) - 1;
+                        let lo = -(1i64 << (bits - 1));
+                        (lo + rng.next_below((hi - lo + 1) as u64) as i64) as i32
+                    }
+                })
+                .collect();
+            let bp = pack_bit_planes(&vals, bits);
+            assert_eq!(unpack_bit_planes(&bp), vals, "bits={bits} n={n}");
+        }
+    }
+}
+
+#[test]
+fn prop_packed_fc_binary_bitexact_vs_scalar() {
+    let mut rng = SplitMix64::new(201);
+    for trial in 0..60 {
+        let f = 1 + rng.next_below(24) as usize;
+        let n = 1 + rng.next_below(200) as usize; // crosses the 64-lane boundary
+        let m = 1 + rng.next_below(48) as usize;
+        let bits = 1 + rng.next_below(16) as u8;
+        let threads = 1 + rng.next_below(4) as usize;
+        let x: Vec<f32> = (0..f * n).map(|_| rng.next_f32_range(-2.0, 2.0)).collect();
+        let w: Vec<f32> = (0..n * m).map(|_| rng.next_f32_range(-1.0, 1.0)).collect();
+        let wb = binarize(&w, n, m);
+        let scalar = engine_with(bits, Backend::Scalar, 1).fc_binary(&x, &wb, f);
+        let packed = engine_with(bits, Backend::Packed, threads).fc_binary(&x, &wb, f);
+        assert_eq!(
+            scalar.out, packed.out,
+            "trial {trial}: f={f} n={n} m={m} bits={bits} threads={threads}"
+        );
+        assert_eq!(scalar.macs, packed.macs);
+    }
+}
+
+#[test]
+fn prop_packed_qq_matmul_bitexact_vs_scalar() {
+    // Sweeps both sides of the bits² crossover (packed planes vs internal
+    // scalar fallback) — results must be identical everywhere.
+    let mut rng = SplitMix64::new(202);
+    for trial in 0..60 {
+        let f = 1 + rng.next_below(16) as usize;
+        let k = 1 + rng.next_below(200) as usize;
+        let m = 1 + rng.next_below(40) as usize;
+        let bits = 1 + rng.next_below(16) as u8;
+        let threads = 1 + rng.next_below(4) as usize;
+        let a: Vec<f32> = (0..f * k).map(|_| rng.next_f32_range(-2.0, 2.0)).collect();
+        let b: Vec<f32> = (0..k * m).map(|_| rng.next_f32_range(-2.0, 2.0)).collect();
+        let scalar = engine_with(bits, Backend::Scalar, 1).qq_matmul(&a, &b, f, k, m);
+        let packed = engine_with(bits, Backend::Packed, threads).qq_matmul(&a, &b, f, k, m);
+        assert_eq!(
+            scalar.out, packed.out,
+            "trial {trial}: f={f} k={k} m={m} bits={bits} threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn prop_row_parallel_fixed16_bitexact_vs_serial() {
+    let mut rng = SplitMix64::new(203);
+    for trial in 0..40 {
+        let f = 1 + rng.next_below(32) as usize;
+        let n = 1 + rng.next_below(64) as usize;
+        let m = 1 + rng.next_below(32) as usize;
+        let threads = 2 + rng.next_below(7) as usize;
+        let x: Vec<f32> = (0..f * n).map(|_| rng.next_f32_range(-2.0, 2.0)).collect();
+        let w: Vec<f32> = (0..n * m).map(|_| rng.next_f32_range(-1.0, 1.0)).collect();
+        let serial = engine_with(8, Backend::Packed, 1).fc_fixed16(&x, &w, f, n, m);
+        let parallel = engine_with(8, Backend::Packed, threads).fc_fixed16(&x, &w, f, n, m);
+        assert_eq!(serial.out, parallel.out, "trial {trial}: f={f} threads={threads}");
     }
 }
 

@@ -51,7 +51,15 @@ fn sim_vs_pjrt_cross_checks() {
         eprintln!("artifacts/ missing — run `make artifacts`; skipping");
         return;
     };
-    let mut engine = InferenceEngine::new().expect("pjrt client");
+    // Artifacts can exist in a build without the `pjrt` feature (the
+    // stub engine's constructor errors) — skip rather than panic.
+    let mut engine = match InferenceEngine::new() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("PJRT unavailable ({e}); skipping");
+            return;
+        }
+    };
     for v in &man.variants {
         engine.load_variant(v).expect("load variant");
     }

@@ -1,0 +1,119 @@
+//! Minimal offline stand-in for the `anyhow` crate (see Cargo.toml).
+//!
+//! API-compatible with the subset the workspace uses:
+//!
+//! * [`Error`] — a boxed message; displays like `anyhow::Error` for both
+//!   `{e}` and `{e:#}` (no cause chain, so they render identically).
+//! * [`Result`] with the `E = Error` default.
+//! * `?` conversion from any `std::error::Error` (mirrors the real
+//!   crate's blanket `From` — `Error` itself deliberately does NOT
+//!   implement `std::error::Error`, exactly like upstream, so the
+//!   blanket impl does not collide with the reflexive `From`).
+//! * [`anyhow!`], [`bail!`], [`ensure!`] in their format-string forms.
+
+use std::fmt;
+
+/// An error message. The real crate stores a boxed dyn error + backtrace;
+/// callers here only ever format it, so a `String` suffices.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result<T, anyhow::Error>` with the upstream default-parameter shape.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(concat!("condition failed: `", stringify!($cond), "`"));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> crate::Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn question_mark_propagates_own_error() {
+        fn inner() -> crate::Result<()> {
+            crate::bail!("inner failed: {}", 7)
+        }
+        fn outer() -> crate::Result<()> {
+            inner()?;
+            Ok(())
+        }
+        let e = outer().unwrap_err();
+        assert_eq!(format!("{e}"), "inner failed: 7");
+        assert_eq!(format!("{e:#}"), "inner failed: 7");
+    }
+
+    #[test]
+    fn ensure_both_arms() {
+        fn check(v: u32) -> crate::Result<()> {
+            crate::ensure!(v < 10);
+            crate::ensure!(v != 3, "three is right out (got {v})");
+            Ok(())
+        }
+        assert!(check(2).is_ok());
+        assert!(check(3).is_err());
+        assert!(check(11).is_err());
+    }
+}
