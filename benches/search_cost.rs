@@ -1,41 +1,44 @@
 //! Bench: the cost of the VAQF compilation step (paper §3: "several
 //! minutes to several hours" with Vivado in the loop; our analytical
 //! substitute runs in milliseconds-to-seconds) and the ≤4-round search
-//! guarantee.
+//! guarantee — each compile driven through a `vaqf::api` session.
 //!
 //! Run with: `cargo bench --bench search_cost`
 
-use vaqf::compiler::{compile, CompileRequest};
-use vaqf::hw::{zcu102, zcu111};
-use vaqf::model::VitPreset;
+use vaqf::api::TargetSpec;
 use vaqf::util::bench::{report_metric, Bench};
 
 fn main() {
     println!("== VAQF compilation-step cost ==\n");
     let mut bench = Bench::heavy();
-    for model in VitPreset::all() {
-        for (dev_name, dev) in [("zcu102", zcu102()), ("zcu111", zcu111())] {
-            let req = CompileRequest {
-                model: model.config(),
-                device: dev,
-                target_fps: 24.0,
-            };
-            let name = format!("compile {} @24FPS on {dev_name}", req.model.name);
+    for model in ["deit-tiny", "deit-small", "deit-base"] {
+        for dev_name in ["zcu102", "zcu111"] {
+            let name = format!("compile {model} @24FPS on {dev_name}");
+            // Fresh session per run: the session-level baseline cache
+            // would otherwise drop the baseline search from the cost.
             bench.run(&name, || {
-                let _ = compile(&req);
+                let session = TargetSpec::new()
+                    .model_preset(model)
+                    .device_preset(dev_name)
+                    .target_fps(24.0)
+                    .session()
+                    .expect("presets resolve");
+                let _ = session.compile();
             });
         }
     }
 
     println!("\nsearch-round accounting (paper: ≤4 rounds for range 1..16):");
     for fps in [5.0, 12.0, 24.0, 30.0, 40.0] {
-        let req = CompileRequest {
-            model: VitPreset::DeiTBase.config(),
-            device: zcu102(),
-            target_fps: fps,
-        };
-        match compile(&req) {
-            Ok(out) => {
+        let session = TargetSpec::new()
+            .model_preset("deit-base")
+            .device_preset("zcu102")
+            .target_fps(fps)
+            .session()
+            .expect("presets resolve");
+        match session.compile() {
+            Ok(design) => {
+                let out = design.outcome().expect("compile() records the search outcome");
                 report_metric(
                     &format!("target {fps:>4.0} FPS → W1A{} rounds", out.act_bits),
                     (out.rounds.len() - 1) as f64,

@@ -2,33 +2,26 @@
 //! Fig. 3 cross-validation — plus simulator throughput (simulated MACs/s,
 //! the perf target from DESIGN.md §Perf).
 //!
+//! All designs come from `vaqf::api` sessions (compiled parameters, not
+//! hand-picked tiles), so the comparison covers exactly what the compiler
+//! emits.
+//!
 //! Run with: `cargo bench --bench sim_vs_model`
 
-use vaqf::compiler::{optimize_baseline, optimize_for_bits};
-use vaqf::hw::zcu102;
-use vaqf::model::{deit_base, VitConfig};
+use vaqf::api::TargetSpec;
+use vaqf::model::micro;
 use vaqf::perf::model_cycles;
-use vaqf::sim::{generate_weights, model_timing, ModelExecutor};
+use vaqf::sim::model_timing;
 use vaqf::util::bench::{report_metric, Bench};
 
-fn micro() -> VitConfig {
-    VitConfig {
-        name: "micro".into(),
-        image_size: 32,
-        patch_size: 8,
-        in_chans: 3,
-        embed_dim: 32,
-        depth: 2,
-        num_heads: 4,
-        mlp_ratio: 4,
-        num_classes: 10,
-    }
-}
-
 fn main() {
-    let dev = zcu102();
-    let model = deit_base();
-    let base = optimize_baseline(&model.structure(None), &dev);
+    let deit = TargetSpec::new()
+        .model_preset("deit-base")
+        .device_preset("zcu102")
+        .session()
+        .expect("presets resolve");
+    let dev = deit.target().device.clone();
+    let model = deit.target().model.clone();
 
     println!("== timeline simulator vs analytical model (DeiT-base designs) ==\n");
     println!(
@@ -36,15 +29,14 @@ fn main() {
         "design", "analytic (cyc)", "timeline (cyc)", "ratio"
     );
     for bits in [None, Some(8), Some(6), Some(4)] {
+        let design = deit
+            .compile_for_bits(bits)
+            .expect("paper precisions are feasible on zcu102");
         let s = model.structure(bits);
-        let params = match bits {
-            None => base,
-            Some(b) => optimize_for_bits(&s, &base, &dev, b).unwrap().params,
-        };
-        let (analytic, per) = model_cycles(&s, &params, &dev);
+        let (analytic, per) = model_cycles(&s, design.params(), &dev);
         let host: u64 = per.iter().map(|c| c.host).sum();
         let engine = analytic - host;
-        let (timeline, _) = model_timing(&s, &params, &dev);
+        let (timeline, _) = model_timing(&s, design.params(), &dev);
         let label = bits.map(|b| format!("W1A{b}")).unwrap_or("W32A32".into());
         println!(
             "{:<10} {:>14} {:>14} {:>8.3}",
@@ -56,22 +48,17 @@ fn main() {
     }
 
     println!("\n== functional simulator throughput (micro model) ==");
-    let cfg = micro();
-    let weights = generate_weights(&cfg, 11);
-    let macs = cfg.structure(Some(8)).total_macs();
-    let g_q = vaqf::perf::AcceleratorParams::g_q_for(64, 8);
-    let params = vaqf::perf::AcceleratorParams {
-        t_m: 16,
-        t_n: 2,
-        t_m_q: 16,
-        t_n_q: 2 * g_q / 4,
-        g: 4,
-        g_q,
-        p_h: 4,
-        act_bits: Some(8),
-    };
-    let exec = ModelExecutor::new(weights.clone(), Some(8), params, dev.clone());
-    let patches = weights.synthetic_patches(0);
+    let micro_session = TargetSpec::new()
+        .model(micro())
+        .device_preset("zcu102")
+        .session()
+        .expect("presets resolve");
+    let macs = micro().structure(Some(8)).total_macs();
+    let exec = micro_session
+        .compile_for_bits(Some(8))
+        .expect("micro W1A8 feasible")
+        .simulator_with_seed(11);
+    let patches = exec.weights.synthetic_patches(0);
 
     let mut bench = Bench::new();
     let r = bench.run("sim run_frame (micro W1A8)", || {
@@ -83,12 +70,10 @@ fn main() {
         "M MACs/s",
     );
 
-    let fp = ModelExecutor::new(
-        weights.clone(),
-        None,
-        vaqf::perf::AcceleratorParams::baseline(16, 2, 4, 4),
-        dev,
-    );
+    let fp = micro_session
+        .compile_for_bits(None)
+        .expect("micro baseline feasible")
+        .simulator_with_seed(11);
     let r2 = bench.run("sim run_frame (micro W32A32 fixed16)", || {
         let _ = fp.run_frame(&patches);
     });

@@ -1,21 +1,26 @@
 //! Bench: regenerate paper Table 5 — resource utilization and performance
 //! of the VAQF-generated DeiT-base accelerators (W32A32 / W1A8 / W1A6) on
-//! the simulated ZCU102 — and time the generation itself.
+//! the simulated ZCU102 — and time the generation itself. Rows come from
+//! one `vaqf::api` session.
 //!
 //! Run with: `cargo bench --bench table5_accelerators`
 
-use vaqf::compiler::{render_table5, table5_rows, PAPER_TABLE5};
-use vaqf::hw::zcu102;
-use vaqf::model::deit_base;
+use vaqf::api::{render_table5, TargetSpec};
+use vaqf::compiler::PAPER_TABLE5;
 use vaqf::util::bench::{report_metric, Bench};
 
 fn main() {
-    let dev = zcu102();
-    let model = deit_base();
+    let session = TargetSpec::new()
+        .model_preset("deit-base")
+        .device_preset("zcu102")
+        .session()
+        .expect("presets resolve");
 
     println!("== Table 5 regeneration (DeiT-base on simulated ZCU102) ==\n");
-    let rows = table5_rows(&model, &dev, &[8, 6]);
-    println!("{}", render_table5(&rows, &dev));
+    let rows = session
+        .table5(&[8, 6])
+        .expect("paper precisions are feasible on zcu102");
+    println!("{}", render_table5(&rows, &session.target().device));
 
     println!("paper-vs-measured:");
     for (label, paper_fps, paper_gops) in PAPER_TABLE5 {
@@ -45,9 +50,16 @@ fn main() {
         report_metric(&format!("{} GOPS/kLUT", r.label), r.gops_per_klut, "");
     }
 
+    // Fresh session per run: the session-level baseline cache would
+    // otherwise hide the baseline search from the measurement.
     println!("\ntiming the generation pipeline:");
     let mut bench = Bench::heavy();
     bench.run("table5_rows (3 designs, full optimization)", || {
-        let _ = table5_rows(&model, &dev, &[8, 6]);
+        let fresh = TargetSpec::new()
+            .model_preset("deit-base")
+            .device_preset("zcu102")
+            .session()
+            .expect("presets resolve");
+        let _ = fresh.table5(&[8, 6]);
     });
 }

@@ -5,42 +5,50 @@
 //! Sweeps DeiT-{tiny,small,base} across ZCU102 / ZCU111 / a small edge
 //! device and a ladder of real-time targets (video: 15/24/30/60 FPS),
 //! printing the feasibility frontier the way a deployment engineer would
-//! read it.
+//! read it. Each cell is one `vaqf::api` session; infeasible targets
+//! surface as the typed `VaqfError::Infeasible`.
 //!
 //! Run with: `cargo run --release --example codesign_explore`
 
-use vaqf::compiler::{compile, CompileRequest};
-use vaqf::hw::DevicePreset;
-use vaqf::model::VitPreset;
+use vaqf::api::TargetSpec;
 
 fn main() {
     let targets = [15.0, 24.0, 30.0, 60.0];
+    let devices = ["zcu102", "zcu111", "generic-edge"];
+    let models = ["deit-tiny", "deit-small", "deit-base"];
     println!("=== VAQF co-design exploration ===");
     println!(
         "cell = chosen activation precision (predicted FPS) | '—' = infeasible (FR_tgt > FR_max)\n"
     );
-    for device in [DevicePreset::Zcu102, DevicePreset::Zcu111, DevicePreset::GenericEdge] {
-        let dev = device.device();
+    for device in devices {
+        let session = TargetSpec::new()
+            .device_preset(device)
+            .session()
+            .expect("device presets resolve");
+        let dev = &session.target().device;
         println!("device {}  ({} DSP, {}k LUT)", dev.name, dev.budget.dsp, dev.budget.lut / 1000);
         print!("{:<12}", "model");
         for t in targets {
             print!(" | {t:>14.0} FPS");
         }
         println!();
-        for model in VitPreset::all() {
-            let cfg = model.config();
-            print!("{:<12}", cfg.name);
+        for model in models {
+            // One session per (model, device): the fps ladder reuses the
+            // session's cached baseline design-space search.
+            let cell_session = TargetSpec::new()
+                .model_preset(model)
+                .device_preset(device)
+                .session()
+                .expect("presets resolve");
+            print!("{model:<12}");
             for &t in &targets {
-                let req = CompileRequest {
-                    model: cfg.clone(),
-                    device: dev.clone(),
-                    target_fps: t,
-                };
-                match compile(&req) {
-                    Ok(out) => print!(
+                match cell_session.compile_at(t) {
+                    Ok(design) => print!(
                         " | W1A{:<2} ({:>6.1}) ",
-                        out.act_bits, out.design.summary.fps
+                        design.act_bits().unwrap_or(16),
+                        design.summary().fps
                     ),
+                    // VaqfError::Infeasible (FR_tgt > FR_max) and friends.
                     Err(_) => print!(" | {:^14} ", "—"),
                 }
             }

@@ -1,69 +1,61 @@
-//! END-TO-END driver: proves all three layers compose.
+//! END-TO-END driver: proves all three layers compose — through `vaqf::api`.
 //!
 //! 1. Loads the AOT artifacts (`make artifacts`): the L2 JAX model with
 //!    the L1 Pallas binary-matmul/attention kernels lowered into HLO text,
-//!    compiles them on the PJRT CPU client (the Rust runtime — no Python
+//!    compiled on the PJRT CPU client (`api::PjrtRuntime` — no Python
 //!    anywhere on this path).
 //! 2. Runs the VAQF compiler (L3) for the micro model on the simulated
 //!    ZCU102 and instantiates the cycle-level accelerator simulator with
-//!    the chosen parameters.
+//!    the chosen parameters (`CompiledDesign::simulator_with_seed`).
 //! 3. **Cross-checks** the simulator's functional logits against the PJRT
 //!    runtime's logits frame by frame (identical weights via the shared
 //!    SplitMix64 stream) — the numerical proof that the Rust integer
 //!    datapath computes the same function the JAX/Pallas model defines.
-//! 4. Serves a batched request stream through both backends and reports
-//!    latency/throughput (recorded in EXPERIMENTS.md §E2E).
+//! 4. Serves a batched request stream through both backends
+//!    (`CompiledDesign::server`) and reports latency/throughput (recorded
+//!    in EXPERIMENTS.md §E2E).
 //!
 //! Run with: `make artifacts && cargo run --release --example e2e_deit_serving`
 
-use vaqf::compiler::{compile, CompileRequest};
-use vaqf::coordinator::{serve, FrameSource, ServeConfig};
-use vaqf::hw::zcu102;
-use vaqf::runtime::{InferenceEngine, Manifest, PjrtBackend, SimBackend};
-use vaqf::sim::{generate_weights, ModelExecutor};
+use vaqf::api::{PjrtRuntime, Result, ServeBackendOpt, ServeOpts, TargetSpec, VaqfError};
 use vaqf::util::stats::Summary;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
     println!("=== VAQF end-to-end: AOT artifacts → PJRT runtime ⇄ FPGA simulator ===\n");
 
     // ---- 1. load artifacts ------------------------------------------------
-    let man = Manifest::load(&artifacts)?;
-    let mut engine = InferenceEngine::new()?;
-    for v in &man.variants {
-        engine.load_variant(v)?;
+    let runtime = PjrtRuntime::load(&artifacts)?;
+    for v in &runtime.manifest().variants {
         println!("loaded {} ({} params, HLO {})", v.tag, v.param_count, v.hlo_path.display());
     }
-    println!("PJRT platform: {}\n", engine.platform());
+    println!("PJRT platform: {}\n", runtime.platform());
 
     // ---- 2. compile an accelerator for the micro model --------------------
-    let entry = man
+    let entry = runtime
+        .manifest()
         .find("micro_w1a8")
-        .ok_or_else(|| anyhow::anyhow!("micro_w1a8 missing from manifest"))?;
-    let device = zcu102();
-    let request = CompileRequest {
-        model: entry.config.clone(),
-        device: device.clone(),
+        .ok_or_else(|| VaqfError::config("micro_w1a8 missing from manifest"))?;
+    let session = TargetSpec::new()
+        .model(entry.config.clone())
+        .device_preset("zcu102")
         // The micro model is tiny; ask for a high-rate camera.
-        target_fps: 1000.0,
-    };
-    let outcome = compile(&request)?;
+        .target_fps(1000.0)
+        .session()?;
+    let compiled = session.compile()?;
     println!(
         "compiled accelerator: W1A{} predicted {:.0} FPS on {} (T_m^q={}, G^q={})\n",
-        outcome.act_bits,
-        outcome.design.summary.fps,
-        device.name,
-        outcome.design.params.t_m_q,
-        outcome.design.params.g_q
+        compiled.act_bits().unwrap_or(16),
+        compiled.summary().fps,
+        session.target().device.name,
+        compiled.params().t_m_q,
+        compiled.params().g_q
     );
 
     // The artifact precision is fixed at 8-bit; build the simulator with
     // the corresponding design point (re-optimized at exactly 8 bits).
-    let base = vaqf::compiler::optimize_baseline(&entry.config.structure(None), &device);
-    let design8 =
-        vaqf::compiler::optimize_for_bits(&entry.config.structure(Some(8)), &base, &device, 8)?;
-    let weights = generate_weights(&entry.config, entry.seed);
-    let executor = ModelExecutor::new(weights.clone(), Some(8), design8.params, device.clone());
+    let design8 = session.compile_for_bits(Some(8))?;
+    let executor = design8.simulator_with_seed(entry.seed);
 
     // ---- 3. numerical cross-check: sim vs PJRT ---------------------------
     println!("--- cross-check: simulator (integer datapath) vs PJRT (JAX/Pallas HLO) ---");
@@ -71,9 +63,9 @@ fn main() -> anyhow::Result<()> {
     let mut agree = 0usize;
     const FRAMES: u64 = 8;
     for fid in 0..FRAMES {
-        let patches = weights.synthetic_patches(fid);
+        let patches = executor.weights.synthetic_patches(fid);
         let (sim_logits, _) = executor.run_frame(&patches);
-        let pjrt_logits = engine.infer("micro_w1a8", &patches)?;
+        let pjrt_logits = runtime.infer("micro_w1a8", &patches)?;
         let scale = pjrt_logits
             .iter()
             .fold(0.0f32, |m, v| m.max(v.abs()))
@@ -99,64 +91,47 @@ fn main() -> anyhow::Result<()> {
             if same { "match" } else { "MISMATCH" }
         );
     }
-    println!(
-        "cross-check: {agree}/{FRAMES} top-1 agreement, max relative error {max_rel:.4}\n"
-    );
-    anyhow::ensure!(
-        max_rel < 0.05,
-        "simulator and PJRT runtime disagree beyond fixed-point tolerance"
-    );
-    anyhow::ensure!(agree as u64 == FRAMES, "top-1 disagreement");
+    println!("cross-check: {agree}/{FRAMES} top-1 agreement, max relative error {max_rel:.4}\n");
+    if max_rel >= 0.05 {
+        return Err(VaqfError::runtime(anyhow::anyhow!(
+            "simulator and PJRT runtime disagree beyond fixed-point tolerance"
+        )));
+    }
+    if agree as u64 != FRAMES {
+        return Err(VaqfError::runtime(anyhow::anyhow!("top-1 disagreement")));
+    }
 
     // ---- 4. serve batched requests through both backends ------------------
     println!("--- serving 120 frames @ 200 FPS offered ---");
-    let serve_cfg = ServeConfig {
+    let base_opts = ServeOpts {
+        backend: ServeBackendOpt::Sim { realtime: false },
         offered_fps: 200.0,
         frames: 120,
         queue_depth: 4,
-        source_seed: man.seed,
+        source_seed: runtime.manifest().seed,
+        weights_seed: entry.seed,
     };
 
-    let source = FrameSource::new(entry.config.clone(), man.seed, Some(serve_cfg.offered_fps));
-    let pjrt_report = serve(
-        source,
-        Box::new(PjrtBackend {
-            engine: std::rc::Rc::new(engine),
-            tag: "micro_w1a8".into(),
-        }),
-        &serve_cfg,
-    )?;
+    // Reuses the engine compiled in step 1 — no second XLA compilation.
+    let pjrt_report = runtime.server("micro_w1a8", &base_opts)?;
     println!("{}", pjrt_report.render());
 
-    let source = FrameSource::new(entry.config.clone(), man.seed, Some(serve_cfg.offered_fps));
-    let sim_report = serve(
-        source,
-        Box::new(SimBackend {
-            executor,
-            realtime: false,
-        }),
-        &serve_cfg,
-    )?;
+    let sim_report = design8.server(&base_opts)?;
     println!("{}", sim_report.render());
 
     // Simulated-FPGA frame rate for the compiled design (what the board
-    // would sustain at 150 MHz):
+    // would sustain at 150 MHz), reusing the step-3 executor:
     let sim_fps: Vec<f64> = (0..4)
         .map(|i| {
-            let exec = ModelExecutor::new(
-                weights.clone(),
-                Some(8),
-                design8.params,
-                device.clone(),
-            );
-            let (_, t) = exec.run_frame(&weights.synthetic_patches(i));
+            let (_, t) = executor.run_frame(&executor.weights.synthetic_patches(i));
             t.fps()
         })
         .collect();
     let s = Summary::from(&sim_fps);
     println!(
         "simulated accelerator sustained rate: {:.0} FPS (design prediction {:.0} FPS)",
-        s.mean, design8.summary.fps
+        s.mean,
+        design8.summary().fps
     );
     println!("\nE2E OK — all layers compose.");
     Ok(())

@@ -1,27 +1,28 @@
-//! Quickstart: the full VAQF flow of paper Fig. 1 in ~30 lines.
+//! Quickstart: the full VAQF flow of paper Fig. 1 in ~30 lines of
+//! `vaqf::api`.
 //!
 //! Input: a ViT structure (DeiT-base) + a target frame rate (24 FPS).
 //! Output: the activation precision, the accelerator parameters, and the
-//! generated accelerator description.
+//! generated accelerator description — all from one typed pipeline:
+//! `TargetSpec → Session → CompiledDesign`.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
-use vaqf::compiler::{compile, emit_config_json, emit_hls_cpp, CompileRequest};
-use vaqf::hw::zcu102;
-use vaqf::model::deit_base;
+use vaqf::api::{Result, TargetSpec};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // 1. The user provides the model structure and the desired frame rate.
-    let request = CompileRequest {
-        model: deit_base(),
-        device: zcu102(),
-        target_fps: 24.0,
-    };
+    let session = TargetSpec::new()
+        .model_preset("deit-base")
+        .device_preset("zcu102")
+        .target_fps(24.0)
+        .session()?;
 
     // 2. The compilation step: feasibility (FR_max), ≤4-round binary
     //    search over activation precision, accelerator parameter
     //    optimization per §5.3.2.
-    let outcome = compile(&request)?;
+    let design = session.compile()?;
+    let outcome = design.outcome().expect("compile() records the search outcome");
 
     println!("=== VAQF quickstart: DeiT-base @ 24 FPS on ZCU102 ===\n");
     println!("FR_max (all-binary probe): {:.1} FPS", outcome.fr_max);
@@ -34,9 +35,13 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    let s = &outcome.design.summary;
+    let s = design.summary();
     println!("\nchosen: W1A{} ", outcome.act_bits);
-    println!("  predicted frame rate : {:.1} FPS (target {:.0})", s.fps, request.target_fps);
+    println!(
+        "  predicted frame rate : {:.1} FPS (target {:.0})",
+        s.fps,
+        session.target().target_fps
+    );
     println!("  throughput           : {:.1} GOPS", s.gops);
     println!("  power                : {:.1} W  ({:.2} FPS/W)", s.power_w, s.fps_per_w);
     println!(
@@ -52,12 +57,11 @@ fn main() -> anyhow::Result<()> {
     // 3. On the software side the chosen precision drives QAT
     //    (python/compile/train.py); on the hardware side the parameters
     //    drive the generated accelerator:
-    let structure = request.model.structure(Some(outcome.act_bits));
-    let cpp = emit_hls_cpp(&outcome, &structure, &request.device);
+    let cpp = design.hls_source();
     let header: String = cpp.lines().take(18).collect::<Vec<_>>().join("\n");
     println!("\n--- generated HLS description (head) ---\n{header}\n...");
 
-    let config = emit_config_json(&outcome, &request.device);
+    let config = design.config_json();
     println!(
         "\n--- simulator config ---\n{}",
         config.get("params").unwrap().pretty()

@@ -1,0 +1,186 @@
+//! The library-boundary error type.
+//!
+//! Everything `vaqf::api` returns fails with [`VaqfError`], so embedders can
+//! match on *what* went wrong (unknown preset, infeasible target, broken
+//! config, …) instead of parsing message strings. Lower layers of the crate
+//! keep using `anyhow` internally; the facade converts at the boundary and
+//! preserves the original message text verbatim (the CLI prints these, so
+//! they stay what the pre-facade binary printed).
+
+use std::fmt;
+
+/// Boundary result type for the [`crate::api`] facade.
+pub type Result<T> = std::result::Result<T, VaqfError>;
+
+/// Why a facade call failed.
+///
+/// Marked `#[non_exhaustive]`: new failure classes may be added without a
+/// breaking change, so downstream matches need a wildcard arm.
+#[derive(Debug)]
+#[non_exhaustive]
+pub enum VaqfError {
+    /// A model / device / kernel-backend name did not resolve to a preset.
+    UnknownPreset {
+        /// What kind of name failed to resolve: `"model"`, `"device"` or
+        /// `"kernel backend"`.
+        kind: &'static str,
+        name: String,
+    },
+    /// The §3 infeasibility case: `FR_tgt > FR_max` — no activation
+    /// precision can satisfy the requested frame rate on this device.
+    Infeasible {
+        model: String,
+        device: String,
+        target_fps: f64,
+        fr_max: f64,
+    },
+    /// A config document, CLI flag or environment variable failed to parse.
+    Config { message: String },
+    /// Filesystem failure (config files, codegen artifacts).
+    Io {
+        context: String,
+        source: std::io::Error,
+    },
+    /// The artifacts manifest is missing or malformed.
+    Manifest { message: String },
+    /// The design-space optimizer found no feasible accelerator at a
+    /// requested precision (distinct from [`VaqfError::Infeasible`], which
+    /// is about the frame-rate target).
+    Search { message: String },
+    /// A runtime or serving failure (PJRT engine, serving loop).
+    Runtime { message: String },
+}
+
+impl VaqfError {
+    /// Unknown model preset name.
+    pub fn unknown_model(name: impl Into<String>) -> VaqfError {
+        VaqfError::UnknownPreset {
+            kind: "model",
+            name: name.into(),
+        }
+    }
+
+    /// Unknown device preset name.
+    pub fn unknown_device(name: impl Into<String>) -> VaqfError {
+        VaqfError::UnknownPreset {
+            kind: "device",
+            name: name.into(),
+        }
+    }
+
+    /// Unknown simulator kernel backend name.
+    pub fn unknown_backend(name: impl Into<String>) -> VaqfError {
+        VaqfError::UnknownPreset {
+            kind: "kernel backend",
+            name: name.into(),
+        }
+    }
+
+    /// Configuration / flag / env-var parse failure.
+    pub fn config(message: impl Into<String>) -> VaqfError {
+        VaqfError::Config {
+            message: message.into(),
+        }
+    }
+
+    /// Filesystem failure with the path (or operation) as context.
+    pub fn io(context: impl Into<String>, source: std::io::Error) -> VaqfError {
+        VaqfError::Io {
+            context: context.into(),
+            source,
+        }
+    }
+
+    /// Wrap a lower-layer manifest error, keeping its message.
+    pub fn manifest(error: anyhow::Error) -> VaqfError {
+        VaqfError::Manifest {
+            message: error.to_string(),
+        }
+    }
+
+    /// Wrap a lower-layer design-search error, keeping its message.
+    pub fn search(error: anyhow::Error) -> VaqfError {
+        VaqfError::Search {
+            message: error.to_string(),
+        }
+    }
+
+    /// Wrap a lower-layer runtime/serving error, keeping its message.
+    pub fn runtime(error: anyhow::Error) -> VaqfError {
+        VaqfError::Runtime {
+            message: error.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for VaqfError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            VaqfError::UnknownPreset { kind, name } => {
+                let known = match *kind {
+                    "model" => crate::model::VitPreset::NAMES,
+                    "device" => crate::hw::DevicePreset::NAMES,
+                    _ => crate::sim::Backend::NAMES,
+                };
+                write!(f, "unknown {kind} `{name}` ({known})")
+            }
+            VaqfError::Infeasible { model, device, target_fps, fr_max } => write!(
+                f,
+                "target {target_fps:.1} FPS exceeds FR_max = {fr_max:.1} FPS for {model} on \
+                 {device} — no activation precision can satisfy it"
+            ),
+            VaqfError::Config { message }
+            | VaqfError::Manifest { message }
+            | VaqfError::Search { message }
+            | VaqfError::Runtime { message } => f.write_str(message),
+            VaqfError::Io { context, source } => write!(f, "{context}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for VaqfError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            VaqfError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_legacy_messages() {
+        assert_eq!(
+            VaqfError::unknown_model("resnet").to_string(),
+            "unknown model `resnet` (deit-tiny/small/base/micro)"
+        );
+        assert_eq!(
+            VaqfError::unknown_device("virtex").to_string(),
+            "unknown device `virtex` (zcu102/zcu111/generic-edge)"
+        );
+        assert_eq!(
+            VaqfError::unknown_backend("simd").to_string(),
+            "unknown kernel backend `simd` (scalar|packed)"
+        );
+        let inf = VaqfError::Infeasible {
+            model: "deit-base".into(),
+            device: "generic-edge".into(),
+            target_fps: 60.0,
+            fr_max: 12.3,
+        };
+        assert_eq!(
+            inf.to_string(),
+            "target 60.0 FPS exceeds FR_max = 12.3 FPS for deit-base on generic-edge — \
+             no activation precision can satisfy it"
+        );
+    }
+
+    #[test]
+    fn search_wrapper_preserves_message() {
+        let e = VaqfError::search(anyhow::anyhow!("no feasible design"));
+        assert_eq!(e.to_string(), "no feasible design");
+    }
+}

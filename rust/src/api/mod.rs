@@ -1,0 +1,58 @@
+//! The typed facade over the whole co-design pipeline — the crate's front
+//! door.
+//!
+//! VAQF's pitch is *fully automatic*: given a model structure and a frame
+//! rate, everything downstream — precision, accelerator parameters,
+//! generated artifacts, simulator, serving loop — is derived. This module
+//! makes that one typed pipeline:
+//!
+//! ```text
+//! TargetSpec ──resolve──► Session ──compile──► CompiledDesign
+//!   (layered:                │                     ├── .codegen(dir)      HLS C++ + JSON
+//!    defaults                │ compile_for_bits    ├── .simulator()       cycle-level ModelExecutor
+//!    < config file           │ sweep / table5      └── .server(ServeOpts) sim/pjrt serving loop
+//!    < env < explicit)       ▼
+//! ```
+//!
+//! ```no_run
+//! use vaqf::api::TargetSpec;
+//!
+//! let design = TargetSpec::new()
+//!     .model_preset("deit-base")
+//!     .device_preset("zcu102")
+//!     .target_fps(24.0)
+//!     .session()?
+//!     .compile()?;
+//! println!("chosen precision: W1A{}", design.act_bits().unwrap());
+//! design.codegen("out")?;
+//! # Ok::<(), vaqf::api::VaqfError>(())
+//! ```
+//!
+//! Every facade call fails with the matchable [`VaqfError`] instead of a
+//! stringly-typed error: `UnknownPreset` for typo'd names, `Infeasible`
+//! for the §3 `FR_tgt > FR_max` case, `Config`/`Io` for broken inputs.
+//! The CLI (`src/main.rs`), the examples and the benches are all thin
+//! layers over this module.
+
+mod error;
+mod serve;
+mod session;
+mod spec;
+
+pub use error::{Result, VaqfError};
+pub use serve::{PjrtRuntime, ServeBackendOpt, ServeOpts};
+pub use session::{CodegenArtifacts, CompiledDesign, PrecisionSweep, Session, SweepPoint};
+pub use spec::TargetSpec;
+
+// Re-exports of the pipeline's data types and report renderers, so facade
+// callers don't need to reach into the layer modules for what the facade
+// itself hands out.
+pub use crate::compiler::{
+    render_table5, render_table6, table6_rows, CompileOutcome, DesignPoint, SearchRound,
+};
+pub use crate::config::Target;
+pub use crate::coordinator::ServingReport;
+pub use crate::hw::Device;
+pub use crate::model::VitConfig;
+pub use crate::perf::{AcceleratorParams, PerfSummary};
+pub use crate::sim::Backend;

@@ -1,0 +1,164 @@
+//! Serving facade: the full `FrameSource → queue → backend` loop behind
+//! one call, with the `sim` / `pjrt` [`InferenceBackend`] constructed
+//! internally from the compiled design.
+
+use std::rc::Rc;
+
+use crate::coordinator::{serve, FrameSource, ServeConfig, ServingReport};
+use crate::runtime::{InferenceBackend, InferenceEngine, Manifest, PjrtBackend, SimBackend};
+
+use super::error::{Result, VaqfError};
+use super::session::CompiledDesign;
+
+/// Which inference backend serves the frames.
+#[derive(Debug, Clone)]
+pub enum ServeBackendOpt {
+    /// The cycle-level simulated FPGA running this compiled design.
+    /// `realtime` paces wall-clock to the simulated latency (realistic
+    /// serving) instead of running as fast as the host allows.
+    Sim { realtime: bool },
+    /// PJRT CPU execution of an AOT artifact variant from the manifest in
+    /// `artifacts` (requires the `pjrt` feature at build time).
+    Pjrt { artifacts: String, variant: String },
+}
+
+/// Options for one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    pub backend: ServeBackendOpt,
+    /// Frames the synthetic camera offers per second.
+    pub offered_fps: f64,
+    /// Total frames to offer.
+    pub frames: u64,
+    /// Queue depth before drop-oldest backpressure kicks in.
+    pub queue_depth: usize,
+    /// Seed for the synthetic frame source.
+    pub source_seed: u64,
+    /// Seed for the simulator's generated weights (sim backend only).
+    pub weights_seed: u64,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            backend: ServeBackendOpt::Sim { realtime: false },
+            offered_fps: 30.0,
+            frames: 90,
+            queue_depth: 2,
+            source_seed: 11,
+            weights_seed: 11,
+        }
+    }
+}
+
+impl CompiledDesign {
+    /// Run the serving loop against this design; blocks until every
+    /// offered frame is served or dropped and returns the report.
+    ///
+    /// The `sim` backend simulates *this* compiled design (parameters,
+    /// kernel backend, thread fan-out all from the resolved target); the
+    /// `pjrt` backend loads and compiles the named manifest variant
+    /// (independent of the design — equivalent to
+    /// [`PjrtRuntime::load_variant`] + [`PjrtRuntime::server`]).
+    pub fn server(&self, opts: &ServeOpts) -> Result<ServingReport> {
+        let realtime = match &opts.backend {
+            ServeBackendOpt::Sim { realtime } => *realtime,
+            ServeBackendOpt::Pjrt { artifacts, variant } => {
+                return PjrtRuntime::load_variant(artifacts, variant)?.server(variant, opts);
+            }
+        };
+        let cfg = ServeConfig {
+            offered_fps: opts.offered_fps,
+            frames: opts.frames,
+            queue_depth: opts.queue_depth,
+            source_seed: opts.source_seed,
+        };
+        let executor = self.simulator_with_seed(opts.weights_seed);
+        let source = FrameSource::new(
+            self.target().model.clone(),
+            cfg.source_seed,
+            Some(cfg.offered_fps),
+        );
+        let backend: Box<dyn InferenceBackend> = Box::new(SimBackend { executor, realtime });
+        serve(source, backend, &cfg).map_err(VaqfError::runtime)
+    }
+}
+
+/// Facade over the PJRT runtime: the manifest plus one engine with every
+/// variant compiled and loaded — the e2e cross-check path. Construction
+/// fails with [`VaqfError::Runtime`] on builds without the `pjrt` feature
+/// and with [`VaqfError::Manifest`] when the artifacts are missing.
+pub struct PjrtRuntime {
+    manifest: Manifest,
+    engine: Rc<InferenceEngine>,
+}
+
+impl PjrtRuntime {
+    /// Load `<dir>/manifest.json` and compile every variant it lists.
+    pub fn load(artifacts: impl AsRef<std::path::Path>) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(artifacts.as_ref()).map_err(VaqfError::manifest)?;
+        let mut engine = InferenceEngine::new().map_err(VaqfError::runtime)?;
+        for v in &manifest.variants {
+            engine.load_variant(v).map_err(VaqfError::runtime)?;
+        }
+        Ok(PjrtRuntime {
+            manifest,
+            engine: Rc::new(engine),
+        })
+    }
+
+    /// Load the manifest but compile only `variant` — the serving path
+    /// ([`PjrtRuntime::load`] compiles every variant for cross-checks).
+    pub fn load_variant(
+        artifacts: impl AsRef<std::path::Path>,
+        variant: &str,
+    ) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(artifacts.as_ref()).map_err(VaqfError::manifest)?;
+        let entry = manifest.find(variant).ok_or_else(|| VaqfError::Manifest {
+            message: format!("variant {variant} not in manifest"),
+        })?;
+        let mut engine = InferenceEngine::new().map_err(VaqfError::runtime)?;
+        engine.load_variant(entry).map_err(VaqfError::runtime)?;
+        Ok(PjrtRuntime {
+            manifest,
+            engine: Rc::new(engine),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// The PJRT platform name (e.g. `cpu`).
+    pub fn platform(&self) -> String {
+        self.engine.platform()
+    }
+
+    /// Run one frame through the named variant, returning the logits.
+    pub fn infer(&self, tag: &str, patches: &[f32]) -> Result<Vec<f32>> {
+        self.engine.infer(tag, patches).map_err(VaqfError::runtime)
+    }
+
+    /// Run the serving loop through one already-loaded variant, reusing
+    /// this runtime's compiled engine — unlike
+    /// [`CompiledDesign::server`]'s `Pjrt` option, nothing is re-loaded or
+    /// re-compiled. `opts.backend` and `opts.weights_seed` are ignored
+    /// (the backend is this runtime; the weights are the artifact's).
+    pub fn server(&self, variant: &str, opts: &ServeOpts) -> Result<ServingReport> {
+        let entry = self.manifest.find(variant).ok_or_else(|| VaqfError::Manifest {
+            message: format!("variant {variant} not in manifest"),
+        })?;
+        let cfg = ServeConfig {
+            offered_fps: opts.offered_fps,
+            frames: opts.frames,
+            queue_depth: opts.queue_depth,
+            source_seed: opts.source_seed,
+        };
+        let source = FrameSource::new(entry.config.clone(), cfg.source_seed, Some(cfg.offered_fps));
+        let backend: Box<dyn InferenceBackend> = Box::new(PjrtBackend {
+            engine: Rc::clone(&self.engine),
+            tag: variant.to_string(),
+        });
+        serve(source, backend, &cfg).map_err(VaqfError::runtime)
+    }
+}

@@ -1,0 +1,382 @@
+//! Layered target resolution — the single place where "which model, which
+//! device, which knobs" is decided.
+//!
+//! Precedence, lowest to highest:
+//!
+//! 1. **defaults** — deit-base on zcu102 @ 24 FPS, packed kernels,
+//!    environment thread fan-out (overridable per-spec via
+//!    [`TargetSpec::default_model`], e.g. `vaqf simulate` falls back to the
+//!    micro model);
+//! 2. **config file** — a `config::Target` JSON document (only the fields
+//!    the document actually sets participate);
+//! 3. **environment** — `VAQF_MODEL`, `VAQF_DEVICE`, `VAQF_TARGET_FPS`,
+//!    `VAQF_BACKEND`, `VAQF_THREADS`;
+//! 4. **explicit setters** — builder methods / CLI flags.
+//!
+//! Resolution is a pure function of the spec and an environment lookup
+//! ([`TargetSpec::resolve_with`]), so the precedence rules are directly
+//! testable without mutating process-global state.
+
+use std::path::Path;
+
+use crate::config::{self, Target};
+use crate::hw::{Device, DevicePreset};
+use crate::model::{VitConfig, VitPreset};
+use crate::sim::Backend;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+use super::error::{Result, VaqfError};
+use super::session::Session;
+
+/// Model selection: a preset name (resolved at [`TargetSpec::resolve`]
+/// time, so typos surface as [`VaqfError::UnknownPreset`]) or a concrete
+/// configuration.
+#[derive(Debug, Clone)]
+enum ModelSel {
+    Preset(String),
+    Config(VitConfig),
+}
+
+#[derive(Debug, Clone)]
+enum DeviceSel {
+    Preset(String),
+    Device(Device),
+}
+
+/// One precedence layer of partially-specified settings.
+#[derive(Debug, Clone, Default)]
+struct SpecLayer {
+    model: Option<ModelSel>,
+    device: Option<DeviceSel>,
+    target_fps: Option<f64>,
+    backend: Option<Backend>,
+    threads: Option<usize>,
+}
+
+/// Builder for a compile [`Target`] with layered precedence (see the
+/// module docs). The typed entry point of the whole pipeline:
+/// `TargetSpec → Session → CompiledDesign → codegen / simulator / server`.
+#[derive(Debug, Clone, Default)]
+pub struct TargetSpec {
+    defaults: SpecLayer,
+    file: SpecLayer,
+    explicit: SpecLayer,
+}
+
+impl TargetSpec {
+    pub fn new() -> TargetSpec {
+        TargetSpec::default()
+    }
+
+    // ---- explicit setters (highest precedence) -----------------------------
+
+    /// Use a concrete model configuration.
+    pub fn model(mut self, config: VitConfig) -> TargetSpec {
+        self.explicit.model = Some(ModelSel::Config(config));
+        self
+    }
+
+    /// Select a model preset by name (validated at resolve time).
+    pub fn model_preset(mut self, name: impl Into<String>) -> TargetSpec {
+        self.explicit.model = Some(ModelSel::Preset(name.into()));
+        self
+    }
+
+    /// Use a concrete device inventory.
+    pub fn device(mut self, device: Device) -> TargetSpec {
+        self.explicit.device = Some(DeviceSel::Device(device));
+        self
+    }
+
+    /// Select a device preset by name (validated at resolve time).
+    pub fn device_preset(mut self, name: impl Into<String>) -> TargetSpec {
+        self.explicit.device = Some(DeviceSel::Preset(name.into()));
+        self
+    }
+
+    /// The frame-rate target `FR_tgt`.
+    pub fn target_fps(mut self, fps: f64) -> TargetSpec {
+        self.explicit.target_fps = Some(fps);
+        self
+    }
+
+    /// Simulator kernel backend (throughput choice, never results).
+    pub fn backend(mut self, backend: Backend) -> TargetSpec {
+        self.explicit.backend = Some(backend);
+        self
+    }
+
+    /// [`TargetSpec::backend`] by name, erroring on unknown names.
+    pub fn backend_name(self, name: &str) -> Result<TargetSpec> {
+        match Backend::from_name(name) {
+            Some(b) => Ok(self.backend(b)),
+            None => Err(VaqfError::unknown_backend(name)),
+        }
+    }
+
+    /// Simulator row-parallel worker count (`0` ⇒ environment default).
+    pub fn threads(mut self, threads: usize) -> TargetSpec {
+        self.explicit.threads = Some(threads);
+        self
+    }
+
+    // ---- fallback layer (lowest precedence) --------------------------------
+
+    /// Replace the built-in fallback model (deit-base) without outranking
+    /// config files, env vars or explicit setters — e.g. `vaqf simulate`
+    /// falls back to the micro model, `vaqf serve` to the manifest
+    /// variant's model.
+    pub fn default_model(mut self, config: VitConfig) -> TargetSpec {
+        self.defaults.model = Some(ModelSel::Config(config));
+        self
+    }
+
+    // ---- config-file layer -------------------------------------------------
+
+    /// Layer a `config::Target` JSON file under env vars and explicit
+    /// setters. Only the fields the file sets participate; calling this
+    /// again layers later files over earlier ones field-by-field.
+    pub fn config_file(self, path: impl AsRef<Path>) -> Result<TargetSpec> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| VaqfError::io(path.display().to_string(), e))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| VaqfError::config(format!("{}: {e}", path.display())))?;
+        self.config_json(&doc)
+    }
+
+    /// [`TargetSpec::config_file`] for an already-parsed document.
+    pub fn config_json(mut self, doc: &Json) -> Result<TargetSpec> {
+        let p = config::partial_from_json(doc).map_err(|e| VaqfError::config(e.to_string()))?;
+        if let Some(m) = p.model {
+            self.file.model = Some(ModelSel::Config(m));
+        }
+        if let Some(d) = p.device {
+            self.file.device = Some(DeviceSel::Device(d));
+        }
+        if let Some(f) = p.target_fps {
+            self.file.target_fps = Some(f);
+        }
+        if let Some(b) = p.backend {
+            self.file.backend = Some(b);
+        }
+        if let Some(t) = p.threads {
+            self.file.threads = Some(t);
+        }
+        Ok(self)
+    }
+
+    /// CLI-layer construction: `--config FILE` plus the explicit
+    /// `--model` / `--device` / `--target-fps` / `--threads` flags and the
+    /// kernel-backend flag under `backend_key` (`simulate` exposes it as
+    /// `--backend`, `serve` as `--kernels` since its `--backend` selects
+    /// the inference backend).
+    pub fn from_cli_args(args: &Args, backend_key: &str) -> Result<TargetSpec> {
+        let mut spec = TargetSpec::new();
+        if let Some(path) = args.get("config") {
+            spec = spec.config_file(path)?;
+        }
+        if let Some(name) = args.get("model") {
+            spec = spec.model_preset(name);
+        }
+        if let Some(name) = args.get("device") {
+            spec = spec.device_preset(name);
+        }
+        if let Some(fps) = args
+            .get_f64("target-fps")
+            .map_err(|e| VaqfError::config(e.to_string()))?
+        {
+            spec = spec.target_fps(fps);
+        }
+        if let Some(name) = args.get(backend_key) {
+            spec = spec.backend_name(name)?;
+        }
+        if let Some(n) = args
+            .get_u64("threads")
+            .map_err(|e| VaqfError::config(e.to_string()))?
+        {
+            spec = spec.threads(n as usize);
+        }
+        Ok(spec)
+    }
+
+    // ---- resolution --------------------------------------------------------
+
+    /// Resolve against the real process environment.
+    pub fn resolve(&self) -> Result<Target> {
+        self.resolve_with(&|key| std::env::var(key).ok())
+    }
+
+    /// Resolve with an injectable environment lookup (tests pass closures
+    /// instead of mutating process-global env vars).
+    ///
+    /// Each field resolves independently, highest layer first, and a
+    /// malformed environment variable only errors when the env layer is
+    /// the *winning* layer for that field — an explicit setter or CLI flag
+    /// shadows a broken `VAQF_*` left in a shell profile.
+    pub fn resolve_with(&self, env: &dyn Fn(&str) -> Option<String>) -> Result<Target> {
+        let model = if let Some(sel) = self.explicit.model.as_ref() {
+            resolve_model_sel(sel)?
+        } else if let Some(name) = env("VAQF_MODEL") {
+            VitPreset::from_name(&name)
+                .map(|p| p.config())
+                .ok_or_else(|| VaqfError::unknown_model(name))?
+        } else if let Some(sel) = self.file.model.as_ref().or(self.defaults.model.as_ref()) {
+            resolve_model_sel(sel)?
+        } else {
+            crate::model::deit_base()
+        };
+        let device = if let Some(sel) = self.explicit.device.as_ref() {
+            resolve_device_sel(sel)?
+        } else if let Some(name) = env("VAQF_DEVICE") {
+            DevicePreset::from_name(&name)
+                .map(|p| p.device())
+                .ok_or_else(|| VaqfError::unknown_device(name))?
+        } else if let Some(sel) = self.file.device.as_ref().or(self.defaults.device.as_ref()) {
+            resolve_device_sel(sel)?
+        } else {
+            crate::hw::zcu102()
+        };
+        let target_fps = if let Some(f) = self.explicit.target_fps {
+            f
+        } else if let Some(v) = env("VAQF_TARGET_FPS") {
+            v.parse::<f64>()
+                .map_err(|e| VaqfError::config(format!("VAQF_TARGET_FPS: {e}")))?
+        } else {
+            self.file.target_fps.or(self.defaults.target_fps).unwrap_or(24.0)
+        };
+        let backend = if let Some(b) = self.explicit.backend {
+            b
+        } else if let Some(name) = env("VAQF_BACKEND") {
+            Backend::from_name(&name).ok_or_else(|| VaqfError::unknown_backend(name))?
+        } else {
+            self.file.backend.or(self.defaults.backend).unwrap_or_default()
+        };
+        let threads = if let Some(t) = self.explicit.threads {
+            t
+        } else if let Some(v) = env("VAQF_THREADS") {
+            v.parse::<usize>()
+                .map_err(|e| VaqfError::config(format!("VAQF_THREADS: {e}")))?
+        } else {
+            self.file.threads.or(self.defaults.threads).unwrap_or(0)
+        };
+
+        Ok(Target {
+            model,
+            device,
+            target_fps,
+            backend,
+            threads,
+        })
+    }
+
+    /// Resolve, then emit the result as a config document
+    /// ([`config::Target::to_json`]) — archivable and re-loadable via
+    /// `--config`.
+    pub fn to_json(&self) -> Result<Json> {
+        Ok(self.resolve()?.to_json())
+    }
+
+    /// Resolve and open a compile session.
+    pub fn session(&self) -> Result<Session> {
+        Ok(Session::new(self.resolve()?))
+    }
+}
+
+fn resolve_model_sel(sel: &ModelSel) -> Result<VitConfig> {
+    match sel {
+        ModelSel::Config(c) => Ok(c.clone()),
+        ModelSel::Preset(name) => VitPreset::from_name(name)
+            .map(|p| p.config())
+            .ok_or_else(|| VaqfError::unknown_model(name.clone())),
+    }
+}
+
+fn resolve_device_sel(sel: &DeviceSel) -> Result<Device> {
+    match sel {
+        DeviceSel::Device(d) => Ok(d.clone()),
+        DeviceSel::Preset(name) => DevicePreset::from_name(name)
+            .map(|p| p.device())
+            .ok_or_else(|| VaqfError::unknown_device(name.clone())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn no_env(_: &str) -> Option<String> {
+        None
+    }
+
+    #[test]
+    fn builtin_defaults() {
+        let t = TargetSpec::new().resolve_with(&no_env).unwrap();
+        assert_eq!(t.model.name, "deit-base");
+        assert_eq!(t.device.name, "zcu102");
+        assert_eq!(t.target_fps, 24.0);
+        assert_eq!(t.backend, Backend::Packed);
+        assert_eq!(t.threads, 0);
+    }
+
+    #[test]
+    fn default_model_stays_below_every_other_layer() {
+        let spec = TargetSpec::new().default_model(crate::model::micro());
+        assert_eq!(spec.resolve_with(&no_env).unwrap().model.name, "micro");
+        let spec = spec.model_preset("deit-tiny");
+        assert_eq!(spec.resolve_with(&no_env).unwrap().model.name, "deit-tiny");
+    }
+
+    #[test]
+    fn unknown_names_are_typed() {
+        let err = TargetSpec::new()
+            .model_preset("bogus")
+            .resolve_with(&no_env)
+            .unwrap_err();
+        assert!(matches!(err, VaqfError::UnknownPreset { kind: "model", .. }));
+        let err = TargetSpec::new()
+            .device_preset("bogus")
+            .resolve_with(&no_env)
+            .unwrap_err();
+        assert!(matches!(err, VaqfError::UnknownPreset { kind: "device", .. }));
+        assert!(TargetSpec::new().backend_name("simd").is_err());
+    }
+
+    #[test]
+    fn env_parse_failures_are_config_errors() {
+        let env = |key: &str| (key == "VAQF_TARGET_FPS").then(|| "fast".to_string());
+        let err = TargetSpec::new().resolve_with(&env).unwrap_err();
+        assert!(matches!(err, VaqfError::Config { .. }));
+    }
+
+    #[test]
+    fn explicit_setter_shadows_malformed_env() {
+        // A broken VAQF_* left in a shell profile must not break
+        // invocations that override that field explicitly.
+        let env = |key: &str| (key == "VAQF_BACKEND").then(|| "auto".to_string());
+        let t = TargetSpec::new()
+            .backend(Backend::Packed)
+            .resolve_with(&env)
+            .unwrap();
+        assert_eq!(t.backend, Backend::Packed);
+        // …but it does error when the env layer is the winning layer.
+        assert!(TargetSpec::new().resolve_with(&env).is_err());
+    }
+
+    #[test]
+    fn cli_args_feed_the_explicit_layer() {
+        let args = Args::parse(
+            ["simulate", "--model", "deit-small", "--device", "zcu111", "--threads", "4"]
+                .into_iter()
+                .map(String::from),
+        );
+        let t = TargetSpec::from_cli_args(&args, "backend")
+            .unwrap()
+            .resolve_with(&no_env)
+            .unwrap();
+        assert_eq!(t.model.name, "deit-small");
+        assert_eq!(t.device.name, "zcu111");
+        assert_eq!(t.threads, 4);
+    }
+}

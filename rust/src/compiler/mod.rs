@@ -29,8 +29,13 @@ mod search;
 pub use baseline::optimize_baseline;
 pub use codegen::{emit_config_json, emit_hls_cpp, params_from_json};
 pub use params::{optimize_for_bits, DesignPoint};
-pub use report::{render_table5, render_table6, table5_rows, table6_rows, Table6Row, PAPER_TABLE5};
-pub use search::{compile, compile_multi, CompileOutcome, CompileRequest, SearchRound};
+pub use report::{
+    render_table5, render_table6, table5_rows, table5_rows_with_baseline, table6_rows, Table6Row,
+    PAPER_TABLE5,
+};
+pub use search::{
+    compile, compile_multi, compile_with_baseline, CompileOutcome, CompileRequest, SearchRound,
+};
 
 #[cfg(test)]
 mod tests;

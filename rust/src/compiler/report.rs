@@ -23,16 +23,27 @@ pub const PAPER_TABLE5: [(&str, f64, f64); 3] = [
 /// Compute the Table 5 rows: the baseline design plus one design per
 /// requested activation precision.
 pub fn table5_rows(model: &VitConfig, device: &Device, precisions: &[u8]) -> Vec<PerfSummary> {
+    let baseline = optimize_baseline(&model.structure(None), device);
+    table5_rows_with_baseline(model, device, &baseline, precisions)
+        .expect("standard precisions must be feasible on the paper's board")
+}
+
+/// Fallible [`table5_rows`] core with a precomputed baseline — the
+/// `api::Session` path, where the device is arbitrary (infeasible
+/// precisions error instead of panicking) and the baseline is cached.
+pub fn table5_rows_with_baseline(
+    model: &VitConfig,
+    device: &Device,
+    baseline: &crate::perf::AcceleratorParams,
+    precisions: &[u8],
+) -> anyhow::Result<Vec<PerfSummary>> {
     let unquant = model.structure(None);
-    let baseline = optimize_baseline(&unquant, device);
-    let mut rows = vec![crate::perf::summarize(&unquant, &baseline, device)];
+    let mut rows = vec![crate::perf::summarize(&unquant, baseline, device)];
     for &bits in precisions {
         let s = model.structure(Some(bits));
-        let d = optimize_for_bits(&s, &baseline, device, bits)
-            .expect("standard precisions must be feasible on the paper's board");
-        rows.push(d.summary);
+        rows.push(optimize_for_bits(&s, baseline, device, bits)?.summary);
     }
-    rows
+    Ok(rows)
 }
 
 /// Render Table 5 ("Hardware resource utilization and performance of ViT

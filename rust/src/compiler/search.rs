@@ -62,9 +62,25 @@ pub struct CompileOutcome {
 /// implemented" only when `FR_tgt ≤ FR_max`).
 pub fn compile(req: &CompileRequest) -> anyhow::Result<CompileOutcome> {
     let t0 = Instant::now();
-    let unquant = req.model.structure(None);
-    let baseline = optimize_baseline(&unquant, &req.device);
+    let baseline = optimize_baseline(&req.model.structure(None), &req.device);
+    compile_inner(req, baseline, t0)
+}
 
+/// [`compile`] with a precomputed baseline parameterization — the facade's
+/// `api::Session` caches the baseline design-space search across calls, so
+/// repeated compiles for one (model, device) don't redo it.
+pub fn compile_with_baseline(
+    req: &CompileRequest,
+    baseline: AcceleratorParams,
+) -> anyhow::Result<CompileOutcome> {
+    compile_inner(req, baseline, Instant::now())
+}
+
+fn compile_inner(
+    req: &CompileRequest,
+    baseline: AcceleratorParams,
+    t0: Instant,
+) -> anyhow::Result<CompileOutcome> {
     let probe = |bits: u8| -> anyhow::Result<DesignPoint> {
         let s = req.model.structure(Some(bits));
         optimize_for_bits(&s, &baseline, &req.device, bits)

@@ -18,11 +18,23 @@
 //! }
 //! ```
 //!
+//! Sections may also name a preset (`"device": "zcu102"`) or *layer partial
+//! overrides on a preset* via a `preset` key — e.g.
+//! `"device": {"preset": "zcu102", "clock_mhz": 300}` is the ZCU102
+//! inventory overclocked to 300 MHz; any field not listed falls back to the
+//! preset's value. Without a `preset` key, the structural fields are all
+//! required (a typo'd field name errors instead of silently defaulting).
+//!
 //! Missing sections fall back to presets (`deit-base`, `zcu102`).
 //! `backend` selects the simulator's kernel implementation
 //! (`"scalar"` | `"packed"`, default packed — bit-exact either way) and
 //! `threads` its row-parallel fan-out (`0` ⇒ `VAQF_THREADS` /
 //! available parallelism).
+//!
+//! [`Target::to_json`] is the exact inverse of [`target_from_json`]
+//! (parse → emit → parse is the identity; property-tested below), so
+//! resolved targets can be archived next to codegen artifacts and re-used
+//! as config files.
 
 use std::path::Path;
 
@@ -55,101 +67,305 @@ impl Default for Target {
     }
 }
 
-fn get_usize(j: &Json, key: &str) -> anyhow::Result<usize> {
-    j.get(key)
-        .and_then(Json::as_u64)
-        .map(|v| v as usize)
-        .ok_or_else(|| anyhow::anyhow!("missing field `{key}`"))
+impl Target {
+    /// Emit the target as a full JSON config document — the inverse of
+    /// [`target_from_json`].
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("model", model_to_json(&self.model))
+            .set("device", device_to_json(&self.device))
+            .set("target_fps", self.target_fps)
+            .set("backend", self.backend.name())
+            .set("threads", self.threads)
+    }
 }
 
-fn get_u64(j: &Json, key: &str) -> anyhow::Result<u64> {
-    j.get(key)
-        .and_then(Json::as_u64)
-        .ok_or_else(|| anyhow::anyhow!("missing field `{key}`"))
+/// A partially-specified target: exactly the fields a config document
+/// provided, with no defaults filled in. The `api::TargetSpec` layering
+/// needs to know which fields the file actually set so that environment
+/// variables and explicit setters can take their documented precedence.
+#[derive(Debug, Clone, Default)]
+pub struct PartialTarget {
+    pub model: Option<VitConfig>,
+    pub device: Option<Device>,
+    pub target_fps: Option<f64>,
+    pub backend: Option<Backend>,
+    pub threads: Option<usize>,
 }
 
-/// Parse a model section. A bare string selects a preset.
+/// Reject object keys outside `allowed` — with preset layering every field
+/// is optional, so a typo'd field name would otherwise silently fall back
+/// to the preset value instead of erroring.
+fn reject_unknown_keys(j: &Json, allowed: &[&str], what: &str) -> anyhow::Result<()> {
+    if let Json::Obj(map) = j {
+        for key in map.keys() {
+            anyhow::ensure!(
+                allowed.contains(&key.as_str()),
+                "unknown {what} field `{key}` (allowed: {})",
+                allowed.join(", ")
+            );
+        }
+    }
+    Ok(())
+}
+
+const MODEL_KEYS: &[&str] = &[
+    "preset",
+    "name",
+    "image_size",
+    "patch_size",
+    "in_chans",
+    "embed_dim",
+    "depth",
+    "num_heads",
+    "mlp_ratio",
+    "num_classes",
+];
+
+const DEVICE_KEYS: &[&str] = &[
+    "preset",
+    "name",
+    "dsp",
+    "lut",
+    "bram18k",
+    "ff",
+    "clock_mhz",
+    "axi_port_bits",
+    "axi_ports_in",
+    "axi_ports_wgt",
+    "axi_ports_out",
+    "r_dsp",
+    "r_lut",
+    "static_power_w",
+];
+
+const TARGET_KEYS: &[&str] = &["model", "device", "target_fps", "backend", "threads"];
+
+/// Typed field access: a present key of the wrong JSON type errors instead
+/// of silently falling back (same bug class as a typo'd key).
+fn num_u64(j: &Json, key: &str) -> anyhow::Result<Option<u64>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let f = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("field `{key}` must be a number"))?;
+            // Json::as_u64's saturating cast would silently turn -300 into
+            // 0 and 2.9 into 2 — reject instead.
+            anyhow::ensure!(
+                f >= 0.0 && f.fract() == 0.0 && f <= u64::MAX as f64,
+                "field `{key}` must be a non-negative integer"
+            );
+            Ok(Some(f as u64))
+        }
+    }
+}
+
+fn num_f64(j: &Json, key: &str) -> anyhow::Result<Option<f64>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("field `{key}` must be a number")),
+    }
+}
+
+fn str_key<'a>(j: &'a Json, key: &str) -> anyhow::Result<Option<&'a str>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("field `{key}` must be a string")),
+    }
+}
+
+fn override_usize(j: &Json, key: &str, base: Option<usize>) -> anyhow::Result<usize> {
+    match num_u64(j, key)? {
+        Some(v) => Ok(v as usize),
+        None => base.ok_or_else(|| anyhow::anyhow!("missing field `{key}`")),
+    }
+}
+
+fn override_u64(j: &Json, key: &str, base: Option<u64>) -> anyhow::Result<u64> {
+    match num_u64(j, key)? {
+        Some(v) => Ok(v),
+        None => base.ok_or_else(|| anyhow::anyhow!("missing field `{key}`")),
+    }
+}
+
+/// Parse a model section. A bare string selects a preset; an object with a
+/// `preset` key starts from that preset and overrides only the fields
+/// present; otherwise every structural field is required.
 pub fn model_from_json(j: &Json) -> anyhow::Result<VitConfig> {
     if let Some(name) = j.as_str() {
         return VitPreset::from_name(name)
             .map(|p| p.config())
             .ok_or_else(|| anyhow::anyhow!("unknown model preset `{name}`"));
     }
+    anyhow::ensure!(
+        matches!(j, Json::Obj(_)),
+        "model section must be a preset name or an object"
+    );
+    reject_unknown_keys(j, MODEL_KEYS, "model")?;
+    let base = match str_key(j, "preset")? {
+        Some(name) => Some(
+            VitPreset::from_name(name)
+                .map(|p| p.config())
+                .ok_or_else(|| anyhow::anyhow!("unknown model preset `{name}`"))?,
+        ),
+        None => None,
+    };
+    let b = base.as_ref();
     Ok(VitConfig {
-        name: j
-            .get("name")
-            .and_then(Json::as_str)
-            .unwrap_or("custom")
-            .to_string(),
-        image_size: get_usize(j, "image_size")?,
-        patch_size: get_usize(j, "patch_size")?,
-        in_chans: get_usize(j, "in_chans")?,
-        embed_dim: get_usize(j, "embed_dim")?,
-        depth: get_usize(j, "depth")?,
-        num_heads: get_usize(j, "num_heads")?,
-        mlp_ratio: get_usize(j, "mlp_ratio")?,
-        num_classes: get_usize(j, "num_classes")?,
+        name: str_key(j, "name")?
+            .map(str::to_string)
+            .unwrap_or_else(|| b.map(|c| c.name.clone()).unwrap_or_else(|| "custom".into())),
+        image_size: override_usize(j, "image_size", b.map(|c| c.image_size))?,
+        patch_size: override_usize(j, "patch_size", b.map(|c| c.patch_size))?,
+        in_chans: override_usize(j, "in_chans", b.map(|c| c.in_chans))?,
+        embed_dim: override_usize(j, "embed_dim", b.map(|c| c.embed_dim))?,
+        depth: override_usize(j, "depth", b.map(|c| c.depth))?,
+        num_heads: override_usize(j, "num_heads", b.map(|c| c.num_heads))?,
+        mlp_ratio: override_usize(j, "mlp_ratio", b.map(|c| c.mlp_ratio))?,
+        num_classes: override_usize(j, "num_classes", b.map(|c| c.num_classes))?,
     })
 }
 
-/// Parse a device section. A bare string selects a preset.
+/// Emit a model section ([`model_from_json`]'s inverse).
+pub fn model_to_json(c: &VitConfig) -> Json {
+    Json::obj()
+        .set("name", c.name.as_str())
+        .set("image_size", c.image_size)
+        .set("patch_size", c.patch_size)
+        .set("in_chans", c.in_chans)
+        .set("embed_dim", c.embed_dim)
+        .set("depth", c.depth)
+        .set("num_heads", c.num_heads)
+        .set("mlp_ratio", c.mlp_ratio)
+        .set("num_classes", c.num_classes)
+}
+
+/// Parse a device section. A bare string selects a preset; an object with a
+/// `preset` key starts from that preset and overrides only the fields
+/// present; otherwise the inventory fields are required (the calibration
+/// fields `r_dsp`/`r_lut`/`static_power_w` and the per-direction AXI port
+/// counts always default — to the preset's values when layering, else to
+/// the ZCU102 calibration).
 pub fn device_from_json(j: &Json) -> anyhow::Result<Device> {
     if let Some(name) = j.as_str() {
         return DevicePreset::from_name(name)
             .map(|p| p.device())
             .ok_or_else(|| anyhow::anyhow!("unknown device preset `{name}`"));
     }
-    let defaults = DevicePreset::Zcu102.device();
+    anyhow::ensure!(
+        matches!(j, Json::Obj(_)),
+        "device section must be a preset name or an object"
+    );
+    reject_unknown_keys(j, DEVICE_KEYS, "device")?;
+    let base = match str_key(j, "preset")? {
+        Some(name) => Some(
+            DevicePreset::from_name(name)
+                .map(|p| p.device())
+                .ok_or_else(|| anyhow::anyhow!("unknown device preset `{name}`"))?,
+        ),
+        None => None,
+    };
+    let b = base.as_ref();
+    let calib = DevicePreset::Zcu102.device();
+    let soft = b.unwrap_or(&calib);
     Ok(Device {
-        name: j
-            .get("name")
-            .and_then(Json::as_str)
-            .unwrap_or("custom")
-            .to_string(),
+        name: str_key(j, "name")?
+            .map(str::to_string)
+            .unwrap_or_else(|| b.map(|d| d.name.clone()).unwrap_or_else(|| "custom".into())),
         budget: ResourceBudget {
-            dsp: get_u64(j, "dsp")?,
-            lut: get_u64(j, "lut")?,
-            bram18k: get_u64(j, "bram18k")?,
-            ff: get_u64(j, "ff")?,
+            dsp: override_u64(j, "dsp", b.map(|d| d.budget.dsp))?,
+            lut: override_u64(j, "lut", b.map(|d| d.budget.lut))?,
+            bram18k: override_u64(j, "bram18k", b.map(|d| d.budget.bram18k))?,
+            ff: override_u64(j, "ff", b.map(|d| d.budget.ff))?,
         },
-        clock_mhz: get_u64(j, "clock_mhz")?,
-        axi_port_bits: get_u64(j, "axi_port_bits")? as u32,
-        axi_ports_in: j.get("axi_ports_in").and_then(Json::as_u64).unwrap_or(2),
-        axi_ports_wgt: j.get("axi_ports_wgt").and_then(Json::as_u64).unwrap_or(2),
-        axi_ports_out: j.get("axi_ports_out").and_then(Json::as_u64).unwrap_or(2),
-        r_dsp: j
-            .get("r_dsp")
-            .and_then(Json::as_f64)
-            .unwrap_or(defaults.r_dsp),
-        r_lut: j
-            .get("r_lut")
-            .and_then(Json::as_f64)
-            .unwrap_or(defaults.r_lut),
-        static_power_w: j
-            .get("static_power_w")
-            .and_then(Json::as_f64)
-            .unwrap_or(defaults.static_power_w),
+        clock_mhz: override_u64(j, "clock_mhz", b.map(|d| d.clock_mhz))?,
+        axi_port_bits: override_u64(j, "axi_port_bits", b.map(|d| u64::from(d.axi_port_bits)))?
+            as u32,
+        axi_ports_in: num_u64(j, "axi_ports_in")?
+            .unwrap_or_else(|| b.map(|d| d.axi_ports_in).unwrap_or(2)),
+        axi_ports_wgt: num_u64(j, "axi_ports_wgt")?
+            .unwrap_or_else(|| b.map(|d| d.axi_ports_wgt).unwrap_or(2)),
+        axi_ports_out: num_u64(j, "axi_ports_out")?
+            .unwrap_or_else(|| b.map(|d| d.axi_ports_out).unwrap_or(2)),
+        r_dsp: num_f64(j, "r_dsp")?.unwrap_or(soft.r_dsp),
+        r_lut: num_f64(j, "r_lut")?.unwrap_or(soft.r_lut),
+        static_power_w: num_f64(j, "static_power_w")?.unwrap_or(soft.static_power_w),
     })
 }
 
-/// Parse a full target document.
-pub fn target_from_json(j: &Json) -> anyhow::Result<Target> {
-    let mut t = Target::default();
+/// Emit a device section ([`device_from_json`]'s inverse).
+pub fn device_to_json(d: &Device) -> Json {
+    Json::obj()
+        .set("name", d.name.as_str())
+        .set("dsp", d.budget.dsp)
+        .set("lut", d.budget.lut)
+        .set("bram18k", d.budget.bram18k)
+        .set("ff", d.budget.ff)
+        .set("clock_mhz", d.clock_mhz)
+        .set("axi_port_bits", d.axi_port_bits)
+        .set("axi_ports_in", d.axi_ports_in)
+        .set("axi_ports_wgt", d.axi_ports_wgt)
+        .set("axi_ports_out", d.axi_ports_out)
+        .set("r_dsp", d.r_dsp)
+        .set("r_lut", d.r_lut)
+        .set("static_power_w", d.static_power_w)
+}
+
+/// Parse a target document into exactly the fields it provides (no
+/// defaults) — the config-file layer of `api::TargetSpec`.
+pub fn partial_from_json(j: &Json) -> anyhow::Result<PartialTarget> {
+    anyhow::ensure!(
+        matches!(j, Json::Obj(_)),
+        "target config must be a JSON object (see README.md for the schema)"
+    );
+    reject_unknown_keys(j, TARGET_KEYS, "target")?;
+    let mut p = PartialTarget::default();
     if let Some(m) = j.get("model") {
-        t.model = model_from_json(m)?;
+        p.model = Some(model_from_json(m)?);
     }
     if let Some(d) = j.get("device") {
-        t.device = device_from_json(d)?;
+        p.device = Some(device_from_json(d)?);
     }
-    if let Some(f) = j.get("target_fps").and_then(Json::as_f64) {
+    if let Some(f) = num_f64(j, "target_fps")? {
+        p.target_fps = Some(f);
+    }
+    if let Some(b) = str_key(j, "backend")? {
+        p.backend = Some(
+            Backend::from_name(b)
+                .ok_or_else(|| anyhow::anyhow!("unknown backend `{b}` (scalar|packed)"))?,
+        );
+    }
+    if let Some(n) = num_u64(j, "threads")? {
+        p.threads = Some(n as usize);
+    }
+    Ok(p)
+}
+
+/// Parse a full target document (missing sections fall back to defaults).
+pub fn target_from_json(j: &Json) -> anyhow::Result<Target> {
+    let p = partial_from_json(j)?;
+    let mut t = Target::default();
+    if let Some(m) = p.model {
+        t.model = m;
+    }
+    if let Some(d) = p.device {
+        t.device = d;
+    }
+    if let Some(f) = p.target_fps {
         t.target_fps = f;
     }
-    if let Some(b) = j.get("backend").and_then(Json::as_str) {
-        t.backend = Backend::from_name(b)
-            .ok_or_else(|| anyhow::anyhow!("unknown backend `{b}` (scalar|packed)"))?;
+    if let Some(b) = p.backend {
+        t.backend = b;
     }
-    if let Some(n) = j.get("threads").and_then(Json::as_u64) {
-        t.threads = n as usize;
+    if let Some(n) = p.threads {
+        t.threads = n;
     }
     Ok(t)
 }
@@ -163,6 +379,7 @@ pub fn load_target(path: impl AsRef<Path>) -> anyhow::Result<Target> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::SplitMix64;
 
     #[test]
     fn presets_by_string() {
@@ -217,5 +434,137 @@ mod tests {
         let t = target_from_json(&Json::parse(r#"{"backend": "packed"}"#).unwrap()).unwrap();
         assert_eq!(t.backend, Backend::Packed);
         assert!(target_from_json(&Json::parse(r#"{"backend": "simd"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn device_partial_override_on_preset() {
+        let j = Json::parse(r#"{"device": {"preset": "zcu102", "clock_mhz": 300}}"#).unwrap();
+        let t = target_from_json(&j).unwrap();
+        let base = DevicePreset::Zcu102.device();
+        assert_eq!(t.device.clock_mhz, 300);
+        assert_eq!(t.device.name, "zcu102");
+        assert_eq!(t.device.budget, base.budget);
+        assert_eq!(t.device.axi_port_bits, base.axi_port_bits);
+        assert_eq!(t.device.axi_ports_in, base.axi_ports_in);
+        assert_eq!(t.device.r_lut, base.r_lut);
+    }
+
+    #[test]
+    fn model_partial_override_on_preset() {
+        let j = Json::parse(r#"{"model": {"preset": "deit-base", "depth": 6, "name": "half"}}"#)
+            .unwrap();
+        let t = target_from_json(&j).unwrap();
+        assert_eq!(t.model.depth, 6);
+        assert_eq!(t.model.name, "half");
+        assert_eq!(t.model.embed_dim, 768); // inherited from deit-base
+    }
+
+    #[test]
+    fn typoed_field_names_error_instead_of_silently_defaulting() {
+        let j = Json::parse(r#"{"device": {"preset": "zcu102", "clock_mzh": 300}}"#).unwrap();
+        let e = target_from_json(&j).unwrap_err().to_string();
+        assert!(e.contains("unknown device field `clock_mzh`"), "{e}");
+        let j = Json::parse(r#"{"model": {"preset": "deit-base", "depht": 6}}"#).unwrap();
+        assert!(target_from_json(&j).is_err());
+        let j = Json::parse(r#"{"target_fsp": 30}"#).unwrap();
+        assert!(target_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn wrong_typed_values_error_instead_of_silently_defaulting() {
+        let j = Json::parse(r#"{"device": {"preset": "zcu102", "clock_mhz": "300"}}"#).unwrap();
+        let e = target_from_json(&j).unwrap_err().to_string();
+        assert!(e.contains("`clock_mhz` must be a number"), "{e}");
+        let j = Json::parse(r#"{"target_fps": "30"}"#).unwrap();
+        assert!(target_from_json(&j).is_err());
+        let j = Json::parse(r#"{"backend": 5}"#).unwrap();
+        assert!(target_from_json(&j).is_err());
+        let j = Json::parse(r#"{"device": {"preset": "zcu102", "r_dsp": "half"}}"#).unwrap();
+        assert!(target_from_json(&j).is_err());
+        // Negative / fractional integer fields are rejected, not coerced.
+        let j = Json::parse(r#"{"device": {"preset": "zcu102", "clock_mhz": -300}}"#).unwrap();
+        assert!(target_from_json(&j).is_err());
+        let j = Json::parse(r#"{"threads": 2.9}"#).unwrap();
+        assert!(target_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn unknown_preset_in_partial_override_errors() {
+        let j = Json::parse(r#"{"device": {"preset": "nope", "clock_mhz": 300}}"#).unwrap();
+        assert!(target_from_json(&j).is_err());
+        let j = Json::parse(r#"{"model": {"preset": "nope", "depth": 6}}"#).unwrap();
+        assert!(target_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn target_to_json_roundtrips_presets() {
+        let t = Target::default();
+        let back = target_from_json(&Json::parse(&t.to_json().pretty()).unwrap()).unwrap();
+        assert_eq!(back.model, t.model);
+        assert_eq!(back.device, t.device);
+        assert_eq!(back.target_fps, t.target_fps);
+        assert_eq!(back.backend, t.backend);
+        assert_eq!(back.threads, t.threads);
+    }
+
+    fn random_target(rng: &mut SplitMix64) -> Target {
+        Target {
+            model: VitConfig {
+                name: format!("m{}", rng.next_below(1000)),
+                image_size: 32 + 16 * rng.next_below(14) as usize,
+                patch_size: 8,
+                in_chans: 3,
+                embed_dim: 32 * (1 + rng.next_below(16) as usize),
+                depth: 1 + rng.next_below(16) as usize,
+                num_heads: 1 + rng.next_below(12) as usize,
+                mlp_ratio: 1 + rng.next_below(4) as usize,
+                num_classes: 2 + rng.next_below(1000) as usize,
+            },
+            device: Device {
+                name: format!("d{}", rng.next_below(1000)),
+                budget: ResourceBudget {
+                    dsp: 100 + rng.next_below(5000),
+                    lut: 10_000 + rng.next_below(500_000),
+                    bram18k: 100 + rng.next_below(4000),
+                    ff: 10_000 + rng.next_below(1_000_000),
+                },
+                clock_mhz: 50 + rng.next_below(400),
+                axi_port_bits: 64,
+                axi_ports_in: 1 + rng.next_below(4),
+                axi_ports_wgt: 1 + rng.next_below(4),
+                axi_ports_out: 1 + rng.next_below(4),
+                r_dsp: (rng.next_below(60) as f64 + 20.0) / 100.0,
+                r_lut: (rng.next_below(60) as f64 + 20.0) / 100.0,
+                static_power_w: rng.next_below(1000) as f64 / 128.0,
+            },
+            target_fps: rng.next_below(100_000) as f64 / 7.0,
+            backend: if rng.next_below(2) == 0 {
+                Backend::Scalar
+            } else {
+                Backend::Packed
+            },
+            threads: rng.next_below(32) as usize,
+        }
+    }
+
+    /// Property: parse → emit → parse is the identity, and emission is a
+    /// fixed point (emit(parse(emit(t))) == emit(t)), across a randomized
+    /// space of custom models/devices including fractional calibration
+    /// fields.
+    #[test]
+    fn target_json_roundtrip_property() {
+        let mut rng = SplitMix64::new(0x7A86_E7);
+        for case in 0..64 {
+            let t = random_target(&mut rng);
+            let text = t.to_json().pretty();
+            let parsed = Json::parse(&text).expect("emitted JSON parses");
+            let back = target_from_json(&parsed).expect("emitted JSON resolves");
+            assert_eq!(back.model, t.model, "case {case}");
+            assert_eq!(back.device, t.device, "case {case}");
+            assert_eq!(back.target_fps, t.target_fps, "case {case}");
+            assert_eq!(back.backend, t.backend, "case {case}");
+            assert_eq!(back.threads, t.threads, "case {case}");
+            assert_eq!(back.to_json(), t.to_json(), "case {case}: emit not a fixed point");
+        }
     }
 }

@@ -11,6 +11,10 @@ pub enum DevicePreset {
 }
 
 impl DevicePreset {
+    /// Preset-name hint for error messages (keep in sync with
+    /// [`DevicePreset::from_name`]).
+    pub const NAMES: &'static str = "zcu102/zcu111/generic-edge";
+
     pub fn device(self) -> Device {
         match self {
             DevicePreset::Zcu102 => zcu102(),

@@ -35,7 +35,14 @@
 //! | [`runtime`] | PJRT execution of AOT artifacts (functional reference) |
 //! | [`coordinator`] | frame-serving loop: queue → batcher → backend |
 //! | [`config`] | TOML/JSON config system for models/devices/targets |
+//!
+//! [`api`] is the front door: a typed facade (`TargetSpec → Session →
+//! CompiledDesign → codegen / simulator / server`) over all of the above,
+//! with the matchable [`api::VaqfError`] at the boundary. The CLI, the
+//! examples and the benches are thin layers over it; embedders should
+//! start there.
 
+pub mod api;
 pub mod compiler;
 pub mod config;
 pub mod coordinator;

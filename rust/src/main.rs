@@ -8,51 +8,43 @@
 //! vaqf simulate --bits 8 --frames 3 [--backend scalar|packed] [--threads N]
 //!               [--config target.json]
 //! vaqf serve    --variant micro_w1a8 --backend sim|pjrt --fps 30 --frames 90
-//!               [--kernels scalar|packed] [--threads N]
+//!               [--kernels scalar|packed] [--threads N] [--config target.json]
 //! ```
 //!
-//! `--backend`/`--kernels scalar|packed` selects the simulator's compute
-//! kernels (bit-exact; packed is the fast default) and `--threads` its
-//! row-parallel fan-out — both also settable via `VAQF_BACKEND` /
-//! `VAQF_THREADS`, or for `simulate` via `--config target.json`
-//! (`config::Target`'s `backend`/`threads`/`model`/`device` fields).
+//! Every subcommand is a thin layer over `vaqf::api`: flags feed a
+//! `TargetSpec`, which resolves model/device/backend/threads with one
+//! precedence rule everywhere — defaults < `--config target.json` <
+//! `VAQF_MODEL`/`VAQF_DEVICE`/`VAQF_TARGET_FPS`/`VAQF_BACKEND`/`VAQF_THREADS`
+//! < explicit flags. `--backend`/`--kernels scalar|packed` selects the
+//! simulator's compute kernels (bit-exact; packed is the fast default) and
+//! `--threads` its row-parallel fan-out. See README.md for per-command
+//! options and the config-file schema.
 
-use vaqf::compiler::{
-    compile, emit_config_json, emit_hls_cpp, optimize_baseline, optimize_for_bits, render_table5,
-    render_table6, table5_rows, table6_rows, CompileRequest,
+use vaqf::api::{
+    render_table5, render_table6, table6_rows, PjrtRuntime, Result, ServeBackendOpt, ServeOpts,
+    Session, TargetSpec, VaqfError,
 };
-use vaqf::coordinator::{serve, FrameSource, ServeConfig};
-use vaqf::hw::DevicePreset;
-use vaqf::model::{VitConfig, VitPreset};
-use vaqf::perf::AcceleratorParams;
-use vaqf::runtime::{InferenceBackend, InferenceEngine, Manifest, PjrtBackend, SimBackend};
-use vaqf::sim::{generate_weights, Backend, ModelExecutor};
+use vaqf::model::micro;
+use vaqf::runtime::Manifest;
 use vaqf::util::cli::Args;
 
-fn model_arg(args: &Args) -> anyhow::Result<VitConfig> {
-    let name = args.get_or("model", "deit-base");
-    VitPreset::from_name(name)
-        .map(|p| p.config())
-        .ok_or_else(|| anyhow::anyhow!("unknown model `{name}` (deit-tiny/small/base)"))
+/// Flag-parse failures (non-numeric `--fps` etc.) as typed config errors.
+fn cli(e: anyhow::Error) -> VaqfError {
+    VaqfError::config(e.to_string())
 }
 
-fn device_arg(args: &Args) -> anyhow::Result<vaqf::hw::Device> {
-    let name = args.get_or("device", "zcu102");
-    DevicePreset::from_name(name)
-        .map(|p| p.device())
-        .ok_or_else(|| anyhow::anyhow!("unknown device `{name}` (zcu102/zcu111/generic-edge)"))
+fn cli_session(args: &Args, backend_key: &str) -> Result<Session> {
+    TargetSpec::from_cli_args(args, backend_key)?.session()
 }
 
-fn cmd_compile(args: &Args) -> anyhow::Result<()> {
-    let req = CompileRequest {
-        model: model_arg(args)?,
-        device: device_arg(args)?,
-        target_fps: args.get_f64("target-fps")?.unwrap_or(24.0),
-    };
-    let out = compile(&req)?;
+fn cmd_compile(args: &Args) -> Result<()> {
+    let session = cli_session(args, "backend")?;
+    let design = session.compile()?;
+    let target = session.target();
+    let out = design.outcome().expect("compile() records the search outcome");
     println!(
         "model {} on {} @ target {:.1} FPS",
-        req.model.name, req.device.name, req.target_fps
+        target.model.name, target.device.name, target.target_fps
     );
     println!("  FR_max (1-bit activations): {:.1} FPS", out.fr_max);
     for r in &out.rounds {
@@ -63,7 +55,7 @@ fn cmd_compile(args: &Args) -> anyhow::Result<()> {
             if r.feasible { "meets target" } else { "too slow" }
         );
     }
-    let s = &out.design.summary;
+    let s = design.summary();
     println!(
         "chosen precision: W1A{} — {:.1} FPS, {:.1} GOPS, {:.1} W, \
          DSP {} LUT {} BRAM36 {:.1}",
@@ -75,86 +67,74 @@ fn cmd_compile(args: &Args) -> anyhow::Result<()> {
         s.utilization.lut,
         s.utilization.bram18k as f64 / 2.0
     );
+    let p = design.params();
     println!(
         "  params: T_m={} T_n={} T_m^q={} T_n^q={} G={} G^q={} P_h={} ({} adjustments)",
-        out.design.params.t_m,
-        out.design.params.t_n,
-        out.design.params.t_m_q,
-        out.design.params.t_n_q,
-        out.design.params.g,
-        out.design.params.g_q,
-        out.design.params.p_h,
-        out.design.adjustments
+        p.t_m,
+        p.t_n,
+        p.t_m_q,
+        p.t_n_q,
+        p.g,
+        p.g_q,
+        p.p_h,
+        design.design_point().adjustments
     );
     println!("  compilation step: {:.3}s", out.compile_seconds);
 
     if let Some(dir) = args.get("emit-dir") {
-        std::fs::create_dir_all(dir)?;
-        let structure = req.model.structure(Some(out.act_bits));
-        let cpp = emit_hls_cpp(&out, &structure, &req.device);
-        let json = emit_config_json(&out, &req.device).pretty();
-        let base = format!("{}/{}_w1a{}", dir, req.model.name, out.act_bits);
-        std::fs::write(format!("{base}.cpp"), cpp)?;
-        std::fs::write(format!("{base}.json"), json)?;
-        println!("  emitted {base}.cpp and {base}.json");
+        let art = design.codegen(dir)?;
+        println!("  emitted {}.cpp and {}.json", art.base, art.base);
     }
     Ok(())
 }
 
-fn cmd_search(args: &Args) -> anyhow::Result<()> {
-    let model = model_arg(args)?;
-    let device = device_arg(args)?;
-    let base = optimize_baseline(&model.structure(None), &device);
-    let bs = vaqf::perf::summarize(&model.structure(None), &base, &device);
+fn cmd_search(args: &Args) -> Result<()> {
+    let session = cli_session(args, "backend")?;
+    let target = session.target();
+    let sweep = session.sweep(1..=16);
     println!(
         "{} on {} — baseline W16A16: {:.1} FPS ({} DSP)",
-        model.name, device.name, bs.fps, bs.utilization.dsp
+        target.model.name, target.device.name, sweep.baseline.fps, sweep.baseline.utilization.dsp
     );
     println!(
         "{:>4} {:>8} {:>9} {:>8} {:>7} {:>7}",
         "bits", "FPS", "GOPS", "power W", "DSP", "kLUT"
     );
-    for bits in 1..=16u8 {
-        match optimize_for_bits(&model.structure(Some(bits)), &base, &device, bits) {
+    for point in &sweep.points {
+        match &point.design {
             Ok(d) => println!(
                 "{:>4} {:>8.1} {:>9.1} {:>8.1} {:>7} {:>7.0}",
-                bits,
+                point.bits,
                 d.summary.fps,
                 d.summary.gops,
                 d.summary.power_w,
                 d.summary.utilization.dsp,
                 d.summary.utilization.lut as f64 / 1000.0
             ),
-            Err(e) => println!("{bits:>4} infeasible: {e}"),
+            Err(e) => println!("{:>4} infeasible: {e}", point.bits),
         }
     }
     Ok(())
 }
 
-fn cmd_report(args: &Args) -> anyhow::Result<()> {
-    let model = model_arg(args)?;
-    let device = device_arg(args)?;
-    let rows = table5_rows(&model, &device, &[8, 6]);
+fn cmd_report(args: &Args) -> Result<()> {
+    let session = cli_session(args, "backend")?;
+    let rows = session.table5(&[8, 6])?;
     if args.has_flag("table6") {
         println!("{}", render_table6(&table6_rows(&rows)));
     } else {
-        println!("{}", render_table5(&rows, &device));
+        println!("{}", render_table5(&rows, &session.target().device));
     }
     Ok(())
 }
 
-fn cmd_codegen(args: &Args) -> anyhow::Result<()> {
-    let req = CompileRequest {
-        model: model_arg(args)?,
-        device: device_arg(args)?,
-        target_fps: args.get_f64("target-fps")?.unwrap_or(24.0),
-    };
-    let out = compile(&req)?;
-    let structure = req.model.structure(Some(out.act_bits));
-    let cpp = emit_hls_cpp(&out, &structure, &req.device);
+fn cmd_codegen(args: &Args) -> Result<()> {
+    let session = cli_session(args, "backend")?;
+    let design = session.compile()?;
+    let cpp = design.hls_source();
     match args.get("out") {
         Some(path) => {
-            std::fs::write(path, cpp)?;
+            std::fs::write(path, cpp).map_err(|e| VaqfError::io(path.to_string(), e))?;
             println!("wrote {path}");
         }
         None => println!("{cpp}"),
@@ -162,85 +142,22 @@ fn cmd_codegen(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn micro_config() -> VitConfig {
-    VitConfig {
-        name: "micro".into(),
-        image_size: 32,
-        patch_size: 8,
-        in_chans: 3,
-        embed_dim: 32,
-        depth: 2,
-        num_heads: 4,
-        mlp_ratio: 4,
-        num_classes: 10,
-    }
-}
+fn cmd_simulate(args: &Args) -> Result<()> {
+    // Resolution: defaults (micro model on zcu102) < --config file <
+    // VAQF_* env < explicit flags — see `vaqf::api::TargetSpec`.
+    let session = TargetSpec::from_cli_args(args, "backend")?
+        .default_model(micro())
+        .session()?;
+    let bits = args.get_u64("bits").map_err(cli)?.map(|b| b as u8);
+    let frames = args.get_u64("frames").map_err(cli)?.unwrap_or(3);
+    let seed = args.get_u64("seed").map_err(cli)?.unwrap_or(11);
 
-fn micro_params(bits: Option<u8>, device: &vaqf::hw::Device) -> AcceleratorParams {
-    match bits {
-        None => AcceleratorParams::baseline(16, 2, 4, 4),
-        Some(b) => {
-            let g_q = AcceleratorParams::g_q_for(device.axi_port_bits, b);
-            AcceleratorParams {
-                t_m: 16,
-                t_n: 2,
-                t_m_q: 16,
-                t_n_q: (2 * g_q / 4).max(1),
-                g: 4,
-                g_q,
-                p_h: 4,
-                act_bits: Some(b),
-            }
-        }
-    }
-}
-
-/// Parse the simulator kernel options: backend under `key` plus
-/// `--threads` (0 ⇒ environment default).
-fn kernel_opts(args: &Args, key: &str) -> anyhow::Result<(Option<Backend>, usize)> {
-    let backend = args
-        .get(key)
-        .map(|name| {
-            Backend::from_name(name)
-                .ok_or_else(|| anyhow::anyhow!("unknown kernel backend `{name}` (scalar|packed)"))
-        })
-        .transpose()?;
-    let threads = args.get_u64("threads")?.unwrap_or(0) as usize;
-    Ok((backend, threads))
-}
-
-fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    // `--config target.json` supplies model/device/backend/threads
-    // (config::Target); explicit CLI flags override its fields.
-    let target = args.get("config").map(vaqf::config::load_target).transpose()?;
-    let device = match (&target, args.get("device")) {
-        (Some(t), None) => t.device.clone(),
-        _ => device_arg(args)?,
-    };
-    let cfg = match &target {
-        Some(t) => t.model.clone(),
-        None => micro_config(),
-    };
-    let bits = args.get_u64("bits")?.map(|b| b as u8);
-    let frames = args.get_u64("frames")?.unwrap_or(3);
-    let (mut backend, mut threads) = kernel_opts(args, "backend")?;
-    if let Some(t) = &target {
-        if backend.is_none() {
-            backend = Some(t.backend);
-        }
-        if threads == 0 {
-            threads = t.threads;
-        }
-    }
-    let weights = generate_weights(&cfg, args.get_u64("seed")?.unwrap_or(11));
-    let mut exec =
-        ModelExecutor::new(weights.clone(), bits, micro_params(bits, &device), device)
-            .with_threads(threads);
-    if let Some(b) = backend {
-        exec = exec.with_backend(b);
-    }
+    // The simulator runs the *compiled* design for the resolved target —
+    // optimized tiling, not hardcoded micro parameters.
+    let design = session.compile_for_bits(bits)?;
+    let exec = design.simulator_with_seed(seed);
     for i in 0..frames {
-        let patches = weights.synthetic_patches(i);
+        let patches = exec.weights.synthetic_patches(i);
         let (logits, trace) = exec.run_frame(&patches);
         let top = logits
             .iter()
@@ -258,52 +175,68 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+fn cmd_serve(args: &Args) -> Result<()> {
     let artifacts = args.get_or("artifacts", "artifacts");
     let variant = args.get_or("variant", "micro_w1a8");
     let backend_kind = args.get_or("backend", "sim");
-    let cfg = ServeConfig {
-        offered_fps: args.get_f64("fps")?.unwrap_or(30.0),
-        frames: args.get_u64("frames")?.unwrap_or(90),
-        queue_depth: args.get_u64("queue-depth")?.unwrap_or(2) as usize,
-        source_seed: args.get_u64("seed")?.unwrap_or(11),
-    };
-    let device = device_arg(args)?;
+    let offered_fps = args.get_f64("fps").map_err(cli)?.unwrap_or(30.0);
+    let frames = args.get_u64("frames").map_err(cli)?.unwrap_or(90);
+    let queue_depth = args.get_u64("queue-depth").map_err(cli)?.unwrap_or(2) as usize;
+    let source_seed = args.get_u64("seed").map_err(cli)?.unwrap_or(11);
 
-    let man = Manifest::load(artifacts)?;
-    let entry = man
-        .find(variant)
-        .ok_or_else(|| anyhow::anyhow!("variant {variant} not in manifest"))?;
-    let source = FrameSource::new(entry.config.clone(), cfg.source_seed, Some(cfg.offered_fps));
-
-    let backend: Box<dyn InferenceBackend> = match backend_kind {
-        "pjrt" => {
-            let mut engine = InferenceEngine::new()?;
-            engine.load_variant(entry)?;
-            Box::new(PjrtBackend {
-                engine: std::rc::Rc::new(engine),
-                tag: variant.to_string(),
-            })
-        }
+    let report = match backend_kind {
         "sim" => {
-            let weights = generate_weights(&entry.config, entry.seed);
-            let params = micro_params(entry.act_bits_opt(), &device);
-            let (kernels, threads) = kernel_opts(args, "kernels")?;
-            let mut executor =
-                ModelExecutor::new(weights, entry.act_bits_opt(), params, device)
-                    .with_threads(threads);
-            if let Some(b) = kernels {
-                executor = executor.with_backend(b);
+            let man = Manifest::load(artifacts).map_err(VaqfError::manifest)?;
+            let entry = man.find(variant).ok_or_else(|| {
+                VaqfError::manifest(anyhow::anyhow!("variant {variant} not in manifest"))
+            })?;
+            // `--config target.json` (device/backend/threads/model) is
+            // honored here exactly like `simulate`: the manifest variant
+            // only supplies the fallback model and the artifact's weight
+            // seed / precision.
+            let session = TargetSpec::from_cli_args(args, "kernels")?
+                .default_model(entry.config.clone())
+                .session()?;
+            // A config-file/env/flag model override is honored, but a
+            // silent swap under the variant's label would be a trap.
+            if session.target().model != entry.config {
+                eprintln!(
+                    "note: serving model `{}` (config/env/flag override) instead of \
+                     variant {variant}'s `{}`",
+                    session.target().model.name,
+                    entry.config.name
+                );
             }
-            Box::new(SimBackend {
-                executor,
-                realtime: args.has_flag("realtime"),
-            })
+            let design = session.compile_for_bits(entry.act_bits_opt())?;
+            design.server(&ServeOpts {
+                backend: ServeBackendOpt::Sim {
+                    realtime: args.has_flag("realtime"),
+                },
+                offered_fps,
+                frames,
+                queue_depth,
+                source_seed,
+                weights_seed: entry.seed,
+            })?
         }
-        other => anyhow::bail!("unknown backend {other} (sim|pjrt)"),
+        "pjrt" => {
+            // The PJRT backend executes the AOT artifact directly — no
+            // design-space optimization on this path. `backend` and
+            // `weights_seed` are ignored by `PjrtRuntime::server`.
+            let runtime = PjrtRuntime::load_variant(artifacts, variant)?;
+            runtime.server(
+                variant,
+                &ServeOpts {
+                    offered_fps,
+                    frames,
+                    queue_depth,
+                    source_seed,
+                    ..ServeOpts::default()
+                },
+            )?
+        }
+        other => return Err(VaqfError::config(format!("unknown backend {other} (sim|pjrt)"))),
     };
-
-    let report = serve(source, backend, &cfg)?;
     println!("{}", report.render());
     if args.has_flag("json") {
         println!("{}", report.to_json().pretty());
@@ -330,7 +263,7 @@ fn main() {
         }
     };
     if let Err(e) = result {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }

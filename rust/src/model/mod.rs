@@ -12,7 +12,7 @@ mod presets;
 mod vit;
 
 pub use layers::{HostOp, LayerDesc, LayerKind, Precision};
-pub use presets::{deit_base, deit_small, deit_tiny, VitPreset};
+pub use presets::{deit_base, deit_small, deit_tiny, micro, VitPreset};
 pub use vit::{patch_embed_as_fc, VitConfig, VitStructure};
 
 #[cfg(test)]

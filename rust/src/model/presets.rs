@@ -9,14 +9,22 @@ pub enum VitPreset {
     DeiTTiny,
     DeiTSmall,
     DeiTBase,
+    /// The tiny in-repo test model (32×32 inputs, 2 layers) used by the
+    /// functional simulator, the AOT artifacts and the serving demos.
+    Micro,
 }
 
 impl VitPreset {
+    /// Preset-name hint for error messages (keep in sync with
+    /// [`VitPreset::from_name`]).
+    pub const NAMES: &'static str = "deit-tiny/small/base/micro";
+
     pub fn config(self) -> VitConfig {
         match self {
             VitPreset::DeiTTiny => deit_tiny(),
             VitPreset::DeiTSmall => deit_small(),
             VitPreset::DeiTBase => deit_base(),
+            VitPreset::Micro => micro(),
         }
     }
 
@@ -25,10 +33,14 @@ impl VitPreset {
             "deit-tiny" | "tiny" => Some(VitPreset::DeiTTiny),
             "deit-small" | "small" => Some(VitPreset::DeiTSmall),
             "deit-base" | "base" => Some(VitPreset::DeiTBase),
+            "micro" | "deit-micro" => Some(VitPreset::Micro),
             _ => None,
         }
     }
 
+    /// The paper's DeiT family — the sweep set for tables and exploration.
+    /// `Micro` is addressable by name but deliberately excluded (it is a
+    /// test model, not a paper workload).
     pub fn all() -> [VitPreset; 3] {
         [VitPreset::DeiTTiny, VitPreset::DeiTSmall, VitPreset::DeiTBase]
     }
@@ -61,6 +73,23 @@ pub fn deit_small() -> VitConfig {
         num_heads: 6,
         mlp_ratio: 4,
         num_classes: 1000,
+    }
+}
+
+/// Micro: M=32, L=2, N_h=4 on 32×32 inputs — the in-repo test model whose
+/// AOT artifacts (`make artifacts`) and simulator runs are fast enough for
+/// CI. Dimensions must match `python/compile`'s micro variant.
+pub fn micro() -> VitConfig {
+    VitConfig {
+        name: "micro".into(),
+        image_size: 32,
+        patch_size: 8,
+        in_chans: 3,
+        embed_dim: 32,
+        depth: 2,
+        num_heads: 4,
+        mlp_ratio: 4,
+        num_classes: 10,
     }
 }
 

@@ -40,6 +40,10 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// Backend-name hint for error messages (keep in sync with
+    /// [`Backend::from_name`]).
+    pub const NAMES: &'static str = "scalar|packed";
+
     /// Parse a backend name (CLI/config/env surface).
     pub fn from_name(name: &str) -> Option<Backend> {
         match name.trim().to_ascii_lowercase().as_str() {

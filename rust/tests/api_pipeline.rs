@@ -1,0 +1,187 @@
+//! Integration: the `vaqf::api` facade end to end —
+//! `TargetSpec → Session → CompiledDesign → codegen / simulator / server`
+//! on the micro model, plus the layered-resolution precedence contract
+//! (explicit setter > env > config file > default) and typed-error
+//! matching from outside the crate.
+
+use vaqf::api::{ServeBackendOpt, ServeOpts, TargetSpec, VaqfError};
+use vaqf::model::micro;
+use vaqf::sim::Backend;
+use vaqf::util::json::Json;
+
+fn no_env(_: &str) -> Option<String> {
+    None
+}
+
+#[test]
+fn pipeline_target_spec_to_serving() {
+    // Every field is set explicitly so ambient VAQF_* env vars (which the
+    // explicit layer outranks) cannot perturb this test.
+    let session = TargetSpec::new()
+        .model(micro())
+        .device_preset("zcu102")
+        .target_fps(100.0)
+        .backend(Backend::Packed)
+        .threads(1)
+        .session()
+        .expect("spec resolves");
+    let design = session.compile().expect("micro @100FPS is feasible on zcu102");
+    assert_eq!(design.target().model.name, "micro");
+    assert!(design.summary().fps >= 100.0);
+    assert!(design.act_bits().is_some(), "quantized precision chosen");
+    let outcome = design.outcome().expect("search outcome recorded");
+    assert!(outcome.fr_max >= 100.0);
+
+    // Codegen artifacts land on disk and round-trip to the same params.
+    let dir = std::env::temp_dir().join("vaqf_api_pipeline_test");
+    let art = design.codegen(&dir).expect("codegen writes artifacts");
+    let cpp = std::fs::read_to_string(&art.cpp_path).unwrap();
+    assert!(cpp.contains("compute_engine") && cpp.contains("vit_layer"));
+    let text = std::fs::read_to_string(&art.json_path).unwrap();
+    let params = vaqf::compiler::params_from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(&params, design.params());
+
+    // The simulator is wired with the *compiled* parameters and runs.
+    let exec = design.simulator_with_seed(7);
+    assert_eq!(&exec.engine.params, design.params());
+    let patches = exec.weights.synthetic_patches(0);
+    let (logits, trace) = exec.run_frame(&patches);
+    assert_eq!(logits.len(), 10);
+    assert!(trace.total_cycles > 0);
+
+    // Serving end to end through the same design.
+    let report = design
+        .server(&ServeOpts {
+            backend: ServeBackendOpt::Sim { realtime: false },
+            offered_fps: 500.0,
+            frames: 12,
+            queue_depth: 12,
+            source_seed: 5,
+            weights_seed: 7,
+        })
+        .expect("sim serving succeeds");
+    assert_eq!(report.completed, 12);
+    assert_eq!(report.dropped, 0);
+}
+
+#[test]
+fn precedence_explicit_beats_env_beats_file_beats_default() {
+    let doc = Json::parse(
+        r#"{"model": "deit-small", "device": "zcu111", "target_fps": 40,
+            "backend": "scalar", "threads": 3}"#,
+    )
+    .unwrap();
+    let spec = TargetSpec::new().config_json(&doc).unwrap();
+
+    // Config file beats the built-in defaults.
+    let t = spec.resolve_with(&no_env).unwrap();
+    assert_eq!(t.model.name, "deit-small");
+    assert_eq!(t.device.name, "zcu111");
+    assert_eq!(t.target_fps, 40.0);
+    assert_eq!(t.backend, Backend::Scalar);
+    assert_eq!(t.threads, 3);
+
+    // Environment beats the config file.
+    let env = |key: &str| match key {
+        "VAQF_MODEL" => Some("deit-base".to_string()),
+        "VAQF_DEVICE" => Some("zcu102".to_string()),
+        "VAQF_TARGET_FPS" => Some("33.5".to_string()),
+        "VAQF_BACKEND" => Some("packed".to_string()),
+        "VAQF_THREADS" => Some("5".to_string()),
+        _ => None,
+    };
+    let t = spec.resolve_with(&env).unwrap();
+    assert_eq!(t.model.name, "deit-base");
+    assert_eq!(t.device.name, "zcu102");
+    assert_eq!(t.target_fps, 33.5);
+    assert_eq!(t.backend, Backend::Packed);
+    assert_eq!(t.threads, 5);
+
+    // Explicit setters beat the environment.
+    let spec = spec
+        .model_preset("deit-tiny")
+        .device_preset("zcu111")
+        .target_fps(60.0)
+        .backend(Backend::Scalar)
+        .threads(9);
+    let t = spec.resolve_with(&env).unwrap();
+    assert_eq!(t.model.name, "deit-tiny");
+    assert_eq!(t.device.name, "zcu111");
+    assert_eq!(t.target_fps, 60.0);
+    assert_eq!(t.backend, Backend::Scalar);
+    assert_eq!(t.threads, 9);
+
+    // Nothing set ⇒ built-in defaults.
+    let t = TargetSpec::new().resolve_with(&no_env).unwrap();
+    assert_eq!(t.model.name, "deit-base");
+    assert_eq!(t.device.name, "zcu102");
+    assert_eq!(t.target_fps, 24.0);
+    assert_eq!(t.backend, Backend::Packed);
+    assert_eq!(t.threads, 0);
+}
+
+#[test]
+fn process_environment_feeds_the_env_layer() {
+    // Touches only VAQF_TARGET_FPS; the other tests in this binary set
+    // their frame-rate targets explicitly, which outranks this layer.
+    std::env::set_var("VAQF_TARGET_FPS", "41.5");
+    let t = TargetSpec::new().resolve();
+    std::env::remove_var("VAQF_TARGET_FPS");
+    assert_eq!(t.unwrap().target_fps, 41.5);
+}
+
+#[test]
+fn config_file_layer_loads_from_disk() {
+    let dir = std::env::temp_dir().join("vaqf_api_cfg_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("target.json");
+    std::fs::write(
+        &path,
+        r#"{"device": {"preset": "zcu102", "clock_mhz": 300}, "threads": 2}"#,
+    )
+    .unwrap();
+    let t = TargetSpec::new()
+        .config_file(&path)
+        .unwrap()
+        .resolve_with(&no_env)
+        .unwrap();
+    assert_eq!(t.device.clock_mhz, 300, "partial preset override applied");
+    assert_eq!(t.device.name, "zcu102");
+    assert_eq!(t.threads, 2);
+    assert_eq!(t.model.name, "deit-base", "unset sections fall to defaults");
+
+    let missing = TargetSpec::new().config_file(dir.join("nope.json"));
+    assert!(matches!(missing, Err(VaqfError::Io { .. })));
+}
+
+#[test]
+fn unknown_preset_errors_are_matchable() {
+    let err = TargetSpec::new().model_preset("resnet50").session().unwrap_err();
+    assert!(err.to_string().contains("unknown model `resnet50`"));
+    match err {
+        VaqfError::UnknownPreset { ref name, .. } => assert_eq!(name, "resnet50"),
+        other => panic!("expected UnknownPreset, got {other:?}"),
+    }
+
+    let err = TargetSpec::new().device_preset("virtex9000").session().unwrap_err();
+    assert!(matches!(err, VaqfError::UnknownPreset { .. }));
+}
+
+#[test]
+fn infeasible_targets_are_matchable() {
+    let session = TargetSpec::new()
+        .model(micro())
+        .device_preset("zcu102")
+        .target_fps(1e9)
+        .backend(Backend::Packed)
+        .threads(1)
+        .session()
+        .unwrap();
+    match session.compile() {
+        Err(VaqfError::Infeasible { target_fps, fr_max, .. }) => {
+            assert_eq!(target_fps, 1e9);
+            assert!(fr_max < target_fps);
+        }
+        other => panic!("expected Infeasible, got {other:?}"),
+    }
+}
