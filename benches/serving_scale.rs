@@ -1,0 +1,105 @@
+//! Bench: multi-stream serving throughput vs worker-pool size.
+//!
+//! Compiles the DeiT-base preset for the ZCU102 at the paper's 24 FPS
+//! target, then drives the multi-stream scheduler on the deterministic
+//! virtual clock with analytic workers (per-frame latency from the
+//! compiled design's `perf::cycles` prediction): 8 offered streams, pools
+//! of 1→4 workers, one sweep per dispatch policy. Aggregate throughput,
+//! p99 latency and SLA violations land in `BENCH_serving.json`.
+//!
+//! Because time is simulated, the numbers measure *scheduling* behaviour
+//! (capacity, shedding, SLA pressure), not host speed — a full sweep
+//! costs well under a second of wall time. The `sched_host_seconds`
+//! metrics record what the scheduler itself costs the host.
+//!
+//! Run with: `cargo bench --bench serving_scale` (append `-- --quick`
+//! for the CI-sized subset).
+
+use vaqf::api::{Result, ServeClock, TargetSpec};
+use vaqf::coordinator::POLICY_NAMES;
+use vaqf::util::bench::{bench_output_path, JsonReport};
+use vaqf::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let quick = args.has_flag("quick");
+    let (streams, frames) = if quick { (8usize, 240u64) } else { (8, 1200) };
+    let mut report = JsonReport::new("serving_scale", if quick { "quick" } else { "full" });
+
+    println!("=== serving scale: DeiT-base on zcu102, {streams} streams ===\n");
+    let design = TargetSpec::new()
+        .model_preset("deit-base")
+        .device_preset("zcu102")
+        .target_fps(24.0)
+        .session()?
+        .compile()?;
+    let per_worker_fps = design.summary().fps;
+    println!(
+        "compiled {}: {per_worker_fps:.1} FPS per worker predicted\n",
+        design.summary().label
+    );
+
+    // Each stream offers 30 FPS (8 × 30 = 240 aggregate): one worker is
+    // deeply saturated, four still shy of the offered load, so throughput
+    // must rise monotonically across the whole 1→4 sweep.
+    let offered_fps = 30.0;
+    for policy in POLICY_NAMES {
+        println!("--- policy: {policy} ---");
+        let mut last = 0.0f64;
+        for workers in 1..=4usize {
+            let t0 = std::time::Instant::now();
+            let r = design
+                .server()
+                .streams(streams)
+                .workers(workers)
+                .policy(policy)
+                .offered_fps(offered_fps)
+                .frames(frames)
+                .queue_depth(4)
+                .sla_ms(80.0)
+                .analytic()
+                .clock(ServeClock::Virtual)
+                .run()?;
+            let host_s = t0.elapsed().as_secs_f64();
+            let a = &r.aggregate;
+            report.metric(
+                &format!("{policy}/workers={workers} throughput"),
+                a.achieved_fps,
+                "fps",
+            );
+            report.metric(
+                &format!("{policy}/workers={workers} p99_e2e"),
+                a.e2e_latency.p99 * 1e3,
+                "ms",
+            );
+            report.metric(
+                &format!("{policy}/workers={workers} drop_rate"),
+                a.drop_rate * 100.0,
+                "%",
+            );
+            report.metric(
+                &format!("{policy}/workers={workers} sla_violations"),
+                a.sla_violations as f64,
+                "frames",
+            );
+            report.metric(
+                &format!("{policy}/workers={workers} sched_host_seconds"),
+                host_s,
+                "s",
+            );
+            if a.achieved_fps + 1e-9 < last {
+                eprintln!(
+                    "WARNING: throughput fell from {last:.1} to {:.1} FPS at {workers} workers",
+                    a.achieved_fps
+                );
+            }
+            last = a.achieved_fps;
+        }
+        println!();
+    }
+
+    report
+        .write(bench_output_path("BENCH_serving.json"))
+        .map_err(vaqf::api::VaqfError::runtime)?;
+    Ok(())
+}

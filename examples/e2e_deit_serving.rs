@@ -17,7 +17,7 @@
 //!
 //! Run with: `make artifacts && cargo run --release --example e2e_deit_serving`
 
-use vaqf::api::{PjrtRuntime, Result, ServeBackendOpt, ServeOpts, TargetSpec, VaqfError};
+use vaqf::api::{PjrtRuntime, Result, ServeConfig, TargetSpec, VaqfError};
 use vaqf::util::stats::Summary;
 
 fn main() -> Result<()> {
@@ -103,20 +103,28 @@ fn main() -> Result<()> {
 
     // ---- 4. serve batched requests through both backends ------------------
     println!("--- serving 120 frames @ 200 FPS offered ---");
-    let base_opts = ServeOpts {
-        backend: ServeBackendOpt::Sim { realtime: false },
-        offered_fps: 200.0,
-        frames: 120,
-        queue_depth: 4,
-        source_seed: runtime.manifest().seed,
-        weights_seed: entry.seed,
-    };
 
     // Reuses the engine compiled in step 1 — no second XLA compilation.
-    let pjrt_report = runtime.server("micro_w1a8", &base_opts)?;
+    let pjrt_report = runtime.server(
+        "micro_w1a8",
+        &ServeConfig {
+            offered_fps: 200.0,
+            frames: 120,
+            queue_depth: 4,
+            source_seed: runtime.manifest().seed,
+        },
+    )?;
     println!("{}", pjrt_report.render());
 
-    let sim_report = design8.server(&base_opts)?;
+    let sim_report = design8
+        .server()
+        .simulated(false)
+        .offered_fps(200.0)
+        .frames(120)
+        .queue_depth(4)
+        .source_seed(runtime.manifest().seed)
+        .weights_seed(entry.seed)
+        .run()?;
     println!("{}", sim_report.render());
 
     // Simulated-FPGA frame rate for the compiled design (what the board

@@ -15,7 +15,7 @@
 //!
 //! Run with: `cargo run --release --example serve_video`
 
-use vaqf::api::{Device, Result, ServeBackendOpt, ServeOpts, TargetSpec};
+use vaqf::api::{Device, Result, TargetSpec};
 use vaqf::hw::ResourceBudget;
 use vaqf::model::micro;
 
@@ -67,14 +67,15 @@ fn main() -> Result<()> {
     println!("offered camera rate: {offered:.1} FPS\n");
 
     for design in &designs {
-        let report = design.server(&ServeOpts {
-            backend: ServeBackendOpt::Sim { realtime: true },
-            offered_fps: offered,
-            frames: 60,
-            queue_depth: 2,
-            source_seed: 11,
-            weights_seed: 11,
-        })?;
+        let report = design
+            .server()
+            .simulated(true) // pace wall-clock to the simulated latency
+            .offered_fps(offered)
+            .frames(60)
+            .queue_depth(2)
+            .source_seed(11)
+            .weights_seed(11)
+            .run()?;
         println!("--- {} ---\n{}", design.summary().label, report.render());
     }
     println!(

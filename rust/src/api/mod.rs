@@ -8,10 +8,10 @@
 //!
 //! ```text
 //! TargetSpec ──resolve──► Session ──compile──► CompiledDesign
-//!   (layered:                │                     ├── .codegen(dir)      HLS C++ + JSON
-//!    defaults                │ compile_for_bits    ├── .simulator()       cycle-level ModelExecutor
-//!    < config file           │ sweep / table5      └── .server(ServeOpts) sim/pjrt serving loop
-//!    < env < explicit)       ▼
+//!   (layered:                │                     ├── .codegen(dir)   HLS C++ + JSON
+//!    defaults                │ compile_for_bits    ├── .simulator()    cycle-level ModelExecutor
+//!    < config file           │ sweep / table5      └── .server()       serving builder:
+//!    < env < explicit)       ▼                         .streams(n).workers(w).policy(p).run()
 //! ```
 //!
 //! ```no_run
@@ -40,7 +40,7 @@ mod session;
 mod spec;
 
 pub use error::{Result, VaqfError};
-pub use serve::{PjrtRuntime, ServeBackendOpt, ServeOpts};
+pub use serve::{PjrtRuntime, ServeClock, ServeWorker, ServerBuilder};
 pub use session::{CodegenArtifacts, CompiledDesign, PrecisionSweep, Session, SweepPoint};
 pub use spec::TargetSpec;
 
@@ -51,7 +51,7 @@ pub use crate::compiler::{
     render_table5, render_table6, table6_rows, CompileOutcome, DesignPoint, SearchRound,
 };
 pub use crate::config::Target;
-pub use crate::coordinator::ServingReport;
+pub use crate::coordinator::{MultiServingReport, ServeConfig, ServingReport, StreamReport};
 pub use crate::hw::Device;
 pub use crate::model::VitConfig;
 pub use crate::perf::{AcceleratorParams, PerfSummary};

@@ -1,86 +1,233 @@
-//! Serving facade: the full `FrameSource → queue → backend` loop behind
-//! one call, with the `sim` / `pjrt` [`InferenceBackend`] constructed
-//! internally from the compiled design.
+//! Serving facade.
+//!
+//! * [`CompiledDesign::server`] — a builder over the multi-stream
+//!   coordinator: `design.server().streams(4).workers(2).policy("weighted-sla")
+//!   .virtual_clock().run()` runs N synthetic camera streams against a
+//!   pool of simulated accelerators and returns a
+//!   [`MultiServingReport`].
+//! * [`PjrtRuntime`] — the PJRT cross-check path (thread-affine client,
+//!   single-stream loop).
 
 use std::rc::Rc;
 
-use crate::coordinator::{serve, FrameSource, ServeConfig, ServingReport};
-use crate::runtime::{InferenceBackend, InferenceEngine, Manifest, PjrtBackend, SimBackend};
+use crate::coordinator::{
+    policy_for, serve, AnalyticWorker, FrameSource, MultiServingReport, Scheduler, ServeConfig,
+    ServingReport, SimWorker, StreamConfig, WorkerModel, POLICY_NAMES,
+};
+use crate::runtime::{InferenceBackend, InferenceEngine, Manifest, PjrtBackend};
 
 use super::error::{Result, VaqfError};
 use super::session::CompiledDesign;
 
-/// Which inference backend serves the frames.
-#[derive(Debug, Clone)]
-pub enum ServeBackendOpt {
-    /// The cycle-level simulated FPGA running this compiled design.
-    /// `realtime` paces wall-clock to the simulated latency (realistic
-    /// serving) instead of running as fast as the host allows.
-    Sim { realtime: bool },
-    /// PJRT CPU execution of an AOT artifact variant from the manifest in
-    /// `artifacts` (requires the `pjrt` feature at build time).
-    Pjrt { artifacts: String, variant: String },
+/// Which clock drives a serving run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeClock {
+    /// Real time: threaded producers and workers.
+    Wall,
+    /// Deterministic simulated time in device-cycle units: a
+    /// single-threaded discrete-event run, byte-reproducible and fast.
+    Virtual,
 }
 
-/// Options for one serving run.
-#[derive(Debug, Clone)]
-pub struct ServeOpts {
-    pub backend: ServeBackendOpt,
-    /// Frames the synthetic camera offers per second.
-    pub offered_fps: f64,
-    /// Total frames to offer.
-    pub frames: u64,
-    /// Queue depth before drop-oldest backpressure kicks in.
-    pub queue_depth: usize,
-    /// Seed for the synthetic frame source.
-    pub source_seed: u64,
-    /// Seed for the simulator's generated weights (sim backend only).
-    pub weights_seed: u64,
+/// What each pool worker runs.
+#[derive(Debug, Clone, Copy)]
+pub enum ServeWorker {
+    /// The cycle-level functional simulator of this compiled design.
+    /// `realtime` paces wall-clock service to the simulated latency
+    /// (ignored under the virtual clock, where latency *is* the
+    /// simulated time).
+    Simulated { realtime: bool },
+    /// Constant-latency workers from the design's predicted frame rate
+    /// (`perf::cycles`) — no numerics, so DeiT-scale scheduling studies
+    /// run in milliseconds.
+    Analytic,
 }
 
-impl Default for ServeOpts {
-    fn default() -> ServeOpts {
-        ServeOpts {
-            backend: ServeBackendOpt::Sim { realtime: false },
+/// Builder for a multi-stream serving run over a compiled design.
+/// Constructed by [`CompiledDesign::server`]; every knob has a sensible
+/// single-stream default.
+#[derive(Debug, Clone)]
+pub struct ServerBuilder<'d> {
+    design: &'d CompiledDesign,
+    streams: usize,
+    workers: usize,
+    policy: String,
+    offered_fps: f64,
+    frames: u64,
+    queue_depth: usize,
+    sla_ms: Option<f64>,
+    clock: ServeClock,
+    worker: ServeWorker,
+    source_seed: u64,
+    weights_seed: u64,
+}
+
+impl CompiledDesign {
+    /// Configure a serving run of this design; finish with
+    /// [`ServerBuilder::run`].
+    pub fn server(&self) -> ServerBuilder<'_> {
+        ServerBuilder {
+            design: self,
+            streams: 1,
+            workers: 1,
+            policy: "round-robin".to_string(),
             offered_fps: 30.0,
             frames: 90,
             queue_depth: 2,
+            sla_ms: None,
+            clock: ServeClock::Wall,
+            worker: ServeWorker::Simulated { realtime: false },
             source_seed: 11,
             weights_seed: 11,
         }
     }
 }
 
-impl CompiledDesign {
-    /// Run the serving loop against this design; blocks until every
-    /// offered frame is served or dropped and returns the report.
-    ///
-    /// The `sim` backend simulates *this* compiled design (parameters,
-    /// kernel backend, thread fan-out all from the resolved target); the
-    /// `pjrt` backend loads and compiles the named manifest variant
-    /// (independent of the design — equivalent to
-    /// [`PjrtRuntime::load_variant`] + [`PjrtRuntime::server`]).
-    pub fn server(&self, opts: &ServeOpts) -> Result<ServingReport> {
-        let realtime = match &opts.backend {
-            ServeBackendOpt::Sim { realtime } => *realtime,
-            ServeBackendOpt::Pjrt { artifacts, variant } => {
-                return PjrtRuntime::load_variant(artifacts, variant)?.server(variant, opts);
-            }
-        };
-        let cfg = ServeConfig {
-            offered_fps: opts.offered_fps,
-            frames: opts.frames,
-            queue_depth: opts.queue_depth,
-            source_seed: opts.source_seed,
-        };
-        let executor = self.simulator_with_seed(opts.weights_seed);
-        let source = FrameSource::new(
-            self.target().model.clone(),
-            cfg.source_seed,
-            Some(cfg.offered_fps),
-        );
-        let backend: Box<dyn InferenceBackend> = Box::new(SimBackend { executor, realtime });
-        serve(source, backend, &cfg).map_err(VaqfError::runtime)
+impl<'d> ServerBuilder<'d> {
+    /// Number of independent frame sources (each with its own queue,
+    /// pacing and SLA accounting).
+    pub fn streams(mut self, n: usize) -> Self {
+        self.streams = n;
+        self
+    }
+
+    /// Size of the simulated-accelerator worker pool.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    /// Dispatch policy by name: `round-robin`, `least-loaded`,
+    /// `weighted-sla` (validated at [`ServerBuilder::run`]).
+    pub fn policy(mut self, name: &str) -> Self {
+        self.policy = name.to_string();
+        self
+    }
+
+    /// Frames per second each stream offers.
+    pub fn offered_fps(mut self, fps: f64) -> Self {
+        self.offered_fps = fps;
+        self
+    }
+
+    /// Frames each stream offers in total.
+    pub fn frames(mut self, n: u64) -> Self {
+        self.frames = n;
+        self
+    }
+
+    /// Per-stream queue depth before drop-oldest backpressure.
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth;
+        self
+    }
+
+    /// End-to-end latency SLA per stream, in milliseconds.
+    pub fn sla_ms(mut self, ms: f64) -> Self {
+        self.sla_ms = Some(ms);
+        self
+    }
+
+    pub fn clock(mut self, clock: ServeClock) -> Self {
+        self.clock = clock;
+        self
+    }
+
+    /// Shorthand for `.clock(ServeClock::Virtual)`.
+    pub fn virtual_clock(self) -> Self {
+        self.clock(ServeClock::Virtual)
+    }
+
+    /// Run cycle-level simulated workers, optionally pacing wall-clock
+    /// service to the simulated latency.
+    pub fn simulated(mut self, realtime: bool) -> Self {
+        self.worker = ServeWorker::Simulated { realtime };
+        self
+    }
+
+    /// Run constant-latency analytic workers (no numerics).
+    pub fn analytic(mut self) -> Self {
+        self.worker = ServeWorker::Analytic;
+        self
+    }
+
+    pub fn source_seed(mut self, seed: u64) -> Self {
+        self.source_seed = seed;
+        self
+    }
+
+    /// Seed for the simulator's generated weights (simulated workers).
+    pub fn weights_seed(mut self, seed: u64) -> Self {
+        self.weights_seed = seed;
+        self
+    }
+
+    /// Execute the run; blocks until every offered frame is served or
+    /// dropped.
+    pub fn run(self) -> Result<MultiServingReport> {
+        if self.streams == 0 || self.workers == 0 {
+            return Err(VaqfError::config(
+                "serving needs at least 1 stream and 1 worker",
+            ));
+        }
+        if !(self.offered_fps > 0.0) {
+            return Err(VaqfError::config("offered_fps must be positive"));
+        }
+        if self.queue_depth == 0 {
+            return Err(VaqfError::config("queue_depth must be at least 1"));
+        }
+        let policy = policy_for(&self.policy).ok_or_else(|| {
+            VaqfError::config(format!(
+                "unknown dispatch policy `{}` (expected one of: {})",
+                self.policy,
+                POLICY_NAMES.join(", ")
+            ))
+        })?;
+
+        let model = self.design.target().model.clone();
+        let pairs: Vec<(StreamConfig, FrameSource)> = (0..self.streams)
+            .map(|i| {
+                let cfg = StreamConfig {
+                    offered_fps: self.offered_fps,
+                    frames: self.frames,
+                    queue_depth: self.queue_depth,
+                    sla_ms: self.sla_ms,
+                };
+                // Stagger stream phases so arrivals interleave instead of
+                // colliding on every tick.
+                let offset = i as f64 / (self.offered_fps * self.streams as f64);
+                let src = FrameSource::new(
+                    model.clone(),
+                    self.source_seed.wrapping_add(i as u64),
+                    Some(self.offered_fps),
+                )
+                .with_stream(i)
+                .with_offset(offset);
+                (cfg, src)
+            })
+            .collect();
+
+        let summary = self.design.summary();
+        let workers: Vec<Box<dyn WorkerModel>> = (0..self.workers)
+            .map(|_| match self.worker {
+                ServeWorker::Analytic => Box::new(AnalyticWorker {
+                    latency_s: self.design.frame_latency_s(),
+                    label: summary.label.clone(),
+                }) as Box<dyn WorkerModel>,
+                ServeWorker::Simulated { .. } => Box::new(SimWorker {
+                    executor: self.design.simulator_with_seed(self.weights_seed),
+                }) as Box<dyn WorkerModel>,
+            })
+            .collect();
+        let realtime = matches!(self.worker, ServeWorker::Simulated { realtime: true });
+
+        let scheduler = Scheduler::new(pairs, workers, policy).realtime(realtime);
+        match self.clock {
+            ServeClock::Virtual => scheduler
+                .run_virtual(self.design.target().device.clock_mhz)
+                .map_err(VaqfError::runtime),
+            ServeClock::Wall => scheduler.run_wall().map_err(VaqfError::runtime),
+        }
     }
 }
 
@@ -139,26 +286,20 @@ impl PjrtRuntime {
         self.engine.infer(tag, patches).map_err(VaqfError::runtime)
     }
 
-    /// Run the serving loop through one already-loaded variant, reusing
-    /// this runtime's compiled engine — unlike
-    /// [`CompiledDesign::server`]'s `Pjrt` option, nothing is re-loaded or
-    /// re-compiled. `opts.backend` and `opts.weights_seed` are ignored
-    /// (the backend is this runtime; the weights are the artifact's).
-    pub fn server(&self, variant: &str, opts: &ServeOpts) -> Result<ServingReport> {
+    /// Run the single-stream serving loop through one already-loaded
+    /// variant, reusing this runtime's compiled engine. The PJRT client
+    /// wraps thread-affine C pointers, so this path stays on the calling
+    /// thread — multi-worker pools are a simulator-side feature
+    /// ([`CompiledDesign::server`]).
+    pub fn server(&self, variant: &str, cfg: &ServeConfig) -> Result<ServingReport> {
         let entry = self.manifest.find(variant).ok_or_else(|| VaqfError::Manifest {
             message: format!("variant {variant} not in manifest"),
         })?;
-        let cfg = ServeConfig {
-            offered_fps: opts.offered_fps,
-            frames: opts.frames,
-            queue_depth: opts.queue_depth,
-            source_seed: opts.source_seed,
-        };
         let source = FrameSource::new(entry.config.clone(), cfg.source_seed, Some(cfg.offered_fps));
         let backend: Box<dyn InferenceBackend> = Box::new(PjrtBackend {
             engine: Rc::clone(&self.engine),
             tag: variant.to_string(),
         });
-        serve(source, backend, &cfg).map_err(VaqfError::runtime)
+        serve(source, backend, cfg).map_err(VaqfError::runtime)
     }
 }

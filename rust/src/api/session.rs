@@ -9,7 +9,9 @@
 //!
 //! CompiledDesign::codegen()    HLS C++ + simulator JSON on disk
 //! CompiledDesign::simulator()  a wired cycle-level ModelExecutor
-//! CompiledDesign::server()     the full serving loop (api::serve)
+//! CompiledDesign::server()     serving builder — streams × workers ×
+//!                              dispatch policy over a wall or virtual
+//!                              clock (api::serve)
 //! ```
 
 use std::cell::OnceCell;
@@ -317,6 +319,13 @@ impl CompiledDesign {
     /// conventional demo seed (11).
     pub fn simulator(&self) -> ModelExecutor {
         self.simulator_with_seed(11)
+    }
+
+    /// Predicted per-frame service latency (seconds) of this design —
+    /// the analytical `perf::cycles` total at the device clock. This is
+    /// what analytic serving workers charge per frame.
+    pub fn frame_latency_s(&self) -> f64 {
+        1.0 / self.design.summary.fps
     }
 }
 

@@ -1,0 +1,172 @@
+//! Time abstraction for the serving path.
+//!
+//! Every latency, pacing and scheduling decision in the coordinator goes
+//! through a [`Clock`] so the same code runs in two regimes:
+//!
+//! * [`WallClock`] — real time, for live serving and wall-clock benches;
+//! * [`VirtualClock`] — deterministic simulated time stepping in
+//!   accelerator-cycle units (the same unit `perf::cycles` predicts and
+//!   the simulator's `ExecTrace` reports), so a scheduling test over N
+//!   streams and W workers is reproducible to the byte and runs as fast
+//!   as the host allows, independent of the simulated rates.
+//!
+//! Timestamps are `f64` seconds since the clock's epoch (construction).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::Cycles;
+
+/// A monotonic clock the serving path can pace against.
+pub trait Clock: Send + Sync {
+    /// Seconds elapsed since this clock's epoch.
+    fn now(&self) -> f64;
+
+    /// Block (wall time) or advance (virtual time) until `t` seconds.
+    /// A `t` in the past is a no-op; time never goes backwards.
+    fn sleep_until(&self, t: f64);
+
+    /// `true` when time is simulated (no real blocking ever happens).
+    fn is_virtual(&self) -> bool {
+        false
+    }
+}
+
+/// Real time, anchored at construction.
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock {
+            start: Instant::now(),
+        }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn sleep_until(&self, t: f64) {
+        let now = self.now();
+        if t > now {
+            std::thread::sleep(Duration::from_secs_f64(t - now));
+        }
+    }
+}
+
+/// Deterministic virtual clock counting simulated accelerator cycles.
+///
+/// The integer cycle counter is the source of truth — seconds are a
+/// derived view at the device clock rate — so event ordering never
+/// depends on float rounding and a run's timeline is bit-reproducible.
+pub struct VirtualClock {
+    clock_mhz: u64,
+    cycles: AtomicU64,
+}
+
+impl VirtualClock {
+    /// A virtual clock ticking at `clock_mhz` (the device clock, so one
+    /// tick is one simulated accelerator cycle).
+    pub fn new(clock_mhz: u64) -> VirtualClock {
+        assert!(clock_mhz > 0, "virtual clock needs a positive rate");
+        VirtualClock {
+            clock_mhz,
+            cycles: AtomicU64::new(0),
+        }
+    }
+
+    /// Current simulated cycle.
+    pub fn cycles(&self) -> Cycles {
+        self.cycles.load(Ordering::SeqCst)
+    }
+
+    pub fn clock_mhz(&self) -> u64 {
+        self.clock_mhz
+    }
+
+    /// Convert a duration in seconds to whole cycles (rounded up, so a
+    /// nonzero duration is never squashed to zero).
+    pub fn seconds_to_cycles(&self, seconds: f64) -> Cycles {
+        let c = (seconds * self.clock_mhz as f64 * 1e6).ceil();
+        if c <= 0.0 {
+            0
+        } else {
+            c as Cycles
+        }
+    }
+
+    pub fn cycles_to_seconds(&self, cycles: Cycles) -> f64 {
+        cycles as f64 / (self.clock_mhz as f64 * 1e6)
+    }
+
+    /// Advance the clock to `cycle` (monotone: earlier targets are no-ops).
+    pub fn advance_to(&self, cycle: Cycles) {
+        self.cycles.fetch_max(cycle, Ordering::SeqCst);
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.cycles_to_seconds(self.cycles())
+    }
+
+    fn sleep_until(&self, t: f64) {
+        self.advance_to(self.seconds_to_cycles(t));
+    }
+
+    fn is_virtual(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_clock_advances() {
+        let c = WallClock::new();
+        let t0 = c.now();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(c.now() > t0);
+        assert!(!c.is_virtual());
+    }
+
+    #[test]
+    fn wall_clock_sleep_until_past_is_noop() {
+        let c = WallClock::new();
+        c.sleep_until(-1.0); // must not panic or block
+    }
+
+    #[test]
+    fn virtual_clock_is_monotone_and_exact() {
+        let c = VirtualClock::new(150);
+        assert_eq!(c.cycles(), 0);
+        c.advance_to(150_000_000); // 1 simulated second at 150 MHz
+        assert_eq!(c.now(), 1.0);
+        c.advance_to(75_000_000); // backwards target: no-op
+        assert_eq!(c.cycles(), 150_000_000);
+        assert!(c.is_virtual());
+    }
+
+    #[test]
+    fn virtual_clock_roundtrips_cycle_units() {
+        let c = VirtualClock::new(150);
+        assert_eq!(c.seconds_to_cycles(1.0), 150_000_000);
+        assert_eq!(c.seconds_to_cycles(0.0), 0);
+        // Rounding up: a sub-cycle duration still costs one cycle.
+        assert_eq!(c.seconds_to_cycles(1e-12), 1);
+        c.sleep_until(0.5);
+        assert_eq!(c.cycles(), 75_000_000);
+    }
+}

@@ -1,4 +1,6 @@
-//! Serving metrics: latency distribution, achieved FPS, drop accounting.
+//! Serving metrics: latency distributions, achieved FPS, drop and SLA
+//! accounting — single-stream ([`ServingReport`]) and multi-stream
+//! ([`MultiServingReport`], per stream + per worker + aggregate).
 
 use std::time::Instant;
 
@@ -25,7 +27,7 @@ impl Metrics {
     }
 }
 
-/// Final report of a serving run.
+/// Final report of a single-stream serving run.
 #[derive(Debug, Clone)]
 pub struct ServingReport {
     pub backend: String,
@@ -106,5 +108,229 @@ impl ServingReport {
             p99 = self.e2e_latency.p99 * 1e3,
             dm = self.device_latency.mean * 1e3,
         )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Multi-stream serving (scheduler path).
+// ---------------------------------------------------------------------------
+
+/// Per-stream accumulator while a scheduler run is in flight.
+#[derive(Debug, Clone, Default)]
+pub struct StreamStats {
+    pub offered: u64,
+    pub dropped: u64,
+    pub sla_violations: u64,
+    pub e2e: Vec<f64>,
+    pub device: Vec<f64>,
+}
+
+impl StreamStats {
+    /// Record a completed frame.
+    pub fn record(&mut self, e2e_s: f64, device_s: f64, sla_violation: bool) {
+        self.e2e.push(e2e_s);
+        self.device.push(device_s);
+        if sla_violation {
+            self.sla_violations += 1;
+        }
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.e2e.len() as u64
+    }
+}
+
+/// Latency summary rendered in milliseconds (shared JSON shape).
+fn latency_ms_json(s: &Summary) -> Json {
+    Json::obj()
+        .set("p50", s.p50 * 1e3)
+        .set("p95", s.p95 * 1e3)
+        .set("p99", s.p99 * 1e3)
+        .set("mean", s.mean * 1e3)
+        .set("max", s.max * 1e3)
+}
+
+/// One stream's slice of a [`MultiServingReport`].
+#[derive(Debug, Clone)]
+pub struct StreamReport {
+    pub stream: usize,
+    pub offered_fps: f64,
+    pub sla_ms: Option<f64>,
+    pub offered: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub drop_rate: f64,
+    pub sla_violations: u64,
+    pub e2e_latency: Summary,
+    pub device_latency: Summary,
+}
+
+impl StreamReport {
+    pub fn from_stats(
+        stream: usize,
+        offered_fps: f64,
+        sla_ms: Option<f64>,
+        stats: &StreamStats,
+    ) -> StreamReport {
+        StreamReport {
+            stream,
+            offered_fps,
+            sla_ms,
+            offered: stats.offered,
+            completed: stats.completed(),
+            dropped: stats.dropped,
+            drop_rate: stats.dropped as f64 / stats.offered.max(1) as f64,
+            sla_violations: stats.sla_violations,
+            e2e_latency: Summary::from(&stats.e2e),
+            device_latency: Summary::from(&stats.device),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("stream", self.stream)
+            .set("offered_fps", self.offered_fps)
+            .set("offered", self.offered)
+            .set("completed", self.completed)
+            .set("dropped", self.dropped)
+            .set("drop_rate", self.drop_rate)
+            .set("sla_violations", self.sla_violations)
+            .set("e2e_latency_ms", latency_ms_json(&self.e2e_latency))
+            .set("device_latency_ms", latency_ms_json(&self.device_latency));
+        if let Some(sla) = self.sla_ms {
+            j = j.set("sla_ms", sla);
+        }
+        j
+    }
+}
+
+/// One worker's slice of a [`MultiServingReport`].
+#[derive(Debug, Clone)]
+pub struct WorkerReport {
+    pub worker: usize,
+    pub name: String,
+    pub served: u64,
+    pub busy_seconds: f64,
+    /// Busy fraction of the run (0..=1).
+    pub utilization: f64,
+}
+
+impl WorkerReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("worker", self.worker)
+            .set("name", self.name.as_str())
+            .set("served", self.served)
+            .set("busy_seconds", self.busy_seconds)
+            .set("utilization", self.utilization)
+    }
+}
+
+/// Whole-run totals of a [`MultiServingReport`].
+#[derive(Debug, Clone)]
+pub struct AggregateReport {
+    pub offered: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub drop_rate: f64,
+    pub sla_violations: u64,
+    /// Completed frames per second over the run (virtual or wall).
+    pub achieved_fps: f64,
+    pub e2e_latency: Summary,
+    pub device_latency: Summary,
+}
+
+impl AggregateReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("offered", self.offered)
+            .set("completed", self.completed)
+            .set("dropped", self.dropped)
+            .set("drop_rate", self.drop_rate)
+            .set("sla_violations", self.sla_violations)
+            .set("achieved_fps", self.achieved_fps)
+            .set("e2e_latency_ms", latency_ms_json(&self.e2e_latency))
+            .set("device_latency_ms", latency_ms_json(&self.device_latency))
+    }
+}
+
+/// Final report of a multi-stream, multi-worker scheduler run.
+///
+/// Under a `VirtualClock` every field is a pure function of the
+/// configuration — `to_json().pretty()` is byte-identical across runs.
+#[derive(Debug, Clone)]
+pub struct MultiServingReport {
+    pub backend: String,
+    pub policy: String,
+    /// `"wall"` or `"virtual"`.
+    pub clock: String,
+    /// Run length in clock seconds (simulated for `VirtualClock`).
+    pub elapsed_seconds: f64,
+    pub aggregate: AggregateReport,
+    pub streams: Vec<StreamReport>,
+    pub workers: Vec<WorkerReport>,
+}
+
+impl MultiServingReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("backend", self.backend.as_str())
+            .set("policy", self.policy.as_str())
+            .set("clock", self.clock.as_str())
+            .set("elapsed_seconds", self.elapsed_seconds)
+            .set("aggregate", self.aggregate.to_json())
+            .set(
+                "streams",
+                Json::Arr(self.streams.iter().map(StreamReport::to_json).collect()),
+            )
+            .set(
+                "workers",
+                Json::Arr(self.workers.iter().map(WorkerReport::to_json).collect()),
+            )
+    }
+
+    pub fn render(&self) -> String {
+        let a = &self.aggregate;
+        let mut out = format!(
+            "backend {b}  ({s} streams × {w} workers, {p} dispatch, {c} clock)\n  \
+             aggregate: offered {o} → completed {cmp}, dropped {d} ({dr:.1}%), \
+             {fps:.1} FPS achieved, {v} SLA violations\n  \
+             e2e latency  p50 {p50:.2} ms  p95 {p95:.2} ms  p99 {p99:.2} ms\n",
+            b = self.backend,
+            s = self.streams.len(),
+            w = self.workers.len(),
+            p = self.policy,
+            c = self.clock,
+            o = a.offered,
+            cmp = a.completed,
+            d = a.dropped,
+            dr = 100.0 * a.drop_rate,
+            fps = a.achieved_fps,
+            v = a.sla_violations,
+            p50 = a.e2e_latency.p50 * 1e3,
+            p95 = a.e2e_latency.p95 * 1e3,
+            p99 = a.e2e_latency.p99 * 1e3,
+        );
+        for s in &self.streams {
+            out.push_str(&format!(
+                "  stream {i}: offered {o} completed {c} dropped {d}  \
+                 p99 {p99:.2} ms  sla_violations {v}\n",
+                i = s.stream,
+                o = s.offered,
+                c = s.completed,
+                d = s.dropped,
+                p99 = s.e2e_latency.p99 * 1e3,
+                v = s.sla_violations,
+            ));
+        }
+        for w in &self.workers {
+            out.push_str(&format!(
+                "  worker {i}: served {n} frames, {u:.0}% busy\n",
+                i = w.worker,
+                n = w.served,
+                u = 100.0 * w.utilization,
+            ));
+        }
+        out
     }
 }

@@ -2,7 +2,8 @@
 //!
 //! VAQF's end product is a *real-time* inference accelerator — the paper's
 //! contract is "`FR_tgt` frames per second, sustained". This module is the
-//! serving loop that exercises that contract end to end:
+//! serving layer that exercises that contract end to end, from the
+//! original single-stream loop up to multi-stream traffic:
 //!
 //! ```text
 //! FrameSource ──► BoundedQueue (drop-oldest backpressure) ──► worker
@@ -11,20 +12,35 @@
 //!                                     Metrics ◄── latency, drops, achieved FPS
 //! ```
 //!
-//! Backends implement [`crate::runtime::InferenceBackend`]: either the
-//! PJRT functional reference or the cycle-level FPGA simulator (which can
-//! pace wall-clock to the simulated latency, so the serving report
-//! reflects the *accelerator's* real-time behaviour).
+//! * [`serve`] — the single-stream, single-worker loop (used by the PJRT
+//!   cross-check path, whose client is thread-affine).
+//! * [`Scheduler`] — N streams × W workers behind a pluggable
+//!   [`DispatchPolicy`], runnable in real time ([`WallClock`]) or as a
+//!   deterministic discrete-event simulation ([`VirtualClock`]).
+//!
+//! Backends implement [`crate::runtime::InferenceBackend`] (single-stream
+//! loop) or [`WorkerModel`] (scheduler pool): either the cycle-level FPGA
+//! simulator or the analytical latency model from `perf::cycles`.
 
 mod adaptive;
+mod clock;
 mod metrics;
 mod queue;
+mod scheduler;
 mod server;
 mod source;
 
 pub use adaptive::AdaptivePrecision;
-pub use metrics::{Metrics, ServingReport};
-pub use queue::BoundedQueue;
+pub use clock::{Clock, VirtualClock, WallClock};
+pub use metrics::{
+    AggregateReport, Metrics, MultiServingReport, ServingReport, StreamReport, StreamStats,
+    WorkerReport,
+};
+pub use queue::{BoundedQueue, PushOutcome};
+pub use scheduler::{
+    policy_for, AnalyticWorker, DispatchPolicy, LeastLoaded, RoundRobin, Scheduler, SimWorker,
+    StreamConfig, StreamSnapshot, WeightedSla, WorkerModel, WorkerSnapshot, POLICY_NAMES,
+};
 pub use server::{serve, ServeConfig};
 pub use source::{Frame, FrameSource};
 

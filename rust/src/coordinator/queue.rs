@@ -1,21 +1,51 @@
-//! Bounded MPSC frame queue with drop-oldest backpressure.
+//! Bounded MPMC frame queue with drop-oldest backpressure.
 //!
 //! A real-time video pipeline must shed load rather than grow latency
 //! unboundedly: when the accelerator falls behind, the *oldest* queued
 //! frame is dropped (its information is stale) and the new one admitted.
+//!
+//! Conservation invariant (checked by the concurrency suite): every
+//! admitted item is eventually popped or evicted by drop-oldest —
+//! `pushed() == popped() + dropped() + len()` at any quiescent point, and
+//! `close()` never discards items that were already admitted.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 
+/// What happened to a [`BoundedQueue::push`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// Admitted; the queue had room.
+    Admitted,
+    /// Admitted, evicting the oldest queued item to make room.
+    AdmittedDroppedOldest,
+    /// Rejected: the queue was already closed. Nothing was admitted and
+    /// no counter moved.
+    RejectedClosed,
+}
+
+impl PushOutcome {
+    /// Was the item admitted (with or without an eviction)?
+    pub fn admitted(self) -> bool {
+        !matches!(self, PushOutcome::RejectedClosed)
+    }
+
+    /// Did this admission evict the oldest queued item?
+    pub fn dropped_oldest(self) -> bool {
+        matches!(self, PushOutcome::AdmittedDroppedOldest)
+    }
+}
+
 /// Bounded queue; `push` never blocks (drops oldest on overflow), `pop`
-/// blocks until an item or shutdown.
+/// blocks until an item or shutdown, `try_pop` never blocks.
 pub struct BoundedQueue<T> {
     inner: Mutex<Inner<T>>,
     cv: Condvar,
     capacity: usize,
     dropped: AtomicU64,
     pushed: AtomicU64,
+    popped: AtomicU64,
 }
 
 struct Inner<T> {
@@ -35,27 +65,28 @@ impl<T> BoundedQueue<T> {
             capacity,
             dropped: AtomicU64::new(0),
             pushed: AtomicU64::new(0),
+            popped: AtomicU64::new(0),
         }
     }
 
-    /// Admit an item, dropping the oldest if full. Returns `true` if a
-    /// drop occurred.
-    pub fn push(&self, item: T) -> bool {
+    /// Admit an item, dropping the oldest if full; see [`PushOutcome`]
+    /// for the three distinguishable results.
+    pub fn push(&self, item: T) -> PushOutcome {
         let mut g = self.inner.lock().unwrap();
         if g.closed {
-            return false;
+            return PushOutcome::RejectedClosed;
         }
-        let mut dropped = false;
+        let mut outcome = PushOutcome::Admitted;
         if g.items.len() == self.capacity {
             g.items.pop_front();
             self.dropped.fetch_add(1, Ordering::Relaxed);
-            dropped = true;
+            outcome = PushOutcome::AdmittedDroppedOldest;
         }
         g.items.push_back(item);
         self.pushed.fetch_add(1, Ordering::Relaxed);
         drop(g);
         self.cv.notify_one();
-        dropped
+        outcome
     }
 
     /// Blocking pop; `None` once closed and drained.
@@ -63,6 +94,7 @@ impl<T> BoundedQueue<T> {
         let mut g = self.inner.lock().unwrap();
         loop {
             if let Some(item) = g.items.pop_front() {
+                self.popped.fetch_add(1, Ordering::Relaxed);
                 return Some(item);
             }
             if g.closed {
@@ -72,10 +104,32 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Non-blocking pop: `None` when currently empty (closed or not).
+    pub fn try_pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        let item = g.items.pop_front();
+        if item.is_some() {
+            self.popped.fetch_add(1, Ordering::Relaxed);
+        }
+        item
+    }
+
+    /// Observe the head item (oldest) without removing it. Returns `None`
+    /// when the queue is currently empty. The closure runs under the
+    /// queue lock — keep it cheap and lock-free.
+    pub fn peek_front<R>(&self, f: impl FnOnce(&T) -> R) -> Option<R> {
+        let g = self.inner.lock().unwrap();
+        g.items.front().map(f)
+    }
+
     /// Close: wake all consumers; queued items still drain.
     pub fn close(&self) {
         self.inner.lock().unwrap().closed = true;
         self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
     }
 
     pub fn len(&self) -> usize {
@@ -86,11 +140,18 @@ impl<T> BoundedQueue<T> {
         self.len() == 0
     }
 
+    /// Items evicted by drop-oldest admissions.
     pub fn dropped(&self) -> u64 {
         self.dropped.load(Ordering::Relaxed)
     }
 
+    /// Items admitted (rejected-after-close pushes do not count).
     pub fn pushed(&self) -> u64 {
         self.pushed.load(Ordering::Relaxed)
+    }
+
+    /// Items handed to consumers via `pop`/`try_pop`.
+    pub fn popped(&self) -> u64 {
+        self.popped.load(Ordering::Relaxed)
     }
 }

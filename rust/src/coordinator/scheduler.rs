@@ -1,0 +1,761 @@
+//! Multi-stream, multi-worker serving scheduler.
+//!
+//! N independent frame sources — each with its own [`BoundedQueue`],
+//! offered rate and optional latency SLA — feed a pool of W simulated
+//! accelerator workers through a pluggable [`DispatchPolicy`]:
+//!
+//! ```text
+//! stream 0 ─► BoundedQueue ─┐                 ┌─► worker 0 (WorkerModel)
+//! stream 1 ─► BoundedQueue ─┼─ DispatchPolicy ┼─► worker 1
+//!    …                      │                 │      …
+//! stream N ─► BoundedQueue ─┘                 └─► worker W
+//!                                │
+//!                      per-stream + per-worker + aggregate
+//!                      MultiServingReport (p50/p95/p99, drops, SLA)
+//! ```
+//!
+//! Two execution modes share the policies and the metrics:
+//!
+//! * [`Scheduler::run_virtual`] — a single-threaded discrete-event
+//!   simulation over a [`VirtualClock`] stepping in accelerator-cycle
+//!   units. Fully deterministic: the report JSON is byte-identical across
+//!   runs, and a minute of simulated traffic costs milliseconds of host
+//!   time. Service times come from the worker model (cycle-accurate
+//!   simulation or the analytical `perf::cycles` latency).
+//! * [`Scheduler::run_wall`] — real producer and worker threads over a
+//!   [`WallClock`], for live serving. Free workers pull work themselves,
+//!   so the policy's stream choice applies and worker selection is
+//!   whichever thread frees up first.
+
+use std::collections::BinaryHeap;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::sim::ModelExecutor;
+use crate::util::stats::Summary;
+use crate::Cycles;
+
+use super::clock::{Clock, VirtualClock, WallClock};
+use super::metrics::{
+    AggregateReport, MultiServingReport, StreamReport, StreamStats, WorkerReport,
+};
+use super::queue::BoundedQueue;
+use super::source::{Frame, FrameSource};
+
+// ---------------------------------------------------------------------------
+// Stream configuration.
+// ---------------------------------------------------------------------------
+
+/// One stream's traffic contract.
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// Frames offered per second.
+    pub offered_fps: f64,
+    /// Total frames this stream offers.
+    pub frames: u64,
+    /// Queue depth before drop-oldest backpressure kicks in.
+    pub queue_depth: usize,
+    /// End-to-end latency SLA in milliseconds (None ⇒ best effort).
+    pub sla_ms: Option<f64>,
+}
+
+impl Default for StreamConfig {
+    fn default() -> StreamConfig {
+        StreamConfig {
+            offered_fps: 30.0,
+            frames: 90,
+            queue_depth: 2,
+            sla_ms: None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker models.
+// ---------------------------------------------------------------------------
+
+/// A simulated accelerator instance in the worker pool: consumes one
+/// frame, returns the device-latency in seconds.
+pub trait WorkerModel: Send {
+    fn name(&self) -> String;
+
+    /// Whether frames routed to this worker need their pixel payload
+    /// (`false` lets the scheduler skip synthetic patch generation).
+    fn needs_patches(&self) -> bool {
+        true
+    }
+
+    /// Process one frame; returns the device service time in seconds.
+    fn service(&mut self, frame: &Frame) -> anyhow::Result<f64>;
+}
+
+/// Constant-latency worker from the analytical performance model
+/// (`perf::cycles` via a compiled design's predicted frame rate) — the
+/// cheap way to study scheduling behaviour at DeiT scale.
+pub struct AnalyticWorker {
+    pub latency_s: f64,
+    pub label: String,
+}
+
+impl WorkerModel for AnalyticWorker {
+    fn name(&self) -> String {
+        format!("analytic:{}", self.label)
+    }
+
+    fn needs_patches(&self) -> bool {
+        false
+    }
+
+    fn service(&mut self, _frame: &Frame) -> anyhow::Result<f64> {
+        Ok(self.latency_s)
+    }
+}
+
+/// Cycle-level simulated-FPGA worker: runs the functional numerics and
+/// reports the simulated latency at the device clock.
+pub struct SimWorker {
+    pub executor: ModelExecutor,
+}
+
+impl WorkerModel for SimWorker {
+    fn name(&self) -> String {
+        format!(
+            "sim-fpga:{}@{}",
+            self.executor.config.name, self.executor.device.name
+        )
+    }
+
+    fn service(&mut self, frame: &Frame) -> anyhow::Result<f64> {
+        let (logits, trace) = self.executor.run_frame(&frame.patches);
+        debug_assert!(logits.iter().all(|v| v.is_finite()));
+        Ok(trace.latency_s)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch policies.
+// ---------------------------------------------------------------------------
+
+/// A stream with at least one waiting frame, as seen by a policy.
+/// Snapshots are always presented in ascending `stream` order.
+#[derive(Debug, Clone, Copy)]
+pub struct StreamSnapshot {
+    pub stream: usize,
+    /// Frames currently waiting in this stream's queue.
+    pub queued: usize,
+    /// Emission time (clock seconds) of the oldest waiting frame.
+    pub head_emitted_at: f64,
+    /// `head_emitted_at + SLA`, or `f64::INFINITY` for best-effort
+    /// streams.
+    pub head_deadline: f64,
+}
+
+/// An idle worker, as seen by a policy.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerSnapshot {
+    pub worker: usize,
+    /// Cumulative busy seconds so far.
+    pub busy_s: f64,
+    pub served: u64,
+}
+
+/// Pairs waiting frames with idle workers. Both methods receive
+/// non-empty candidate slices and return a *position* in the slice.
+pub trait DispatchPolicy: Send {
+    fn name(&self) -> &'static str;
+    fn pick_stream(&mut self, ready: &[StreamSnapshot]) -> usize;
+    fn pick_worker(&mut self, idle: &[WorkerSnapshot]) -> usize;
+}
+
+fn least_busy_worker(idle: &[WorkerSnapshot]) -> usize {
+    idle.iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| {
+            a.busy_s
+                .partial_cmp(&b.busy_s)
+                .unwrap()
+                .then(a.worker.cmp(&b.worker))
+        })
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+/// Cycle fairly through streams and workers regardless of load.
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    next_stream: usize,
+    next_worker: usize,
+}
+
+impl DispatchPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn pick_stream(&mut self, ready: &[StreamSnapshot]) -> usize {
+        let pos = ready
+            .iter()
+            .position(|s| s.stream >= self.next_stream)
+            .unwrap_or(0);
+        self.next_stream = ready[pos].stream + 1;
+        pos
+    }
+
+    fn pick_worker(&mut self, idle: &[WorkerSnapshot]) -> usize {
+        let pos = idle
+            .iter()
+            .position(|w| w.worker >= self.next_worker)
+            .unwrap_or(0);
+        self.next_worker = idle[pos].worker + 1;
+        pos
+    }
+}
+
+/// Serve the deepest queue first (pressure relief); hand frames to the
+/// least-busy worker.
+#[derive(Debug, Default)]
+pub struct LeastLoaded;
+
+impl DispatchPolicy for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn pick_stream(&mut self, ready: &[StreamSnapshot]) -> usize {
+        ready
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, s)| (s.queued, std::cmp::Reverse(s.stream)))
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    fn pick_worker(&mut self, idle: &[WorkerSnapshot]) -> usize {
+        least_busy_worker(idle)
+    }
+}
+
+/// Earliest-deadline-first across streams: the head frame closest to
+/// violating its SLA goes next (best-effort streams rank last, oldest
+/// first); least-busy worker.
+#[derive(Debug, Default)]
+pub struct WeightedSla;
+
+impl DispatchPolicy for WeightedSla {
+    fn name(&self) -> &'static str {
+        "weighted-sla"
+    }
+
+    fn pick_stream(&mut self, ready: &[StreamSnapshot]) -> usize {
+        ready
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                a.head_deadline
+                    .partial_cmp(&b.head_deadline)
+                    .unwrap()
+                    .then(a.head_emitted_at.partial_cmp(&b.head_emitted_at).unwrap())
+                    .then(a.stream.cmp(&b.stream))
+            })
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    fn pick_worker(&mut self, idle: &[WorkerSnapshot]) -> usize {
+        least_busy_worker(idle)
+    }
+}
+
+/// Look up a policy by CLI name (`round-robin`/`rr`, `least-loaded`/`ll`,
+/// `weighted-sla`/`sla`).
+pub fn policy_for(name: &str) -> Option<Box<dyn DispatchPolicy>> {
+    match name {
+        "round-robin" | "rr" => Some(Box::new(RoundRobin::default())),
+        "least-loaded" | "ll" => Some(Box::new(LeastLoaded)),
+        "weighted-sla" | "sla" => Some(Box::new(WeightedSla)),
+        _ => None,
+    }
+}
+
+/// The policy names [`policy_for`] accepts (canonical spellings).
+pub const POLICY_NAMES: [&str; 3] = ["round-robin", "least-loaded", "weighted-sla"];
+
+// ---------------------------------------------------------------------------
+// The scheduler.
+// ---------------------------------------------------------------------------
+
+/// A configured multi-stream serving run; consume it with
+/// [`Scheduler::run_virtual`] or [`Scheduler::run_wall`].
+pub struct Scheduler {
+    streams: Vec<StreamConfig>,
+    sources: Vec<FrameSource>,
+    workers: Vec<Box<dyn WorkerModel>>,
+    policy: Box<dyn DispatchPolicy>,
+    /// Wall mode only: additionally sleep each frame's device latency, so
+    /// host-fast simulation serves at the accelerator's real-time rate.
+    realtime: bool,
+}
+
+impl Scheduler {
+    /// `streams[i]` is paired with `sources[i]` (same order, same length).
+    pub fn new(
+        streams: Vec<(StreamConfig, FrameSource)>,
+        workers: Vec<Box<dyn WorkerModel>>,
+        policy: Box<dyn DispatchPolicy>,
+    ) -> Scheduler {
+        assert!(!streams.is_empty(), "scheduler needs at least one stream");
+        assert!(!workers.is_empty(), "scheduler needs at least one worker");
+        let (streams, sources) = streams.into_iter().unzip();
+        Scheduler {
+            streams,
+            sources,
+            workers,
+            policy,
+            realtime: false,
+        }
+    }
+
+    /// Pace wall-mode service to the simulated device latency.
+    pub fn realtime(mut self, yes: bool) -> Scheduler {
+        self.realtime = yes;
+        self
+    }
+
+    fn deadline(cfg: &StreamConfig, emitted_at: f64) -> f64 {
+        match cfg.sla_ms {
+            Some(ms) => emitted_at + ms / 1e3,
+            None => f64::INFINITY,
+        }
+    }
+
+    fn is_violation(cfg: &StreamConfig, e2e_s: f64) -> bool {
+        cfg.sla_ms.map(|ms| e2e_s > ms / 1e3).unwrap_or(false)
+    }
+
+    // -- virtual mode -------------------------------------------------------
+
+    /// Deterministic discrete-event run over a [`VirtualClock`] ticking at
+    /// `clock_mhz` (use the target device's clock so service latencies map
+    /// 1:1 to `perf::cycles` units).
+    pub fn run_virtual(self, clock_mhz: u64) -> anyhow::Result<MultiServingReport> {
+        let Scheduler {
+            streams,
+            sources,
+            mut workers,
+            mut policy,
+            realtime: _,
+        } = self;
+        let backend = workers[0].name();
+        let policy_name = policy.name().to_string();
+        let with_patches = workers.iter().any(|w| w.needs_patches());
+        let clock = VirtualClock::new(clock_mhz);
+
+        let queues: Vec<BoundedQueue<Frame>> = streams
+            .iter()
+            .map(|c| BoundedQueue::new(c.queue_depth))
+            .collect();
+        let mut stats: Vec<StreamStats> = vec![StreamStats::default(); streams.len()];
+        let mut busy: Vec<bool> = vec![false; workers.len()];
+        let mut busy_s: Vec<f64> = vec![0.0; workers.len()];
+        let mut served: Vec<u64> = vec![0; workers.len()];
+
+        let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+        let mut seq: u64 = 0;
+        for (s, src) in sources.iter().enumerate() {
+            if streams[s].frames > 0 {
+                heap.push(Event {
+                    cycle: clock.seconds_to_cycles(src.due_at(0)),
+                    seq,
+                    kind: EventKind::Arrival { stream: s, idx: 0 },
+                });
+                seq += 1;
+            }
+        }
+
+        while let Some(ev) = heap.pop() {
+            clock.advance_to(ev.cycle);
+            match ev.kind {
+                EventKind::Arrival { stream, idx } => {
+                    let mut frame = if with_patches {
+                        sources[stream].make_frame(idx)
+                    } else {
+                        sources[stream].make_stub(idx)
+                    };
+                    frame.stream = stream;
+                    frame.emitted_at = clock.now();
+                    queues[stream].push(frame);
+                    if idx + 1 < streams[stream].frames {
+                        heap.push(Event {
+                            cycle: clock.seconds_to_cycles(sources[stream].due_at(idx + 1)),
+                            seq,
+                            kind: EventKind::Arrival {
+                                stream,
+                                idx: idx + 1,
+                            },
+                        });
+                        seq += 1;
+                    }
+                }
+                EventKind::Completion {
+                    worker,
+                    stream,
+                    emitted_at,
+                    device_s,
+                } => {
+                    busy[worker] = false;
+                    served[worker] += 1;
+                    busy_s[worker] += device_s;
+                    let e2e = clock.now() - emitted_at;
+                    stats[stream].record(e2e, device_s, Self::is_violation(&streams[stream], e2e));
+                }
+            }
+
+            // Pair waiting frames with idle workers until one side runs dry.
+            loop {
+                let ready: Vec<StreamSnapshot> = queues
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(s, q)| {
+                        // NB: `len()` takes the queue lock, so it must be
+                        // read before entering the `peek_front` closure
+                        // (which holds that same non-reentrant lock).
+                        let queued = q.len();
+                        q.peek_front(|f| StreamSnapshot {
+                            stream: s,
+                            queued,
+                            head_emitted_at: f.emitted_at,
+                            head_deadline: Self::deadline(&streams[s], f.emitted_at),
+                        })
+                    })
+                    .collect();
+                if ready.is_empty() {
+                    break;
+                }
+                let idle: Vec<WorkerSnapshot> = busy
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, b)| !**b)
+                    .map(|(w, _)| WorkerSnapshot {
+                        worker: w,
+                        busy_s: busy_s[w],
+                        served: served[w],
+                    })
+                    .collect();
+                if idle.is_empty() {
+                    break;
+                }
+                let s = ready[policy.pick_stream(&ready)].stream;
+                let w = idle[policy.pick_worker(&idle)].worker;
+                let frame = queues[s].try_pop().expect("ready stream has a frame");
+                let device_s = workers[w].service(&frame)?;
+                let service_cycles = clock.seconds_to_cycles(device_s).max(1);
+                busy[w] = true;
+                heap.push(Event {
+                    cycle: clock.cycles() + service_cycles,
+                    seq,
+                    kind: EventKind::Completion {
+                        worker: w,
+                        stream: s,
+                        emitted_at: frame.emitted_at,
+                        device_s,
+                    },
+                });
+                seq += 1;
+            }
+        }
+
+        for (s, q) in queues.iter().enumerate() {
+            stats[s].offered = q.pushed();
+            stats[s].dropped = q.dropped();
+            debug_assert_eq!(
+                q.pushed(),
+                q.popped() + q.dropped(),
+                "virtual run must drain every queue"
+            );
+        }
+        let elapsed = clock.now();
+        let worker_names: Vec<String> = workers.iter().map(|w| w.name()).collect();
+        Ok(build_report(
+            backend,
+            policy_name,
+            "virtual",
+            &streams,
+            stats,
+            worker_names,
+            served,
+            busy_s,
+            elapsed,
+        ))
+    }
+
+    // -- wall mode ----------------------------------------------------------
+
+    /// Threaded real-time run: one producer thread per stream, one worker
+    /// thread per pool slot. Free workers pull work themselves, so the
+    /// policy governs *stream* selection; worker selection is whichever
+    /// thread frees up first.
+    pub fn run_wall(self) -> anyhow::Result<MultiServingReport> {
+        let Scheduler {
+            streams,
+            sources,
+            workers,
+            policy,
+            realtime,
+        } = self;
+        let backend = workers[0].name();
+        let policy_name = policy.name().to_string();
+        // Collected before the models move into their threads.
+        let worker_names: Vec<String> = workers.iter().map(|w| w.name()).collect();
+        let n_workers = workers.len();
+        let clock = WallClock::new();
+
+        let queues: Vec<BoundedQueue<Frame>> = streams
+            .iter()
+            .map(|c| BoundedQueue::new(c.queue_depth))
+            .collect();
+        let stats: Mutex<Vec<StreamStats>> =
+            Mutex::new(vec![StreamStats::default(); streams.len()]);
+        // (served, busy seconds) per worker.
+        let worker_acc: Mutex<Vec<(u64, f64)>> = Mutex::new(vec![(0, 0.0); n_workers]);
+        let policy = Mutex::new(policy);
+        let error: Mutex<Option<anyhow::Error>> = Mutex::new(None);
+        // Workers sleep here when every queue is empty; producers ring it
+        // after each push/close (and error-exiting workers, so siblings
+        // wake up and notice the failure).
+        let bell = (Mutex::new(()), Condvar::new());
+
+        std::thread::scope(|scope| {
+            let streams = &streams;
+            let queues = &queues;
+            let clock = &clock;
+            let bell = &bell;
+            let stats = &stats;
+            let worker_acc = &worker_acc;
+            let policy = &policy;
+            let error = &error;
+
+            for (i, mut source) in sources.into_iter().enumerate() {
+                let frames = streams[i].frames;
+                scope.spawn(move || {
+                    for _ in 0..frames {
+                        let frame = source.next_frame(clock);
+                        queues[i].push(frame);
+                        let _g = bell.0.lock().unwrap();
+                        bell.1.notify_all();
+                    }
+                    queues[i].close();
+                    let _g = bell.0.lock().unwrap();
+                    bell.1.notify_all();
+                });
+            }
+
+            for (wi, mut model) in workers.into_iter().enumerate() {
+                scope.spawn(move || {
+                    loop {
+                        // Select a stream under the bell lock (serializes
+                        // worker decisions, so pick + pop is atomic with
+                        // respect to other workers).
+                        let frame = {
+                            let mut guard = bell.0.lock().unwrap();
+                            loop {
+                                let ready: Vec<StreamSnapshot> = queues
+                                    .iter()
+                                    .enumerate()
+                                    .filter_map(|(s, q)| {
+                                        // len() before peek_front: both
+                                        // take the same non-reentrant
+                                        // queue lock.
+                                        let queued = q.len();
+                                        q.peek_front(|f| StreamSnapshot {
+                                            stream: s,
+                                            queued,
+                                            head_emitted_at: f.emitted_at,
+                                            head_deadline: Self::deadline(
+                                                &streams[s],
+                                                f.emitted_at,
+                                            ),
+                                        })
+                                    })
+                                    .collect();
+                                if !ready.is_empty() {
+                                    let pos = policy.lock().unwrap().pick_stream(&ready);
+                                    if let Some(frame) = queues[ready[pos].stream].try_pop() {
+                                        break frame;
+                                    }
+                                    continue; // raced a drop-oldest eviction
+                                }
+                                if error.lock().unwrap().is_some()
+                                    || queues.iter().all(|q| q.is_closed() && q.is_empty())
+                                {
+                                    return;
+                                }
+                                guard = bell.1.wait(guard).unwrap();
+                            }
+                        };
+                        let t0 = clock.now();
+                        match model.service(&frame) {
+                            Ok(device_s) => {
+                                if realtime && device_s > 0.0 {
+                                    std::thread::sleep(Duration::from_secs_f64(device_s));
+                                }
+                                let done = clock.now();
+                                let e2e = done - frame.emitted_at;
+                                stats.lock().unwrap()[frame.stream].record(
+                                    e2e,
+                                    device_s,
+                                    Self::is_violation(&streams[frame.stream], e2e),
+                                );
+                                let mut acc = worker_acc.lock().unwrap();
+                                acc[wi].0 += 1;
+                                acc[wi].1 += done - t0;
+                            }
+                            Err(e) => {
+                                *error.lock().unwrap() = Some(e);
+                                let _g = bell.0.lock().unwrap();
+                                bell.1.notify_all();
+                                return;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+
+        if let Some(e) = error.into_inner().unwrap() {
+            return Err(e);
+        }
+        let mut stats = stats.into_inner().unwrap();
+        for (s, q) in queues.iter().enumerate() {
+            stats[s].offered = q.pushed();
+            stats[s].dropped = q.dropped();
+        }
+        let elapsed = clock.now();
+        let acc = worker_acc.into_inner().unwrap();
+        let served: Vec<u64> = acc.iter().map(|(n, _)| *n).collect();
+        let busy_s: Vec<f64> = acc.iter().map(|(_, b)| *b).collect();
+        Ok(build_report(
+            backend,
+            policy_name,
+            "wall",
+            &streams,
+            stats,
+            worker_names,
+            served,
+            busy_s,
+            elapsed,
+        ))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Event queue (virtual mode) and report assembly.
+// ---------------------------------------------------------------------------
+
+struct Event {
+    cycle: Cycles,
+    seq: u64,
+    kind: EventKind,
+}
+
+enum EventKind {
+    Arrival {
+        stream: usize,
+        idx: u64,
+    },
+    Completion {
+        worker: usize,
+        stream: usize,
+        emitted_at: f64,
+        device_s: f64,
+    },
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Event) -> bool {
+        self.cycle == other.cycle && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Event) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Event) -> std::cmp::Ordering {
+        // Reversed so `BinaryHeap` (a max-heap) pops the earliest
+        // (cycle, seq) first — a deterministic total order.
+        (other.cycle, other.seq).cmp(&(self.cycle, self.seq))
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_report(
+    backend: String,
+    policy: String,
+    clock: &str,
+    streams: &[StreamConfig],
+    stats: Vec<StreamStats>,
+    worker_names: Vec<String>,
+    served: Vec<u64>,
+    busy_s: Vec<f64>,
+    elapsed: f64,
+) -> MultiServingReport {
+    let mut all_e2e: Vec<f64> = Vec::new();
+    let mut all_device: Vec<f64> = Vec::new();
+    let (mut offered, mut completed, mut dropped, mut violations) = (0u64, 0u64, 0u64, 0u64);
+    let stream_reports: Vec<StreamReport> = streams
+        .iter()
+        .zip(stats.iter())
+        .enumerate()
+        .map(|(i, (cfg, st))| {
+            offered += st.offered;
+            completed += st.completed();
+            dropped += st.dropped;
+            violations += st.sla_violations;
+            all_e2e.extend_from_slice(&st.e2e);
+            all_device.extend_from_slice(&st.device);
+            StreamReport::from_stats(i, cfg.offered_fps, cfg.sla_ms, st)
+        })
+        .collect();
+    let worker_reports: Vec<WorkerReport> = worker_names
+        .into_iter()
+        .enumerate()
+        .map(|(w, name)| WorkerReport {
+            worker: w,
+            name,
+            served: served[w],
+            busy_seconds: busy_s[w],
+            utilization: if elapsed > 0.0 {
+                busy_s[w] / elapsed
+            } else {
+                0.0
+            },
+        })
+        .collect();
+    MultiServingReport {
+        backend,
+        policy,
+        clock: clock.to_string(),
+        elapsed_seconds: elapsed,
+        aggregate: AggregateReport {
+            offered,
+            completed,
+            dropped,
+            drop_rate: dropped as f64 / offered.max(1) as f64,
+            sla_violations: violations,
+            achieved_fps: if elapsed > 0.0 {
+                completed as f64 / elapsed
+            } else {
+                0.0
+            },
+            e2e_latency: Summary::from(&all_e2e),
+            device_latency: Summary::from(&all_device),
+        },
+        streams: stream_reports,
+        workers: worker_reports,
+    }
+}

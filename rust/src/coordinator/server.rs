@@ -1,10 +1,15 @@
-//! The serving loop: source thread → bounded queue → worker thread.
+//! The single-stream serving loop: source thread → bounded queue → worker.
+//!
+//! Kept alongside the multi-stream [`super::Scheduler`] because the PJRT
+//! backend wraps thread-affine C pointers — inference must stay on the
+//! calling thread, so this loop spawns only the frame source.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::runtime::InferenceBackend;
 
+use super::clock::{Clock, WallClock};
 use super::metrics::{Metrics, ServingReport};
 use super::queue::BoundedQueue;
 use super::source::{Frame, FrameSource};
@@ -40,14 +45,16 @@ pub fn serve(
     cfg: &ServeConfig,
 ) -> anyhow::Result<ServingReport> {
     let queue: Arc<BoundedQueue<Frame>> = Arc::new(BoundedQueue::new(cfg.queue_depth));
+    let clock: Arc<WallClock> = Arc::new(WallClock::new());
     let started = Instant::now();
 
     // Source thread: paced frame production with drop-oldest admission.
     let q_prod = Arc::clone(&queue);
+    let c_prod = Arc::clone(&clock);
     let frames = cfg.frames;
     let producer = std::thread::spawn(move || {
         for _ in 0..frames {
-            let frame = source.next_frame();
+            let frame = source.next_frame(c_prod.as_ref());
             q_prod.push(frame);
         }
         q_prod.close();
@@ -60,7 +67,7 @@ pub fn serve(
     while let Some(frame) = queue.pop() {
         let (logits, device_s) = backend.infer(&frame.patches)?;
         debug_assert!(logits.iter().all(|v| v.is_finite()));
-        metrics.record(frame.emitted_at.elapsed().as_secs_f64(), device_s);
+        metrics.record(clock.now() - frame.emitted_at, device_s);
     }
     producer
         .join()

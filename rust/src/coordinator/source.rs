@@ -1,18 +1,26 @@
 //! Synthetic video source: frames at a configurable offered rate.
-
-use std::time::{Duration, Instant};
+//!
+//! All pacing and latency timestamps go through the [`Clock`]
+//! abstraction, so a source behaves identically under real time
+//! (`WallClock`) and deterministic simulated time (`VirtualClock`).
 
 use crate::model::VitConfig;
 use crate::util::rng::SplitMix64;
+
+use super::clock::Clock;
 
 /// One video frame, already in the Fig. 4 flattened-patch layout.
 #[derive(Debug, Clone)]
 pub struct Frame {
     pub id: u64,
-    /// Row-major `N_p × (3·P²)`.
+    /// Which stream emitted it (0 for single-stream serving).
+    pub stream: usize,
+    /// Row-major `N_p × (3·P²)`. May be empty when the consumer declared
+    /// it only needs timing (analytic scheduling runs).
     pub patches: Vec<f32>,
-    /// When the source emitted it (for end-to-end latency accounting).
-    pub emitted_at: Instant,
+    /// Clock timestamp (seconds) when the source emitted it, for
+    /// end-to-end latency accounting.
+    pub emitted_at: f64,
 }
 
 /// Deterministic synthetic camera. Frame contents use the same PRNG
@@ -21,10 +29,12 @@ pub struct Frame {
 pub struct FrameSource {
     config: VitConfig,
     seed: u64,
+    stream: usize,
     next_id: u64,
-    /// Inter-frame interval (None ⇒ emit as fast as pulled).
-    interval: Option<Duration>,
-    last_emit: Option<Instant>,
+    /// Inter-frame interval in seconds (None ⇒ emit as fast as pulled).
+    interval: Option<f64>,
+    /// Clock time the next frame is due (paced sources only).
+    next_due: f64,
 }
 
 impl FrameSource {
@@ -32,27 +42,57 @@ impl FrameSource {
         FrameSource {
             config,
             seed,
+            stream: 0,
             next_id: 0,
-            interval: offered_fps.map(|f| Duration::from_secs_f64(1.0 / f)),
-            last_emit: None,
+            interval: offered_fps.map(|f| 1.0 / f),
+            next_due: 0.0,
         }
     }
 
-    /// Produce the next frame, sleeping to honour the offered rate.
-    pub fn next_frame(&mut self) -> Frame {
-        if let (Some(interval), Some(last)) = (self.interval, self.last_emit) {
-            let elapsed = last.elapsed();
-            if elapsed < interval {
-                std::thread::sleep(interval - elapsed);
+    /// Tag every emitted frame with a stream index (multi-stream serving).
+    pub fn with_stream(mut self, stream: usize) -> FrameSource {
+        self.stream = stream;
+        self
+    }
+
+    /// Delay the first frame to `offset` seconds after the clock epoch
+    /// (staggers multiple streams so their arrivals interleave).
+    pub fn with_offset(mut self, offset: f64) -> FrameSource {
+        self.next_due = offset;
+        self
+    }
+
+    pub fn stream(&self) -> usize {
+        self.stream
+    }
+
+    /// Scheduled emission time (seconds) of frame `idx` for a paced
+    /// source — the arrival timetable a virtual-time scheduler replays.
+    pub fn due_at(&self, idx: u64) -> f64 {
+        self.next_due + self.interval.unwrap_or(0.0) * idx as f64
+    }
+
+    /// Produce the next frame, pacing against `clock` to honour the
+    /// offered rate and stamping `emitted_at` from it.
+    pub fn next_frame(&mut self, clock: &dyn Clock) -> Frame {
+        if let Some(interval) = self.interval {
+            clock.sleep_until(self.next_due);
+            // Schedule-based pacing; re-anchor when the puller lags so a
+            // stall is not followed by a burst of stale frames.
+            self.next_due += interval;
+            let now = clock.now();
+            if self.next_due < now {
+                self.next_due = now;
             }
         }
-        let frame = self.make_frame(self.next_id);
+        let mut frame = self.make_frame(self.next_id);
+        frame.emitted_at = clock.now();
         self.next_id += 1;
-        self.last_emit = Some(Instant::now());
         frame
     }
 
-    /// Generate frame `id` without pacing (pure function of (seed, id)).
+    /// Generate frame `id` without pacing (pure function of (seed, id);
+    /// `emitted_at` is left at the epoch for the caller to stamp).
     pub fn make_frame(&self, id: u64) -> Frame {
         let np = self.config.num_patches();
         let pin = self.config.in_chans * self.config.patch_size * self.config.patch_size;
@@ -62,8 +102,20 @@ impl FrameSource {
             .collect();
         Frame {
             id,
+            stream: self.stream,
             patches,
-            emitted_at: Instant::now(),
+            emitted_at: 0.0,
+        }
+    }
+
+    /// Frame `id` with no patch payload — for schedulers whose workers
+    /// only model timing and never touch the pixels.
+    pub fn make_stub(&self, id: u64) -> Frame {
+        Frame {
+            id,
+            stream: self.stream,
+            patches: Vec::new(),
+            emitted_at: 0.0,
         }
     }
 }

@@ -22,7 +22,7 @@ fn micro() -> VitConfig {
     }
 }
 
-fn sim_backend(realtime: bool) -> Box<dyn InferenceBackend> {
+fn micro_executor() -> ModelExecutor {
     let cfg = micro();
     let w = generate_weights(&cfg, 11);
     let g_q = AcceleratorParams::g_q_for(64, 8);
@@ -36,24 +36,33 @@ fn sim_backend(realtime: bool) -> Box<dyn InferenceBackend> {
         p_h: 4,
         act_bits: Some(8),
     };
+    ModelExecutor::new(w, Some(8), params, zcu102())
+}
+
+fn sim_backend(realtime: bool) -> Box<dyn InferenceBackend> {
     Box::new(SimBackend {
-        executor: ModelExecutor::new(w, Some(8), params, zcu102()),
+        executor: micro_executor(),
         realtime,
     })
 }
 
+// ---------------------------------------------------------------------------
+// Queue.
+// ---------------------------------------------------------------------------
+
 #[test]
 fn queue_drop_oldest() {
     let q: BoundedQueue<u32> = BoundedQueue::new(2);
-    assert!(!q.push(1));
-    assert!(!q.push(2));
-    assert!(q.push(3)); // drops 1
+    assert_eq!(q.push(1), PushOutcome::Admitted);
+    assert_eq!(q.push(2), PushOutcome::Admitted);
+    assert_eq!(q.push(3), PushOutcome::AdmittedDroppedOldest); // drops 1
     assert_eq!(q.pop(), Some(2));
     assert_eq!(q.pop(), Some(3));
     q.close();
     assert_eq!(q.pop(), None);
     assert_eq!(q.dropped(), 1);
     assert_eq!(q.pushed(), 3);
+    assert_eq!(q.popped(), 2);
 }
 
 #[test]
@@ -62,12 +71,48 @@ fn queue_close_drains() {
     q.push(1);
     q.push(2);
     q.close();
+    assert!(q.is_closed());
     assert_eq!(q.pop(), Some(1));
     assert_eq!(q.pop(), Some(2));
     assert_eq!(q.pop(), None);
-    assert!(!q.push(9), "push after close is refused");
+    assert_eq!(
+        q.push(9),
+        PushOutcome::RejectedClosed,
+        "push after close is refused"
+    );
     assert_eq!(q.len(), 0);
+    assert_eq!(q.pushed(), 2, "rejected pushes are not admissions");
 }
+
+#[test]
+fn queue_try_pop_and_peek() {
+    let q: BoundedQueue<u32> = BoundedQueue::new(2);
+    assert_eq!(q.try_pop(), None);
+    q.push(7);
+    assert_eq!(q.peek_front(|v| *v), Some(7));
+    assert_eq!(q.len(), 1, "peek does not remove");
+    assert_eq!(q.try_pop(), Some(7));
+    assert_eq!(q.try_pop(), None);
+}
+
+#[test]
+fn queue_conservation_counters() {
+    let q: BoundedQueue<u32> = BoundedQueue::new(2);
+    for i in 0..10 {
+        assert!(q.push(i).admitted());
+    }
+    let mut popped = 0;
+    while q.try_pop().is_some() {
+        popped += 1;
+    }
+    assert_eq!(q.pushed(), 10);
+    assert_eq!(q.popped(), popped);
+    assert_eq!(q.pushed(), q.popped() + q.dropped());
+}
+
+// ---------------------------------------------------------------------------
+// Source.
+// ---------------------------------------------------------------------------
 
 #[test]
 fn source_frames_are_deterministic() {
@@ -79,14 +124,37 @@ fn source_frames_are_deterministic() {
 
 #[test]
 fn source_paces_offered_rate() {
+    let clock = WallClock::new();
     let mut s = FrameSource::new(micro(), 1, Some(200.0));
-    let t0 = std::time::Instant::now();
     for _ in 0..5 {
-        let _ = s.next_frame();
+        let _ = s.next_frame(&clock);
     }
-    // 5 frames at 200 FPS ≥ 20 ms.
-    assert!(t0.elapsed().as_secs_f64() >= 0.015);
+    // Frame 0 is due at t=0; frames 1..=4 wait one 5 ms interval each.
+    assert!(clock.now() >= 0.015);
 }
+
+#[test]
+fn source_paces_against_virtual_clock_without_blocking() {
+    let clock = VirtualClock::new(100);
+    let mut s = FrameSource::new(micro(), 1, Some(30.0)).with_stream(3);
+    let f0 = s.next_frame(&clock);
+    let f1 = s.next_frame(&clock);
+    assert_eq!(f0.stream, 3);
+    assert_eq!(f0.emitted_at, 0.0);
+    assert!((f1.emitted_at - 1.0 / 30.0).abs() < 1e-6);
+    assert!(clock.now() < 0.05, "virtual pacing must not block");
+}
+
+#[test]
+fn source_due_times_follow_offset_and_rate() {
+    let s = FrameSource::new(micro(), 1, Some(10.0)).with_offset(0.25);
+    assert_eq!(s.due_at(0), 0.25);
+    assert!((s.due_at(4) - 0.65).abs() < 1e-9);
+}
+
+// ---------------------------------------------------------------------------
+// Single-stream serve loop.
+// ---------------------------------------------------------------------------
 
 #[test]
 fn serve_completes_all_frames_when_backend_is_fast() {
@@ -151,4 +219,340 @@ fn realtime_sim_backend_paces_to_device_latency() {
         "realtime backend must not finish before the simulated device ({wall} < {device_s})"
     );
     let _ = Arc::new(());
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch policies (fed snapshots directly).
+// ---------------------------------------------------------------------------
+
+fn snap(stream: usize, queued: usize, emitted: f64, deadline: f64) -> StreamSnapshot {
+    StreamSnapshot {
+        stream,
+        queued,
+        head_emitted_at: emitted,
+        head_deadline: deadline,
+    }
+}
+
+#[test]
+fn round_robin_cycles_streams_and_workers() {
+    let mut p = RoundRobin::default();
+    let ready = [
+        snap(0, 1, 0.0, f64::INFINITY),
+        snap(1, 1, 0.0, f64::INFINITY),
+        snap(2, 1, 0.0, f64::INFINITY),
+    ];
+    let picks: Vec<usize> = (0..6).map(|_| ready[p.pick_stream(&ready)].stream).collect();
+    assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    // Skips streams with nothing waiting.
+    let sparse = [snap(1, 1, 0.0, f64::INFINITY)];
+    assert_eq!(sparse[p.pick_stream(&sparse)].stream, 1);
+}
+
+#[test]
+fn least_loaded_picks_deepest_queue_and_least_busy_worker() {
+    let mut p = LeastLoaded;
+    let ready = [
+        snap(0, 1, 0.0, f64::INFINITY),
+        snap(1, 5, 0.0, f64::INFINITY),
+        snap(2, 5, 0.0, f64::INFINITY),
+    ];
+    // Deepest queue wins; ties resolve to the lower stream index.
+    assert_eq!(ready[p.pick_stream(&ready)].stream, 1);
+    let idle = [
+        WorkerSnapshot {
+            worker: 0,
+            busy_s: 2.0,
+            served: 4,
+        },
+        WorkerSnapshot {
+            worker: 1,
+            busy_s: 0.5,
+            served: 1,
+        },
+    ];
+    assert_eq!(idle[p.pick_worker(&idle)].worker, 1);
+}
+
+#[test]
+fn weighted_sla_prefers_earliest_deadline() {
+    let mut p = WeightedSla;
+    let ready = [
+        snap(0, 3, 0.0, f64::INFINITY), // best-effort
+        snap(1, 1, 0.2, 0.9),
+        snap(2, 1, 0.1, 0.5), // tightest deadline
+    ];
+    assert_eq!(ready[p.pick_stream(&ready)].stream, 2);
+    // Among best-effort streams, the oldest head frame goes first.
+    let be = [snap(0, 1, 0.4, f64::INFINITY), snap(1, 1, 0.1, f64::INFINITY)];
+    assert_eq!(be[p.pick_stream(&be)].stream, 1);
+}
+
+#[test]
+fn policy_lookup_by_name() {
+    for name in POLICY_NAMES {
+        assert!(policy_for(name).is_some(), "{name} must resolve");
+    }
+    assert!(policy_for("rr").is_some());
+    assert!(policy_for("nope").is_none());
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler: virtual (deterministic) mode.
+// ---------------------------------------------------------------------------
+
+fn analytic_scheduler(
+    n_streams: usize,
+    n_workers: usize,
+    latency_s: f64,
+    policy: &str,
+) -> Scheduler {
+    let streams: Vec<(StreamConfig, FrameSource)> = (0..n_streams)
+        .map(|i| {
+            let cfg = StreamConfig {
+                offered_fps: 100.0,
+                frames: 50,
+                queue_depth: 4,
+                sla_ms: Some(40.0),
+            };
+            let src = FrameSource::new(micro(), 11 + i as u64, Some(cfg.offered_fps))
+                .with_stream(i)
+                .with_offset(i as f64 * 1e-3);
+            (cfg, src)
+        })
+        .collect();
+    let workers: Vec<Box<dyn WorkerModel>> = (0..n_workers)
+        .map(|_| {
+            Box::new(AnalyticWorker {
+                latency_s,
+                label: "W1A8".into(),
+            }) as Box<dyn WorkerModel>
+        })
+        .collect();
+    Scheduler::new(streams, workers, policy_for(policy).unwrap())
+}
+
+#[test]
+fn virtual_run_is_byte_identical_across_three_runs() {
+    let render = || {
+        analytic_scheduler(3, 2, 0.008, "weighted-sla")
+            .run_virtual(150)
+            .unwrap()
+            .to_json()
+            .pretty()
+    };
+    let a = render();
+    let b = render();
+    let c = render();
+    assert_eq!(a, b, "virtual scheduling must be deterministic");
+    assert_eq!(b, c, "virtual scheduling must be deterministic");
+    assert!(a.contains("\"clock\": \"virtual\""));
+}
+
+#[test]
+fn virtual_run_conserves_every_frame() {
+    for policy in POLICY_NAMES {
+        let r = analytic_scheduler(4, 2, 0.004, policy).run_virtual(150).unwrap();
+        let a = &r.aggregate;
+        assert_eq!(a.offered, 4 * 50, "{policy}: all frames offered");
+        assert_eq!(
+            a.completed + a.dropped,
+            a.offered,
+            "{policy}: conservation violated"
+        );
+        for s in &r.streams {
+            assert_eq!(s.completed + s.dropped, s.offered, "{policy} stream {}", s.stream);
+        }
+        let served: u64 = r.workers.iter().map(|w| w.served).sum();
+        assert_eq!(served, a.completed, "{policy}: worker accounting");
+    }
+}
+
+#[test]
+fn virtual_throughput_monotone_in_workers() {
+    // 4 streams × 100 FPS offered with an 8 ms service time: one worker
+    // saturates at 125 FPS, so adding workers must raise throughput.
+    let mut last = 0.0;
+    for workers in 1..=4 {
+        let r = analytic_scheduler(4, workers, 0.008, "round-robin")
+            .run_virtual(150)
+            .unwrap();
+        assert!(
+            r.aggregate.achieved_fps >= last,
+            "throughput fell from {last} at {workers} workers"
+        );
+        last = r.aggregate.achieved_fps;
+    }
+    assert!(last > 300.0, "4 workers should clear 300 FPS, got {last}");
+}
+
+#[test]
+fn virtual_run_counts_sla_violations() {
+    // Service time 10 ms against a 5 ms SLA: every completed frame
+    // violates.
+    let streams = vec![(
+        StreamConfig {
+            offered_fps: 20.0,
+            frames: 10,
+            queue_depth: 10,
+            sla_ms: Some(5.0),
+        },
+        FrameSource::new(micro(), 1, Some(20.0)),
+    )];
+    let workers: Vec<Box<dyn WorkerModel>> = vec![Box::new(AnalyticWorker {
+        latency_s: 0.010,
+        label: "slow".into(),
+    })];
+    let r = Scheduler::new(streams, workers, policy_for("weighted-sla").unwrap())
+        .run_virtual(150)
+        .unwrap();
+    assert_eq!(r.aggregate.completed, 10);
+    assert_eq!(r.aggregate.sla_violations, 10);
+}
+
+#[test]
+fn virtual_overload_sheds_via_drop_oldest() {
+    // One worker at 20 ms against 4 × 100 FPS offered: deep overload —
+    // shallow queues must shed most frames instead of growing latency.
+    let r = analytic_scheduler(4, 1, 0.020, "least-loaded").run_virtual(150).unwrap();
+    assert!(r.aggregate.dropped > 0, "overload must drop: {r:?}");
+    // While arrivals keep coming, drop-oldest keeps waits short (typical
+    // frames clear well under 6 service times); the absolute worst case
+    // is the residual backlog (streams × depth frames) draining after
+    // the last arrival, one service time each.
+    assert!(
+        r.aggregate.e2e_latency.p50 < 0.020 * 6.0,
+        "drop-oldest must bound typical queueing delay, got p50 = {} s",
+        r.aggregate.e2e_latency.p50
+    );
+    assert!(
+        r.aggregate.e2e_latency.max < 0.020 * (4.0 * 4.0 + 1.0),
+        "e2e must never exceed the full-backlog drain, got max = {} s",
+        r.aggregate.e2e_latency.max
+    );
+}
+
+#[test]
+fn virtual_run_with_sim_workers_is_deterministic() {
+    let run = || {
+        let streams = vec![(
+            StreamConfig {
+                offered_fps: 200.0,
+                frames: 6,
+                queue_depth: 6,
+                sla_ms: None,
+            },
+            FrameSource::new(micro(), 5, Some(200.0)),
+        )];
+        let workers: Vec<Box<dyn WorkerModel>> = vec![Box::new(SimWorker {
+            executor: micro_executor(),
+        })];
+        Scheduler::new(streams, workers, policy_for("round-robin").unwrap())
+            .run_virtual(150)
+            .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.to_json().pretty(), b.to_json().pretty());
+    assert_eq!(a.aggregate.completed, 6);
+    assert!(a.aggregate.device_latency.mean > 0.0);
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler: wall (threaded) mode.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn wall_run_completes_under_capacity() {
+    let streams: Vec<(StreamConfig, FrameSource)> = (0..2)
+        .map(|i| {
+            let cfg = StreamConfig {
+                offered_fps: 300.0,
+                frames: 30,
+                queue_depth: 30,
+                sla_ms: None,
+            };
+            let src =
+                FrameSource::new(micro(), 3 + i as u64, Some(cfg.offered_fps)).with_stream(i);
+            (cfg, src)
+        })
+        .collect();
+    let workers: Vec<Box<dyn WorkerModel>> = (0..2)
+        .map(|_| {
+            Box::new(AnalyticWorker {
+                latency_s: 0.0,
+                label: "fast".into(),
+            }) as Box<dyn WorkerModel>
+        })
+        .collect();
+    let r = Scheduler::new(streams, workers, policy_for("round-robin").unwrap())
+        .run_wall()
+        .unwrap();
+    assert_eq!(r.aggregate.offered, 60);
+    assert_eq!(r.aggregate.completed + r.aggregate.dropped, 60);
+    assert_eq!(r.aggregate.dropped, 0, "deep queues under capacity: no drops");
+    assert_eq!(r.clock, "wall");
+}
+
+#[test]
+fn wall_run_with_sim_workers_serves_all_streams() {
+    let streams: Vec<(StreamConfig, FrameSource)> = (0..3)
+        .map(|i| {
+            let cfg = StreamConfig {
+                offered_fps: 500.0,
+                frames: 8,
+                queue_depth: 8,
+                sla_ms: Some(250.0),
+            };
+            let src =
+                FrameSource::new(micro(), 7 + i as u64, Some(cfg.offered_fps)).with_stream(i);
+            (cfg, src)
+        })
+        .collect();
+    let workers: Vec<Box<dyn WorkerModel>> = (0..2)
+        .map(|_| {
+            Box::new(SimWorker {
+                executor: micro_executor(),
+            }) as Box<dyn WorkerModel>
+        })
+        .collect();
+    let r = Scheduler::new(streams, workers, policy_for("least-loaded").unwrap())
+        .run_wall()
+        .unwrap();
+    assert_eq!(r.aggregate.completed + r.aggregate.dropped, 24);
+    for s in &r.streams {
+        assert!(s.completed > 0, "every stream must make progress: {r:?}");
+    }
+    let served: u64 = r.workers.iter().map(|w| w.served).sum();
+    assert_eq!(served, r.aggregate.completed);
+}
+
+#[test]
+fn wall_run_propagates_worker_errors() {
+    struct FailingWorker;
+    impl WorkerModel for FailingWorker {
+        fn name(&self) -> String {
+            "failing".into()
+        }
+        fn needs_patches(&self) -> bool {
+            false
+        }
+        fn service(&mut self, _frame: &Frame) -> anyhow::Result<f64> {
+            anyhow::bail!("injected fault")
+        }
+    }
+    let streams = vec![(
+        StreamConfig {
+            offered_fps: 1000.0,
+            frames: 4,
+            queue_depth: 4,
+            sla_ms: None,
+        },
+        FrameSource::new(micro(), 1, Some(1000.0)),
+    )];
+    let workers: Vec<Box<dyn WorkerModel>> = vec![Box::new(FailingWorker)];
+    let err = Scheduler::new(streams, workers, policy_for("round-robin").unwrap())
+        .run_wall()
+        .unwrap_err();
+    assert!(format!("{err}").contains("injected fault"));
 }

@@ -33,7 +33,7 @@
 //! | [`compiler`] | §3 + §5.3.2 the VAQF compilation step |
 //! | [`sim`] | §5.1/§5.2 compute engine + layer processing |
 //! | [`runtime`] | PJRT execution of AOT artifacts (functional reference) |
-//! | [`coordinator`] | frame-serving loop: queue → batcher → backend |
+//! | [`coordinator`] | serving: bounded queues, multi-stream scheduler, wall/virtual clocks |
 //! | [`config`] | TOML/JSON config system for models/devices/targets |
 //!
 //! [`api`] is the front door: a typed facade (`TargetSpec → Session →

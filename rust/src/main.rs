@@ -8,6 +8,8 @@
 //! vaqf simulate --bits 8 --frames 3 [--backend scalar|packed] [--threads N]
 //!               [--config target.json]
 //! vaqf serve    --variant micro_w1a8 --backend sim|pjrt --fps 30 --frames 90
+//!               [--streams N] [--workers W] [--policy round-robin|least-loaded|weighted-sla]
+//!               [--clock wall|virtual] [--sla-ms MS] [--analytic] [--realtime]
 //!               [--kernels scalar|packed] [--threads N] [--config target.json]
 //! ```
 //!
@@ -21,7 +23,7 @@
 //! options and the config-file schema.
 
 use vaqf::api::{
-    render_table5, render_table6, table6_rows, PjrtRuntime, Result, ServeBackendOpt, ServeOpts,
+    render_table5, render_table6, table6_rows, PjrtRuntime, Result, ServeClock, ServeConfig,
     Session, TargetSpec, VaqfError,
 };
 use vaqf::model::micro;
@@ -183,8 +185,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let frames = args.get_u64("frames").map_err(cli)?.unwrap_or(90);
     let queue_depth = args.get_u64("queue-depth").map_err(cli)?.unwrap_or(2) as usize;
     let source_seed = args.get_u64("seed").map_err(cli)?.unwrap_or(11);
+    let streams = args.get_u64("streams").map_err(cli)?.unwrap_or(1) as usize;
+    let workers = args.get_u64("workers").map_err(cli)?.unwrap_or(1) as usize;
+    let policy = args.get_or("policy", "round-robin");
+    let clock = match args.get_or("clock", "wall") {
+        "wall" => ServeClock::Wall,
+        "virtual" => ServeClock::Virtual,
+        other => {
+            return Err(VaqfError::config(format!(
+                "unknown clock {other} (wall|virtual)"
+            )))
+        }
+    };
+    let sla_ms = args.get_f64("sla-ms").map_err(cli)?;
 
-    let report = match backend_kind {
+    match backend_kind {
         "sim" => {
             let man = Manifest::load(artifacts).map_err(VaqfError::manifest)?;
             let entry = man.find(variant).ok_or_else(|| {
@@ -208,38 +223,65 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 );
             }
             let design = session.compile_for_bits(entry.act_bits_opt())?;
-            design.server(&ServeOpts {
-                backend: ServeBackendOpt::Sim {
-                    realtime: args.has_flag("realtime"),
-                },
-                offered_fps,
-                frames,
-                queue_depth,
-                source_seed,
-                weights_seed: entry.seed,
-            })?
+            let mut builder = design
+                .server()
+                .streams(streams)
+                .workers(workers)
+                .policy(policy)
+                .offered_fps(offered_fps)
+                .frames(frames)
+                .queue_depth(queue_depth)
+                .clock(clock)
+                .source_seed(source_seed)
+                .weights_seed(entry.seed);
+            if let Some(ms) = sla_ms {
+                builder = builder.sla_ms(ms);
+            }
+            builder = if args.has_flag("analytic") {
+                builder.analytic()
+            } else {
+                builder.simulated(args.has_flag("realtime"))
+            };
+            let report = builder.run()?;
+            println!("{}", report.render());
+            if args.has_flag("json") {
+                println!("{}", report.to_json().pretty());
+            }
         }
         "pjrt" => {
             // The PJRT backend executes the AOT artifact directly — no
-            // design-space optimization on this path. `backend` and
-            // `weights_seed` are ignored by `PjrtRuntime::server`.
+            // design-space optimization, and the thread-affine client
+            // keeps this path single-stream. Reject scheduler flags
+            // instead of silently ignoring them.
+            let scheduler_only = streams > 1
+                || workers > 1
+                || args.get("policy").is_some()
+                || args.get("clock").is_some()
+                || sla_ms.is_some()
+                || args.has_flag("analytic");
+            if scheduler_only {
+                return Err(VaqfError::config(
+                    "pjrt serving is single-stream/single-worker; \
+                     --streams/--workers/--policy/--clock/--sla-ms/--analytic \
+                     apply to --backend sim",
+                ));
+            }
             let runtime = PjrtRuntime::load_variant(artifacts, variant)?;
-            runtime.server(
+            let report = runtime.server(
                 variant,
-                &ServeOpts {
+                &ServeConfig {
                     offered_fps,
                     frames,
                     queue_depth,
                     source_seed,
-                    ..ServeOpts::default()
                 },
-            )?
+            )?;
+            println!("{}", report.render());
+            if args.has_flag("json") {
+                println!("{}", report.to_json().pretty());
+            }
         }
         other => return Err(VaqfError::config(format!("unknown backend {other} (sim|pjrt)"))),
-    };
-    println!("{}", report.render());
-    if args.has_flag("json") {
-        println!("{}", report.to_json().pretty());
     }
     Ok(())
 }

@@ -5,5 +5,6 @@ pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod parallel;
+pub mod prop;
 pub mod rng;
 pub mod stats;

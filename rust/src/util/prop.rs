@@ -1,0 +1,484 @@
+//! Minimal proptest-style property harness (offline build: no proptest).
+//!
+//! The crate's property suites hand-rolled `for trial in 0..N` sweeps
+//! over `SplitMix64`; this module factors that idiom into the two pieces
+//! a real property framework adds:
+//!
+//! * **strategies** — composable generators ([`Strategy::generate`])
+//!   with value-space *shrinking* ([`Strategy::shrink`]), so a failure
+//!   is reported as a minimal counterexample, not a 500-element vector;
+//! * **a driver** — [`check`] / [`check_with`] run the property over a
+//!   seeded trial budget and, on failure, greedily shrink before
+//!   panicking with the seed, the trial index and the shrunk input.
+//!
+//! Built-in strategies cover what the suites sweep: integer ranges
+//! (shapes, bit-widths, seeds), floats, choices, tuples, vectors, and
+//! queue-operation scripts for model-based [`BoundedQueue`] testing.
+//!
+//! ```no_run
+//! use vaqf::util::prop;
+//!
+//! let strat = prop::tuple2(prop::bit_widths(), prop::u64s(1, 200));
+//! prop::check("width_times_len_fits", &strat, |&(bits, n)| {
+//!     if bits * n < u64::MAX / 2 { Ok(()) } else { Err("overflow".into()) }
+//! });
+//! ```
+//!
+//! [`BoundedQueue`]: crate::coordinator::BoundedQueue
+
+use std::fmt::Debug;
+
+use super::rng::SplitMix64;
+
+/// A value generator with shrinking. `shrink` returns *simpler*
+/// candidates (each strictly smaller by some well-founded measure, so
+/// shrinking terminates); an empty vec means fully shrunk.
+pub trait Strategy {
+    type Value: Clone + Debug;
+
+    fn generate(&self, rng: &mut SplitMix64) -> Self::Value;
+
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Driver configuration; [`check`] uses the defaults.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub trials: u64,
+    pub seed: u64,
+    /// Upper bound on accepted shrink steps (defense against a
+    /// non-well-founded custom `shrink`).
+    pub max_shrink_steps: u64,
+}
+
+impl Default for Config {
+    fn default() -> Config {
+        Config {
+            trials: 100,
+            seed: 0x5EED,
+            max_shrink_steps: 10_000,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.trials` generated values; on failure, shrink to
+/// a minimal counterexample and panic with a replayable report.
+pub fn check_with<S: Strategy>(
+    cfg: &Config,
+    name: &str,
+    strategy: &S,
+    prop: impl Fn(&S::Value) -> Result<(), String>,
+) {
+    let mut rng = SplitMix64::new(cfg.seed);
+    for trial in 0..cfg.trials {
+        let value = strategy.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            let (min, min_msg, steps) = shrink_failure(cfg, strategy, value, msg, &prop);
+            panic!(
+                "property `{name}` failed (seed {seed:#x}, trial {trial}, \
+                 {steps} shrink steps)\n  counterexample: {min:?}\n  cause: {min_msg}",
+                seed = cfg.seed,
+            );
+        }
+    }
+}
+
+/// [`check_with`] under the default [`Config`].
+pub fn check<S: Strategy>(
+    name: &str,
+    strategy: &S,
+    prop: impl Fn(&S::Value) -> Result<(), String>,
+) {
+    check_with(&Config::default(), name, strategy, prop);
+}
+
+/// Greedy shrink: repeatedly take the first shrink candidate that still
+/// fails, until none do (or the step budget runs out).
+fn shrink_failure<S: Strategy>(
+    cfg: &Config,
+    strategy: &S,
+    mut value: S::Value,
+    mut msg: String,
+    prop: &impl Fn(&S::Value) -> Result<(), String>,
+) -> (S::Value, String, u64) {
+    let mut steps = 0;
+    'outer: while steps < cfg.max_shrink_steps {
+        for candidate in strategy.shrink(&value) {
+            if let Err(m) = prop(&candidate) {
+                value = candidate;
+                msg = m;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (value, msg, steps)
+}
+
+// ---------------------------------------------------------------------------
+// Integer / float ranges.
+// ---------------------------------------------------------------------------
+
+/// Uniform `u64` in `[lo, hi]`, shrinking toward `lo`.
+#[derive(Debug, Clone)]
+pub struct U64Range {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+/// Uniform `u64` in `[lo, hi]` (inclusive).
+pub fn u64s(lo: u64, hi: u64) -> U64Range {
+    assert!(lo <= hi);
+    U64Range { lo, hi }
+}
+
+/// Bit-width strategy: the quantizer's full 1..=16 range.
+pub fn bit_widths() -> U64Range {
+    u64s(1, 16)
+}
+
+/// Matrix/tensor dimension in `[1, max]`.
+pub fn dims(max: u64) -> U64Range {
+    u64s(1, max)
+}
+
+/// Full-range PRNG seed.
+pub fn seeds() -> U64Range {
+    u64s(0, u64::MAX - 1)
+}
+
+impl Strategy for U64Range {
+    type Value = u64;
+
+    fn generate(&self, rng: &mut SplitMix64) -> u64 {
+        self.lo + rng.next_below(self.hi - self.lo + 1)
+    }
+
+    fn shrink(&self, value: &u64) -> Vec<u64> {
+        let v = *value;
+        let mut out = Vec::new();
+        if v > self.lo {
+            out.push(self.lo);
+            let mid = self.lo + (v - self.lo) / 2;
+            if mid != self.lo && mid != v {
+                out.push(mid);
+            }
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform `f64` in `[lo, hi)`, shrinking toward zero / the bounds.
+#[derive(Debug, Clone)]
+pub struct F64Range {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+pub fn f64s(lo: f64, hi: f64) -> F64Range {
+    assert!(lo < hi);
+    F64Range { lo, hi }
+}
+
+impl Strategy for F64Range {
+    type Value = f64;
+
+    fn generate(&self, rng: &mut SplitMix64) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.next_f64()
+    }
+
+    fn shrink(&self, value: &f64) -> Vec<f64> {
+        let v = *value;
+        let mut out = Vec::new();
+        if self.lo <= 0.0 && 0.0 < self.hi && v != 0.0 {
+            out.push(0.0);
+        }
+        let half = v / 2.0;
+        if half != v && half >= self.lo && half < self.hi {
+            out.push(half);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Choice, tuples, vectors.
+// ---------------------------------------------------------------------------
+
+/// Uniform pick from a fixed list, shrinking toward earlier entries.
+#[derive(Debug, Clone)]
+pub struct Choice<T: Clone + Debug> {
+    pub items: Vec<T>,
+}
+
+pub fn choice<T: Clone + Debug>(items: &[T]) -> Choice<T> {
+    assert!(!items.is_empty());
+    Choice {
+        items: items.to_vec(),
+    }
+}
+
+impl<T: Clone + Debug + PartialEq> Strategy for Choice<T> {
+    type Value = T;
+
+    fn generate(&self, rng: &mut SplitMix64) -> T {
+        self.items[rng.next_below(self.items.len() as u64) as usize].clone()
+    }
+
+    fn shrink(&self, value: &T) -> Vec<T> {
+        // Earlier entries are "simpler"; propose everything before the
+        // current one, nearest-first.
+        match self.items.iter().position(|i| i == value) {
+            Some(pos) => self.items[..pos].iter().rev().cloned().collect(),
+            None => Vec::new(),
+        }
+    }
+}
+
+/// Pair of independent strategies; shrinks one component at a time.
+#[derive(Debug, Clone)]
+pub struct Tuple2<A, B> {
+    pub a: A,
+    pub b: B,
+}
+
+pub fn tuple2<A: Strategy, B: Strategy>(a: A, b: B) -> Tuple2<A, B> {
+    Tuple2 { a, b }
+}
+
+impl<A: Strategy, B: Strategy> Strategy for Tuple2<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut SplitMix64) -> Self::Value {
+        (self.a.generate(rng), self.b.generate(rng))
+    }
+
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        for a in self.a.shrink(&value.0) {
+            out.push((a, value.1.clone()));
+        }
+        for b in self.b.shrink(&value.1) {
+            out.push((value.0.clone(), b));
+        }
+        out
+    }
+}
+
+/// Triple of independent strategies; shrinks one component at a time.
+#[derive(Debug, Clone)]
+pub struct Tuple3<A, B, C> {
+    pub a: A,
+    pub b: B,
+    pub c: C,
+}
+
+pub fn tuple3<A: Strategy, B: Strategy, C: Strategy>(a: A, b: B, c: C) -> Tuple3<A, B, C> {
+    Tuple3 { a, b, c }
+}
+
+impl<A: Strategy, B: Strategy, C: Strategy> Strategy for Tuple3<A, B, C> {
+    type Value = (A::Value, B::Value, C::Value);
+
+    fn generate(&self, rng: &mut SplitMix64) -> Self::Value {
+        (
+            self.a.generate(rng),
+            self.b.generate(rng),
+            self.c.generate(rng),
+        )
+    }
+
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let mut out = Vec::new();
+        for a in self.a.shrink(&value.0) {
+            out.push((a, value.1.clone(), value.2.clone()));
+        }
+        for b in self.b.shrink(&value.1) {
+            out.push((value.0.clone(), b, value.2.clone()));
+        }
+        for c in self.c.shrink(&value.2) {
+            out.push((value.0.clone(), value.1.clone(), c));
+        }
+        out
+    }
+}
+
+/// Vector of `min_len..=max_len` elements; shrinks by halving the
+/// length, dropping single elements, and shrinking elements in place.
+#[derive(Debug, Clone)]
+pub struct VecOf<S> {
+    pub elem: S,
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+pub fn vec_of<S: Strategy>(elem: S, min_len: usize, max_len: usize) -> VecOf<S> {
+    assert!(min_len <= max_len);
+    VecOf {
+        elem,
+        min_len,
+        max_len,
+    }
+}
+
+impl<S: Strategy> Strategy for VecOf<S> {
+    type Value = Vec<S::Value>;
+
+    fn generate(&self, rng: &mut SplitMix64) -> Self::Value {
+        let span = (self.max_len - self.min_len) as u64;
+        let len = self.min_len + rng.next_below(span + 1) as usize;
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = Vec::new();
+        let n = value.len();
+        // Halve: first half, second half.
+        if n / 2 >= self.min_len && n > 1 {
+            out.push(value[..n / 2].to_vec());
+            out.push(value[n - n / 2..].to_vec());
+        }
+        // Drop single elements (bounded fan-out: first 8 positions).
+        if n > self.min_len {
+            for i in 0..n.min(8) {
+                let mut v = value.clone();
+                v.remove(i);
+                out.push(v);
+            }
+        }
+        // Shrink elements in place (bounded fan-out).
+        for i in 0..n.min(4) {
+            for e in self.elem.shrink(&value[i]) {
+                let mut v = value.clone();
+                v[i] = e;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Queue-operation scripts (model-based BoundedQueue testing).
+// ---------------------------------------------------------------------------
+
+/// One operation against a bounded queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueueOp {
+    Push(u32),
+    Pop,
+    Close,
+}
+
+/// Weighted mix of queue operations (pushes dominate so scripts actually
+/// fill queues); `Push` payloads shrink toward zero.
+#[derive(Debug, Clone)]
+pub struct QueueOpStrategy;
+
+impl Strategy for QueueOpStrategy {
+    type Value = QueueOp;
+
+    fn generate(&self, rng: &mut SplitMix64) -> QueueOp {
+        match rng.next_below(10) {
+            0..=5 => QueueOp::Push(rng.next_below(1000) as u32),
+            6..=8 => QueueOp::Pop,
+            _ => QueueOp::Close,
+        }
+    }
+
+    fn shrink(&self, value: &QueueOp) -> Vec<QueueOp> {
+        match value {
+            QueueOp::Push(v) if *v > 0 => vec![QueueOp::Push(0), QueueOp::Push(v / 2)],
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// A script of up to `max_ops` queue operations.
+pub fn queue_ops(max_ops: usize) -> VecOf<QueueOpStrategy> {
+    vec_of(QueueOpStrategy, 0, max_ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_trials() {
+        let seen = std::cell::Cell::new(0u64);
+        check("always_holds", &u64s(0, 100), |v| {
+            seen.set(seen.get() + 1);
+            if *v <= 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+        assert_eq!(seen.get(), Config::default().trials);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails` failed")]
+    fn failing_property_panics_with_name() {
+        check("always_fails", &u64s(0, 100), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrinking_finds_the_boundary() {
+        // Property "v < 40" over [0, 1000]: greedy shrinking must land
+        // exactly on the minimal counterexample, 40.
+        let strat = u64s(0, 1000);
+        let prop = |v: &u64| {
+            if *v < 40 {
+                Ok(())
+            } else {
+                Err("too big".to_string())
+            }
+        };
+        let (min, _, _) = shrink_failure(&Config::default(), &strat, 700, "seed".into(), &prop);
+        assert_eq!(min, 40);
+    }
+
+    #[test]
+    fn vec_shrinking_reduces_length() {
+        let strat = vec_of(u64s(0, 9), 0, 50);
+        // Property: no element equals 7.
+        let prop = |v: &Vec<u64>| {
+            if v.contains(&7) {
+                Err("has 7".to_string())
+            } else {
+                Ok(())
+            }
+        };
+        let failing = vec![1, 2, 7, 3, 4, 7, 5];
+        let (min, _, _) = shrink_failure(&Config::default(), &strat, failing, "x".into(), &prop);
+        assert_eq!(min, vec![7], "minimal script is the single offending element");
+    }
+
+    #[test]
+    fn generate_respects_bounds() {
+        let mut rng = SplitMix64::new(1);
+        let strat = u64s(5, 9);
+        for _ in 0..200 {
+            let v = strat.generate(&mut rng);
+            assert!((5..=9).contains(&v));
+        }
+        let vs = vec_of(u64s(0, 3), 2, 6);
+        for _ in 0..50 {
+            let v = vs.generate(&mut rng);
+            assert!((2..=6).contains(&v.len()));
+        }
+    }
+
+    #[test]
+    fn choice_shrinks_toward_earlier_entries() {
+        let c = choice(&[1u32, 2, 3, 4]);
+        assert_eq!(c.shrink(&4), vec![3, 2, 1]);
+        assert!(c.shrink(&1).is_empty());
+    }
+}

@@ -4,7 +4,7 @@
 //! (explicit setter > env > config file > default) and typed-error
 //! matching from outside the crate.
 
-use vaqf::api::{ServeBackendOpt, ServeOpts, TargetSpec, VaqfError};
+use vaqf::api::{ServeClock, TargetSpec, VaqfError};
 use vaqf::model::micro;
 use vaqf::sim::Backend;
 use vaqf::util::json::Json;
@@ -51,17 +51,43 @@ fn pipeline_target_spec_to_serving() {
 
     // Serving end to end through the same design.
     let report = design
-        .server(&ServeOpts {
-            backend: ServeBackendOpt::Sim { realtime: false },
-            offered_fps: 500.0,
-            frames: 12,
-            queue_depth: 12,
-            source_seed: 5,
-            weights_seed: 7,
-        })
+        .server()
+        .simulated(false)
+        .offered_fps(500.0)
+        .frames(12)
+        .queue_depth(12)
+        .source_seed(5)
+        .weights_seed(7)
+        .run()
         .expect("sim serving succeeds");
-    assert_eq!(report.completed, 12);
-    assert_eq!(report.dropped, 0);
+    assert_eq!(report.aggregate.completed, 12);
+    assert_eq!(report.aggregate.dropped, 0);
+
+    // Multi-stream scheduling over the deterministic virtual clock: the
+    // report is a pure function of the configuration.
+    let run = || {
+        design
+            .server()
+            .streams(3)
+            .workers(2)
+            .policy("weighted-sla")
+            .offered_fps(400.0)
+            .frames(20)
+            .queue_depth(3)
+            .sla_ms(20.0)
+            .analytic()
+            .clock(ServeClock::Virtual)
+            .run()
+            .expect("virtual serving succeeds")
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a.to_json().pretty(), b.to_json().pretty());
+    assert_eq!(a.aggregate.offered, 60);
+    assert_eq!(a.aggregate.completed + a.aggregate.dropped, 60);
+
+    // Unknown policies are a typed config error.
+    let err = design.server().policy("fifo?").run().unwrap_err();
+    assert!(matches!(err, VaqfError::Config { .. }), "got {err:?}");
 }
 
 #[test]

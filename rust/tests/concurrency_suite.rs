@@ -1,0 +1,226 @@
+//! Concurrency stress tests for the serving-path primitives.
+//!
+//! The invariant under attack is conservation: for a `BoundedQueue`,
+//! every admitted item is accounted for exactly once —
+//!
+//! ```text
+//! pushed (admitted)  ==  popped + dropped (evicted) + still queued
+//! ```
+//!
+//! — under multi-producer races, producer/consumer races, and close()
+//! racing in-flight pushes. `close()` must never discard items that were
+//! already admitted (they drain), and must never lose or double-count a
+//! rejection.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use vaqf::coordinator::{BoundedQueue, PushOutcome};
+
+/// Encode (producer, sequence) into one u64 payload so every item is
+/// globally unique and its provenance is recoverable.
+fn item(producer: u64, seq: u64) -> u64 {
+    producer << 32 | seq
+}
+
+#[test]
+fn multi_producer_single_consumer_conserves_items() {
+    const PRODUCERS: u64 = 4;
+    const PER_PRODUCER: u64 = 2000;
+    let q: Arc<BoundedQueue<u64>> = Arc::new(BoundedQueue::new(8));
+
+    let handles: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut admitted = 0u64;
+                for i in 0..PER_PRODUCER {
+                    if q.push(item(p, i)).admitted() {
+                        admitted += 1;
+                    }
+                }
+                admitted
+            })
+        })
+        .collect();
+
+    // Single consumer drains concurrently; close() arrives only after
+    // every producer is done, so nothing is ever rejected.
+    let consumer = {
+        let q = Arc::clone(&q);
+        std::thread::spawn(move || {
+            let mut seen: Vec<u64> = Vec::new();
+            while let Some(v) = q.pop() {
+                seen.push(v);
+            }
+            seen
+        })
+    };
+
+    let admitted: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    q.close();
+    let seen = consumer.join().unwrap();
+
+    assert_eq!(admitted, PRODUCERS * PER_PRODUCER, "no rejections before close");
+    assert_eq!(q.pushed(), admitted);
+    assert_eq!(q.popped(), seen.len() as u64);
+    assert_eq!(q.len(), 0, "closed queue drains fully");
+    // Conservation: admitted == popped + evicted.
+    assert_eq!(q.pushed(), q.popped() + q.dropped(), "conservation violated");
+    // No duplicates: every popped item is a distinct admitted item.
+    let unique: HashSet<u64> = seen.iter().copied().collect();
+    assert_eq!(unique.len(), seen.len(), "an item was delivered twice");
+}
+
+#[test]
+fn close_racing_pushes_never_loses_admitted_items() {
+    // Producers hammer the queue until the closer slams the door on each
+    // of them (push-until-rejected, so the race is exercised on every
+    // run). Whatever was admitted must come out (pop or eviction);
+    // whatever was rejected must have moved no counter.
+    const PRODUCERS: u64 = 4;
+    const SAFETY_CAP: u64 = 10_000_000;
+    let q: Arc<BoundedQueue<u64>> = Arc::new(BoundedQueue::new(4));
+    let admitted_ids: Arc<std::sync::Mutex<HashSet<u64>>> =
+        Arc::new(std::sync::Mutex::new(HashSet::new()));
+    let rejected: Arc<AtomicU64> = Arc::new(AtomicU64::new(0));
+    let attempts: Arc<AtomicU64> = Arc::new(AtomicU64::new(0));
+
+    let producers: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let q = Arc::clone(&q);
+            let admitted_ids = Arc::clone(&admitted_ids);
+            let rejected = Arc::clone(&rejected);
+            let attempts = Arc::clone(&attempts);
+            std::thread::spawn(move || {
+                for i in 0..SAFETY_CAP {
+                    attempts.fetch_add(1, Ordering::Relaxed);
+                    match q.push(item(p, i)) {
+                        PushOutcome::Admitted | PushOutcome::AdmittedDroppedOldest => {
+                            admitted_ids.lock().unwrap().insert(item(p, i));
+                        }
+                        PushOutcome::RejectedClosed => {
+                            rejected.fetch_add(1, Ordering::Relaxed);
+                            return;
+                        }
+                    }
+                }
+                panic!("closer never closed the queue");
+            })
+        })
+        .collect();
+
+    let closer = {
+        let q = Arc::clone(&q);
+        std::thread::spawn(move || {
+            // Let some traffic through, then close mid-stream.
+            while q.pushed() < 512 {
+                std::hint::spin_loop();
+            }
+            q.close();
+        })
+    };
+
+    for h in producers {
+        h.join().unwrap();
+    }
+    closer.join().unwrap();
+
+    // Drain what close() preserved.
+    let mut drained: Vec<u64> = Vec::new();
+    while let Some(v) = q.pop() {
+        drained.push(v);
+    }
+
+    let admitted_ids = admitted_ids.lock().unwrap();
+    assert_eq!(
+        admitted_ids.len() as u64 + rejected.load(Ordering::Relaxed),
+        attempts.load(Ordering::Relaxed),
+        "every push is exactly admitted or rejected"
+    );
+    assert_eq!(q.pushed(), admitted_ids.len() as u64);
+    assert_eq!(
+        rejected.load(Ordering::Relaxed),
+        PRODUCERS,
+        "every producer must observe exactly one rejection"
+    );
+    // close() preserved already-admitted items: everything drained was
+    // admitted, and admitted == drained + evicted.
+    for v in &drained {
+        assert!(admitted_ids.contains(v), "popped an item that was never admitted");
+    }
+    assert_eq!(
+        q.pushed(),
+        q.popped() + q.dropped(),
+        "conservation after close: admitted != popped + evicted"
+    );
+    assert_eq!(q.popped(), drained.len() as u64);
+}
+
+#[test]
+fn multi_consumer_delivery_is_exactly_once() {
+    // 2 producers × 2 consumers: with no close-race and a deep queue,
+    // every admitted item is delivered to exactly one consumer.
+    const PRODUCERS: u64 = 2;
+    const PER_PRODUCER: u64 = 3000;
+    let q: Arc<BoundedQueue<u64>> = Arc::new(BoundedQueue::new(64));
+
+    let producers: Vec<_> = (0..PRODUCERS)
+        .map(|p| {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                for i in 0..PER_PRODUCER {
+                    q.push(item(p, i));
+                }
+            })
+        })
+        .collect();
+    let consumers: Vec<_> = (0..2)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                while let Some(v) = q.pop() {
+                    seen.push(v);
+                }
+                seen
+            })
+        })
+        .collect();
+
+    for h in producers {
+        h.join().unwrap();
+    }
+    q.close();
+    let mut all: Vec<u64> = Vec::new();
+    for c in consumers {
+        all.extend(c.join().unwrap());
+    }
+
+    let unique: HashSet<u64> = all.iter().copied().collect();
+    assert_eq!(unique.len(), all.len(), "an item was delivered twice");
+    assert_eq!(q.popped(), all.len() as u64);
+    assert_eq!(q.pushed(), q.popped() + q.dropped());
+    assert_eq!(q.pushed(), PRODUCERS * PER_PRODUCER);
+}
+
+#[test]
+fn blocking_pop_wakes_on_late_push_and_close() {
+    let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(2));
+    let consumer = {
+        let q = Arc::clone(&q);
+        std::thread::spawn(move || {
+            let first = q.pop(); // blocks until the late push
+            let second = q.pop(); // blocks until close
+            (first, second)
+        })
+    };
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    q.push(42);
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    q.close();
+    let (first, second) = consumer.join().unwrap();
+    assert_eq!(first, Some(42));
+    assert_eq!(second, None);
+}

@@ -1,0 +1,91 @@
+//! Golden-file snapshot tests for emitted artifacts.
+//!
+//! The HLS codegen and the `report` table renderer are pure functions of
+//! the compiled design, so their exact text is pinned under
+//! `rust/tests/golden/`. A refactor that changes emitted artifacts now
+//! fails loudly with a diff location instead of silently shifting output.
+//!
+//! Workflow:
+//! * first run on a fresh checkout bootstraps any missing golden file
+//!   (and passes) — commit the generated files;
+//! * `VAQF_REGEN_GOLDEN=1 cargo test` rewrites them after an intentional
+//!   change — review the diff and commit;
+//! * otherwise the comparison is byte-exact.
+
+use std::path::PathBuf;
+
+use vaqf::api::TargetSpec;
+use vaqf::compiler::render_table5;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+fn regen_requested() -> bool {
+    std::env::var("VAQF_REGEN_GOLDEN").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Compare `actual` against the checked-in golden `name`, bootstrapping
+/// or regenerating per the workflow above.
+fn check_golden(name: &str, actual: &str) {
+    let path = golden_dir().join(name);
+    if regen_requested() || !path.exists() {
+        std::fs::create_dir_all(golden_dir()).expect("create golden dir");
+        std::fs::write(&path, actual).expect("write golden file");
+        eprintln!(
+            "golden: wrote {} ({}) — commit it",
+            path.display(),
+            if regen_requested() { "regen" } else { "bootstrap" }
+        );
+        return;
+    }
+    let expected = std::fs::read_to_string(&path).expect("read golden file");
+    if expected != actual {
+        let line = expected
+            .lines()
+            .zip(actual.lines())
+            .position(|(e, a)| e != a)
+            .map(|i| i + 1)
+            .unwrap_or_else(|| expected.lines().count().min(actual.lines().count()) + 1);
+        panic!(
+            "golden mismatch for {name} (first differing line: {line}).\n\
+             If the change is intentional, regenerate with \
+             `VAQF_REGEN_GOLDEN=1 cargo test --test golden_files` and commit.\n\
+             --- expected ({path}) ---\n{expected}\n--- actual ---\n{actual}",
+            path = path.display(),
+        );
+    }
+}
+
+fn micro_session() -> vaqf::api::Session {
+    TargetSpec::new()
+        .model(vaqf::model::micro())
+        .device_preset("zcu102")
+        .target_fps(100.0)
+        .session()
+        .expect("micro session resolves")
+}
+
+#[test]
+fn golden_hls_codegen_micro_w1a8() {
+    let design = micro_session()
+        .compile_for_bits(Some(8))
+        .expect("micro W1A8 compiles on zcu102");
+    check_golden("hls_micro_w1a8.cpp", &design.hls_source());
+}
+
+#[test]
+fn golden_config_json_micro_w1a8() {
+    let design = micro_session()
+        .compile_for_bits(Some(8))
+        .expect("micro W1A8 compiles on zcu102");
+    check_golden("config_micro_w1a8.json", &design.config_json().pretty());
+}
+
+#[test]
+fn golden_report_table5_micro() {
+    let session = micro_session();
+    let rows = session.table5(&[8, 6]).expect("table5 precisions compile");
+    let text = render_table5(&rows, &session.target().device);
+    check_golden("report_table5_micro.txt", &text);
+}

@@ -1,10 +1,18 @@
-//! Property-based test suite (in-tree generator: SplitMix64 — the offline
-//! build has no proptest, so the strategy→assert idiom of
-//! `proptest`-style suites is hand-rolled). Each property sweeps a
-//! randomized space of layers / parameter sets / devices and asserts an
-//! invariant of the analytical model, the quantization math, the
-//! compiler, or the simulator. Failures print the seed for replay.
+//! Property-based test suite. Each property sweeps a randomized space of
+//! layers / parameter sets / devices and asserts an invariant of the
+//! analytical model, the quantization math, the compiler, or the
+//! simulator.
+//!
+//! Two idioms coexist (the offline build has no proptest):
+//!
+//! * hand-rolled `for trial in 0..N` sweeps over `SplitMix64` — failures
+//!   print the seed for replay;
+//! * the `vaqf::util::prop` strategy+shrink mini-framework — failures
+//!   shrink to a minimal counterexample before panicking. The packing,
+//!   quantizer, binarizer and queue-model properties below are ported
+//!   onto it.
 
+use vaqf::coordinator::{BoundedQueue, PushOutcome};
 use vaqf::hw::{zcu102, Device, ResourceBudget};
 use vaqf::model::{HostOp, LayerDesc, LayerKind, Precision, VitConfig};
 use vaqf::perf::{
@@ -14,6 +22,7 @@ use vaqf::quant::{
     binarize, pack_bit_planes, pack_words, unpack_bit_planes, unpack_words, ActQuantizer,
 };
 use vaqf::sim::{layer_timing, Backend, ComputeEngine};
+use vaqf::util::prop::{self, QueueOp};
 use vaqf::util::rng::SplitMix64;
 
 // ---------------------------------------------------------------------------
@@ -294,75 +303,164 @@ fn prop_resources_monotone_in_tiles() {
 // Quantization properties.
 // ---------------------------------------------------------------------------
 
-#[test]
-fn prop_pack_unpack_roundtrip_all_widths() {
-    let mut rng = SplitMix64::new(107);
-    for bits in 1..=16u32 {
-        for _ in 0..20 {
-            let n = 1 + rng.next_below(200) as usize;
-            let vals: Vec<i32> = (0..n)
-                .map(|_| {
-                    if bits == 1 {
-                        if rng.next_below(2) == 1 {
-                            1
-                        } else {
-                            -1
-                        }
-                    } else {
-                        let hi = (1i64 << (bits - 1)) - 1;
-                        let lo = -(1i64 << (bits - 1));
-                        (lo + rng.next_below((hi - lo + 1) as u64) as i64) as i32
-                    }
-                })
-                .collect();
-            let packed = pack_words(&vals, bits, 64);
-            assert_eq!(unpack_words(&packed), vals, "bits={bits} n={n}");
-            // Word count is the packing-factor ceiling.
-            let factor = (64 / bits) as usize;
-            assert_eq!(packed.words.len(), n.div_ceil(factor));
+/// Center a raw `[0, 65535]` value into the signed range of `bits`
+/// (`±1` for the binary width).
+fn to_width(raw: u64, bits: u32) -> i32 {
+    if bits == 1 {
+        if raw % 2 == 1 {
+            1
+        } else {
+            -1
         }
+    } else {
+        let span = 1u64 << bits;
+        let lo = -(1i64 << (bits - 1));
+        (lo + (raw % span) as i64) as i32
     }
 }
 
 #[test]
+fn prop_pack_unpack_roundtrip_all_widths() {
+    // Ported onto util::prop: a failure shrinks (bits, values) to a
+    // minimal counterexample instead of dumping a 200-element vector.
+    let strat = prop::tuple2(prop::bit_widths(), prop::vec_of(prop::u64s(0, 65535), 1, 200));
+    let cfg = prop::Config {
+        trials: 300,
+        ..Default::default()
+    };
+    prop::check_with(&cfg, "pack_unpack_roundtrip", &strat, |(bits, raw)| {
+        let bits = *bits as u32;
+        let vals: Vec<i32> = raw.iter().map(|&r| to_width(r, bits)).collect();
+        let packed = pack_words(&vals, bits, 64);
+        if unpack_words(&packed) != vals {
+            return Err(format!("roundtrip mismatch (bits={bits}, n={})", vals.len()));
+        }
+        // Word count is the packing-factor ceiling.
+        let factor = (64 / bits) as usize;
+        if packed.words.len() != vals.len().div_ceil(factor) {
+            return Err(format!(
+                "word count {} != ceil({} / {factor})",
+                packed.words.len(),
+                vals.len()
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_quantizer_error_bound_random() {
-    let mut rng = SplitMix64::new(108);
-    for _ in 0..100 {
-        let bits = 2 + rng.next_below(15) as u8;
-        let n = 1 + rng.next_below(500) as usize;
-        let data: Vec<f32> = (0..n).map(|_| rng.next_f32_range(-50.0, 50.0)).collect();
+    let strat = prop::tuple2(prop::u64s(2, 16), prop::vec_of(prop::f64s(-50.0, 50.0), 1, 500));
+    prop::check("quantizer_error_bound", &strat, |(bits, data)| {
+        let bits = *bits as u8;
+        let data: Vec<f32> = data.iter().map(|&x| x as f32).collect();
         let q = ActQuantizer::calibrate(bits, &data);
         for &x in &data {
             let y = q.dequantize_one(q.quantize_one(x));
-            assert!(
-                (x - y).abs() <= q.step() / 2.0 + 1e-4,
-                "bits={bits} x={x} y={y}"
-            );
+            if (x - y).abs() > q.step() / 2.0 + 1e-4 {
+                return Err(format!("bits={bits} x={x} → {y} (step {})", q.step()));
+            }
         }
-    }
+        Ok(())
+    });
 }
 
 #[test]
 fn prop_binarize_scale_bounds() {
     // The ℓ1/n scale is ≤ max|w| and ≥ 0; dense reconstruction preserves
-    // the sign pattern.
-    let mut rng = SplitMix64::new(109);
-    for _ in 0..100 {
-        let r = 1 + rng.next_below(20) as usize;
-        let c = 1 + rng.next_below(20) as usize;
+    // the sign pattern. Shape shrinks toward 1×1 on failure.
+    let strat = prop::tuple3(prop::dims(20), prop::dims(20), prop::seeds());
+    prop::check("binarize_scale_bounds", &strat, |&(r, c, seed)| {
+        let (r, c) = (r as usize, c as usize);
+        let mut rng = SplitMix64::new(seed);
         let w: Vec<f32> = (0..r * c).map(|_| rng.next_f32_range(-2.0, 2.0)).collect();
         let b = binarize(&w, r, c);
         let max = w.iter().fold(0.0f32, |m, v| m.max(v.abs()));
-        assert!(b.scale >= 0.0 && b.scale <= max + 1e-6);
+        if !(b.scale >= 0.0 && b.scale <= max + 1e-6) {
+            return Err(format!("scale {} outside [0, {max}]", b.scale));
+        }
         for (i, &orig) in w.iter().enumerate() {
-            let sign = if b.signs[i] { 1.0 } else { -1.0 };
-            if orig > 0.0 {
-                assert_eq!(sign, 1.0);
-            } else {
-                assert_eq!(sign, -1.0);
+            let sign = if b.signs[i] { 1.0f32 } else { -1.0 };
+            let want = if orig > 0.0 { 1.0 } else { -1.0 };
+            if sign != want {
+                return Err(format!("sign flip at {i}: w={orig} sign={sign}"));
             }
         }
-    }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_queue_matches_reference_model() {
+    // Model-based check of BoundedQueue against a VecDeque reference:
+    // random push/pop/close scripts must agree on every outcome and on
+    // the conservation counters. Failing scripts shrink to a minimal
+    // operation sequence.
+    use std::collections::VecDeque;
+    const CAP: usize = 4;
+    let strat = prop::queue_ops(200);
+    let cfg = prop::Config {
+        trials: 300,
+        ..Default::default()
+    };
+    prop::check_with(&cfg, "queue_matches_reference_model", &strat, |ops| {
+        let q: BoundedQueue<u32> = BoundedQueue::new(CAP);
+        let mut model: VecDeque<u32> = VecDeque::new();
+        let mut closed = false;
+        let (mut pushed, mut dropped, mut popped) = (0u64, 0u64, 0u64);
+        for (i, op) in ops.iter().enumerate() {
+            match *op {
+                QueueOp::Push(v) => {
+                    let got = q.push(v);
+                    let want = if closed {
+                        PushOutcome::RejectedClosed
+                    } else if model.len() == CAP {
+                        model.pop_front();
+                        model.push_back(v);
+                        pushed += 1;
+                        dropped += 1;
+                        PushOutcome::AdmittedDroppedOldest
+                    } else {
+                        model.push_back(v);
+                        pushed += 1;
+                        PushOutcome::Admitted
+                    };
+                    if got != want {
+                        return Err(format!("op {i}: push({v}) → {got:?}, model says {want:?}"));
+                    }
+                }
+                QueueOp::Pop => {
+                    let got = q.try_pop();
+                    let want = model.pop_front();
+                    if want.is_some() {
+                        popped += 1;
+                    }
+                    if got != want {
+                        return Err(format!("op {i}: pop → {got:?}, model says {want:?}"));
+                    }
+                }
+                QueueOp::Close => {
+                    q.close();
+                    closed = true;
+                }
+            }
+        }
+        if (q.pushed(), q.dropped(), q.popped()) != (pushed, dropped, popped) {
+            return Err(format!(
+                "counters diverge: queue ({}, {}, {}) vs model ({pushed}, {dropped}, {popped})",
+                q.pushed(),
+                q.dropped(),
+                q.popped()
+            ));
+        }
+        if q.len() != model.len() {
+            return Err(format!("len {} != model {}", q.len(), model.len()));
+        }
+        if q.pushed() != q.popped() + q.dropped() + q.len() as u64 {
+            return Err("conservation: pushed != popped + dropped + len".into());
+        }
+        Ok(())
+    });
 }
 
 #[test]
