@@ -6,24 +6,67 @@
 //! scaling. Speedups land in `BENCH_hotpath.json` so the perf trajectory
 //! is tracked across PRs (methodology: EXPERIMENTS.md §Perf).
 //!
-//! Section 2 (requires `make artifacts`): PJRT inference latency per
+//! Section 2: prepared-model execution — the whole-model simulator loop
+//! with the per-model plan (packed weights, pre-quantized fixed16,
+//! per-layer timing) built once and a reused workspace, against a
+//! transliteration of the pre-plan path that re-lays the weights out and
+//! allocates on every call. Reports per-frame latency (single and
+//! batched) and per-frame heap-allocation counts measured with a counting
+//! global allocator.
+//!
+//! Section 3 (requires `make artifacts`): PJRT inference latency per
 //! artifact variant, frame-source + queue overhead, and end-to-end serving
 //! throughput. Skips gracefully without artifacts.
 //!
 //! Run with: `cargo bench --bench runtime_hotpath` (append `-- --quick`
 //! for the CI-sized subset).
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use vaqf::coordinator::{serve, FrameSource, ServeConfig};
 use vaqf::hw::zcu102;
+use vaqf::model::deit_base;
 use vaqf::perf::AcceleratorParams;
 use vaqf::quant::binarize;
 use vaqf::runtime::{InferenceEngine, Manifest, PjrtBackend};
-use vaqf::sim::{Backend, ComputeEngine};
+use vaqf::sim::{generate_weights, reference_forward, Backend, ComputeEngine, ModelExecutor};
 use vaqf::util::bench::{bench_output_path, report_metric, Bench, JsonReport};
 use vaqf::util::parallel::default_threads;
 use vaqf::util::rng::SplitMix64;
+
+/// Counting allocator: the per-frame allocation numbers in
+/// `BENCH_hotpath.json` are exact counts of `alloc`/`realloc`/
+/// `alloc_zeroed` calls (methodology: EXPERIMENTS.md §Perf).
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_calls() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
 
 /// DeiT-base geometry: 196 patches + CLS, embed 768, heads of 64.
 const F: usize = 197;
@@ -37,9 +80,9 @@ const FC_SHAPES: [(&str, usize, usize); 4] = [
     ("mlp2", 3072, 768),
 ];
 
-fn engine(bits: u8, backend: Backend, threads: usize) -> ComputeEngine {
+fn accel_params(bits: u8) -> AcceleratorParams {
     let g_q = AcceleratorParams::g_q_for(64, bits);
-    let params = AcceleratorParams {
+    AcceleratorParams {
         t_m: 16,
         t_n: 4,
         t_m_q: 160,
@@ -48,8 +91,11 @@ fn engine(bits: u8, backend: Backend, threads: usize) -> ComputeEngine {
         g_q,
         p_h: 4,
         act_bits: Some(bits),
-    };
-    ComputeEngine::new(params, zcu102())
+    }
+}
+
+fn engine(bits: u8, backend: Backend, threads: usize) -> ComputeEngine {
+    ComputeEngine::new(accel_params(bits), zcu102())
         .with_backend(backend)
         .with_threads(threads)
 }
@@ -100,15 +146,16 @@ fn engine_section(quick: bool, report: &mut JsonReport) {
         }
     }
 
-    // qq_matmul (attention): packed planes pay off below the bits²
-    // crossover (see sim::kernels::qq_packed_profitable) — sweep the
-    // precisions where the packed path engages.
+    // qq_matmul (attention): the Packed backend runs plane-pair popcounts
+    // below the bits² crossover and the compact i32 loop above it (see
+    // sim::kernels::qq_packed_profitable for the tuned rationale) — sweep
+    // both sides so the crossover stays anchored to measured numbers.
     if !quick {
         println!("\n== attention qq_matmul: scalar vs packed ==");
         for &(name, k, m) in &[("qk", HEAD, F), ("sv", F, HEAD)] {
             let a = randn(&mut rng, F * k);
             let b = randn(&mut rng, k * m);
-            for &bits in &[6u8, 4, 1] {
+            for &bits in &[8u8, 6, 4, 1] {
                 let tag = format!("qq_{name} {k}x{m} a{bits}");
                 let scalar = engine(bits, Backend::Scalar, 1);
                 let packed = engine(bits, Backend::Packed, 1);
@@ -183,7 +230,119 @@ fn engine_section(quick: bool, report: &mut JsonReport) {
     }
 }
 
-/// Section 2: PJRT + serving (needs artifacts; skips otherwise).
+/// Section 2: prepared plan + workspace vs the PR 3 path, whole model.
+///
+/// Always DeiT-base at W1A8 (the acceptance trajectory tracks exactly
+/// that point); `--quick` only trims iteration counts. The weights live
+/// in the executor (`exec.weights()`) so the ~100M-parameter model exists
+/// once.
+fn prepared_section(quick: bool, report: &mut JsonReport) {
+    let mut bench = Bench::heavy();
+    if quick {
+        // Two samples minimum even in quick mode: the CI regression guard
+        // gates on these metrics, and a single sample on a shared runner
+        // is too noisy to gate on.
+        bench.warmup_iters = 0;
+        bench.min_iters = 2;
+        bench.max_iters = 3;
+        bench.budget = std::time::Duration::from_millis(500);
+    }
+    let label = "deit-base";
+    let bits = 8u8;
+    let threads = default_threads();
+    let params = accel_params(bits);
+
+    println!("\n== prepared-model execution ({label} W1A{bits}, packed, {threads} threads) ==");
+    let weights = generate_weights(&deit_base(), 11);
+    let patches = weights.synthetic_patches(0);
+    let mut exec = ModelExecutor::new(weights, Some(bits), params, zcu102()).with_threads(1);
+    let legacy1 = engine(bits, Backend::Packed, 1);
+
+    // Bit-exactness cross-check before timing anything (also warms the
+    // prepared workspace for the allocation count below).
+    let legacy_logits = reference_forward(&legacy1, exec.weights(), &patches);
+    let (prep_logits, _) = exec.run_frame(&patches);
+    assert_eq!(
+        legacy_logits, prep_logits,
+        "prepared path diverged from the PR3-style path"
+    );
+    println!("  cross-check: prepared logits == PR3-path logits (bit-exact)");
+
+    // Steady-state heap-allocation accounting, measured at 1 thread so
+    // the counts are the loop's own allocations (thread spawns excluded;
+    // see EXPERIMENTS.md §Perf for the protocol).
+    let before = alloc_calls();
+    let _ = exec.run_frame(&patches);
+    let prep_allocs = alloc_calls() - before;
+    let before = alloc_calls();
+    let _ = reference_forward(&legacy1, exec.weights(), &patches);
+    let legacy_allocs = alloc_calls() - before;
+
+    // Timing at the environment's thread fan-out.
+    let mut exec = exec.with_threads(threads);
+    let legacy_engine = engine(bits, Backend::Packed, threads);
+    let r_legacy = bench.run(&format!("{label} w1a{bits} frame, PR3 path"), || {
+        let _ = reference_forward(&legacy_engine, exec.weights(), &patches);
+    });
+    report.result(&r_legacy);
+    let r_prep = bench.run(&format!("{label} w1a{bits} frame, prepared"), || {
+        let _ = exec.run_frame(&patches);
+    });
+    report.result(&r_prep);
+
+    let batch_n: usize = if quick { 4 } else { 8 };
+    let frames: Vec<Vec<f32>> = (0..batch_n as u64)
+        .map(|i| exec.weights().synthetic_patches(i))
+        .collect();
+    let r_batch = bench.run(&format!("{label} w1a{bits} run_batch({batch_n})"), || {
+        let _ = exec.run_batch(&frames);
+    });
+    report.result(&r_batch);
+    let batched_frame_s = r_batch.mean_s() / batch_n as f64;
+
+    report.metric(
+        &format!("{label} w1a{bits} per-frame latency (PR3 path)"),
+        r_legacy.mean_s() * 1e3,
+        "ms",
+    );
+    report.metric(
+        &format!("{label} w1a{bits} per-frame latency (prepared)"),
+        r_prep.mean_s() * 1e3,
+        "ms",
+    );
+    report.metric(
+        &format!("{label} w1a{bits} per-frame latency (batched)"),
+        batched_frame_s * 1e3,
+        "ms",
+    );
+    report.metric(
+        &format!("{label} w1a{bits} per-frame speedup (prepared/PR3)"),
+        r_legacy.mean_s() / r_prep.mean_s(),
+        "x",
+    );
+    report.metric(
+        &format!("{label} w1a{bits} per-frame speedup (batched/PR3)"),
+        r_legacy.mean_s() / batched_frame_s,
+        "x",
+    );
+    report.metric(
+        &format!("{label} w1a{bits} heap allocs per frame (PR3 path)"),
+        legacy_allocs as f64,
+        "allocs",
+    );
+    report.metric(
+        &format!("{label} w1a{bits} heap allocs per frame (prepared steady state)"),
+        prep_allocs as f64,
+        "allocs",
+    );
+    report.metric(
+        &format!("{label} w1a{bits} alloc reduction (PR3/prepared)"),
+        legacy_allocs as f64 / prep_allocs.max(1) as f64,
+        "x",
+    );
+}
+
+/// Section 3: PJRT + serving (needs artifacts; skips otherwise).
 fn pjrt_section(report: &mut JsonReport) -> anyhow::Result<()> {
     let artifacts = "artifacts";
     let man = match Manifest::load(artifacts) {
@@ -270,7 +429,10 @@ fn main() -> anyhow::Result<()> {
 
     let out = bench_output_path("BENCH_hotpath.json");
     engine_section(quick, &mut report);
-    // Persist the kernel numbers even if the PJRT section bails later.
+    report.write(&out)?;
+
+    prepared_section(quick, &mut report);
+    // Persist the sim-side numbers even if the PJRT section bails later.
     report.write(&out)?;
 
     pjrt_section(&mut report)?;

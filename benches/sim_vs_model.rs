@@ -54,11 +54,11 @@ fn main() {
         .session()
         .expect("presets resolve");
     let macs = micro().structure(Some(8)).total_macs();
-    let exec = micro_session
+    let mut exec = micro_session
         .compile_for_bits(Some(8))
         .expect("micro W1A8 feasible")
         .simulator_with_seed(11);
-    let patches = exec.weights.synthetic_patches(0);
+    let patches = exec.weights().synthetic_patches(0);
 
     let mut bench = Bench::new();
     let r = bench.run("sim run_frame (micro W1A8)", || {
@@ -70,7 +70,7 @@ fn main() {
         "M MACs/s",
     );
 
-    let fp = micro_session
+    let mut fp = micro_session
         .compile_for_bits(None)
         .expect("micro baseline feasible")
         .simulator_with_seed(11);

@@ -55,7 +55,7 @@ fn main() -> Result<()> {
     // The artifact precision is fixed at 8-bit; build the simulator with
     // the corresponding design point (re-optimized at exactly 8 bits).
     let design8 = session.compile_for_bits(Some(8))?;
-    let executor = design8.simulator_with_seed(entry.seed);
+    let mut executor = design8.simulator_with_seed(entry.seed);
 
     // ---- 3. numerical cross-check: sim vs PJRT ---------------------------
     println!("--- cross-check: simulator (integer datapath) vs PJRT (JAX/Pallas HLO) ---");
@@ -63,7 +63,7 @@ fn main() -> Result<()> {
     let mut agree = 0usize;
     const FRAMES: u64 = 8;
     for fid in 0..FRAMES {
-        let patches = executor.weights.synthetic_patches(fid);
+        let patches = executor.weights().synthetic_patches(fid);
         let (sim_logits, _) = executor.run_frame(&patches);
         let pjrt_logits = runtime.infer("micro_w1a8", &patches)?;
         let scale = pjrt_logits
@@ -131,7 +131,8 @@ fn main() -> Result<()> {
     // would sustain at 150 MHz), reusing the step-3 executor:
     let sim_fps: Vec<f64> = (0..4)
         .map(|i| {
-            let (_, t) = executor.run_frame(&executor.weights.synthetic_patches(i));
+            let patches = executor.weights().synthetic_patches(i);
+            let (_, t) = executor.run_frame(&patches);
             t.fps()
         })
         .collect();

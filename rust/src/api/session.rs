@@ -306,7 +306,11 @@ impl CompiledDesign {
     /// A functional cycle-level simulator of this design — a
     /// [`ModelExecutor`] wired with the *compiled* parameters plus the
     /// target's kernel backend and thread fan-out. Weights are generated
-    /// deterministically from `seed`.
+    /// deterministically from `seed`. The executor performs its one-time
+    /// per-model preparation (packed weight layout + cycle accounting)
+    /// lazily before the first frame, then streams frames through its
+    /// reusable workspace (`run_frame` / `run_batch`) without re-doing
+    /// any of it.
     pub fn simulator_with_seed(&self, seed: u64) -> ModelExecutor {
         let weights = generate_weights(&self.target.model, seed);
         let device = self.target.device.clone();
@@ -372,7 +376,7 @@ mod tests {
         let d8 = session.compile_for_bits(Some(8)).unwrap();
         let exec = d8.simulator_with_seed(3);
         assert_eq!(exec.engine.params, d8.design.params);
-        assert_eq!(exec.device.name, "zcu102");
+        assert_eq!(exec.device().name, "zcu102");
     }
 
     #[test]

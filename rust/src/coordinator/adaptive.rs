@@ -108,7 +108,7 @@ mod tests {
         fn name(&self) -> String {
             format!("fake@{}", self.latency_s)
         }
-        fn infer(&self, _patches: &[f32]) -> anyhow::Result<(Vec<f32>, f64)> {
+        fn infer(&mut self, _patches: &[f32]) -> anyhow::Result<(Vec<f32>, f64)> {
             Ok((vec![0.0; 4], self.latency_s))
         }
     }

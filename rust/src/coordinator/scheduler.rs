@@ -121,7 +121,7 @@ impl WorkerModel for SimWorker {
     fn name(&self) -> String {
         format!(
             "sim-fpga:{}@{}",
-            self.executor.config.name, self.executor.device.name
+            self.executor.config().name, self.executor.device().name
         )
     }
 

@@ -41,7 +41,7 @@ impl Default for ServeConfig {
 /// offered frames are either served or dropped.
 pub fn serve(
     mut source: FrameSource,
-    backend: Box<dyn InferenceBackend>,
+    mut backend: Box<dyn InferenceBackend>,
     cfg: &ServeConfig,
 ) -> anyhow::Result<ServingReport> {
     let queue: Arc<BoundedQueue<Frame>> = Arc::new(BoundedQueue::new(cfg.queue_depth));

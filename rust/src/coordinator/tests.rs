@@ -184,7 +184,7 @@ fn serve_sheds_load_when_backend_is_slow() {
         fn name(&self) -> String {
             "slow".into()
         }
-        fn infer(&self, _p: &[f32]) -> anyhow::Result<(Vec<f32>, f64)> {
+        fn infer(&mut self, _p: &[f32]) -> anyhow::Result<(Vec<f32>, f64)> {
             std::thread::sleep(std::time::Duration::from_millis(20));
             Ok((vec![0.0; 10], 0.02))
         }
@@ -208,7 +208,7 @@ fn serve_sheds_load_when_backend_is_slow() {
 
 #[test]
 fn realtime_sim_backend_paces_to_device_latency() {
-    let b = sim_backend(true);
+    let mut b = sim_backend(true);
     let s = FrameSource::new(micro(), 11, None);
     let frame = s.make_frame(0);
     let t0 = std::time::Instant::now();

@@ -157,9 +157,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     // The simulator runs the *compiled* design for the resolved target —
     // optimized tiling, not hardcoded micro parameters.
     let design = session.compile_for_bits(bits)?;
-    let exec = design.simulator_with_seed(seed);
+    let mut exec = design.simulator_with_seed(seed);
     for i in 0..frames {
-        let patches = exec.weights.synthetic_patches(i);
+        let patches = exec.weights().synthetic_patches(i);
         let (logits, trace) = exec.run_frame(&patches);
         let top = logits
             .iter()

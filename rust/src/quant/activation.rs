@@ -69,6 +69,14 @@ impl ActQuantizer {
         }
     }
 
+    /// Quantize into a reusable buffer (cleared and refilled — no
+    /// reallocation once `out`'s capacity has warmed up). Element-for-
+    /// element identical to [`ActQuantizer::quantize`].
+    pub fn quantize_into(&self, data: &[f32], out: &mut Vec<i32>) {
+        out.clear();
+        out.extend(data.iter().map(|&x| self.quantize_one(x)));
+    }
+
     /// Fake-quantization: quantize then dequantize (the QAT forward pass).
     pub fn fake_quantize(&self, data: &[f32]) -> Vec<f32> {
         data.iter()

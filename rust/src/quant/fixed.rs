@@ -24,6 +24,13 @@ pub fn from_fixed16(q: Fixed16) -> f32 {
     q as f32 / (1 << FIXED16_FRAC_BITS) as f32
 }
 
+/// Convert a whole f32 slice to Q6.10 into a reusable buffer (cleared and
+/// refilled — no reallocation once `out`'s capacity has warmed up).
+pub fn to_fixed16_into(x: &[f32], out: &mut Vec<Fixed16>) {
+    out.clear();
+    out.extend(x.iter().map(|&v| to_fixed16(v)));
+}
+
 /// Fixed-point multiply-accumulate into a 32-bit accumulator (what one DSP
 /// slice does per cycle in the unquantized datapath).
 #[inline]

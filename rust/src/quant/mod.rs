@@ -21,11 +21,15 @@ mod progressive;
 
 pub use activation::{ActQuantizer, QuantizedTensor};
 pub use binarize::{binarize, BinaryMatrix};
-pub use fixed::{acc_to_fixed16, fixed_mac, from_fixed16, to_fixed16, Fixed16, FIXED16_FRAC_BITS};
+pub use fixed::{
+    acc_to_fixed16, fixed_mac, from_fixed16, to_fixed16, to_fixed16_into, Fixed16,
+    FIXED16_FRAC_BITS,
+};
 pub use packing::{
-    field_mask, lane_words, pack_bit_planes, pack_col_planes, pack_factor, pack_sign_bits,
-    pack_sign_planes, pack_words, plane_coeff, popcount_and_dot, unpack_bit_planes, unpack_words,
-    xnor_sign_dot, BitPlanes, ColPlanes, PackedBuffer, SignPlanes,
+    field_mask, lane_words, pack_bit_planes, pack_bit_planes_into, pack_col_planes,
+    pack_col_planes_into, pack_factor, pack_sign_bits, pack_sign_bits_into, pack_sign_planes,
+    pack_words, plane_coeff, popcount_and_dot, unpack_bit_planes, unpack_words, xnor_sign_dot,
+    BitPlanes, ColPlanes, PackedBuffer, SignPlanes,
 };
 pub use progressive::{progressive_schedule, ProgressiveMask};
 

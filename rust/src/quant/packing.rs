@@ -161,13 +161,22 @@ pub fn xnor_sign_dot(a: &[u64], b: &[u64], n: usize) -> i64 {
 /// the 1-bit activation encoding (±1, matching `ActQuantizer` at
 /// `bits == 1`, which never produces 0).
 pub fn pack_sign_bits(q: &[i32]) -> Vec<u64> {
-    let mut words = vec![0u64; lane_words(q.len())];
+    let mut words = Vec::new();
+    pack_sign_bits_into(q, &mut words);
+    words
+}
+
+/// [`pack_sign_bits`] into a reusable buffer (cleared and refilled) — the
+/// one definition of the 1-bit sign/lane layout, shared by the allocating
+/// and in-place packers.
+pub fn pack_sign_bits_into(q: &[i32], words: &mut Vec<u64>) {
+    words.clear();
+    words.resize(lane_words(q.len()), 0);
     for (p, &v) in q.iter().enumerate() {
         if v > 0 {
             words[p / 64] |= 1 << (p % 64);
         }
     }
-    words
 }
 
 /// Binary-weight sign planes packed column-major in 64-wide lanes: for
@@ -240,22 +249,32 @@ pub struct BitPlanes {
 /// Decompose `q` into [`BitPlanes`] (values must fit `bits`
 /// two's-complement for `bits ≥ 2`; ±1 for `bits == 1`).
 pub fn pack_bit_planes(q: &[i32], bits: u32) -> BitPlanes {
+    let mut bp = BitPlanes::empty();
+    pack_bit_planes_into(q, bits, &mut bp);
+    bp
+}
+
+/// [`pack_bit_planes`] into a reusable [`BitPlanes`]: the plane/total
+/// buffers are cleared and refilled in place, so repeated packs of
+/// same-shaped rows (the per-row inner loop of the packed kernels) cost
+/// zero heap traffic after the first call.
+pub fn pack_bit_planes_into(q: &[i32], bits: u32, bp: &mut BitPlanes) {
     assert!((1..=16).contains(&bits), "activation bits must be 1..=16");
     let wpp = lane_words(q.len());
+    bp.bits = bits;
+    bp.len = q.len();
+    bp.words_per_plane = wpp;
     if bits == 1 {
-        let planes = pack_sign_bits(q);
-        let totals = vec![planes.iter().map(|w| w.count_ones() as i64).sum()];
-        return BitPlanes {
-            planes,
-            words_per_plane: wpp,
-            bits,
-            len: q.len(),
-            totals,
-        };
+        pack_sign_bits_into(q, &mut bp.planes);
+        bp.totals.clear();
+        bp.totals.push(bp.planes.iter().map(|w| w.count_ones() as i64).sum());
+        return;
     }
     let mask = field_mask(bits);
-    let mut planes = vec![0u64; bits as usize * wpp];
-    let mut totals = vec![0i64; bits as usize];
+    bp.planes.clear();
+    bp.planes.resize(bits as usize * wpp, 0);
+    bp.totals.clear();
+    bp.totals.resize(bits as usize, 0);
     for (p, &v) in q.iter().enumerate() {
         debug_assert!(
             (v as i64) >= -(1i64 << (bits - 1)) && (v as i64) <= (1i64 << (bits - 1)) - 1,
@@ -266,21 +285,26 @@ pub fn pack_bit_planes(q: &[i32], bits: u32) -> BitPlanes {
         let bit = 1u64 << (p % 64);
         while enc != 0 {
             let b = enc.trailing_zeros();
-            planes[b as usize * wpp + word] |= bit;
-            totals[b as usize] += 1;
+            bp.planes[b as usize * wpp + word] |= bit;
+            bp.totals[b as usize] += 1;
             enc &= enc - 1;
         }
-    }
-    BitPlanes {
-        planes,
-        words_per_plane: wpp,
-        bits,
-        len: q.len(),
-        totals,
     }
 }
 
 impl BitPlanes {
+    /// An empty decomposition to feed [`pack_bit_planes_into`] — the
+    /// reusable-scratch idiom of the packed kernels.
+    pub fn empty() -> BitPlanes {
+        BitPlanes {
+            planes: Vec::new(),
+            words_per_plane: 0,
+            bits: 1,
+            len: 0,
+            totals: Vec::new(),
+        }
+    }
+
     /// Lane words of plane `b`.
     #[inline]
     pub fn plane(&self, b: u32) -> &[u64] {
@@ -334,11 +358,25 @@ pub struct ColPlanes {
 
 /// Pack a row-major `rows × cols` integer matrix into per-column planes.
 pub fn pack_col_planes(q: &[i32], rows: usize, cols: usize, bits: u32) -> ColPlanes {
+    let mut cp = ColPlanes::empty();
+    pack_col_planes_into(q, rows, cols, bits, &mut cp);
+    cp
+}
+
+/// [`pack_col_planes`] into a reusable [`ColPlanes`] (cleared and
+/// refilled in place — the attention workspace repacks the right-hand
+/// operand every call without heap traffic once warmed up).
+pub fn pack_col_planes_into(q: &[i32], rows: usize, cols: usize, bits: u32, cp: &mut ColPlanes) {
     assert_eq!(q.len(), rows * cols, "shape mismatch");
     assert!((1..=16).contains(&bits), "activation bits must be 1..=16");
     let planes = if bits == 1 { 1 } else { bits as usize };
     let wpc = lane_words(rows);
-    let mut words = vec![0u64; cols * planes * wpc];
+    cp.words.clear();
+    cp.words.resize(cols * planes * wpc, 0);
+    cp.words_per_col = wpc;
+    cp.bits = bits;
+    cp.rows = rows;
+    cp.cols = cols;
     let mask = field_mask(bits);
     for p in 0..rows {
         let row = &q[p * cols..(p + 1) * cols];
@@ -347,7 +385,7 @@ pub fn pack_col_planes(q: &[i32], rows: usize, cols: usize, bits: u32) -> ColPla
         for (j, &v) in row.iter().enumerate() {
             if bits == 1 {
                 if v > 0 {
-                    words[j * wpc + word] |= bit;
+                    cp.words[j * wpc + word] |= bit;
                 }
                 continue;
             }
@@ -355,21 +393,25 @@ pub fn pack_col_planes(q: &[i32], rows: usize, cols: usize, bits: u32) -> ColPla
             let base = j * planes * wpc + word;
             while enc != 0 {
                 let b = enc.trailing_zeros() as usize;
-                words[base + b * wpc] |= bit;
+                cp.words[base + b * wpc] |= bit;
                 enc &= enc - 1;
             }
         }
     }
-    ColPlanes {
-        words,
-        words_per_col: wpc,
-        bits,
-        rows,
-        cols,
-    }
 }
 
 impl ColPlanes {
+    /// An empty packing to feed [`pack_col_planes_into`].
+    pub fn empty() -> ColPlanes {
+        ColPlanes {
+            words: Vec::new(),
+            words_per_col: 0,
+            bits: 1,
+            rows: 0,
+            cols: 0,
+        }
+    }
+
     /// Lane words of plane `b` of column `j`.
     #[inline]
     pub fn col_plane(&self, j: usize, b: u32) -> &[u64] {

@@ -217,9 +217,13 @@ impl InferenceEngine {
 /// Deliberately NOT `Send`: the PJRT client wraps thread-affine C
 /// pointers, so the coordinator keeps inference on the calling thread and
 /// spawns only the frame source.
+///
+/// `infer` takes `&mut self` because stateful backends (the simulator's
+/// prepared-plan executor, the adaptive-precision ladder) reuse an owned
+/// workspace across frames.
 pub trait InferenceBackend {
     fn name(&self) -> String;
-    fn infer(&self, patches: &[f32]) -> anyhow::Result<(Vec<f32>, f64)>;
+    fn infer(&mut self, patches: &[f32]) -> anyhow::Result<(Vec<f32>, f64)>;
 }
 
 /// PJRT-backed implementation of [`InferenceBackend`].
@@ -233,7 +237,7 @@ impl InferenceBackend for PjrtBackend {
         format!("pjrt:{}", self.tag)
     }
 
-    fn infer(&self, patches: &[f32]) -> anyhow::Result<(Vec<f32>, f64)> {
+    fn infer(&mut self, patches: &[f32]) -> anyhow::Result<(Vec<f32>, f64)> {
         let t0 = std::time::Instant::now();
         let logits = self.engine.infer(&self.tag, patches)?;
         Ok((logits, t0.elapsed().as_secs_f64()))
@@ -253,11 +257,11 @@ impl InferenceBackend for SimBackend {
     fn name(&self) -> String {
         format!(
             "sim-fpga:{}@{}",
-            self.executor.config.name, self.executor.device.name
+            self.executor.config().name, self.executor.device().name
         )
     }
 
-    fn infer(&self, patches: &[f32]) -> anyhow::Result<(Vec<f32>, f64)> {
+    fn infer(&mut self, patches: &[f32]) -> anyhow::Result<(Vec<f32>, f64)> {
         let (logits, trace) = self.executor.run_frame(patches);
         if self.realtime {
             std::thread::sleep(std::time::Duration::from_secs_f64(trace.latency_s));

@@ -2,39 +2,55 @@
 //!
 //! Three matmul flavours, matching the hardware's operand types:
 //!
-//! * [`ComputeEngine::fc_fixed16`] — unquantized layers (patch embed,
-//!   head): operands converted to Q6.10 fixed point, 32-bit accumulation
-//!   on the DSP path — including the fixed-point rounding a real board
-//!   would exhibit.
-//! * [`ComputeEngine::fc_binary`] — binary-weight FC layers: activations
-//!   quantized to `b`-bit integers, weights are ±1 signs, the MAC array is
-//!   pure add/sub (LUT path), one scale multiply at the end
-//!   (`act_scale · w_scale`).
-//! * [`ComputeEngine::qq_matmul`] — attention matmuls (`Q·Kᵀ`, `S·V`):
-//!   both operands are `b`-bit quantized activations; integer products,
+//! * fixed16 — unquantized layers (patch embed, head): operands converted
+//!   to Q6.10 fixed point, 32-bit accumulation on the DSP path — including
+//!   the fixed-point rounding a real board would exhibit.
+//! * binary-weight FC — activations quantized to `b`-bit integers,
+//!   weights are ±1 signs, the MAC array is pure add/sub (LUT path), one
+//!   scale multiply at the end (`act_scale · w_scale`).
+//! * quantized×quantized — attention matmuls (`Q·Kᵀ`, `S·V`): both
+//!   operands are `b`-bit quantized activations; integer products,
 //!   dequantized with the product of the two scales.
 //!
 //! All paths return exact f32 reconstructions of the integer/fixed-point
 //! results, so the executor's outputs are what the board would produce.
 //!
+//! The engine is split the way the hardware splits its work:
+//!
+//! * [`ComputeEngine::fc_prepared`] executes an FC whose weight operand
+//!   was laid out **once per model** ([`PreparedFc`] — packed sign
+//!   planes, pre-quantized Q6.10, or materialized ±1 signs), quantizing
+//!   the activations into a caller-owned [`FcScratch`]: the steady-state
+//!   per-frame path, free of per-call weight work and heap allocation.
+//! * [`ComputeEngine::attn_matmul`] runs one attention matmul (both
+//!   operands dynamic) through a caller-owned [`AttnScratch`] on a single
+//!   thread — the executor parallelizes attention across *heads* instead
+//!   of rows.
+//! * [`ComputeEngine::fc_fixed16`] / [`ComputeEngine::fc_binary`] /
+//!   [`ComputeEngine::qq_matmul`] are the original self-contained calls,
+//!   kept as thin wrappers that prepare the weight operand on the spot —
+//!   the "pay per call" path benches and property tests compare the
+//!   prepared path against.
+//!
 //! Two interchangeable kernel backends execute the integer math (see
 //! [`Backend`] and `sim::kernels`): the original scalar streaming loops
 //! (the reference oracle) and the bit-packed XNOR/popcount datapath that
 //! models the LUT array the way the hardware actually computes — 64
-//! weights per `u64` word. Both are bit-exact; the packed one is the
-//! default because it is several times faster on every quantized layer.
-//! All three flavours additionally fan out across the frame dimension
+//! weights per `u64` word. All backends are bit-exact; the packed one is
+//! the default because it is several times faster on every quantized
+//! layer. The FC flavours additionally fan out across the frame dimension
 //! (`threads`, default from `VAQF_THREADS`/`available_parallelism`).
 
 use crate::hw::Device;
 use crate::perf::AcceleratorParams;
 use crate::quant::{
-    binarize, fixed_mac, pack_col_planes, to_fixed16, ActQuantizer, BinaryMatrix,
+    binarize, pack_col_planes, to_fixed16_into, ActQuantizer, BinaryMatrix, BitPlanes,
 };
 use crate::util::parallel::{default_threads, for_each_row_chunk, MAX_THREADS};
 
 use super::kernels;
 pub use super::kernels::Backend;
+use super::plan::{AttnScratch, FcScratch, PreparedFc};
 
 /// Functional result of one engine invocation.
 #[derive(Debug, Clone)]
@@ -90,84 +106,181 @@ impl ComputeEngine {
         self
     }
 
-    /// Unquantized FC on the DSP path: `x (f×n) @ w (n×m)`, Q6.10 in,
-    /// 32-bit accumulate, Q6.10 out. Fixed16 has no sub-word planes to
-    /// exploit, so both backends run the same scalar kernel; rows still
-    /// fan out across threads.
-    pub fn fc_fixed16(&self, x: &[f32], w: &[f32], f: usize, n: usize, m: usize) -> MatmulResult {
-        assert_eq!(x.len(), f * n);
-        assert_eq!(w.len(), n * m);
-        let xq: Vec<i16> = x.iter().map(|&v| to_fixed16(v)).collect();
-        let wq: Vec<i16> = w.iter().map(|&v| to_fixed16(v)).collect();
-        let mut out = vec![0.0f32; f * m];
+    /// Execute one FC against a prepared weight operand: quantize the
+    /// activations into `scratch`, then run the matching kernel across
+    /// row chunks into `out` (`f × w.cols()`). Returns the MAC count.
+    /// This is the steady-state per-frame path — no weight-side work, no
+    /// output allocation; results are identical to the corresponding
+    /// self-contained call.
+    pub fn fc_prepared(
+        &self,
+        x: &[f32],
+        w: &PreparedFc,
+        f: usize,
+        scratch: &mut FcScratch,
+        out: &mut [f32],
+    ) -> u64 {
+        let n = w.rows();
+        let m = w.cols();
+        assert_eq!(x.len(), f * n, "input shape mismatch");
+        assert_eq!(out.len(), f * m, "output shape mismatch");
         let work = (f * n * m) as u64;
-        for_each_row_chunk(&mut out, f, m, self.threads, work, |row0, chunk| {
-            let rows = chunk.len() / m;
-            kernels::fixed16_rows(&xq[row0 * n..(row0 + rows) * n], &wq, n, m, chunk);
-        });
-        let _ = fixed_mac; // (kept for the scalar-datapath unit tests)
-        MatmulResult {
-            out,
-            macs: (f * n * m) as u64,
-        }
-    }
-
-    /// Binary-weight FC on the LUT path: activations quantized to
-    /// `act_bits`, weights ±1, integer add/sub accumulation.
-    pub fn fc_binary(&self, x: &[f32], w: &BinaryMatrix, f: usize) -> MatmulResult {
-        let n = w.rows;
-        let m = w.cols;
-        assert_eq!(x.len(), f * n);
-        let bits = self.params.act_bits.expect("quantized engine needs act_bits");
-        let q = ActQuantizer::calibrate(bits, x);
-        let xq = q.quantize(x);
-        let mut out = vec![0.0f32; f * m];
-        let scale = q.scale * w.scale;
-        let work = (f * n * m) as u64;
-        match self.backend {
-            Backend::Scalar => {
-                // Materialize the signs as ±1 i32 once (LUT-array analog:
-                // the sign bits are resident in BRAM), then stream the
-                // contiguous sign row in the inner loop — branch-free
-                // add/sub.
-                let signs: Vec<i32> = w.signs.iter().map(|&s| if s { 1 } else { -1 }).collect();
-                for_each_row_chunk(&mut out, f, m, self.threads, work, |row0, chunk| {
+        match w {
+            PreparedFc::Fixed16 { wq, .. } => {
+                to_fixed16_into(x, &mut scratch.x16);
+                let xq = &scratch.x16;
+                for_each_row_chunk(out, f, m, self.threads, work, |row0, chunk| {
                     let rows = chunk.len() / m;
+                    let mut acc = Vec::new();
+                    let xrows = &xq[row0 * n..(row0 + rows) * n];
+                    kernels::fixed16_rows(xrows, wq, n, m, chunk, &mut acc);
+                });
+            }
+            PreparedFc::BinaryPacked { planes, scale } => {
+                let bits = self.params.act_bits.expect("quantized engine needs act_bits");
+                let q = ActQuantizer::calibrate(bits, x);
+                q.quantize_into(x, &mut scratch.xq);
+                let scale = q.scale * scale;
+                let xq = &scratch.xq;
+                for_each_row_chunk(out, f, m, self.threads, work, |row0, chunk| {
+                    let rows = chunk.len() / m;
+                    // One bit-plane scratch per chunk, reused across the
+                    // chunk's rows (each worker owns its own).
+                    let mut bp = BitPlanes::empty();
+                    kernels::binary_rows_packed(
+                        &xq[row0 * n..(row0 + rows) * n],
+                        planes,
+                        bits as u32,
+                        scale,
+                        chunk,
+                        &mut bp,
+                    );
+                });
+            }
+            PreparedFc::BinaryScalar { signs, scale, .. } => {
+                let bits = self.params.act_bits.expect("quantized engine needs act_bits");
+                let q = ActQuantizer::calibrate(bits, x);
+                q.quantize_into(x, &mut scratch.xq);
+                let scale = q.scale * scale;
+                let xq = &scratch.xq;
+                for_each_row_chunk(out, f, m, self.threads, work, |row0, chunk| {
+                    let rows = chunk.len() / m;
+                    let mut acc = Vec::new();
                     kernels::binary_rows_scalar(
-                        &xq.q[row0 * n..(row0 + rows) * n],
-                        &signs,
+                        &xq[row0 * n..(row0 + rows) * n],
+                        signs,
                         n,
                         m,
                         scale,
                         chunk,
-                    );
-                });
-            }
-            Backend::Packed => {
-                // Pack the sign matrix once per call (64 weights / word);
-                // the cost is one bit-sweep of W vs f bit-sweeps of
-                // compute, ≤ 1/f of the matmul.
-                let planes = w.packed_signs();
-                for_each_row_chunk(&mut out, f, m, self.threads, work, |row0, chunk| {
-                    let rows = chunk.len() / m;
-                    kernels::binary_rows_packed(
-                        &xq.q[row0 * n..(row0 + rows) * n],
-                        &planes,
-                        bits as u32,
-                        scale,
-                        chunk,
+                        &mut acc,
                     );
                 });
             }
         }
-        MatmulResult {
-            out,
-            macs: (f * n * m) as u64,
+        work
+    }
+
+    /// One attention matmul (`a (f×k) @ b (k×m)` — both operands dynamic
+    /// activations) through caller-owned scratch, single-threaded: the
+    /// executor fans attention out across heads, each head owning one
+    /// scratch, so row fan-out here would only oversubscribe. Quantized
+    /// engines run the `b`-bit qq datapath; unquantized ones the fixed16
+    /// DSP path. Returns the MAC count.
+    pub fn attn_matmul(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        f: usize,
+        k: usize,
+        m: usize,
+        scratch: &mut AttnScratch,
+        out: &mut [f32],
+    ) -> u64 {
+        assert_eq!(a.len(), f * k, "lhs shape mismatch");
+        assert_eq!(b.len(), k * m, "rhs shape mismatch");
+        assert_eq!(out.len(), f * m, "output shape mismatch");
+        match self.params.act_bits {
+            Some(bits) => {
+                let qa = ActQuantizer::calibrate(bits, a);
+                let qb = ActQuantizer::calibrate(bits, b);
+                qa.quantize_into(a, &mut scratch.aq);
+                qb.quantize_into(b, &mut scratch.bq);
+                let scale = qa.scale * qb.scale;
+                self.qq_rows(&mut scratch.dispatch(), k, m, scale, out);
+            }
+            None => {
+                to_fixed16_into(a, &mut scratch.a16);
+                to_fixed16_into(b, &mut scratch.b16);
+                kernels::fixed16_rows(&scratch.a16, &scratch.b16, k, m, out, &mut scratch.acc64);
+            }
+        }
+        (f * k * m) as u64
+    }
+
+    /// The single source of truth for the qq crossover: which kernel the
+    /// backend runs at this precision and reduction depth. Packed
+    /// backend: plane-pair popcounts below the `bits²` crossover, the
+    /// vectorizable compact-accumulator loop above it (when exact —
+    /// `qq_compact_ok`), the i64 oracle loop otherwise. Results are
+    /// identical on every path.
+    fn qq_kernel(&self, bits: u32, k: usize) -> QqKernel {
+        if self.backend == Backend::Packed && kernels::qq_packed_profitable(bits) {
+            QqKernel::Packed
+        } else if self.backend == Backend::Packed && kernels::qq_compact_ok(bits, k) {
+            QqKernel::Compact
+        } else {
+            QqKernel::Scalar
         }
     }
 
+    /// One block of qq output rows through caller-owned scratch — shared
+    /// by [`ComputeEngine::attn_matmul`]; the self-contained
+    /// [`ComputeEngine::qq_matmul`] uses the same [`QqKernel`] selection
+    /// with per-chunk scratch.
+    fn qq_rows(&self, s: &mut QqDispatch<'_>, k: usize, m: usize, scale: f32, out: &mut [f32]) {
+        let bits = u32::from(self.params.act_bits.expect("quantized engine needs act_bits"));
+        match self.qq_kernel(bits, k) {
+            QqKernel::Packed => {
+                crate::quant::pack_col_planes_into(s.bq, k, m, bits, s.cp);
+                kernels::qq_rows_packed(s.aq, s.cp, bits, scale, out, s.bp);
+            }
+            QqKernel::Compact => kernels::qq_rows_compact(s.aq, s.bq, k, m, scale, out, s.acc32),
+            QqKernel::Scalar => kernels::qq_rows_scalar(s.aq, s.bq, k, m, scale, out, s.acc64),
+        }
+    }
+
+    /// Unquantized FC on the DSP path: `x (f×n) @ w (n×m)`, Q6.10 in,
+    /// 32-bit accumulate, Q6.10 out — the self-contained form: the weight
+    /// matrix is re-quantized on every call. Steady-state callers prepare
+    /// the weights once ([`PreparedFc::fixed16`]) and use
+    /// [`ComputeEngine::fc_prepared`] instead.
+    pub fn fc_fixed16(&self, x: &[f32], w: &[f32], f: usize, n: usize, m: usize) -> MatmulResult {
+        assert_eq!(w.len(), n * m);
+        let prepared = PreparedFc::fixed16(w, n, m);
+        let mut scratch = FcScratch::default();
+        let mut out = vec![0.0f32; f * m];
+        let macs = self.fc_prepared(x, &prepared, f, &mut scratch, &mut out);
+        MatmulResult { out, macs }
+    }
+
+    /// Binary-weight FC on the LUT path: activations quantized to
+    /// `act_bits`, weights ±1, integer add/sub accumulation — the
+    /// self-contained form: the sign matrix is re-laid-out (packed
+    /// column-major, or ±1-materialized for the scalar oracle) on every
+    /// call. Steady-state callers prepare it once ([`PreparedFc::binary`])
+    /// and use [`ComputeEngine::fc_prepared`] instead.
+    pub fn fc_binary(&self, x: &[f32], w: &BinaryMatrix, f: usize) -> MatmulResult {
+        let prepared = PreparedFc::binary(w, self.backend);
+        let mut scratch = FcScratch::default();
+        let mut out = vec![0.0f32; f * w.cols];
+        let macs = self.fc_prepared(x, &prepared, f, &mut scratch, &mut out);
+        MatmulResult { out, macs }
+    }
+
     /// Quantized×quantized matmul (attention): `a (f×k) @ b (k×m)`, both
-    /// operands quantized to `act_bits` with their own dynamic scales.
+    /// operands quantized to `act_bits` with their own dynamic scales —
+    /// the self-contained form with row fan-out across threads.
     pub fn qq_matmul(&self, a: &[f32], b: &[f32], f: usize, k: usize, m: usize) -> MatmulResult {
         assert_eq!(a.len(), f * k);
         assert_eq!(b.len(), k * m);
@@ -179,35 +292,55 @@ impl ComputeEngine {
         let scale = qa.scale * qb.scale;
         let mut out = vec![0.0f32; f * m];
         let work = (f * k * m) as u64;
-        if self.backend == Backend::Packed && kernels::qq_packed_profitable(bits as u32) {
-            let planes = pack_col_planes(&bq.q, k, m, bits as u32);
-            for_each_row_chunk(&mut out, f, m, self.threads, work, |row0, chunk| {
-                let rows = chunk.len() / m;
-                kernels::qq_rows_packed(
-                    &aq.q[row0 * k..(row0 + rows) * k],
-                    &planes,
-                    bits as u32,
-                    scale,
-                    chunk,
-                );
-            });
-        } else {
-            for_each_row_chunk(&mut out, f, m, self.threads, work, |row0, chunk| {
-                let rows = chunk.len() / m;
-                kernels::qq_rows_scalar(
-                    &aq.q[row0 * k..(row0 + rows) * k],
-                    &bq.q,
-                    k,
-                    m,
-                    scale,
-                    chunk,
-                );
-            });
+        let bits = bits as u32;
+        match self.qq_kernel(bits, k) {
+            QqKernel::Packed => {
+                let planes = pack_col_planes(&bq.q, k, m, bits);
+                for_each_row_chunk(&mut out, f, m, self.threads, work, |row0, chunk| {
+                    let rows = chunk.len() / m;
+                    let mut bp = BitPlanes::empty();
+                    kernels::qq_rows_packed(
+                        &aq.q[row0 * k..(row0 + rows) * k],
+                        &planes,
+                        bits,
+                        scale,
+                        chunk,
+                        &mut bp,
+                    );
+                });
+            }
+            QqKernel::Compact => {
+                for_each_row_chunk(&mut out, f, m, self.threads, work, |row0, chunk| {
+                    let rows = chunk.len() / m;
+                    let mut acc = Vec::new();
+                    kernels::qq_rows_compact(
+                        &aq.q[row0 * k..(row0 + rows) * k],
+                        &bq.q,
+                        k,
+                        m,
+                        scale,
+                        chunk,
+                        &mut acc,
+                    );
+                });
+            }
+            QqKernel::Scalar => {
+                for_each_row_chunk(&mut out, f, m, self.threads, work, |row0, chunk| {
+                    let rows = chunk.len() / m;
+                    let mut acc = Vec::new();
+                    kernels::qq_rows_scalar(
+                        &aq.q[row0 * k..(row0 + rows) * k],
+                        &bq.q,
+                        k,
+                        m,
+                        scale,
+                        chunk,
+                        &mut acc,
+                    );
+                });
+            }
         }
-        MatmulResult {
-            out,
-            macs: (f * k * m) as u64,
-        }
+        MatmulResult { out, macs: work }
     }
 
     /// Reference double-precision matmul (for engine self-tests).
@@ -223,6 +356,39 @@ impl ComputeEngine {
             }
         }
         out
+    }
+}
+
+/// Which qq datapath [`ComputeEngine::qq_kernel`] selected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum QqKernel {
+    Packed,
+    Compact,
+    Scalar,
+}
+
+/// Split borrows of an [`AttnScratch`] for the qq kernel dispatch (the
+/// quantized operands are read while the pack/accumulator scratches are
+/// written).
+struct QqDispatch<'a> {
+    aq: &'a [i32],
+    bq: &'a [i32],
+    acc64: &'a mut Vec<i64>,
+    acc32: &'a mut Vec<i32>,
+    bp: &'a mut BitPlanes,
+    cp: &'a mut crate::quant::ColPlanes,
+}
+
+impl AttnScratch {
+    fn dispatch(&mut self) -> QqDispatch<'_> {
+        QqDispatch {
+            aq: &self.aq,
+            bq: &self.bq,
+            acc64: &mut self.acc64,
+            acc32: &mut self.acc32,
+            bp: &mut self.bp,
+            cp: &mut self.cp,
+        }
     }
 }
 

@@ -6,20 +6,36 @@
 //! semantics are mirrored line-for-line by `python/compile/model.py`, so
 //! logits from this executor can be compared against the AOT-compiled JAX
 //! model run through the PJRT runtime.
+//!
+//! Execution is split the way the hardware splits it (see `sim::plan`):
+//! the executor builds the per-model [`ExecPlan`] (packed /
+//! pre-quantized weights, per-layer cycle accounting) once — lazily,
+//! before the first frame, keyed on the engine's backend + parameters —
+//! plus a reusable [`Workspace`]; [`ModelExecutor::run_frame`] is the steady-state
+//! per-frame loop — no weight-side work, no buffer allocation, attention
+//! fanned out across heads. [`ModelExecutor::run_batch`] additionally
+//! fans *frames* across workers (each with its own workspace), the shape
+//! the multi-stream coordinator and the benches drive. Every variant is
+//! bit-identical to the original single-call path.
+
+use std::sync::Arc;
 
 use crate::hw::Device;
 use crate::model::{VitConfig, VitStructure};
-use crate::perf::{layer_cycles, AcceleratorParams};
+use crate::perf::AcceleratorParams;
+use crate::util::parallel::for_each_task;
 use crate::Cycles;
 
 use super::engine::{Backend, ComputeEngine};
-use super::timing::{layer_timing, LayerTiming};
+use super::plan::{ExecPlan, HeadScratch, Workspace};
+use super::timing::LayerTiming;
 use super::weights::VitWeights;
 
-/// Per-layer execution record.
+/// Per-layer execution record. The name is a refcounted view of the
+/// plan's cached label, so recording a trace allocates no strings.
 #[derive(Debug, Clone)]
 pub struct LayerTrace {
-    pub name: String,
+    pub name: Arc<str>,
     pub engine_cycles: Cycles,
     pub host_cycles: Cycles,
     pub macs: u64,
@@ -42,13 +58,29 @@ impl ExecTrace {
 }
 
 /// Executes frames on a simulated accelerator instance.
+///
+/// The per-model compilation step (weight layout + cycle accounting,
+/// cached in the [`ExecPlan`]) runs once, lazily, before the first
+/// frame; `run_frame`/`run_batch` are the steady-state streaming loop
+/// over the owned [`Workspace`].
 pub struct ModelExecutor {
-    pub config: VitConfig,
-    pub structure: VitStructure,
-    pub weights: VitWeights,
+    // Model/device state is private: the prepared plan caches weight
+    // layouts and timings derived from it, so field mutation after a
+    // frame has run would silently mix stale and live state. Read access
+    // goes through the accessors below; `engine` stays public because
+    // `ensure_plan` re-keys the plan on its backend + parameters.
+    config: VitConfig,
+    structure: VitStructure,
+    weights: VitWeights,
     pub engine: ComputeEngine,
-    pub device: Device,
-    quantized: bool,
+    device: Device,
+    /// Prepared lazily for the engine's current backend on first use, so
+    /// `new(..).with_backend(..)` lays the weights out exactly once.
+    plan: Option<ExecPlan>,
+    ws: Workspace,
+    /// Extra workspaces for `run_batch`'s frame-parallel workers (grown
+    /// lazily on first use, then reused).
+    batch_ws: Vec<Workspace>,
 }
 
 impl ModelExecutor {
@@ -63,19 +95,47 @@ impl ModelExecutor {
             "accelerator was generated for a different precision"
         );
         let config = weights.config.clone();
+        let structure = config.structure(act_bits);
+        let engine = ComputeEngine::new(params, device.clone());
+        let ws = Workspace::for_config(&config);
         ModelExecutor {
-            structure: config.structure(act_bits),
-            engine: ComputeEngine::new(params, device.clone()),
+            structure,
+            engine,
             device,
+            plan: None,
+            ws,
+            batch_ws: Vec::new(),
             config,
             weights,
-            quantized: act_bits.is_some(),
+        }
+    }
+
+    /// Build the prepared plan for the engine's current configuration if
+    /// it is missing or was laid out for a different backend or
+    /// accelerator parameterization — `engine` is a public field, so
+    /// direct mutation of either must stale the cache, not just the
+    /// builder methods.
+    fn ensure_plan(&mut self) {
+        let backend = self.engine.backend;
+        let stale = match &self.plan {
+            Some(p) => p.backend != backend || p.params != self.engine.params,
+            None => true,
+        };
+        if stale {
+            self.plan = Some(ExecPlan::build(
+                &self.weights,
+                &self.structure,
+                &self.engine.params,
+                &self.device,
+                backend,
+            ));
         }
     }
 
     /// Builder-style override of the engine's kernel backend (scalar
     /// reference vs bit-packed popcount — results are identical, see
-    /// `sim::kernels`).
+    /// `sim::kernels`). The prepared weights are (re)laid out for the new
+    /// backend's datapath lazily, on the next frame.
     pub fn with_backend(mut self, backend: Backend) -> ModelExecutor {
         self.engine.backend = backend;
         self
@@ -88,165 +148,398 @@ impl ModelExecutor {
         self
     }
 
+    /// The prepared per-model execution plan (built on first access).
+    pub fn plan(&mut self) -> &ExecPlan {
+        self.ensure_plan();
+        self.plan.as_ref().expect("plan just ensured")
+    }
+
+    pub fn config(&self) -> &VitConfig {
+        &self.config
+    }
+
+    pub fn structure(&self) -> &VitStructure {
+        &self.structure
+    }
+
+    pub fn weights(&self) -> &VitWeights {
+        &self.weights
+    }
+
+    pub fn device(&self) -> &Device {
+        &self.device
+    }
+
     /// Run one frame (`patches`: row-major `N_p × (3·P²)`); returns logits
-    /// (`num_classes`) and the cycle trace.
-    pub fn run_frame(&self, patches: &[f32]) -> (Vec<f32>, ExecTrace) {
-        let cfg = &self.config;
-        let m = cfg.embed_dim;
-        let f = cfg.tokens();
-        let np = cfg.num_patches();
-        let nh = cfg.num_heads;
-        let mh = cfg.head_dim();
-        let hidden = m * cfg.mlp_ratio;
-        let w = &self.weights;
+    /// (`num_classes`) and the cycle trace. Steady-state: reuses the
+    /// executor's workspace, fans FC rows and attention heads out across
+    /// `engine.threads` workers.
+    pub fn run_frame(&mut self, patches: &[f32]) -> (Vec<f32>, ExecTrace) {
+        self.ensure_plan();
+        let plan = self.plan.as_ref().expect("plan just ensured");
+        let head_threads = self.engine.threads;
+        execute_frame(
+            &self.engine,
+            &self.structure,
+            plan,
+            &self.weights,
+            &self.config,
+            &self.device,
+            &mut self.ws,
+            patches,
+            head_threads,
+        )
+    }
 
-        let mut traces: Vec<LayerTrace> = Vec::new();
-        let mut li = 0usize; // index into structure.layers
-        let mut record = |idx: &mut usize, macs: u64, executor: &ModelExecutor| {
-            let desc = &executor.structure.layers[*idx];
-            debug_assert_eq!(macs, desc.macs(), "MAC mismatch for {}", desc.name);
-            let timing = layer_timing(desc, &executor.engine.params, &executor.device);
-            let host = layer_cycles(desc, &executor.engine.params, &executor.device).host;
-            let t = LayerTrace {
-                name: desc.name.clone(),
-                engine_cycles: timing.total,
-                host_cycles: host,
-                macs,
-                timing,
-            };
-            *idx += 1;
-            t
-        };
-
-        // ---- patch embedding (always fixed16) + CLS/pos (host) ----------
-        let patch_in = cfg.in_chans * cfg.patch_size * cfg.patch_size;
-        let pe = self.engine.fc_fixed16(patches, &w.patch, np, patch_in, m);
-        traces.push(record(&mut li, pe.macs, self));
-        let mut x = vec![0.0f32; f * m];
-        x[..m].copy_from_slice(&w.cls);
-        x[m..].copy_from_slice(&pe.out);
-        for (xi, pi) in x.iter_mut().zip(&w.pos) {
-            *xi += pi;
+    /// Run a batch of frames, amortizing plan + workspace + dispatch:
+    /// frames fan out across up to `engine.threads` workers (one
+    /// workspace each). Full batches run one thread per frame —
+    /// independent frames keep every worker busy with no fork/join
+    /// stalls; batches smaller than the pool hand the leftover threads
+    /// to each worker's intra-frame fan-out instead of idling them.
+    /// Results are bit-identical to calling
+    /// [`ModelExecutor::run_frame`] per frame, in order.
+    pub fn run_batch<P>(&mut self, frames: &[P]) -> Vec<(Vec<f32>, ExecTrace)>
+    where
+        P: AsRef<[f32]> + Sync,
+    {
+        if frames.is_empty() {
+            return Vec::new();
         }
+        self.ensure_plan();
+        let workers = self.engine.threads.min(frames.len()).max(1);
+        if workers == 1 {
+            return frames.iter().map(|p| self.run_frame(p.as_ref())).collect();
+        }
+        while self.batch_ws.len() < workers - 1 {
+            self.batch_ws.push(Workspace::for_config(&self.config));
+        }
+        // Small batches split the pool: each worker keeps its share of
+        // the thread budget for intra-frame fan-out (full batches ⇒ 1).
+        let per_worker = (self.engine.threads / workers).max(1);
+        let engine1 = self.engine.clone().with_threads(per_worker);
+        let chunk = frames.len().div_ceil(workers);
+        let mut results: Vec<Option<(Vec<f32>, ExecTrace)>> =
+            (0..frames.len()).map(|_| None).collect();
+        let structure = &self.structure;
+        let plan = self.plan.as_ref().expect("plan just ensured");
+        let weights = &self.weights;
+        let config = &self.config;
+        let device = &self.device;
+        // One job per worker: (result slots, frames, workspace) — fanned
+        // out by the shared task driver. Frame work always dwarfs spawn
+        // cost, so the cutoff is disabled with a saturating estimate.
+        let ws_iter = std::iter::once(&mut self.ws).chain(self.batch_ws.iter_mut());
+        let mut jobs: Vec<(&mut [Option<(Vec<f32>, ExecTrace)>], &[P], &mut Workspace)> = results
+            .chunks_mut(chunk)
+            .zip(frames.chunks(chunk))
+            .zip(ws_iter)
+            .map(|((slots, fr), ws)| (slots, fr, ws))
+            .collect();
+        let eng = &engine1;
+        for_each_task(&mut jobs, workers, u64::MAX, |_, (slots, fr, ws)| {
+            for (slot, p) in slots.iter_mut().zip(fr.iter()) {
+                *slot = Some(execute_frame(
+                    eng,
+                    structure,
+                    plan,
+                    weights,
+                    config,
+                    device,
+                    ws,
+                    p.as_ref(),
+                    per_worker,
+                ));
+            }
+        });
+        results
+            .into_iter()
+            .map(|r| r.expect("all frames executed"))
+            .collect()
+    }
+}
 
-        // ---- encoder layers ----------------------------------------------
-        for lw in &w.layers {
-            // LN1 (host) → QKV.
-            let h = layer_norm(&x, f, m);
-            let qkv = if self.quantized {
-                self.engine.fc_binary(&h, &lw.qkv_bin, f)
-            } else {
-                self.engine.fc_fixed16(&h, &lw.qkv, f, m, 3 * m)
-            };
-            traces.push(record(&mut li, qkv.macs, self));
+/// One frame through the prepared plan, using `ws` as the buffer arena.
+/// `head_threads` caps the attention fan-out (inside batch workers it is
+/// the worker's share of the thread pool — 1 for full batches).
+/// Pure in everything but `ws`'s scratch contents — identical results for
+/// every thread count and every workspace history.
+#[allow(clippy::too_many_arguments)]
+fn execute_frame(
+    engine: &ComputeEngine,
+    structure: &VitStructure,
+    plan: &ExecPlan,
+    weights: &VitWeights,
+    cfg: &VitConfig,
+    device: &Device,
+    ws: &mut Workspace,
+    patches: &[f32],
+    head_threads: usize,
+) -> (Vec<f32>, ExecTrace) {
+    let m = cfg.embed_dim;
+    let f = cfg.tokens();
+    let np = cfg.num_patches();
+    let nh = cfg.num_heads;
+    let mh = cfg.head_dim();
+    let Workspace {
+        x,
+        h,
+        pe,
+        qkv,
+        attn_heads,
+        attn_concat,
+        proj_out,
+        mlp1_out,
+        gelu: gelu_buf,
+        mlp2_out,
+        cls,
+        fc,
+        heads,
+    } = ws;
 
-            // Split heads: q/k/v live at column blocks [0,M), [M,2M), [2M,3M).
-            let scale = 1.0 / (mh as f32).sqrt();
-            let mut attn_concat = vec![0.0f32; f * m];
-            let mut qk_macs = 0u64;
-            let mut sv_macs = 0u64;
-            for hd in 0..nh {
+    let mut traces: Vec<LayerTrace> = Vec::with_capacity(structure.layers.len());
+    let mut li = 0usize;
+    let record = |li: &mut usize, macs: u64, traces: &mut Vec<LayerTrace>| {
+        debug_assert_eq!(
+            macs,
+            structure.layers[*li].macs(),
+            "MAC mismatch for {}",
+            structure.layers[*li].name
+        );
+        let acct = &plan.timings[*li];
+        traces.push(LayerTrace {
+            name: Arc::clone(&acct.name),
+            engine_cycles: acct.timing.total,
+            host_cycles: acct.host,
+            macs,
+            timing: acct.timing,
+        });
+        *li += 1;
+    };
+
+    // ---- patch embedding (always fixed16) + CLS/pos (host) ----------
+    let macs = engine.fc_prepared(patches, &plan.patch, np, fc, pe);
+    record(&mut li, macs, &mut traces);
+    x[..m].copy_from_slice(&weights.cls);
+    x[m..].copy_from_slice(pe);
+    for (xi, pi) in x.iter_mut().zip(&weights.pos) {
+        *xi += pi;
+    }
+
+    // ---- encoder layers ----------------------------------------------
+    let attn_scale = 1.0 / (mh as f32).sqrt();
+    let qk_macs_per_head = (f * mh * f) as u64;
+    let sv_macs_per_head = (f * f * mh) as u64;
+    for lw in &plan.layers {
+        // LN1 (host) → QKV.
+        layer_norm_into(x, f, m, h);
+        let macs = engine.fc_prepared(h, &lw.qkv, f, fc, qkv);
+        record(&mut li, macs, &mut traces);
+
+        // Attention, one independent task per head: head `hd` reads the
+        // q/k/v column blocks [0,M), [M,2M), [2M,3M) of the shared QKV
+        // output and writes its own F × M_h slice of `attn_heads` through
+        // its own scratch — embarrassingly parallel, bit-identical to the
+        // serial head loop.
+        {
+            let qkv_ro: &[f32] = qkv;
+            let mut tasks: Vec<(&mut HeadScratch, &mut [f32])> = heads
+                .iter_mut()
+                .zip(attn_heads.chunks_mut(f * mh))
+                .collect();
+            let head_work = qk_macs_per_head + sv_macs_per_head;
+            for_each_task(&mut tasks, head_threads, head_work, |hd, (hs, out)| {
                 let qcol = hd * mh;
                 let kcol = m + hd * mh;
                 let vcol = 2 * m + hd * mh;
-                let slice = |col: usize| -> Vec<f32> {
-                    let mut out = vec![0.0f32; f * mh];
-                    for i in 0..f {
-                        out[i * mh..(i + 1) * mh]
-                            .copy_from_slice(&qkv.out[i * 3 * m + col..i * 3 * m + col + mh]);
-                    }
-                    out
-                };
-                let q = slice(qcol);
-                let k = slice(kcol);
-                let v = slice(vcol);
+                for i in 0..f {
+                    let row = &qkv_ro[i * 3 * m..(i + 1) * 3 * m];
+                    hs.q[i * mh..(i + 1) * mh].copy_from_slice(&row[qcol..qcol + mh]);
+                    hs.k[i * mh..(i + 1) * mh].copy_from_slice(&row[kcol..kcol + mh]);
+                    hs.v[i * mh..(i + 1) * mh].copy_from_slice(&row[vcol..vcol + mh]);
+                }
                 // Kᵀ: mh × f.
-                let mut kt = vec![0.0f32; mh * f];
                 for i in 0..f {
                     for j in 0..mh {
-                        kt[j * f + i] = k[i * mh + j];
+                        hs.kt[j * f + i] = hs.k[i * mh + j];
                     }
                 }
                 // Q·Kᵀ on the engine, then host scaling + softmax.
-                let s_raw = if self.quantized {
-                    self.engine.qq_matmul(&q, &kt, f, mh, f)
-                } else {
-                    self.engine.fc_fixed16(&q, &kt, f, mh, f)
-                };
-                qk_macs += s_raw.macs;
-                let mut s = s_raw.out;
-                for v in s.iter_mut() {
-                    *v *= scale;
+                engine.attn_matmul(&hs.q, &hs.kt, f, mh, f, &mut hs.attn, &mut hs.s);
+                for v in hs.s.iter_mut() {
+                    *v *= attn_scale;
                 }
-                softmax_rows(&mut s, f, f);
-                // S·V on the engine.
-                let o = if self.quantized {
-                    self.engine.qq_matmul(&s, &v, f, f, mh)
-                } else {
-                    self.engine.fc_fixed16(&s, &v, f, f, mh)
-                };
-                sv_macs += o.macs;
-                for i in 0..f {
-                    attn_concat[i * m + hd * mh..i * m + (hd + 1) * mh]
-                        .copy_from_slice(&o.out[i * mh..(i + 1) * mh]);
-                }
-            }
-            traces.push(record(&mut li, qk_macs, self));
-            traces.push(record(&mut li, sv_macs, self));
-
-            // Projection + skip.
-            let proj = if self.quantized {
-                self.engine.fc_binary(&attn_concat, &lw.proj_bin, f)
-            } else {
-                self.engine.fc_fixed16(&attn_concat, &lw.proj, f, m, m)
-            };
-            traces.push(record(&mut li, proj.macs, self));
-            for (xi, pi) in x.iter_mut().zip(&proj.out) {
-                *xi += pi;
-            }
-
-            // LN2 → MLP → skip.
-            let h2 = layer_norm(&x, f, m);
-            let m1 = if self.quantized {
-                self.engine.fc_binary(&h2, &lw.mlp1_bin, f)
-            } else {
-                self.engine.fc_fixed16(&h2, &lw.mlp1, f, m, hidden)
-            };
-            traces.push(record(&mut li, m1.macs, self));
-            let g: Vec<f32> = m1.out.iter().map(|&v| gelu(v)).collect();
-            let m2 = if self.quantized {
-                self.engine.fc_binary(&g, &lw.mlp2_bin, f)
-            } else {
-                self.engine.fc_fixed16(&g, &lw.mlp2, f, hidden, m)
-            };
-            traces.push(record(&mut li, m2.macs, self));
-            for (xi, mi) in x.iter_mut().zip(&m2.out) {
-                *xi += mi;
+                softmax_rows(&mut hs.s, f, f);
+                // S·V on the engine, straight into this head's slice.
+                engine.attn_matmul(&hs.s, &hs.v, f, f, mh, &mut hs.attn, out);
+            });
+        }
+        // Reorder head-major → row-major F × M.
+        for hd in 0..nh {
+            let head_out = &attn_heads[hd * f * mh..(hd + 1) * f * mh];
+            for i in 0..f {
+                attn_concat[i * m + hd * mh..i * m + (hd + 1) * mh]
+                    .copy_from_slice(&head_out[i * mh..(i + 1) * mh]);
             }
         }
+        record(&mut li, qk_macs_per_head * nh as u64, &mut traces);
+        record(&mut li, sv_macs_per_head * nh as u64, &mut traces);
 
-        // ---- head: LN(x[0]) @ W_out (always fixed16) ----------------------
-        let cls_repr = layer_norm(&x[..m], 1, m);
-        let logits = self
-            .engine
-            .fc_fixed16(&cls_repr, &w.head, 1, m, cfg.num_classes);
-        traces.push(record(&mut li, logits.macs, self));
-        assert_eq!(li, self.structure.layers.len(), "layer walk drifted");
+        // Projection + skip.
+        let macs = engine.fc_prepared(attn_concat, &lw.proj, f, fc, proj_out);
+        record(&mut li, macs, &mut traces);
+        for (xi, pi) in x.iter_mut().zip(proj_out.iter()) {
+            *xi += pi;
+        }
 
-        let total: Cycles = traces.iter().map(|t| t.engine_cycles + t.host_cycles).sum();
-        let trace = ExecTrace {
-            latency_s: self.device.cycles_to_seconds(total),
-            total_cycles: total,
-            layers: traces,
-        };
-        (logits.out, trace)
+        // LN2 → MLP → skip.
+        layer_norm_into(x, f, m, h);
+        let macs = engine.fc_prepared(h, &lw.mlp1, f, fc, mlp1_out);
+        record(&mut li, macs, &mut traces);
+        for (g, &v) in gelu_buf.iter_mut().zip(mlp1_out.iter()) {
+            *g = gelu(v);
+        }
+        let macs = engine.fc_prepared(gelu_buf, &lw.mlp2, f, fc, mlp2_out);
+        record(&mut li, macs, &mut traces);
+        for (xi, mi) in x.iter_mut().zip(mlp2_out.iter()) {
+            *xi += mi;
+        }
     }
+
+    // ---- head: LN(x[0]) @ W_out (always fixed16) ----------------------
+    layer_norm_into(&x[..m], 1, m, cls);
+    let mut logits = vec![0.0f32; cfg.num_classes];
+    let macs = engine.fc_prepared(cls, &plan.head, 1, fc, &mut logits);
+    record(&mut li, macs, &mut traces);
+    assert_eq!(li, structure.layers.len(), "layer walk drifted");
+
+    let total: Cycles = traces.iter().map(|t| t.engine_cycles + t.host_cycles).sum();
+    let trace = ExecTrace {
+        latency_s: device.cycles_to_seconds(total),
+        total_cycles: total,
+        layers: traces,
+    };
+    (logits, trace)
+}
+
+/// The pre-plan forward pass, kept verbatim as a reference oracle: the
+/// self-contained engine calls ([`ComputeEngine::fc_fixed16`] /
+/// [`ComputeEngine::fc_binary`] / [`ComputeEngine::qq_matmul`]) that
+/// re-lay the weights out on every call, fresh `Vec`s for every buffer,
+/// serial attention heads. The prepared executor must reproduce this
+/// bit-for-bit (property-swept in `rust/tests/property_suite.rs`), and
+/// `benches/runtime_hotpath.rs` times it as the before-side of the
+/// prepared-model comparison. Whether the binary-FC path runs depends on
+/// `engine.params.act_bits`, exactly like the executor.
+pub fn reference_forward(engine: &ComputeEngine, w: &VitWeights, patches: &[f32]) -> Vec<f32> {
+    let cfg = &w.config;
+    let quantized = engine.params.act_bits.is_some();
+    let m = cfg.embed_dim;
+    let f = cfg.tokens();
+    let np = cfg.num_patches();
+    let nh = cfg.num_heads;
+    let mh = cfg.head_dim();
+    let hidden = m * cfg.mlp_ratio;
+    let patch_in = cfg.in_chans * cfg.patch_size * cfg.patch_size;
+
+    let pe = engine.fc_fixed16(patches, &w.patch, np, patch_in, m);
+    let mut x = vec![0.0f32; f * m];
+    x[..m].copy_from_slice(&w.cls);
+    x[m..].copy_from_slice(&pe.out);
+    for (xi, pi) in x.iter_mut().zip(&w.pos) {
+        *xi += pi;
+    }
+
+    for lw in &w.layers {
+        let h = layer_norm(&x, f, m);
+        let qkv = if quantized {
+            engine.fc_binary(&h, &lw.qkv_bin, f)
+        } else {
+            engine.fc_fixed16(&h, &lw.qkv, f, m, 3 * m)
+        };
+        let scale = 1.0 / (mh as f32).sqrt();
+        let mut attn_concat = vec![0.0f32; f * m];
+        for hd in 0..nh {
+            let slice = |col: usize| -> Vec<f32> {
+                let mut out = vec![0.0f32; f * mh];
+                for i in 0..f {
+                    out[i * mh..(i + 1) * mh]
+                        .copy_from_slice(&qkv.out[i * 3 * m + col..i * 3 * m + col + mh]);
+                }
+                out
+            };
+            let q = slice(hd * mh);
+            let k = slice(m + hd * mh);
+            let v = slice(2 * m + hd * mh);
+            let mut kt = vec![0.0f32; mh * f];
+            for i in 0..f {
+                for j in 0..mh {
+                    kt[j * f + i] = k[i * mh + j];
+                }
+            }
+            let s_raw = if quantized {
+                engine.qq_matmul(&q, &kt, f, mh, f)
+            } else {
+                engine.fc_fixed16(&q, &kt, f, mh, f)
+            };
+            let mut s = s_raw.out;
+            for v in s.iter_mut() {
+                *v *= scale;
+            }
+            softmax_rows(&mut s, f, f);
+            let o = if quantized {
+                engine.qq_matmul(&s, &v, f, f, mh)
+            } else {
+                engine.fc_fixed16(&s, &v, f, f, mh)
+            };
+            for i in 0..f {
+                attn_concat[i * m + hd * mh..i * m + (hd + 1) * mh]
+                    .copy_from_slice(&o.out[i * mh..(i + 1) * mh]);
+            }
+        }
+        let proj = if quantized {
+            engine.fc_binary(&attn_concat, &lw.proj_bin, f)
+        } else {
+            engine.fc_fixed16(&attn_concat, &lw.proj, f, m, m)
+        };
+        for (xi, pi) in x.iter_mut().zip(&proj.out) {
+            *xi += pi;
+        }
+        let h2 = layer_norm(&x, f, m);
+        let m1 = if quantized {
+            engine.fc_binary(&h2, &lw.mlp1_bin, f)
+        } else {
+            engine.fc_fixed16(&h2, &lw.mlp1, f, m, hidden)
+        };
+        let g: Vec<f32> = m1.out.iter().map(|&v| gelu(v)).collect();
+        let m2 = if quantized {
+            engine.fc_binary(&g, &lw.mlp2_bin, f)
+        } else {
+            engine.fc_fixed16(&g, &lw.mlp2, f, hidden, m)
+        };
+        for (xi, mi) in x.iter_mut().zip(&m2.out) {
+            *xi += mi;
+        }
+    }
+
+    let cls_repr = layer_norm(&x[..m], 1, m);
+    engine
+        .fc_fixed16(&cls_repr, &w.head, 1, m, cfg.num_classes)
+        .out
 }
 
 /// Non-affine LayerNorm over the last dimension, eps = 1e-6 (matches
 /// `model.py::layer_norm`).
 pub fn layer_norm(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; rows * cols];
+    layer_norm_into(x, rows, cols, &mut out);
+    out
+}
+
+/// [`layer_norm`] into a caller-owned buffer (the workspace path).
+pub fn layer_norm_into(x: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+    assert_eq!(x.len(), rows * cols);
+    assert_eq!(out.len(), rows * cols);
     for r in 0..rows {
         let row = &x[r * cols..(r + 1) * cols];
         let mean = row.iter().sum::<f32>() / cols as f32;
@@ -256,7 +549,6 @@ pub fn layer_norm(x: &[f32], rows: usize, cols: usize) -> Vec<f32> {
             out[r * cols + c] = (row[c] - mean) * inv;
         }
     }
-    out
 }
 
 /// Row-wise softmax (host op).

@@ -2,11 +2,20 @@
 //! and the bit-packed XNOR/popcount datapaths (§5.1 + §5.3.1).
 //!
 //! Each kernel computes a contiguous block of output rows — the unit the
-//! row-parallel driver (`util::parallel`) fans out across threads. Both
-//! backends accumulate in `i64` and convert once at the end, and integer
-//! addition is associative, so **scalar and packed results are
-//! bit-identical** — the scalar path stays as the reference oracle
-//! (`rust/tests/property_suite.rs` sweeps the equivalence).
+//! row-parallel driver (`util::parallel`) fans out across threads. Every
+//! kernel takes its scratch (the per-row accumulator or bit-plane
+//! decomposition) as a caller-owned buffer: the executor's
+//! [`super::Workspace`] owns one scratch per attention head (zero heap
+//! traffic in steady state), and the row-parallel chunk bodies own one
+//! small scratch per chunk — amortized over every row in the chunk
+//! instead of reallocated per row, as the pre-plan code did, so nothing
+//! in the loop allocates proportionally to rows or elements.
+//!
+//! All integer paths accumulate exactly and convert to f32 once at the
+//! end, and integer addition is associative, so **scalar, packed and
+//! compact results are bit-identical** — the scalar path stays as the
+//! reference oracle (`rust/tests/property_suite.rs` sweeps the
+//! equivalence).
 //!
 //! The packed binary-FC kernel is the software analog of the LUT array:
 //! weight signs live as column-major 64-lane bitmaps (`SignPlanes`), the
@@ -22,8 +31,8 @@
 use std::fmt;
 
 use crate::quant::{
-    acc_to_fixed16, from_fixed16, pack_bit_planes, plane_coeff, popcount_and_dot, xnor_sign_dot,
-    ColPlanes, SignPlanes,
+    acc_to_fixed16, from_fixed16, pack_bit_planes_into, plane_coeff, popcount_and_dot,
+    xnor_sign_dot, BitPlanes, ColPlanes, SignPlanes,
 };
 
 /// Which compute datapath implementation the engine runs.
@@ -75,15 +84,31 @@ impl fmt::Display for Backend {
     }
 }
 
+/// Reset `acc` to `len` zeroed entries without shrinking its capacity —
+/// the per-call warm-up of a reusable accumulator row.
+#[inline]
+fn reset_acc<T: Copy + Default>(acc: &mut Vec<T>, len: usize) {
+    acc.clear();
+    acc.resize(len, T::default());
+}
+
 /// Fixed-point DSP path: `xq` holds `rows × n` Q6.10 inputs, `wq` the full
-/// `n × m` weight matrix; writes `rows × m` into `out`.
+/// `n × m` weight matrix; writes `rows × m` into `out`. `acc_row` is the
+/// caller's reusable `m`-wide accumulator.
 // Hot path (§Perf): i-p-j loop order with a per-row i64 accumulator keeps
 // the inner loop streaming over the contiguous weight row — ~3.5× over the
 // naive i-j-p order (see EXPERIMENTS.md §Perf).
-pub(crate) fn fixed16_rows(xq: &[i16], wq: &[i16], n: usize, m: usize, out: &mut [f32]) {
+pub(crate) fn fixed16_rows(
+    xq: &[i16],
+    wq: &[i16],
+    n: usize,
+    m: usize,
+    out: &mut [f32],
+    acc_row: &mut Vec<i64>,
+) {
     let rows = out.len() / m;
     debug_assert_eq!(xq.len(), rows * n);
-    let mut acc_row = vec![0i64; m];
+    reset_acc(acc_row, m);
     for i in 0..rows {
         acc_row.fill(0);
         let xrow = &xq[i * n..(i + 1) * n];
@@ -97,7 +122,7 @@ pub(crate) fn fixed16_rows(xq: &[i16], wq: &[i16], n: usize, m: usize, out: &mut
                 *acc += xv * wv as i64;
             }
         }
-        for (o, &acc) in out[i * m..(i + 1) * m].iter_mut().zip(&acc_row) {
+        for (o, &acc) in out[i * m..(i + 1) * m].iter_mut().zip(acc_row.iter()) {
             *o = from_fixed16(acc_to_fixed16(acc));
         }
     }
@@ -105,18 +130,21 @@ pub(crate) fn fixed16_rows(xq: &[i16], wq: &[i16], n: usize, m: usize, out: &mut
 
 /// Binary-weight FC, scalar reference: `signs` is the row-major ±1
 /// materialization of the weight matrix (LUT-array analog: sign bits
-/// resident in BRAM), streamed contiguously in the inner loop.
+/// resident in BRAM — stored as `i8`, the narrowest type the stream
+/// needs), streamed contiguously in the inner loop.
 pub(crate) fn binary_rows_scalar(
     xq: &[i32],
-    signs: &[i32],
+    signs: &[i8],
     n: usize,
     m: usize,
     scale: f32,
     out: &mut [f32],
+    acc_row: &mut Vec<i64>,
 ) {
     let rows = out.len() / m;
     debug_assert_eq!(xq.len(), rows * n);
-    let mut acc_row = vec![0i64; m];
+    debug_assert_eq!(signs.len(), n * m);
+    reset_acc(acc_row, m);
     for i in 0..rows {
         acc_row.fill(0);
         let xrow = &xq[i * n..(i + 1) * n];
@@ -130,7 +158,7 @@ pub(crate) fn binary_rows_scalar(
                 *acc += qv * s as i64;
             }
         }
-        for (o, &acc) in out[i * m..(i + 1) * m].iter_mut().zip(&acc_row) {
+        for (o, &acc) in out[i * m..(i + 1) * m].iter_mut().zip(acc_row.iter()) {
             *o = acc as f32 * scale;
         }
     }
@@ -141,13 +169,15 @@ pub(crate) fn binary_rows_scalar(
 /// Per row: `Σ_p q_p·s_p = Σ_b coeff(b)·(2·pop(plane_b ∧ W_j) − total_b)`
 /// `= 2·Σ_b coeff(b)·pop(plane_b ∧ W_j) − row_const` — the `row_const`
 /// is column-independent and hoisted. `bits == 1` degenerates to the pure
-/// XNOR form (both operands ±1).
+/// XNOR form (both operands ±1). `bp` is the caller's reusable bit-plane
+/// scratch, repacked in place per row.
 pub(crate) fn binary_rows_packed(
     xq: &[i32],
     w: &SignPlanes,
     bits: u32,
     scale: f32,
     out: &mut [f32],
+    bp: &mut BitPlanes,
 ) {
     let n = w.rows;
     let m = w.cols;
@@ -156,7 +186,7 @@ pub(crate) fn binary_rows_packed(
     for i in 0..rows {
         let xrow = &xq[i * n..(i + 1) * n];
         let orow = &mut out[i * m..(i + 1) * m];
-        let bp = pack_bit_planes(xrow, bits);
+        pack_bit_planes_into(xrow, bits, bp);
         if bits == 1 {
             let arow = bp.plane(0);
             for (j, o) in orow.iter_mut().enumerate() {
@@ -191,10 +221,11 @@ pub(crate) fn qq_rows_scalar(
     m: usize,
     scale: f32,
     out: &mut [f32],
+    acc_row: &mut Vec<i64>,
 ) {
     let rows = out.len() / m;
     debug_assert_eq!(aq.len(), rows * k);
-    let mut acc_row = vec![0i64; m];
+    reset_acc(acc_row, m);
     for i in 0..rows {
         acc_row.fill(0);
         let arow = &aq[i * k..(i + 1) * k];
@@ -208,8 +239,56 @@ pub(crate) fn qq_rows_scalar(
                 *acc += av * bv as i64;
             }
         }
-        for (o, &acc) in out[i * m..(i + 1) * m].iter_mut().zip(&acc_row) {
+        for (o, &acc) in out[i * m..(i + 1) * m].iter_mut().zip(acc_row.iter()) {
             *o = acc as f32 * scale;
+        }
+    }
+}
+
+/// Whether the compact-accumulator qq kernel is exact for this precision
+/// and reduction depth: every partial sum is a sum of ≤ `k` products each
+/// bounded by `2^(bits−1) · 2^(bits−1)`, so it fits an `i32` iff
+/// `k · 2^(2·bits−2) ≤ i32::MAX`. At the paper's W1A8 attention point
+/// (`k ≤ 197`, products ≤ 2^14) the bound holds with ~5 decimal orders of
+/// margin.
+#[inline]
+pub(crate) fn qq_compact_ok(bits: u32, k: usize) -> bool {
+    bits >= 2 && bits <= 16 && (k as i64).saturating_mul(1i64 << (2 * bits - 2)) <= i32::MAX as i64
+}
+
+/// Quantized×quantized matmul with an `i32` accumulator — the Packed
+/// backend's datapath *above* the plane crossover (see
+/// [`qq_packed_profitable`]). Identical products summed in the identical
+/// order as [`qq_rows_scalar`]; the narrower accumulator is exact
+/// whenever [`qq_compact_ok`] holds (callers must check), and it lets the
+/// compiler vectorize the inner multiply-add over 32-bit lanes, which the
+/// i64-widening oracle loop defeats.
+pub(crate) fn qq_rows_compact(
+    aq: &[i32],
+    bq: &[i32],
+    k: usize,
+    m: usize,
+    scale: f32,
+    out: &mut [f32],
+    acc_row: &mut Vec<i32>,
+) {
+    let rows = out.len() / m;
+    debug_assert_eq!(aq.len(), rows * k);
+    reset_acc(acc_row, m);
+    for i in 0..rows {
+        acc_row.fill(0);
+        let arow = &aq[i * k..(i + 1) * k];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0 {
+                continue;
+            }
+            let brow = &bq[p * m..(p + 1) * m];
+            for (acc, &bv) in acc_row.iter_mut().zip(brow) {
+                *acc += av * bv;
+            }
+        }
+        for (o, &acc) in out[i * m..(i + 1) * m].iter_mut().zip(acc_row.iter()) {
+            *o = acc as i64 as f32 * scale;
         }
     }
 }
@@ -217,12 +296,14 @@ pub(crate) fn qq_rows_scalar(
 /// Quantized×quantized matmul, packed: both operands decompose exactly
 /// into two's-complement planes, so the dot is a double shift-accumulate
 /// of AND-popcounts: `Σ_p a_p·b_p = Σ_{b1,b2} c(b1)·c(b2)·pop(A_b1 ∧ B_b2)`.
+/// `bp` is the caller's reusable bit-plane scratch for the left rows.
 pub(crate) fn qq_rows_packed(
     aq: &[i32],
     b: &ColPlanes,
     bits: u32,
     scale: f32,
     out: &mut [f32],
+    bp: &mut BitPlanes,
 ) {
     let k = b.rows;
     let m = b.cols;
@@ -231,9 +312,9 @@ pub(crate) fn qq_rows_packed(
     for i in 0..rows {
         let arow = &aq[i * k..(i + 1) * k];
         let orow = &mut out[i * m..(i + 1) * m];
-        let ap = pack_bit_planes(arow, bits);
+        pack_bit_planes_into(arow, bits, bp);
         if bits == 1 {
-            let asigns = ap.plane(0);
+            let asigns = bp.plane(0);
             for (j, o) in orow.iter_mut().enumerate() {
                 let acc = xnor_sign_dot(asigns, b.col_plane(j, 0), k);
                 *o = acc as f32 * scale;
@@ -243,10 +324,10 @@ pub(crate) fn qq_rows_packed(
         for (j, o) in orow.iter_mut().enumerate() {
             let mut acc = 0i64;
             for b1 in 0..bits {
-                if ap.totals[b1 as usize] == 0 {
+                if bp.totals[b1 as usize] == 0 {
                     continue;
                 }
-                let pa = ap.plane(b1);
+                let pa = bp.plane(b1);
                 let c1 = plane_coeff(b1, bits);
                 for b2 in 0..bits {
                     let d = popcount_and_dot(pa, b.col_plane(j, b2));
@@ -260,11 +341,23 @@ pub(crate) fn qq_rows_packed(
     }
 }
 
-/// Whether the packed qq datapath beats the scalar one: plane-pair work is
-/// `bits² · ⌈k/64⌉` word ops per output vs `k` scalar MACs, so the packed
-/// form wins while `bits² < 64` (with margin for pack overhead). Above the
-/// crossover the Packed backend runs the scalar qq loop — results are
-/// identical either way, this is purely a throughput choice.
+/// Whether the packed plane-pair qq datapath beats the alternatives:
+/// plane-pair work is `bits² · ⌈k/64⌉` word ops per output vs `k`
+/// multiply-adds for the streaming loops, so the plane form's op count
+/// wins while `bits² < 64` — with margin for the per-row repack, the
+/// cutoff sits at `bits² ≤ 48` (bits ≤ 6, plus the pure-XNOR 1-bit form).
+///
+/// Crossover rationale (tracked by the `qq_* a{8,6,4,1} speedup` rows of
+/// `BENCH_hotpath.json`, which sweep both sides on the DeiT-base
+/// attention shapes `197×64·64×197` and `197×197·197×64`): at `a6`
+/// (36 word-ops vs 64 MACs) and below, the plane path measures clearly
+/// ahead of the scalar loop; at `a8` the pair count reaches exact parity
+/// (`8² = 64` word-ops per 64-deep column) *before* repack overhead, so
+/// the plane path can only lose — and above the crossover the Packed
+/// backend now runs [`qq_rows_compact`] (i32-accumulating, vectorizable,
+/// guarded by [`qq_compact_ok`]) rather than the i64 oracle loop, raising
+/// the bar further. Results are identical on every path; this is purely a
+/// throughput choice.
 pub(crate) fn qq_packed_profitable(bits: u32) -> bool {
     bits == 1 || bits * bits <= 48
 }

@@ -23,19 +23,36 @@
 //! host-CPU ops (LayerNorm, softmax, GELU, skip-adds — §5.2) exactly like
 //! the embedded ARM host would, and returns logits + a cycle trace.
 //!
+//! Execution is split per the hardware's own lifecycle (`plan`): an
+//! [`ExecPlan`] built once per model caches every frame-independent
+//! artifact (packed sign planes, pre-quantized Q6.10 weights, per-layer
+//! cycle accounting), and a reusable [`Workspace`] arena makes the
+//! per-frame loop allocation-free; [`ModelExecutor::run_batch`]
+//! additionally fans frames across workers. All of it is bit-identical to
+//! the self-contained single-call engine API, which remains available.
+//!
 //! The engine executes its integer math through one of two bit-exact
 //! kernel [`Backend`]s (`kernels`): the scalar streaming loops (reference
 //! oracle) or the default bit-packed XNOR/popcount datapath, with
-//! row-parallel fan-out across the frame dimension in both.
+//! row-parallel fan-out across the frame dimension in both and
+//! head-parallel fan-out across attention heads.
 
 mod engine;
 mod exec;
 mod kernels;
+mod plan;
 mod timing;
 mod weights;
 
 pub use engine::{Backend, ComputeEngine, MatmulResult};
-pub use exec::{ExecTrace, LayerTrace, ModelExecutor};
+pub use exec::{
+    gelu, layer_norm, layer_norm_into, reference_forward, softmax_rows, ExecTrace, LayerTrace,
+    ModelExecutor,
+};
+pub use plan::{
+    AttnScratch, ExecPlan, FcScratch, HeadScratch, LayerAccounting, PreparedFc, PreparedLayer,
+    Workspace,
+};
 pub use timing::{layer_timing, model_timing, LayerTiming};
 pub use weights::{generate_weights, LayerWeights, VitWeights};
 

@@ -1,0 +1,329 @@
+//! Prepared-model execution plan + reusable per-frame workspace.
+//!
+//! VAQF generates the accelerator once per model and then streams frames
+//! (§5, the 24/30 FPS DeiT-base targets); the simulator mirrors that
+//! split here. [`ExecPlan`] is everything about a `(weights, precision,
+//! backend)` triple that does **not** depend on the frame:
+//!
+//! * the column-major packed sign planes of every binary layer (what the
+//!   BRAM-resident LUT array holds on the board) — previously repacked on
+//!   every `fc_binary` call;
+//! * the Q6.10 pre-quantization of every fixed16 weight matrix (patch
+//!   embed, head, and all FCs of the unquantized baseline) — previously
+//!   requantized on every `fc_fixed16` call;
+//! * the scalar backend's ±1 sign materialization (`i8` row-major);
+//! * the per-layer cycle accounting (`layer_timing` + host cycles), which
+//!   is pure in `(structure, params, device)`.
+//!
+//! [`Workspace`] is the complementary per-frame arena: every activation
+//! buffer, quantization scratch and bit-plane decomposition `run_frame`
+//! needs, sized once from the [`VitConfig`] and reused across frames.
+//! The steady-state loop's remaining heap traffic is a handful of small
+//! per-chunk kernel scratches (one per row-parallel worker per FC call)
+//! and the per-frame trace vector — the per-row and per-element
+//! allocations of the pre-plan path are gone, which the hotpath bench's
+//! counting allocator quantifies (≫10× fewer allocations per frame).
+//! Both are owned by `ModelExecutor`; none of this changes any numeric
+//! result (the plan caches exactly the values the old code recomputed),
+//! which the property suite asserts bit-for-bit.
+
+use std::sync::Arc;
+
+use crate::hw::Device;
+use crate::model::{VitConfig, VitStructure};
+use crate::perf::{layer_cycles, AcceleratorParams};
+use crate::quant::{to_fixed16, BinaryMatrix, BitPlanes, ColPlanes, SignPlanes};
+use crate::Cycles;
+
+use super::kernels::Backend;
+use super::timing::{layer_timing, LayerTiming};
+use super::weights::VitWeights;
+
+/// One FC weight operand, laid out for its datapath.
+#[derive(Debug, Clone)]
+pub enum PreparedFc {
+    /// Q6.10 pre-quantized dense matrix (DSP path).
+    Fixed16 {
+        wq: Vec<i16>,
+        rows: usize,
+        cols: usize,
+    },
+    /// Column-major 64-lane packed sign planes (LUT path, packed backend).
+    BinaryPacked { planes: SignPlanes, scale: f32 },
+    /// Row-major ±1 materialization (LUT path, scalar oracle backend).
+    BinaryScalar {
+        signs: Vec<i8>,
+        rows: usize,
+        cols: usize,
+        scale: f32,
+    },
+}
+
+impl PreparedFc {
+    /// Pre-quantize a dense f32 matrix for the fixed16 DSP path.
+    pub fn fixed16(w: &[f32], rows: usize, cols: usize) -> PreparedFc {
+        assert_eq!(w.len(), rows * cols, "shape mismatch");
+        PreparedFc::Fixed16 {
+            wq: w.iter().map(|&v| to_fixed16(v)).collect(),
+            rows,
+            cols,
+        }
+    }
+
+    /// Lay a binary matrix out for `backend`'s LUT datapath.
+    pub fn binary(w: &BinaryMatrix, backend: Backend) -> PreparedFc {
+        match backend {
+            Backend::Packed => PreparedFc::BinaryPacked {
+                planes: w.packed_signs(),
+                scale: w.scale,
+            },
+            Backend::Scalar => PreparedFc::BinaryScalar {
+                signs: w.signs.iter().map(|&s| if s { 1 } else { -1 }).collect(),
+                rows: w.rows,
+                cols: w.cols,
+                scale: w.scale,
+            },
+        }
+    }
+
+    /// Input dimension (`n`).
+    pub fn rows(&self) -> usize {
+        match self {
+            PreparedFc::Fixed16 { rows, .. } => *rows,
+            PreparedFc::BinaryPacked { planes, .. } => planes.rows,
+            PreparedFc::BinaryScalar { rows, .. } => *rows,
+        }
+    }
+
+    /// Output dimension (`m`).
+    pub fn cols(&self) -> usize {
+        match self {
+            PreparedFc::Fixed16 { cols, .. } => *cols,
+            PreparedFc::BinaryPacked { planes, .. } => planes.cols,
+            PreparedFc::BinaryScalar { cols, .. } => *cols,
+        }
+    }
+}
+
+/// The four prepared FC operands of one encoder layer.
+#[derive(Debug, Clone)]
+pub struct PreparedLayer {
+    pub qkv: PreparedFc,
+    pub proj: PreparedFc,
+    pub mlp1: PreparedFc,
+    pub mlp2: PreparedFc,
+}
+
+/// Per-layer accounting cached in the plan: the layer's name (shared
+/// `Arc<str>` so per-frame traces clone a refcount, not a heap string),
+/// its engine timeline and its host cycles — all pure in
+/// `(structure, params, device)`, so walked once here instead of on
+/// every frame.
+#[derive(Debug, Clone)]
+pub struct LayerAccounting {
+    pub name: Arc<str>,
+    pub timing: LayerTiming,
+    pub host: Cycles,
+}
+
+/// Everything per-model: prepared weights + per-layer cycle accounting.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    /// The backend this plan's weights are laid out for — the executor's
+    /// `with_backend` rebuilds the plan when this disagrees.
+    pub backend: Backend,
+    /// The accelerator parameterization the plan was prepared for
+    /// (precision geometry + tiling — the timings below are a pure
+    /// function of it). Like `backend`, this keys the executor's
+    /// staleness check: mutating `engine.params` after a frame has run
+    /// triggers a rebuild instead of silently serving stale timings.
+    pub params: AcceleratorParams,
+    /// Patch-embedding FC — always fixed16 (§5.3).
+    pub patch: PreparedFc,
+    /// Classifier head — always fixed16.
+    pub head: PreparedFc,
+    pub layers: Vec<PreparedLayer>,
+    pub timings: Vec<LayerAccounting>,
+}
+
+impl ExecPlan {
+    /// Build the plan for `weights` at `act_bits` on `backend`. This is
+    /// the one-time per-model compilation cost the per-frame loop
+    /// amortizes away.
+    pub fn build(
+        weights: &VitWeights,
+        structure: &VitStructure,
+        params: &AcceleratorParams,
+        device: &Device,
+        backend: Backend,
+    ) -> ExecPlan {
+        let cfg = &weights.config;
+        let quantized = params.act_bits.is_some();
+        let m = cfg.embed_dim;
+        let hidden = m * cfg.mlp_ratio;
+        let patch_in = cfg.in_chans * cfg.patch_size * cfg.patch_size;
+        let layers = weights
+            .layers
+            .iter()
+            .map(|lw| {
+                if quantized {
+                    PreparedLayer {
+                        qkv: PreparedFc::binary(&lw.qkv_bin, backend),
+                        proj: PreparedFc::binary(&lw.proj_bin, backend),
+                        mlp1: PreparedFc::binary(&lw.mlp1_bin, backend),
+                        mlp2: PreparedFc::binary(&lw.mlp2_bin, backend),
+                    }
+                } else {
+                    PreparedLayer {
+                        qkv: PreparedFc::fixed16(&lw.qkv, m, 3 * m),
+                        proj: PreparedFc::fixed16(&lw.proj, m, m),
+                        mlp1: PreparedFc::fixed16(&lw.mlp1, m, hidden),
+                        mlp2: PreparedFc::fixed16(&lw.mlp2, hidden, m),
+                    }
+                }
+            })
+            .collect();
+        let timings = structure
+            .layers
+            .iter()
+            .map(|desc| LayerAccounting {
+                name: Arc::from(desc.name.as_str()),
+                timing: layer_timing(desc, params, device),
+                host: layer_cycles(desc, params, device).host,
+            })
+            .collect();
+        ExecPlan {
+            backend,
+            params: *params,
+            patch: PreparedFc::fixed16(&weights.patch, patch_in, m),
+            head: PreparedFc::fixed16(&weights.head, m, cfg.num_classes),
+            layers,
+            timings,
+        }
+    }
+}
+
+/// Reusable quantization scratch for the engine's prepared FC calls.
+#[derive(Debug, Default)]
+pub struct FcScratch {
+    /// `b`-bit quantized activations (LUT path).
+    pub xq: Vec<i32>,
+    /// Q6.10 quantized activations (DSP path).
+    pub x16: Vec<i16>,
+}
+
+/// Reusable scratch for one attention matmul (quantize + pack + dot).
+#[derive(Debug)]
+pub struct AttnScratch {
+    pub aq: Vec<i32>,
+    pub bq: Vec<i32>,
+    pub a16: Vec<i16>,
+    pub b16: Vec<i16>,
+    pub acc64: Vec<i64>,
+    pub acc32: Vec<i32>,
+    pub bp: BitPlanes,
+    pub cp: ColPlanes,
+}
+
+impl AttnScratch {
+    pub fn new() -> AttnScratch {
+        AttnScratch {
+            aq: Vec::new(),
+            bq: Vec::new(),
+            a16: Vec::new(),
+            b16: Vec::new(),
+            acc64: Vec::new(),
+            acc32: Vec::new(),
+            bp: BitPlanes::empty(),
+            cp: ColPlanes::empty(),
+        }
+    }
+}
+
+impl Default for AttnScratch {
+    fn default() -> AttnScratch {
+        AttnScratch::new()
+    }
+}
+
+/// Per-head working set: the q/k/v column slices, the `Kᵀ` transpose, the
+/// score matrix, and the matmul scratch. One per head, so heads
+/// parallelize with zero shared mutable state (each head also owns a
+/// disjoint `f × M_h` slice of the workspace's head-major output buffer).
+#[derive(Debug, Default)]
+pub struct HeadScratch {
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub kt: Vec<f32>,
+    pub s: Vec<f32>,
+    pub attn: AttnScratch,
+}
+
+/// The per-frame buffer arena: sized once from the [`VitConfig`], reused
+/// for every frame. Integer/bit-plane scratches warm up on the first
+/// frame and are stable thereafter.
+#[derive(Debug)]
+pub struct Workspace {
+    /// Residual stream `F × M`.
+    pub x: Vec<f32>,
+    /// LayerNorm output `F × M` (reused for LN1 and LN2).
+    pub h: Vec<f32>,
+    /// Patch-embedding output `N_p × M`.
+    pub pe: Vec<f32>,
+    /// QKV projection output `F × 3M`.
+    pub qkv: Vec<f32>,
+    /// Head-major attention outputs: head `h` owns `[h·F·M_h, (h+1)·F·M_h)`.
+    pub attn_heads: Vec<f32>,
+    /// Row-major `F × M` reordering of `attn_heads`.
+    pub attn_concat: Vec<f32>,
+    /// Attention projection output `F × M`.
+    pub proj_out: Vec<f32>,
+    /// MLP intermediate `F × 4M` (pre-GELU).
+    pub mlp1_out: Vec<f32>,
+    /// GELU output `F × 4M`.
+    pub gelu: Vec<f32>,
+    /// MLP output `F × M`.
+    pub mlp2_out: Vec<f32>,
+    /// CLS representation `1 × M`.
+    pub cls: Vec<f32>,
+    pub fc: FcScratch,
+    pub heads: Vec<HeadScratch>,
+}
+
+impl Workspace {
+    /// Allocate the arena for `cfg`'s geometry.
+    pub fn for_config(cfg: &VitConfig) -> Workspace {
+        let m = cfg.embed_dim;
+        let f = cfg.tokens();
+        let np = cfg.num_patches();
+        let mh = cfg.head_dim();
+        let hidden = m * cfg.mlp_ratio;
+        let mut heads = Vec::with_capacity(cfg.num_heads);
+        for _ in 0..cfg.num_heads {
+            heads.push(HeadScratch {
+                q: vec![0.0; f * mh],
+                k: vec![0.0; f * mh],
+                v: vec![0.0; f * mh],
+                kt: vec![0.0; mh * f],
+                s: vec![0.0; f * f],
+                attn: AttnScratch::new(),
+            });
+        }
+        Workspace {
+            x: vec![0.0; f * m],
+            h: vec![0.0; f * m],
+            pe: vec![0.0; np * m],
+            qkv: vec![0.0; f * 3 * m],
+            attn_heads: vec![0.0; f * m],
+            attn_concat: vec![0.0; f * m],
+            proj_out: vec![0.0; f * m],
+            mlp1_out: vec![0.0; f * hidden],
+            gelu: vec![0.0; f * hidden],
+            mlp2_out: vec![0.0; f * m],
+            cls: vec![0.0; m],
+            fc: FcScratch::default(),
+            heads,
+        }
+    }
+}

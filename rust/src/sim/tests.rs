@@ -81,7 +81,7 @@ fn executor_runs_micro_vit_all_precisions() {
     let w = generate_weights(&cfg, 11);
     let patches = w.synthetic_patches(0);
     for bits in [None, Some(8), Some(6), Some(4)] {
-        let exec = ModelExecutor::new(w.clone(), bits, micro_params(bits), zcu102());
+        let mut exec = ModelExecutor::new(w.clone(), bits, micro_params(bits), zcu102());
         let (logits, trace) = exec.run_frame(&patches);
         assert_eq!(logits.len(), 10);
         assert!(logits.iter().all(|v| v.is_finite()));
@@ -97,13 +97,13 @@ fn quantized_logits_approach_fp_logits_with_more_bits() {
     let cfg = micro_vit();
     let w = generate_weights(&cfg, 5);
     let patches = w.synthetic_patches(1);
-    let fp = ModelExecutor::new(w.clone(), None, micro_params(None), zcu102());
+    let mut fp = ModelExecutor::new(w.clone(), None, micro_params(None), zcu102());
     let (logits_fp, _) = fp.run_frame(&patches);
     // Binary weights change the function substantially (this is untrained
     // — Table 3 shows even trained models drop); what must hold is that
     // *activation* precision converges: W1A12 closer to W1A16 than W1A4 is.
     let run = |bits: u8| {
-        let e = ModelExecutor::new(w.clone(), Some(bits), micro_params(Some(bits)), zcu102());
+        let mut e = ModelExecutor::new(w.clone(), Some(bits), micro_params(Some(bits)), zcu102());
         e.run_frame(&patches).0
     };
     let l16 = run(16);
@@ -160,7 +160,7 @@ fn timeline_agrees_with_analytical_model() {
 fn trace_macs_match_structure() {
     let cfg = micro_vit();
     let w = generate_weights(&cfg, 2);
-    let exec = ModelExecutor::new(w.clone(), Some(8), micro_params(Some(8)), zcu102());
+    let mut exec = ModelExecutor::new(w.clone(), Some(8), micro_params(Some(8)), zcu102());
     let (_, trace) = exec.run_frame(&w.synthetic_patches(3));
     let expected = cfg.structure(Some(8)).total_macs();
     let got: u64 = trace.layers.iter().map(|l| l.macs).sum();
@@ -176,10 +176,10 @@ fn backends_agree_bitexactly_on_whole_model() {
     let w = generate_weights(&cfg, 13);
     let patches = w.synthetic_patches(2);
     for bits in [Some(8), Some(6), Some(4), Some(1), None] {
-        let scalar = ModelExecutor::new(w.clone(), bits, micro_params(bits), zcu102())
+        let mut scalar = ModelExecutor::new(w.clone(), bits, micro_params(bits), zcu102())
             .with_backend(Backend::Scalar)
             .with_threads(1);
-        let packed = ModelExecutor::new(w.clone(), bits, micro_params(bits), zcu102())
+        let mut packed = ModelExecutor::new(w.clone(), bits, micro_params(bits), zcu102())
             .with_backend(Backend::Packed)
             .with_threads(3);
         let (ls, ts) = scalar.run_frame(&patches);
@@ -194,11 +194,63 @@ fn deterministic_execution() {
     let cfg = micro_vit();
     let w = generate_weights(&cfg, 9);
     let p = w.synthetic_patches(7);
-    let exec = ModelExecutor::new(w.clone(), Some(6), micro_params(Some(6)), zcu102());
+    let mut exec = ModelExecutor::new(w.clone(), Some(6), micro_params(Some(6)), zcu102());
     let (a, ta) = exec.run_frame(&p);
     let (b, tb) = exec.run_frame(&p);
     assert_eq!(a, b);
     assert_eq!(ta.total_cycles, tb.total_cycles);
+}
+
+#[test]
+fn run_batch_equals_repeated_run_frame() {
+    // The frame-parallel batch path (per-worker workspace, intra-frame
+    // parallelism off) must reproduce the sequential per-frame path
+    // bit-for-bit — logits AND traces — at every precision and worker
+    // count, including batches smaller / larger than the worker pool.
+    let cfg = micro_vit();
+    let w = generate_weights(&cfg, 21);
+    let frames: Vec<Vec<f32>> = (0..5).map(|i| w.synthetic_patches(i)).collect();
+    for bits in [Some(8), Some(1), None] {
+        for threads in [1usize, 2, 3, 8] {
+            let mut seq = ModelExecutor::new(w.clone(), bits, micro_params(bits), zcu102())
+                .with_threads(threads);
+            let want: Vec<_> = frames.iter().map(|p| seq.run_frame(p)).collect();
+            let mut batch = ModelExecutor::new(w.clone(), bits, micro_params(bits), zcu102())
+                .with_threads(threads);
+            let got = batch.run_batch(&frames);
+            assert_eq!(got.len(), want.len());
+            for (i, ((gl, gt), (wl, wt))) in got.iter().zip(&want).enumerate() {
+                assert_eq!(gl, wl, "bits={bits:?} threads={threads} frame {i}");
+                assert_eq!(gt.total_cycles, wt.total_cycles, "frame {i}");
+            }
+            // Batch again on the warmed workspaces: still identical.
+            let again = batch.run_batch(&frames);
+            for ((gl, _), (wl, _)) in again.iter().zip(&want) {
+                assert_eq!(gl, wl);
+            }
+        }
+    }
+    let mut empty_exec = ModelExecutor::new(w, Some(8), micro_params(Some(8)), zcu102());
+    assert!(empty_exec.run_batch::<Vec<f32>>(&[]).is_empty());
+}
+
+#[test]
+fn prepared_plan_survives_backend_swap() {
+    // with_backend must re-lay the prepared weights out for the new
+    // datapath: swapping to the scalar oracle and back yields identical
+    // logits each way.
+    let cfg = micro_vit();
+    let w = generate_weights(&cfg, 23);
+    let p = w.synthetic_patches(4);
+    let mut packed = ModelExecutor::new(w.clone(), Some(6), micro_params(Some(6)), zcu102())
+        .with_backend(Backend::Packed);
+    let (lp, _) = packed.run_frame(&p);
+    let mut swapped = packed.with_backend(Backend::Scalar);
+    let (ls, _) = swapped.run_frame(&p);
+    assert_eq!(lp, ls, "backend swap after construction diverged");
+    let mut back = swapped.with_backend(Backend::Packed);
+    let (lp2, _) = back.run_frame(&p);
+    assert_eq!(lp, lp2);
 }
 
 #[test]

@@ -86,6 +86,59 @@ pub fn for_each_row_chunk<F>(
     });
 }
 
+/// Fan independent work items out across up to `threads` scoped threads:
+/// contiguous chunks of `items`, one chunk per worker, `body(index, item)`
+/// per item. The same work cutoff as [`for_each_row_chunk`] applies
+/// (`work_per_item · items` vs [`MIN_WORK_PER_THREAD`]), so small task
+/// sets run inline on the calling thread. Items are disjoint and the
+/// per-item computation is independent of chunking, so results are
+/// bit-for-bit the serial results — this is the driver the executor uses
+/// to parallelize attention across heads (each item owns one head's
+/// scratch + output slice).
+pub fn for_each_task<T, F>(items: &mut [T], threads: usize, work_per_item: u64, body: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return;
+    }
+    let total = work_per_item.saturating_mul(n as u64);
+    let worth = (total / MIN_WORK_PER_THREAD).min(MAX_THREADS as u64) as usize;
+    let threads = threads.clamp(1, MAX_THREADS).min(worth.max(1)).min(n);
+    if threads == 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            body(i, item);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    let body = &body;
+    std::thread::scope(|scope| {
+        let mut rest = items;
+        let mut i0 = 0usize;
+        while !rest.is_empty() {
+            let take = chunk.min(rest.len());
+            let (head, tail) = rest.split_at_mut(take);
+            if tail.is_empty() {
+                // Last chunk runs on the calling thread instead of idling.
+                for (j, item) in head.iter_mut().enumerate() {
+                    body(i0 + j, item);
+                }
+            } else {
+                scope.spawn(move || {
+                    for (j, item) in head.iter_mut().enumerate() {
+                        body(i0 + j, item);
+                    }
+                });
+            }
+            rest = tail;
+            i0 += take;
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,5 +183,21 @@ mod tests {
     fn default_threads_is_bounded() {
         let n = default_threads();
         assert!((1..=MAX_THREADS).contains(&n));
+    }
+
+    #[test]
+    fn tasks_match_serial_for_all_thread_counts() {
+        let want: Vec<u64> = (0..23).map(|i| i * i + 7).collect();
+        for threads in [1, 2, 3, 8, 23, 64] {
+            for work in [u64::MAX / 64, 0] {
+                let mut items = vec![0u64; 23];
+                for_each_task(&mut items, threads, work, |i, v| {
+                    *v = (i as u64) * (i as u64) + 7;
+                });
+                assert_eq!(items, want, "threads={threads} work={work}");
+            }
+        }
+        let mut empty: Vec<u64> = vec![];
+        for_each_task(&mut empty, 8, u64::MAX, |_, _| panic!("no items expected"));
     }
 }

@@ -42,9 +42,9 @@ fn pipeline_target_spec_to_serving() {
     assert_eq!(&params, design.params());
 
     // The simulator is wired with the *compiled* parameters and runs.
-    let exec = design.simulator_with_seed(7);
+    let mut exec = design.simulator_with_seed(7);
     assert_eq!(&exec.engine.params, design.params());
-    let patches = exec.weights.synthetic_patches(0);
+    let patches = exec.weights().synthetic_patches(0);
     let (logits, trace) = exec.run_frame(&patches);
     assert_eq!(logits.len(), 10);
     assert!(trace.total_cycles > 0);

@@ -21,7 +21,10 @@ use vaqf::perf::{
 use vaqf::quant::{
     binarize, pack_bit_planes, pack_words, unpack_bit_planes, unpack_words, ActQuantizer,
 };
-use vaqf::sim::{layer_timing, Backend, ComputeEngine};
+use vaqf::sim::{
+    generate_weights, layer_timing, reference_forward, Backend, ComputeEngine, FcScratch,
+    ModelExecutor, PreparedFc,
+};
 use vaqf::util::prop::{self, QueueOp};
 use vaqf::util::rng::SplitMix64;
 
@@ -607,6 +610,154 @@ fn prop_row_parallel_fixed16_bitexact_vs_serial() {
         let serial = engine_with(8, Backend::Packed, 1).fc_fixed16(&x, &w, f, n, m);
         let parallel = engine_with(8, Backend::Packed, threads).fc_fixed16(&x, &w, f, n, m);
         assert_eq!(serial.out, parallel.out, "trial {trial}: f={f} threads={threads}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prepared-plan / workspace properties: the executor's cached-weight +
+// reused-buffer path (and its batched form) must be bit-identical to the
+// original allocating per-call path (`sim::reference_forward` — the
+// pre-plan `run_frame`, kept verbatim as the oracle).
+// ---------------------------------------------------------------------------
+
+fn sim_params(bits: Option<u8>) -> AcceleratorParams {
+    match bits {
+        None => AcceleratorParams::baseline(16, 2, 4, 4),
+        Some(b) => {
+            let g_q = AcceleratorParams::g_q_for(64, b);
+            AcceleratorParams {
+                t_m: 16,
+                t_n: 2,
+                t_m_q: 16,
+                t_n_q: 2 * g_q / 4,
+                g: 4,
+                g_q,
+                p_h: 4,
+                act_bits: Some(b),
+            }
+        }
+    }
+}
+
+fn gen_tiny_vit(rng: &mut SplitMix64, trial: u64) -> VitConfig {
+    let heads = 1 + rng.next_below(4) as usize;
+    let head_dim = *[2usize, 4, 8].get(rng.next_below(3) as usize).unwrap();
+    let patch = *[4usize, 8].get(rng.next_below(2) as usize).unwrap();
+    let grid = 1 + rng.next_below(3) as usize; // 1..=3 patches per side
+    VitConfig {
+        name: format!("prop{trial}"),
+        image_size: patch * grid,
+        patch_size: patch,
+        in_chans: 3,
+        embed_dim: heads * head_dim,
+        depth: 1 + rng.next_below(2) as usize,
+        num_heads: heads,
+        mlp_ratio: 2 + 2 * rng.next_below(2) as usize,
+        num_classes: 3 + rng.next_below(8) as usize,
+    }
+}
+
+#[test]
+fn prop_prepared_workspace_path_matches_legacy_allocating_path() {
+    // Random tiny ViTs × precisions (incl. unquantized) × backends ×
+    // thread counts: the prepared+workspace executor must reproduce the
+    // old allocating forward pass bit-for-bit — and stay identical on a
+    // reused (dirty) workspace.
+    let mut rng = SplitMix64::new(300);
+    for trial in 0..12u64 {
+        let cfg = gen_tiny_vit(&mut rng, trial);
+        let bits = match rng.next_below(5) {
+            0 => None,
+            1 => Some(1),
+            2 => Some(4),
+            3 => Some(8),
+            _ => Some(1 + rng.next_below(16) as u8),
+        };
+        let threads = 1 + rng.next_below(4) as usize;
+        let w = generate_weights(&cfg, 40 + trial);
+        let patches = w.synthetic_patches(trial);
+        let params = sim_params(bits);
+
+        let oracle_engine = ComputeEngine::new(params, zcu102())
+            .with_backend(Backend::Scalar)
+            .with_threads(1);
+        let want = reference_forward(&oracle_engine, &w, &patches);
+
+        for backend in [Backend::Scalar, Backend::Packed] {
+            let mut exec = ModelExecutor::new(w.clone(), bits, params, zcu102())
+                .with_backend(backend)
+                .with_threads(threads);
+            let (got, _) = exec.run_frame(&patches);
+            assert_eq!(
+                got, want,
+                "trial {trial}: prepared {backend} path diverged \
+                 (cfg {cfg:?}, bits {bits:?}, threads {threads})"
+            );
+            // Second frame on the now-dirty workspace: state must not leak.
+            let (again, _) = exec.run_frame(&patches);
+            assert_eq!(again, want, "trial {trial}: workspace reuse leaked state");
+        }
+    }
+}
+
+#[test]
+fn prop_run_batch_equals_n_run_frames() {
+    let mut rng = SplitMix64::new(301);
+    for trial in 0..8u64 {
+        let cfg = gen_tiny_vit(&mut rng, 100 + trial);
+        let bits = if rng.next_below(4) == 0 {
+            None
+        } else {
+            Some(1 + rng.next_below(12) as u8)
+        };
+        let threads = 1 + rng.next_below(4) as usize;
+        let n_frames = 1 + rng.next_below(6) as usize;
+        let w = generate_weights(&cfg, 70 + trial);
+        let frames: Vec<Vec<f32>> = (0..n_frames as u64)
+            .map(|i| w.synthetic_patches(i))
+            .collect();
+        let params = sim_params(bits);
+        let mut seq = ModelExecutor::new(w.clone(), bits, params, zcu102()).with_threads(threads);
+        let mut batch = ModelExecutor::new(w, bits, params, zcu102()).with_threads(threads);
+        let want: Vec<_> = frames.iter().map(|p| seq.run_frame(p)).collect();
+        let got = batch.run_batch(&frames);
+        assert_eq!(got.len(), want.len(), "trial {trial}");
+        for (i, ((gl, gt), (wl, wt))) in got.iter().zip(&want).enumerate() {
+            assert_eq!(gl, wl, "trial {trial} frame {i} (threads {threads})");
+            assert_eq!(gt.total_cycles, wt.total_cycles, "trial {trial} frame {i}");
+        }
+    }
+}
+
+#[test]
+fn prop_fc_prepared_matches_allocating_call_with_reused_scratch() {
+    // Engine level: one FcScratch reused across random shapes/precisions
+    // must give exactly what the self-contained calls give.
+    let mut rng = SplitMix64::new(302);
+    let mut scratch = FcScratch::default();
+    for trial in 0..40 {
+        let f = 1 + rng.next_below(12) as usize;
+        let n = 1 + rng.next_below(96) as usize;
+        let m = 1 + rng.next_below(48) as usize;
+        let bits = 1 + rng.next_below(16) as u8;
+        let x: Vec<f32> = (0..f * n).map(|_| rng.next_f32_range(-2.0, 2.0)).collect();
+        let w: Vec<f32> = (0..n * m).map(|_| rng.next_f32_range(-1.0, 1.0)).collect();
+        for backend in [Backend::Scalar, Backend::Packed] {
+            let engine = engine_with(bits, backend, 1);
+            let wb = binarize(&w, n, m);
+            let want = engine.fc_binary(&x, &wb, f);
+            let prepared = PreparedFc::binary(&wb, backend);
+            let mut out = vec![0.0f32; f * m];
+            let macs = engine.fc_prepared(&x, &prepared, f, &mut scratch, &mut out);
+            assert_eq!(out, want.out, "trial {trial} {backend} f={f} n={n} m={m} bits={bits}");
+            assert_eq!(macs, want.macs);
+
+            let want16 = engine.fc_fixed16(&x, &w, f, n, m);
+            let prepared16 = PreparedFc::fixed16(&w, n, m);
+            let mut out16 = vec![0.0f32; f * m];
+            engine.fc_prepared(&x, &prepared16, f, &mut scratch, &mut out16);
+            assert_eq!(out16, want16.out, "trial {trial} fixed16");
+        }
     }
 }
 

@@ -68,7 +68,7 @@ fn sim_vs_pjrt_cross_checks() {
     for tag in ["micro_w1a8", "micro_w1a6", "micro_w1a4"] {
         let Some(entry) = man.find(tag) else { continue };
         let weights = generate_weights(&entry.config, entry.seed);
-        let exec = ModelExecutor::new(
+        let mut exec = ModelExecutor::new(
             weights.clone(),
             entry.act_bits_opt(),
             micro_params(entry.act_bits_opt()),
@@ -103,7 +103,7 @@ fn sim_vs_pjrt_cross_checks() {
     // --- 2. fp32 variant agrees with the fixed16 simulator datapath.
     if let Some(entry) = man.find("micro_w32a32") {
         let weights = generate_weights(&entry.config, entry.seed);
-        let exec =
+        let mut exec =
             ModelExecutor::new(weights.clone(), None, micro_params(None), vaqf::hw::zcu102());
         let patches = weights.synthetic_patches(0);
         let (sim, _) = exec.run_frame(&patches);
