@@ -1,0 +1,137 @@
+//! Bench: pipeline-parallel sharding scale-out.
+//!
+//! Compiles DeiT-base for the ZCU102 at the paper's 24 FPS target, then
+//! partitions the compiled design across 1→4 accelerator instances
+//! (`vaqf::shard` balanced min-max partition + per-shard parameter
+//! co-search) and drives the discrete-event pipeline simulator on the
+//! deterministic virtual clock. Steady-state FPS, speedup over the
+//! unsharded design, per-frame pipeline latency and per-stage resource
+//! utilization land in `BENCH_sharding.json`; CI gates on the 2-shard
+//! steady-state FPS being ≥ 1.5× the 1-shard number.
+//!
+//! Because time is simulated, the numbers measure the *pipeline model*
+//! (stage balance, FIFO backpressure, fill/drain), not host speed; the
+//! host cost of the per-shard co-search is reported separately.
+//!
+//! Run with: `cargo bench --bench sharding_scale` (append `-- --quick`
+//! for the CI-sized subset).
+
+use vaqf::api::{Result, ShardPolicy, TargetSpec};
+use vaqf::util::bench::{bench_output_path, JsonReport};
+use vaqf::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let quick = args.has_flag("quick");
+    let frames = if quick { 120u64 } else { 600 };
+    let mut report = JsonReport::new("sharding_scale", if quick { "quick" } else { "full" });
+
+    println!("=== sharding scale: DeiT-base on zcu102, 1→4 shards ===\n");
+    let design = TargetSpec::new()
+        .model_preset("deit-base")
+        .device_preset("zcu102")
+        .target_fps(24.0)
+        .session()?
+        .compile()?;
+    println!(
+        "compiled {}: {:.1} FPS unsharded\n",
+        design.summary().label,
+        design.summary().fps
+    );
+
+    for shards in 1..=4usize {
+        let t0 = std::time::Instant::now();
+        let sharded = design.shards(shards)?;
+        let cosearch_s = t0.elapsed().as_secs_f64();
+        let r = sharded.report(frames);
+        let p = &r.pipeline;
+        println!(
+            "--- {shards} shard(s): steady {:.1} FPS ({:.2}×) ---",
+            p.steady_fps,
+            p.steady_fps / design.summary().fps
+        );
+        report.metric(&format!("shards={shards} steady_fps"), p.steady_fps, "fps");
+        report.metric(
+            &format!("shards={shards} speedup_vs_unsharded"),
+            p.steady_fps / design.summary().fps,
+            "x",
+        );
+        report.metric(
+            &format!("shards={shards} p50_latency"),
+            p.latency.p50 * 1e3,
+            "ms",
+        );
+        report.metric(
+            &format!("shards={shards} p99_latency"),
+            p.latency.p99 * 1e3,
+            "ms",
+        );
+        report.metric(
+            &format!("shards={shards} fill"),
+            sharded.device.cycles_to_seconds(p.fill_cycles) * 1e3,
+            "ms",
+        );
+        let max_pct = |f: fn(&vaqf::hw::UtilizationPct) -> f64| {
+            sharded
+                .stages
+                .iter()
+                .map(|s| f(&s.summary.utilization_pct))
+                .fold(0.0f64, f64::max)
+        };
+        report.metric(
+            &format!("shards={shards} max_stage_dsp"),
+            max_pct(|u| u.dsp),
+            "%",
+        );
+        report.metric(
+            &format!("shards={shards} max_stage_lut"),
+            max_pct(|u| u.lut),
+            "%",
+        );
+        report.metric(
+            &format!("shards={shards} max_stage_bram"),
+            max_pct(|u| u.bram18k),
+            "%",
+        );
+        report.metric(&format!("shards={shards} cosearch_host_seconds"), cosearch_s, "s");
+        // The acceptance criterion "per-stage resource usage within the
+        // divided budget" is a hard gate, not a warning: fail the bench
+        // (and therefore CI) if any stage oversubscribes its board.
+        for stage in &sharded.stages {
+            let budget = sharded.per_shard_budget();
+            let over_bram =
+                stage.summary.utilization.bram18k + stage.fifo.bram18k > budget.bram18k;
+            if !stage.summary.utilization.fits(budget) || over_bram {
+                return Err(vaqf::api::VaqfError::config(format!(
+                    "stage {} of the {shards}-shard design exceeds the per-shard \
+                     budget (incl. FIFO BRAM)",
+                    stage.index
+                )));
+            }
+        }
+        println!();
+    }
+
+    if !quick {
+        println!("--- partition policies at 3 shards ---");
+        for policy in [ShardPolicy::Balanced, ShardPolicy::Even, ShardPolicy::MinLatency] {
+            let r = design.shards_with(3, policy)?.report(frames);
+            report.metric(
+                &format!("policy/{} steady_fps", policy.name()),
+                r.pipeline.steady_fps,
+                "fps",
+            );
+            report.metric(
+                &format!("policy/{} p99_latency", policy.name()),
+                r.pipeline.latency.p99 * 1e3,
+                "ms",
+            );
+        }
+        println!();
+    }
+
+    report
+        .write(bench_output_path("BENCH_sharding.json"))
+        .map_err(vaqf::api::VaqfError::runtime)?;
+    Ok(())
+}

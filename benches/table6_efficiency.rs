@@ -38,7 +38,7 @@ fn main() {
     );
     let best = rows6
         .iter()
-        .max_by(|a, b| a.fps_per_w.partial_cmp(&b.fps_per_w).unwrap())
+        .max_by(|a, b| a.fps_per_w.total_cmp(&b.fps_per_w))
         .unwrap();
     println!(
         "\nbest FPS/W across all rows: {} ({:.2}) — paper: Ours W1A6 (4.05)",

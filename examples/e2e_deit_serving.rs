@@ -79,7 +79,7 @@ fn main() -> Result<()> {
         let argmax = |v: &[f32]| {
             v.iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i)
                 .unwrap()
         };

@@ -55,4 +55,7 @@ pub use crate::coordinator::{MultiServingReport, ServeConfig, ServingReport, Str
 pub use crate::hw::Device;
 pub use crate::model::VitConfig;
 pub use crate::perf::{AcceleratorParams, PerfSummary};
+pub use crate::shard::{
+    PipelineReport, ShardPolicy, ShardReport, ShardStage, ShardedDesign, ShardedExecutor,
+};
 pub use crate::sim::Backend;

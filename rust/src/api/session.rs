@@ -19,6 +19,7 @@ use std::cell::OnceCell;
 use crate::compiler::{self, CompileOutcome, CompileRequest, DesignPoint};
 use crate::config::Target;
 use crate::perf::{summarize, AcceleratorParams, PerfSummary};
+use crate::shard::{ShardPolicy, ShardedDesign};
 use crate::sim::{generate_weights, ModelExecutor};
 use crate::util::json::Json;
 
@@ -157,6 +158,19 @@ impl Session {
             baseline: baseline_summary,
             points,
         }
+    }
+
+    /// Compile for the session's frame-rate target, then partition the
+    /// model across `n` pipeline stages with per-shard parameter
+    /// co-search (balanced min-max partition; see
+    /// [`Session::compile_sharded_with`] for other policies).
+    pub fn compile_sharded(&self, n: usize) -> Result<ShardedDesign> {
+        self.compile_sharded_with(n, ShardPolicy::Balanced)
+    }
+
+    /// [`Session::compile_sharded`] under an explicit partition policy.
+    pub fn compile_sharded_with(&self, n: usize, policy: ShardPolicy) -> Result<ShardedDesign> {
+        self.compile()?.shards_with(n, policy)
     }
 
     /// Paper Table 5 rows for this session's (model, device): the baseline
@@ -330,6 +344,31 @@ impl CompiledDesign {
     /// what analytic serving workers charge per frame.
     pub fn frame_latency_s(&self) -> f64 {
         1.0 / self.design.summary.fps
+    }
+
+    /// Partition this design's model across `n` pipeline stages
+    /// (balanced min-max) and co-search each stage's accelerator
+    /// parameters under the per-shard budget. The returned
+    /// [`ShardedDesign`] carries one `AcceleratorParams` + analytic
+    /// summary per stage, sized inter-stage FIFOs, the steady-state
+    /// throughput bound, and hangs the discrete-event pipeline
+    /// simulation (`.simulate_pipeline(frames)` / `.report(frames)`) and
+    /// the functional stage-by-stage executor off it.
+    pub fn shards(&self, n: usize) -> Result<ShardedDesign> {
+        self.shards_with(n, ShardPolicy::Balanced)
+    }
+
+    /// [`CompiledDesign::shards`] under an explicit partition policy.
+    pub fn shards_with(&self, n: usize, policy: ShardPolicy) -> Result<ShardedDesign> {
+        crate::shard::co_search(
+            &self.target.model,
+            &self.target.device,
+            self.act_bits,
+            &self.design,
+            n,
+            policy,
+        )
+        .map_err(VaqfError::search)
     }
 }
 

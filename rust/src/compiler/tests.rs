@@ -181,7 +181,7 @@ fn table6_has_measured_and_quoted_rows() {
     let ours: Vec<_> = rows6.iter().filter(|r| r.measured).collect();
     let best = ours
         .iter()
-        .max_by(|a, b| a.fps_per_w.partial_cmp(&b.fps_per_w).unwrap())
+        .max_by(|a, b| a.fps_per_w.total_cmp(&b.fps_per_w))
         .unwrap();
     assert!(best.implementation.contains("W1A6"), "{}", best.implementation);
     let t = render_table6(&rows6);

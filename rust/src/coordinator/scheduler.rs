@@ -172,8 +172,7 @@ fn least_busy_worker(idle: &[WorkerSnapshot]) -> usize {
         .enumerate()
         .min_by(|(_, a), (_, b)| {
             a.busy_s
-                .partial_cmp(&b.busy_s)
-                .unwrap()
+                .total_cmp(&b.busy_s)
                 .then(a.worker.cmp(&b.worker))
         })
         .map(|(i, _)| i)
@@ -252,9 +251,8 @@ impl DispatchPolicy for WeightedSla {
             .enumerate()
             .min_by(|(_, a), (_, b)| {
                 a.head_deadline
-                    .partial_cmp(&b.head_deadline)
-                    .unwrap()
-                    .then(a.head_emitted_at.partial_cmp(&b.head_emitted_at).unwrap())
+                    .total_cmp(&b.head_deadline)
+                    .then(a.head_emitted_at.total_cmp(&b.head_emitted_at))
                     .then(a.stream.cmp(&b.stream))
             })
             .map(|(i, _)| i)

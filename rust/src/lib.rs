@@ -33,6 +33,7 @@
 //! | [`compiler`] | §3 + §5.3.2 the VAQF compilation step |
 //! | [`sim`] | §5.1/§5.2 compute engine + layer processing |
 //! | [`runtime`] | PJRT execution of AOT artifacts (functional reference) |
+//! | [`shard`] | pipeline-parallel multi-accelerator sharding (partition → per-shard co-search → pipeline DES) |
 //! | [`coordinator`] | serving: bounded queues, multi-stream scheduler, wall/virtual clocks |
 //! | [`config`] | TOML/JSON config system for models/devices/targets |
 //!
@@ -51,6 +52,7 @@ pub mod model;
 pub mod perf;
 pub mod quant;
 pub mod runtime;
+pub mod shard;
 pub mod sim;
 pub mod util;
 

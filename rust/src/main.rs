@@ -11,6 +11,9 @@
 //!               [--streams N] [--workers W] [--policy round-robin|least-loaded|weighted-sla]
 //!               [--clock wall|virtual] [--sla-ms MS] [--analytic] [--realtime]
 //!               [--kernels scalar|packed] [--threads N] [--config target.json]
+//! vaqf shard    --model deit-base --device zcu102 --shards 2
+//!               [--policy balanced|even|min-latency] [--bits B] [--frames N]
+//!               [--fifo-depth F] [--json]
 //! ```
 //!
 //! Every subcommand is a thin layer over `vaqf::api`: flags feed a
@@ -24,8 +27,9 @@
 
 use vaqf::api::{
     render_table5, render_table6, table6_rows, PjrtRuntime, Result, ServeClock, ServeConfig,
-    Session, TargetSpec, VaqfError,
+    Session, ShardPolicy, TargetSpec, VaqfError,
 };
+use vaqf::shard::simulate_pipeline;
 use vaqf::model::micro;
 use vaqf::runtime::Manifest;
 use vaqf::util::cli::Args;
@@ -164,7 +168,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         let top = logits
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap_or(0);
         println!(
@@ -286,7 +290,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: vaqf <compile|search|report|codegen|simulate|serve> [--options]
+/// `vaqf shard` — partition the compiled design across N accelerator
+/// instances, co-search each stage, and run the discrete-event pipeline
+/// simulation on the virtual clock.
+fn cmd_shard(args: &Args) -> Result<()> {
+    let session = cli_session(args, "backend")?;
+    let shards = args.get_u64("shards").map_err(cli)?.unwrap_or(2) as usize;
+    let policy_name = args.get_or("policy", "balanced");
+    let policy = ShardPolicy::from_name(policy_name).ok_or_else(|| {
+        VaqfError::config(format!(
+            "unknown shard policy {policy_name} (expected {})",
+            ShardPolicy::NAMES
+        ))
+    })?;
+    let frames = args.get_u64("frames").map_err(cli)?.unwrap_or(240);
+    if frames == 0 {
+        return Err(VaqfError::config("--frames must be at least 1"));
+    }
+    let fifo_depth = args.get_u64("fifo-depth").map_err(cli)?;
+    let bits = args.get_u64("bits").map_err(cli)?.map(|b| b as u8);
+
+    // `--bits` pins the precision; otherwise the §3 frame-rate search
+    // picks it, exactly like `vaqf compile`.
+    let design = match bits {
+        Some(b) => session.compile_for_bits(Some(b))?,
+        None => session.compile()?,
+    };
+    let sharded = design.shards_with(shards, policy)?;
+    let report = vaqf::shard::ShardReport {
+        pipeline: simulate_pipeline(&sharded, frames, fifo_depth),
+        design: sharded,
+    };
+    print!("{}", report.render());
+    if args.has_flag("json") {
+        println!("{}", report.to_json().pretty());
+    }
+    Ok(())
+}
+
+const USAGE: &str = "usage: vaqf <compile|search|report|codegen|simulate|serve|shard> [--options]
 see README.md for per-command options";
 
 fn main() {
@@ -299,6 +341,7 @@ fn main() {
         "codegen" => cmd_codegen(&args),
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
+        "shard" => cmd_shard(&args),
         _ => {
             eprintln!("{USAGE}");
             std::process::exit(2);

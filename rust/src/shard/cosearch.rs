@@ -1,0 +1,347 @@
+//! Per-shard accelerator co-search: one `AcceleratorParams` per pipeline
+//! stage, each optimized by the existing compiler search over the stage's
+//! own layer slice and checked against the per-shard resource budget.
+//!
+//! The deployment model is an `N`-instance pipeline (N boards, or N
+//! fully-provisioned die partitions): the pipeline's total budget is `N ×`
+//! the device inventory and each stage must fit its `1/N` slice — i.e.
+//! one device budget, DMA/control overhead included. (Slicing a *single*
+//! die's budget `N` ways instead is a dead end in this resource model:
+//! the fixed AXI/control LUT overhead is charged per instance, so a half
+//! budget leaves almost nothing for MAC arrays — measured in
+//! EXPERIMENTS.md §Sharding.)
+
+use std::ops::Range;
+
+use crate::compiler::{optimize_baseline, optimize_for_bits, DesignPoint};
+use crate::hw::{Device, ResourceBudget};
+use crate::model::{VitConfig, VitStructure};
+use crate::perf::{model_cycles, resources_for, summarize, AcceleratorParams, PerfSummary};
+use crate::Cycles;
+
+use super::partition::{max_stage_cost, partition, segments_for, Segment, ShardPolicy};
+
+/// The inter-stage FIFO feeding one pipeline stage, sized from the
+/// token-embedding transfer volume (the `F × M` 16-bit residual stream —
+/// stage boundaries sit between whole segments precisely so this is the
+/// entire payload; stage 0 receives raw patches instead).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FifoSpec {
+    /// Depth in frames (2 ⇒ the link is double-buffered: one frame
+    /// draining into the stage while the next fills).
+    pub frames: u64,
+    /// Payload bits per frame.
+    pub bits_per_frame: u64,
+    /// BRAM18k blocks the FIFO occupies on the receiving shard.
+    pub bram18k: u64,
+    /// Cycles to move one frame across the link (`axi_ports_in` ports of
+    /// `axi_port_bits` each, one beat per cycle).
+    pub transfer_cycles: Cycles,
+}
+
+impl FifoSpec {
+    fn new(bits_per_frame: u64, frames: u64, device: &Device) -> FifoSpec {
+        let link_bits = u64::from(device.axi_port_bits) * device.axi_ports_in;
+        FifoSpec {
+            frames,
+            bits_per_frame,
+            bram18k: (frames * bits_per_frame).div_ceil(18 * 1024),
+            transfer_cycles: bits_per_frame.div_ceil(link_bits),
+        }
+    }
+}
+
+/// One pipeline stage of a [`ShardedDesign`]: a contiguous segment range,
+/// its co-searched accelerator parameters, and its analytic performance
+/// on the stage's layer slice.
+#[derive(Debug, Clone)]
+pub struct ShardStage {
+    pub index: usize,
+    /// Segment indices (into [`ShardedDesign::segments`]) this stage runs.
+    pub segment_range: Range<usize>,
+    /// Structure-layer indices this stage runs.
+    pub layer_range: Range<usize>,
+    /// Human-readable coverage, e.g. `embed..enc3`.
+    pub label: String,
+    /// The stage's own co-searched accelerator parameterization.
+    pub params: AcceleratorParams,
+    /// Analytic summary of this stage's layer slice under `params` on the
+    /// per-shard device (FPS here is the stage's isolated rate).
+    pub summary: PerfSummary,
+    /// Cycles per frame through this stage's layers under `params`.
+    pub compute_cycles: Cycles,
+    /// The FIFO feeding this stage.
+    pub fifo: FifoSpec,
+}
+
+impl ShardStage {
+    /// Per-frame service time: input transfer + compute. The pipeline's
+    /// steady-state cadence is the maximum of this over stages.
+    pub fn service_cycles(&self) -> Cycles {
+        self.compute_cycles + self.fifo.transfer_cycles
+    }
+}
+
+/// A model compiled onto an `n`-stage accelerator pipeline.
+#[derive(Debug, Clone)]
+pub struct ShardedDesign {
+    pub model: VitConfig,
+    /// The per-shard device (one board / fully-provisioned die slice).
+    pub device: Device,
+    pub act_bits: Option<u8>,
+    pub policy: ShardPolicy,
+    /// The partitionable segments with their reference cycle costs.
+    pub segments: Vec<Segment>,
+    pub stages: Vec<ShardStage>,
+    /// The unsharded design the partition was costed against (and the
+    /// speedup baseline).
+    pub reference: DesignPoint,
+}
+
+impl ShardedDesign {
+    pub fn shards(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// The steady-state bottleneck: the largest per-stage service time.
+    pub fn bottleneck_cycles(&self) -> Cycles {
+        self.stages
+            .iter()
+            .map(ShardStage::service_cycles)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Steady-state pipeline throughput (one frame per bottleneck
+    /// cadence once the pipeline is full).
+    pub fn steady_state_fps(&self) -> f64 {
+        self.device.fps(self.bottleneck_cycles())
+    }
+
+    /// Zero-contention per-frame latency: one pass through every stage
+    /// (queue waits come from the discrete-event simulation).
+    pub fn fill_cycles(&self) -> Cycles {
+        self.stages.iter().map(ShardStage::service_cycles).sum()
+    }
+
+    /// Steady-state speedup over the unsharded reference design.
+    pub fn speedup_vs_unsharded(&self) -> f64 {
+        self.steady_state_fps() / self.reference.summary.fps
+    }
+
+    /// The budget each stage must fit: one device inventory — the `1/N`
+    /// slice of the pipeline's total (`N` boards).
+    pub fn per_shard_budget(&self) -> &ResourceBudget {
+        &self.device.budget
+    }
+
+    /// The partition's bottleneck in reference-parameterization cycles
+    /// (what the partitioner optimized, before per-shard re-search).
+    pub fn partition_bottleneck_cycles(&self) -> Cycles {
+        let costs: Vec<Cycles> = self.segments.iter().map(|s| s.cycles).collect();
+        let ranges: Vec<Range<usize>> = self
+            .stages
+            .iter()
+            .map(|s| s.segment_range.clone())
+            .collect();
+        max_stage_cost(&costs, &ranges)
+    }
+}
+
+/// Slice a structure to a contiguous layer range, keeping the config and
+/// quantization regime (the resource/latency model only reads `layers`
+/// and `act_bits`).
+fn slice_structure(structure: &VitStructure, layers: &Range<usize>) -> VitStructure {
+    VitStructure {
+        config: structure.config.clone(),
+        act_bits: structure.act_bits,
+        layers: structure.layers[layers.clone()].to_vec(),
+    }
+}
+
+/// Partition `model` into `n` pipeline stages and co-search each stage's
+/// accelerator parameters under the per-shard budget.
+///
+/// `reference` is the unsharded design at the same precision: its
+/// parameterization prices the per-layer cycle breakdown the partitioner
+/// balances, and its predicted FPS is the speedup baseline.
+pub fn co_search(
+    model: &VitConfig,
+    device: &Device,
+    act_bits: Option<u8>,
+    reference: &DesignPoint,
+    n: usize,
+    policy: ShardPolicy,
+) -> anyhow::Result<ShardedDesign> {
+    let structure = model.structure(act_bits);
+    let unquantized = model.structure(None);
+
+    // Cost every layer under the unsharded reference parameterization,
+    // fold into segments, partition.
+    let (_, per_layer) = model_cycles(&structure, &reference.params, device);
+    let segments = segments_for(&structure, &per_layer);
+    let costs: Vec<Cycles> = segments.iter().map(|s| s.cycles).collect();
+    let ranges = partition(&costs, n, policy)?;
+
+    // Token-embedding payload between stages; raw patches into stage 0.
+    let f = model.tokens() as u64;
+    let m = model.embed_dim as u64;
+    let residual_bits = f * m * 16;
+    let patch_bits =
+        (model.num_patches() * model.in_chans * model.patch_size * model.patch_size) as u64 * 16;
+
+    let mut stages = Vec::with_capacity(n);
+    for (index, seg_range) in ranges.into_iter().enumerate() {
+        let layer_range =
+            segments[seg_range.start].layers.start..segments[seg_range.end - 1].layers.end;
+        let label = if seg_range.len() == 1 {
+            segments[seg_range.start].label.clone()
+        } else {
+            format!(
+                "{}..{}",
+                segments[seg_range.start].label,
+                segments[seg_range.end - 1].label
+            )
+        };
+        let sub = slice_structure(&structure, &layer_range);
+        let sub_unq = slice_structure(&unquantized, &layer_range);
+
+        // The stage's input FIFO lives in the receiving shard's BRAM, so
+        // the parameter search runs against a budget with those blocks
+        // already debited — compute + FIFO together must fit the board.
+        let fifo_bits = if index == 0 { patch_bits } else { residual_bits };
+        let fifo = FifoSpec::new(fifo_bits, 2, device);
+        anyhow::ensure!(
+            fifo.bram18k < device.budget.bram18k,
+            "shard {index} ({label}): input FIFO alone ({} BRAM18k) exceeds {}'s BRAM",
+            fifo.bram18k,
+            device.name
+        );
+        let mut stage_device = device.clone();
+        stage_device.budget.bram18k -= fifo.bram18k;
+
+        // Guard the baseline search's panic-on-infeasible: if even the
+        // smallest tiling cannot place, surface a typed error instead.
+        let g = (device.axi_port_bits / 16) as u64;
+        let n_h = sub_unq.layers.iter().map(|l| l.heads as u64).max().unwrap_or(1);
+        let minimal = AcceleratorParams::baseline(g, 1, g, AcceleratorParams::p_h_for(n_h));
+        anyhow::ensure!(
+            resources_for(&sub_unq, &minimal, &stage_device).feasible(&stage_device),
+            "shard {index} ({label}) cannot fit on {} even at minimal tiling",
+            device.name
+        );
+        let baseline = optimize_baseline(&sub_unq, &stage_device);
+        let params = match act_bits {
+            None => baseline,
+            Some(bits) => optimize_for_bits(&sub, &baseline, &stage_device, bits)?.params,
+        };
+        // Summarize against the undivided board inventory so every
+        // stage's utilization percentages share one denominator (the
+        // FIFO-debited search guarantees compute + FIFO fit it; the
+        // budget never enters the cycle model, so cycles are unchanged).
+        let summary = match act_bits {
+            None => summarize(&sub_unq, &params, device),
+            Some(_) => summarize(&sub, &params, device),
+        };
+        stages.push(ShardStage {
+            index,
+            segment_range: seg_range,
+            layer_range,
+            label,
+            params,
+            compute_cycles: summary.cycles_per_frame,
+            summary,
+            fifo,
+        });
+    }
+
+    Ok(ShardedDesign {
+        model: model.clone(),
+        device: device.clone(),
+        act_bits,
+        policy,
+        segments,
+        stages,
+        reference: reference.clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::zcu102;
+    use crate::model::micro;
+
+    fn micro_reference(act_bits: Option<u8>) -> (VitConfig, Device, DesignPoint) {
+        let model = micro();
+        let device = zcu102();
+        let baseline = optimize_baseline(&model.structure(None), &device);
+        let design = match act_bits {
+            None => DesignPoint {
+                params: baseline,
+                summary: summarize(&model.structure(None), &baseline, &device),
+                adjustments: 0,
+            },
+            Some(b) => {
+                optimize_for_bits(&model.structure(Some(b)), &baseline, &device, b).unwrap()
+            }
+        };
+        (model, device, design)
+    }
+
+    #[test]
+    fn micro_two_shards_cover_all_layers() {
+        let (model, device, reference) = micro_reference(Some(8));
+        let d = co_search(&model, &device, Some(8), &reference, 2, ShardPolicy::Balanced)
+            .unwrap();
+        assert_eq!(d.shards(), 2);
+        assert_eq!(d.stages[0].layer_range.start, 0);
+        assert_eq!(
+            d.stages.last().unwrap().layer_range.end,
+            model.structure(Some(8)).layers.len()
+        );
+        assert_eq!(d.stages[0].layer_range.end, d.stages[1].layer_range.start);
+        // Every stage fits its per-shard budget — including the input
+        // FIFO's BRAM, which the co-search debits before placing.
+        for s in &d.stages {
+            assert!(s.summary.utilization.fits(d.per_shard_budget()));
+            assert!(
+                s.summary.utilization.bram18k + s.fifo.bram18k
+                    <= d.per_shard_budget().bram18k
+            );
+        }
+        // Pipelining cannot be slower than the bottleneck bound says.
+        assert!(d.steady_state_fps() > 0.0);
+        assert!(d.fill_cycles() >= d.bottleneck_cycles());
+    }
+
+    #[test]
+    fn single_shard_matches_unsharded_reference_rate() {
+        let (model, device, reference) = micro_reference(Some(8));
+        let d = co_search(&model, &device, Some(8), &reference, 1, ShardPolicy::Balanced)
+            .unwrap();
+        // One stage re-searched over the full model on the full budget:
+        // same search space as the reference ⇒ same predicted cycles; the
+        // only overhead is the input transfer.
+        assert_eq!(d.stages[0].compute_cycles, reference.summary.cycles_per_frame);
+        assert!(d.speedup_vs_unsharded() <= 1.0);
+        assert!(d.speedup_vs_unsharded() > 0.9);
+    }
+
+    #[test]
+    fn unquantized_sharding_works_too() {
+        let (model, device, reference) = micro_reference(None);
+        let d = co_search(&model, &device, None, &reference, 2, ShardPolicy::Even).unwrap();
+        assert_eq!(d.shards(), 2);
+        assert!(d.stages.iter().all(|s| s.params.act_bits.is_none()));
+    }
+
+    #[test]
+    fn too_many_shards_for_model_errors() {
+        let (model, device, reference) = micro_reference(Some(8));
+        // micro has depth 2 ⇒ 4 segments; 5 shards cannot be non-empty.
+        assert!(
+            co_search(&model, &device, Some(8), &reference, 5, ShardPolicy::Balanced).is_err()
+        );
+    }
+}

@@ -1,0 +1,192 @@
+//! Functional execution of a sharded design: one cycle-level
+//! [`ModelExecutor`] per stage, frames handed stage-to-stage through the
+//! `F × M` residual stream — exactly the payload the inter-stage FIFOs
+//! carry.
+//!
+//! Stage boundaries sit between whole segments (embed / encoder blocks /
+//! head), and the engine's numerics depend only on the weights, the
+//! activation precision and the kernel backend — never on the tiling
+//! parameters — so pushing a frame through the stages in order is
+//! **bit-identical** to [`ModelExecutor::run_frame`] on the unsharded
+//! model (property-swept in `rust/tests/property_suite.rs`). What *does*
+//! differ per stage is the cycle accounting: each stage's trace is priced
+//! by its own co-searched parameterization.
+
+use std::ops::Range;
+
+use crate::sim::{generate_weights, Backend, LayerTrace, ModelExecutor};
+use crate::Cycles;
+
+use super::cosearch::ShardedDesign;
+
+/// One stage's executor plus its slice of the model.
+struct StageExec {
+    exec: ModelExecutor,
+    /// Encoder blocks this stage runs (block = six structure layers).
+    blocks: Range<usize>,
+    has_embed: bool,
+    has_head: bool,
+}
+
+/// Cycle accounting for one stage of a sharded frame.
+#[derive(Debug, Clone)]
+pub struct StageTrace {
+    pub stage: usize,
+    pub engine_cycles: Cycles,
+    pub host_cycles: Cycles,
+    pub layers: Vec<LayerTrace>,
+}
+
+/// Whole-frame record of a stage-by-stage execution.
+#[derive(Debug, Clone)]
+pub struct ShardedTrace {
+    pub stages: Vec<StageTrace>,
+}
+
+impl ShardedTrace {
+    /// Engine + host cycles summed over every stage (the *work*; the
+    /// pipeline overlaps it across frames).
+    pub fn total_cycles(&self) -> Cycles {
+        self.stages
+            .iter()
+            .map(|s| s.engine_cycles + s.host_cycles)
+            .sum()
+    }
+}
+
+/// Runs frames through the sharded pipeline's stages in order, on the
+/// functional simulator.
+pub struct ShardedExecutor {
+    stages: Vec<StageExec>,
+    depth: usize,
+}
+
+impl ShardedExecutor {
+    /// Build one executor per stage. Every stage holds the same
+    /// deterministic weights (`seed`) and the design's precision; each is
+    /// parameterized (and therefore cycle-priced) by its own co-searched
+    /// [`crate::perf::AcceleratorParams`].
+    ///
+    /// Each stage executor owns a full copy of the model weights and
+    /// prepares its whole `ExecPlan` lazily (N× memory and N× one-time
+    /// packing cost for an N-stage pipeline). That is fine for the
+    /// micro/tiny models this functional cross-check path drives; if
+    /// DeiT-scale sharded *functional* execution becomes a hot path,
+    /// slice the weights and plan to `stage.layer_range` (the throughput
+    /// studies use the analytic pipeline DES, which carries no weights).
+    pub fn new(
+        design: &ShardedDesign,
+        backend: Backend,
+        threads: usize,
+        seed: u64,
+    ) -> ShardedExecutor {
+        let weights = generate_weights(&design.model, seed);
+        let depth = design.model.depth;
+        let stages = design
+            .stages
+            .iter()
+            .map(|stage| {
+                let r = &stage.segment_range;
+                // Segment indices: 0 = embed, 1..=depth = blocks,
+                // depth+1 = head.
+                let blocks = r.start.max(1) - 1..r.end.min(depth + 1) - 1;
+                StageExec {
+                    exec: ModelExecutor::new(
+                        weights.clone(),
+                        design.act_bits,
+                        stage.params,
+                        design.device.clone(),
+                    )
+                    .with_backend(backend)
+                    .with_threads(threads),
+                    blocks,
+                    has_embed: r.start == 0,
+                    has_head: r.end == depth + 2,
+                }
+            })
+            .collect();
+        ShardedExecutor { stages, depth }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Run one frame through every stage in order: logits plus the
+    /// per-stage cycle traces.
+    pub fn run_frame(&mut self, patches: &[f32]) -> (Vec<f32>, ShardedTrace) {
+        let mut residual: Vec<f32> = Vec::new();
+        let mut logits: Option<Vec<f32>> = None;
+        let mut stage_traces = Vec::with_capacity(self.stages.len());
+        let last = self.stages.len() - 1;
+        for (si, st) in self.stages.iter_mut().enumerate() {
+            let mut layers: Vec<LayerTrace> = Vec::new();
+            if st.has_embed {
+                layers.extend(st.exec.stage_embed(patches));
+            } else {
+                st.exec.set_residual(&residual);
+            }
+            layers.extend(st.exec.stage_blocks(st.blocks.clone()));
+            if st.has_head {
+                debug_assert_eq!(si, last, "head runs on the last stage");
+                debug_assert_eq!(st.blocks.end, self.depth, "head follows the final block");
+                let (lg, head_traces) = st.exec.stage_head();
+                layers.extend(head_traces);
+                logits = Some(lg);
+            } else {
+                residual = st.exec.residual().to_vec();
+            }
+            stage_traces.push(StageTrace {
+                stage: si,
+                engine_cycles: layers.iter().map(|t| t.engine_cycles).sum(),
+                host_cycles: layers.iter().map(|t| t.host_cycles).sum(),
+                layers,
+            });
+        }
+        (
+            logits.expect("the last stage holds the classifier head"),
+            ShardedTrace {
+                stages: stage_traces,
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{optimize_baseline, optimize_for_bits};
+    use crate::hw::zcu102;
+    use crate::model::micro;
+    use crate::shard::{co_search, ShardPolicy};
+
+    #[test]
+    fn sharded_logits_match_unsharded_bitwise() {
+        let model = micro();
+        let device = zcu102();
+        let baseline = optimize_baseline(&model.structure(None), &device);
+        let reference =
+            optimize_for_bits(&model.structure(Some(8)), &baseline, &device, 8).unwrap();
+        let seed = 7;
+        let weights = generate_weights(&model, seed);
+        let mut whole = ModelExecutor::new(
+            weights.clone(),
+            Some(8),
+            reference.params,
+            device.clone(),
+        );
+        for n in 1..=3usize {
+            let design =
+                co_search(&model, &device, Some(8), &reference, n, ShardPolicy::Balanced)
+                    .unwrap();
+            let mut sharded = ShardedExecutor::new(&design, Backend::Packed, 1, seed);
+            for frame in 0..2u64 {
+                let patches = weights.synthetic_patches(frame);
+                let (expect, _) = whole.run_frame(&patches);
+                let (got, trace) = sharded.run_frame(&patches);
+                assert_eq!(got, expect, "n={n} frame={frame}");
+                assert_eq!(trace.stages.len(), n);
+            }
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Pipeline-parallel multi-accelerator sharding (the ROADMAP's
+//! "scale further via sharding" direction).
+//!
+//! One VAQF accelerator tops out at whatever a single board reaches at
+//! the chosen precision. This module splits the ViT's layer sequence
+//! across `N` accelerator instances (boards, or fully-provisioned die
+//! partitions) and pipelines frames through the stages:
+//!
+//! ```text
+//! patches ─► [stage 0: embed..enc4] ─FIFO─► [stage 1: enc5..head] ─► logits
+//!                 (own AcceleratorParams)        (own AcceleratorParams)
+//! ```
+//!
+//! * [`partition`] — contiguous min-max / even / min-variance splits of
+//!   the segment sequence (embed / encoder blocks / head), costed with
+//!   the per-layer [`crate::perf::LayerCycles`] breakdown;
+//! * [`co_search`] — the existing compiler parameter search, run per
+//!   shard over the shard's own layer slice against the per-shard
+//!   resource budget, producing a [`ShardedDesign`] (one
+//!   `AcceleratorParams` + analytic summary per stage, inter-stage FIFOs
+//!   sized from the token-embedding transfer volume);
+//! * [`simulate_pipeline`] — a discrete-event simulation of the stage
+//!   pipeline on the coordinator's deterministic
+//!   [`crate::coordinator::VirtualClock`]: fill, steady-state cadence,
+//!   FIFO backpressure, occupancy, per-frame latency percentiles;
+//! * [`ShardedExecutor`] — the functional path: per-stage cycle-level
+//!   executors handing the residual stream along, bit-identical to
+//!   `run_frame` on the unsharded model.
+//!
+//! The facade surfaces this as `api::Session::compile_sharded` /
+//! `api::CompiledDesign::shards`, the CLI as `vaqf shard`.
+
+mod cosearch;
+mod exec;
+mod partition;
+mod pipeline;
+mod report;
+
+pub use cosearch::{co_search, FifoSpec, ShardStage, ShardedDesign};
+pub use exec::{ShardedExecutor, ShardedTrace, StageTrace};
+pub use partition::{max_stage_cost, partition, segments_for, Segment, ShardPolicy};
+pub use pipeline::{simulate_pipeline, PipelineReport, StageOccupancy};
+pub use report::ShardReport;

@@ -1,0 +1,263 @@
+//! Layer partitioner: contiguous min-max / even / min-variance splits of
+//! the model's segment sequence.
+//!
+//! The unit of partitioning is a *segment* — the patch embedding, one
+//! whole encoder block (six structure layers), or the classifier head —
+//! because those are the points where the inter-stage payload is exactly
+//! the `F × M` residual stream (cutting inside a block would ship partial
+//! attention state). Each segment is costed with the per-layer
+//! [`LayerCycles`] breakdown from `perf::cycles` under a reference
+//! parameterization, and the partitioner splits the cost sequence into
+//! `n` contiguous, non-empty ranges.
+
+use std::ops::Range;
+
+use crate::model::VitStructure;
+use crate::perf::LayerCycles;
+use crate::Cycles;
+
+/// How the partitioner balances stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Minimize the maximum stage cost (the steady-state pipeline
+    /// bottleneck) — exact DP over contiguous partitions.
+    Balanced,
+    /// Equal segment *counts* per stage (ignores costs; the naive split).
+    Even,
+    /// Minimize the sum of squared stage costs: same Σ, smoother stages —
+    /// lower queue-wait jitter and per-frame latency spread than pure
+    /// min-max when several partitions tie on the bottleneck.
+    MinLatency,
+}
+
+impl ShardPolicy {
+    /// Policy-name hint for error messages (keep in sync with
+    /// [`ShardPolicy::from_name`]).
+    pub const NAMES: &'static str = "balanced/even/min-latency";
+
+    pub fn from_name(name: &str) -> Option<ShardPolicy> {
+        match name.to_ascii_lowercase().as_str() {
+            "balanced" => Some(ShardPolicy::Balanced),
+            "even" => Some(ShardPolicy::Even),
+            "min-latency" | "min_latency" => Some(ShardPolicy::MinLatency),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardPolicy::Balanced => "balanced",
+            ShardPolicy::Even => "even",
+            ShardPolicy::MinLatency => "min-latency",
+        }
+    }
+}
+
+/// One partitionable unit of the model: a contiguous run of structure
+/// layers with a single cycle cost.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    /// Human-readable label (`embed`, `enc3`, `head`).
+    pub label: String,
+    /// The structure-layer indices this segment covers.
+    pub layers: Range<usize>,
+    /// Engine + host cycles under the reference parameterization.
+    pub cycles: Cycles,
+}
+
+/// Split `structure` into its natural pipeline segments, costing each
+/// with the matching entries of `per_layer` (the
+/// [`crate::perf::model_cycles`] breakdown — one entry per structure
+/// layer).
+pub fn segments_for(structure: &VitStructure, per_layer: &[LayerCycles]) -> Vec<Segment> {
+    assert_eq!(
+        per_layer.len(),
+        structure.layers.len(),
+        "per-layer breakdown must cover every structure layer"
+    );
+    let depth = structure.config.depth;
+    assert_eq!(
+        structure.layers.len(),
+        2 + 6 * depth,
+        "unexpected layer sequence shape"
+    );
+    let cost = |range: &Range<usize>| -> Cycles {
+        per_layer[range.clone()]
+            .iter()
+            .map(|c| c.total + c.host)
+            .sum()
+    };
+    let mut segments = Vec::with_capacity(depth + 2);
+    let embed = 0..1;
+    segments.push(Segment {
+        label: "embed".to_string(),
+        cycles: cost(&embed),
+        layers: embed,
+    });
+    for b in 0..depth {
+        let range = (1 + 6 * b)..(1 + 6 * (b + 1));
+        segments.push(Segment {
+            label: format!("enc{b}"),
+            cycles: cost(&range),
+            layers: range,
+        });
+    }
+    let head = (1 + 6 * depth)..(2 + 6 * depth);
+    segments.push(Segment {
+        label: "head".to_string(),
+        cycles: cost(&head),
+        layers: head,
+    });
+    segments
+}
+
+/// Partition `costs` into exactly `n` contiguous non-empty ranges under
+/// `policy`. Deterministic: a pure function of its inputs (ties broken
+/// toward the earliest cut).
+pub fn partition(
+    costs: &[Cycles],
+    n: usize,
+    policy: ShardPolicy,
+) -> anyhow::Result<Vec<Range<usize>>> {
+    anyhow::ensure!(n > 0, "cannot partition into 0 shards");
+    anyhow::ensure!(
+        n <= costs.len(),
+        "cannot split {} segments into {n} non-empty shards",
+        costs.len()
+    );
+    let ranges = match policy {
+        ShardPolicy::Even => even_partition(costs.len(), n),
+        ShardPolicy::Balanced => dp_partition(costs, n, |max: u128, _sq: u128| max),
+        ShardPolicy::MinLatency => dp_partition(costs, n, |_max: u128, sq: u128| sq),
+    };
+    debug_assert_eq!(ranges.len(), n);
+    debug_assert_eq!(ranges.first().map(|r| r.start), Some(0));
+    debug_assert_eq!(ranges.last().map(|r| r.end), Some(costs.len()));
+    Ok(ranges)
+}
+
+/// The bottleneck (maximum stage cost) of a partition.
+pub fn max_stage_cost(costs: &[Cycles], ranges: &[Range<usize>]) -> Cycles {
+    ranges
+        .iter()
+        .map(|r| costs[r.clone()].iter().sum::<Cycles>())
+        .max()
+        .unwrap_or(0)
+}
+
+/// Equal-count split: the first `len % n` stages get one extra segment.
+fn even_partition(len: usize, n: usize) -> Vec<Range<usize>> {
+    let base = len / n;
+    let extra = len % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0usize;
+    for i in 0..n {
+        let size = base + usize::from(i < extra);
+        out.push(start..start + size);
+        start += size;
+    }
+    out
+}
+
+/// Exact DP over contiguous partitions, minimizing a per-stage objective
+/// folded as `(max stage cost, Σ stage cost², …)`. `objective` picks the
+/// scalar to minimize from the fold of one candidate partition's last
+/// stage combined with the best prefix. Stage counts here are tiny
+/// (≤ depth + 2 segments), so the O(S²·n) table is free.
+///
+/// For `Balanced` this returns a partition whose bottleneck equals the
+/// true optimum over all contiguous `n`-partitions (the property suite
+/// cross-checks it against brute-force enumeration).
+fn dp_partition(
+    costs: &[Cycles],
+    n: usize,
+    objective: fn(u128, u128) -> u128,
+) -> Vec<Range<usize>> {
+    let s = costs.len();
+    let mut prefix = vec![0u128; s + 1];
+    for (i, &c) in costs.iter().enumerate() {
+        prefix[i + 1] = prefix[i] + c as u128;
+    }
+    let seg = |a: usize, b: usize| prefix[b] - prefix[a]; // cost of [a, b)
+
+    // best[k][i]: minimal objective splitting the first `i` segments into
+    // `k` stages; fold state carried per cell as (max, sumsq).
+    const INF: u128 = u128::MAX;
+    let mut best = vec![vec![INF; s + 1]; n + 1];
+    let mut state = vec![vec![(0u128, 0u128); s + 1]; n + 1]; // (max, sumsq)
+    let mut cut = vec![vec![0usize; s + 1]; n + 1];
+    best[0][0] = 0;
+    for k in 1..=n {
+        // Each of the k stages is non-empty: i ranges over k..=s, and the
+        // previous cut j over (k-1)..i.
+        for i in k..=s {
+            for j in (k - 1)..i {
+                if best[k - 1][j] == INF {
+                    continue;
+                }
+                let c = seg(j, i);
+                let (pmax, psq) = state[k - 1][j];
+                let max = pmax.max(c);
+                let sq = psq + c * c;
+                let obj = objective(max, sq);
+                if obj < best[k][i] {
+                    best[k][i] = obj;
+                    state[k][i] = (max, sq);
+                    cut[k][i] = j;
+                }
+            }
+        }
+    }
+    // Walk the cuts back.
+    let mut bounds = vec![s];
+    let mut i = s;
+    for k in (1..=n).rev() {
+        i = cut[k][i];
+        bounds.push(i);
+    }
+    bounds.reverse();
+    bounds.windows(2).map(|w| w[0]..w[1]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split_counts() {
+        let ranges = partition(&[1, 1, 1, 1, 1, 1, 1], 3, ShardPolicy::Even).unwrap();
+        assert_eq!(ranges, vec![0..3, 3..5, 5..7]);
+    }
+
+    #[test]
+    fn balanced_beats_even_on_skewed_costs() {
+        let costs = [10, 1, 1, 1, 1, 1, 1];
+        let bal = partition(&costs, 2, ShardPolicy::Balanced).unwrap();
+        let even = partition(&costs, 2, ShardPolicy::Even).unwrap();
+        assert!(max_stage_cost(&costs, &bal) <= max_stage_cost(&costs, &even));
+        assert_eq!(max_stage_cost(&costs, &bal), 10);
+    }
+
+    #[test]
+    fn n_equals_len_gives_singletons() {
+        let costs = [3, 2, 5];
+        for policy in [ShardPolicy::Balanced, ShardPolicy::Even, ShardPolicy::MinLatency] {
+            let ranges = partition(&costs, 3, policy).unwrap();
+            assert_eq!(ranges, vec![0..1, 1..2, 2..3]);
+        }
+    }
+
+    #[test]
+    fn too_many_shards_is_an_error() {
+        assert!(partition(&[1, 2], 3, ShardPolicy::Balanced).is_err());
+        assert!(partition(&[1, 2], 0, ShardPolicy::Balanced).is_err());
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in [ShardPolicy::Balanced, ShardPolicy::Even, ShardPolicy::MinLatency] {
+            assert_eq!(ShardPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(ShardPolicy::from_name("bogus"), None);
+    }
+}

@@ -1,0 +1,191 @@
+//! Rendering for sharded designs: human-readable table + deterministic
+//! JSON (golden-snapshotted in `rust/tests/golden_files.rs`).
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+use super::cosearch::{ShardStage, ShardedDesign};
+use super::pipeline::PipelineReport;
+
+/// A sharded design paired with one discrete-event pipeline run — what
+/// the `vaqf shard` subcommand and the sharding bench report.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    pub design: ShardedDesign,
+    pub pipeline: PipelineReport,
+}
+
+impl ShardedDesign {
+    /// Run the pipeline simulation and bundle it with the design for
+    /// rendering.
+    pub fn report(&self, frames: u64) -> ShardReport {
+        ShardReport {
+            pipeline: self.simulate_pipeline(frames),
+            design: self.clone(),
+        }
+    }
+}
+
+fn latency_ms_json(s: &Summary) -> Json {
+    Json::obj()
+        .set("p50", s.p50 * 1e3)
+        .set("p95", s.p95 * 1e3)
+        .set("p99", s.p99 * 1e3)
+        .set("mean", s.mean * 1e3)
+        .set("max", s.max * 1e3)
+}
+
+fn stage_json(stage: &ShardStage, design: &ShardedDesign) -> Json {
+    let p = &stage.params;
+    let u = &stage.summary.utilization_pct;
+    Json::obj()
+        .set("stage", stage.index)
+        .set("covers", stage.label.as_str())
+        .set("layers", stage.layer_range.len())
+        .set("segments", stage.segment_range.len())
+        .set(
+            "params",
+            Json::obj()
+                .set("t_m", p.t_m)
+                .set("t_n", p.t_n)
+                .set("t_m_q", p.t_m_q)
+                .set("t_n_q", p.t_n_q)
+                .set("g", p.g)
+                .set("g_q", p.g_q)
+                .set("p_h", p.p_h),
+        )
+        .set("compute_cycles", stage.compute_cycles)
+        .set("transfer_cycles", stage.fifo.transfer_cycles)
+        .set("service_cycles", stage.service_cycles())
+        .set("stage_fps", design.device.fps(stage.service_cycles()))
+        .set(
+            "utilization_pct",
+            Json::obj()
+                .set("dsp", u.dsp)
+                .set("lut", u.lut)
+                .set("bram18k", u.bram18k)
+                .set("ff", u.ff),
+        )
+        .set(
+            "fifo",
+            Json::obj()
+                .set("frames", stage.fifo.frames)
+                .set("bits_per_frame", stage.fifo.bits_per_frame)
+                .set("bram18k", stage.fifo.bram18k),
+        )
+}
+
+impl ShardReport {
+    pub fn to_json(&self) -> Json {
+        let d = &self.design;
+        let p = &self.pipeline;
+        Json::obj()
+            .set("model", d.model.name.as_str())
+            .set("device", d.device.name.as_str())
+            .set("precision", d.reference.summary.label.as_str())
+            .set("shards", d.shards())
+            .set("policy", d.policy.name())
+            .set(
+                "budget_per_shard",
+                Json::obj()
+                    .set("dsp", d.per_shard_budget().dsp)
+                    .set("lut", d.per_shard_budget().lut)
+                    .set("bram18k", d.per_shard_budget().bram18k)
+                    .set("ff", d.per_shard_budget().ff),
+            )
+            .set(
+                "stages",
+                Json::Arr(d.stages.iter().map(|s| stage_json(s, d)).collect()),
+            )
+            .set("unsharded_fps", d.reference.summary.fps)
+            .set("bottleneck_cycles", d.bottleneck_cycles())
+            .set("steady_state_fps", p.steady_fps)
+            .set("overall_fps", p.overall_fps)
+            .set("speedup_vs_unsharded", p.steady_fps / d.reference.summary.fps)
+            .set("frames", p.frames)
+            .set("fill_ms", d.device.cycles_to_seconds(p.fill_cycles) * 1e3)
+            .set("elapsed_ms", d.device.cycles_to_seconds(p.elapsed_cycles) * 1e3)
+            .set("latency_ms", latency_ms_json(&p.latency))
+            .set(
+                "occupancy",
+                Json::Arr(
+                    p.stages
+                        .iter()
+                        .map(|s| {
+                            Json::obj()
+                                .set("stage", s.stage)
+                                .set("served", s.served)
+                                .set("busy_frac", s.busy_frac)
+                                .set("blocked_frac", s.blocked_frac)
+                                .set("mean_queue_wait_cycles", s.mean_queue_wait_cycles)
+                                .set("peak_queue", s.peak_queue)
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let d = &self.design;
+        let p = &self.pipeline;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{} ({}) on {} × {} shards — {} partition",
+            d.model.name,
+            d.reference.summary.label,
+            d.device.name,
+            d.shards(),
+            d.policy.name(),
+        );
+        for s in &d.stages {
+            let u = &s.summary.utilization_pct;
+            let _ = writeln!(
+                out,
+                "  stage {i}: {cov:<14} {layers:>2} layers  {kc:>7} kcycles (+{xf} xfer)  \
+                 {fps:>6.1} FPS alone  DSP {dsp:>4.1}%  LUT {lut:>4.1}%  BRAM {bram:>4.1}%",
+                i = s.index,
+                cov = s.label,
+                layers = s.layer_range.len(),
+                kc = s.compute_cycles / 1000,
+                xf = s.fifo.transfer_cycles,
+                fps = d.device.fps(s.service_cycles()),
+                dsp = u.dsp,
+                lut = u.lut,
+                bram = u.bram18k,
+            );
+        }
+        let _ = writeln!(
+            out,
+            "  pipeline: steady {steady:.1} FPS ({speed:.2}× the {base:.1} FPS unsharded design), \
+             fill {fill:.2} ms",
+            steady = p.steady_fps,
+            speed = p.steady_fps / d.reference.summary.fps,
+            base = d.reference.summary.fps,
+            fill = d.device.cycles_to_seconds(p.fill_cycles) * 1e3,
+        );
+        let _ = writeln!(
+            out,
+            "  per-frame latency  p50 {p50:.2} ms  p95 {p95:.2} ms  p99 {p99:.2} ms  \
+             ({n} frames simulated)",
+            p50 = p.latency.p50 * 1e3,
+            p95 = p.latency.p95 * 1e3,
+            p99 = p.latency.p99 * 1e3,
+            n = p.frames,
+        );
+        for s in &p.stages {
+            let _ = writeln!(
+                out,
+                "  occupancy stage {i}: busy {busy:.0}%  blocked {blk:.0}%  \
+                 mean queue wait {qw:.0} cycles  peak queue {pk}",
+                i = s.stage,
+                busy = 100.0 * s.busy_frac,
+                blk = 100.0 * s.blocked_frac,
+                qw = s.mean_queue_wait_cycles,
+                pk = s.peak_queue,
+            );
+        }
+        out
+    }
+}

@@ -191,6 +191,99 @@ impl ModelExecutor {
         )
     }
 
+    // ---- stage-wise execution (the `shard` pipeline's functional path) ----
+    //
+    // A pipeline stage owns a contiguous run of the model's natural
+    // segments — the patch embedding, whole encoder blocks, the head —
+    // and hands the `F × M` residual stream to the next stage. The three
+    // methods below run exactly the phases `run_frame` composes, on the
+    // same workspace, so `stage_embed + stage_blocks(0..depth) +
+    // stage_head` is bit-identical to one `run_frame` call (property-
+    // tested in `rust/tests/property_suite.rs`).
+
+    /// Run the patch-embedding phase (embed FC + CLS/positional add),
+    /// leaving the residual stream in the workspace. Returns the per-layer
+    /// traces of the phase.
+    pub fn stage_embed(&mut self, patches: &[f32]) -> Vec<LayerTrace> {
+        self.ensure_plan();
+        let plan = self.plan.as_ref().expect("plan just ensured");
+        let mut traces = Vec::with_capacity(1);
+        let mut li = 0usize;
+        embed_phase(
+            &self.engine,
+            &self.structure,
+            plan,
+            &self.weights,
+            &self.config,
+            &mut self.ws,
+            patches,
+            &mut li,
+            &mut traces,
+        );
+        traces
+    }
+
+    /// Run encoder blocks `blocks` (each block is the qkv/attention/proj/
+    /// MLP six-layer group) on the residual stream already in the
+    /// workspace.
+    pub fn stage_blocks(&mut self, blocks: std::ops::Range<usize>) -> Vec<LayerTrace> {
+        assert!(
+            blocks.end <= self.config.depth,
+            "block range {blocks:?} exceeds model depth {}",
+            self.config.depth
+        );
+        self.ensure_plan();
+        let plan = self.plan.as_ref().expect("plan just ensured");
+        let head_threads = self.engine.threads;
+        let mut traces = Vec::with_capacity(6 * blocks.len());
+        let mut li = 1 + 6 * blocks.start;
+        for b in blocks {
+            block_phase(
+                &self.engine,
+                &self.structure,
+                plan,
+                &self.config,
+                &mut self.ws,
+                b,
+                head_threads,
+                &mut li,
+                &mut traces,
+            );
+        }
+        traces
+    }
+
+    /// Run the classifier-head phase on the residual stream already in the
+    /// workspace; returns the logits and the phase's traces.
+    pub fn stage_head(&mut self) -> (Vec<f32>, Vec<LayerTrace>) {
+        self.ensure_plan();
+        let plan = self.plan.as_ref().expect("plan just ensured");
+        let mut traces = Vec::with_capacity(1);
+        let mut li = 1 + 6 * self.config.depth;
+        let logits = head_phase(
+            &self.engine,
+            &self.structure,
+            plan,
+            &self.config,
+            &mut self.ws,
+            &mut li,
+            &mut traces,
+        );
+        (logits, traces)
+    }
+
+    /// The residual stream (`F × M`) — the payload one pipeline stage
+    /// hands to the next.
+    pub fn residual(&self) -> &[f32] {
+        &self.ws.x
+    }
+
+    /// Load a residual stream received from an upstream pipeline stage.
+    pub fn set_residual(&mut self, x: &[f32]) {
+        assert_eq!(x.len(), self.ws.x.len(), "residual stream shape mismatch");
+        self.ws.x.copy_from_slice(x);
+    }
+
     /// Run a batch of frames, amortizing plan + workspace + dispatch:
     /// frames fan out across up to `engine.threads` workers (one
     /// workspace each). Full batches run one thread per frame —
@@ -259,6 +352,191 @@ impl ModelExecutor {
     }
 }
 
+/// Record the trace entry for structure layer `*li` and advance the
+/// walk. The name is a refcounted view of the plan's cached label.
+fn record_layer(
+    structure: &VitStructure,
+    plan: &ExecPlan,
+    li: &mut usize,
+    macs: u64,
+    traces: &mut Vec<LayerTrace>,
+) {
+    debug_assert_eq!(
+        macs,
+        structure.layers[*li].macs(),
+        "MAC mismatch for {}",
+        structure.layers[*li].name
+    );
+    let acct = &plan.timings[*li];
+    traces.push(LayerTrace {
+        name: Arc::clone(&acct.name),
+        engine_cycles: acct.timing.total,
+        host_cycles: acct.host,
+        macs,
+        timing: acct.timing,
+    });
+    *li += 1;
+}
+
+/// Patch embedding (always fixed16) + CLS/positional add (host): fills
+/// the workspace residual stream `ws.x` from raw patches. `*li` must be
+/// the patch-embed layer's structure index (0).
+#[allow(clippy::too_many_arguments)]
+fn embed_phase(
+    engine: &ComputeEngine,
+    structure: &VitStructure,
+    plan: &ExecPlan,
+    weights: &VitWeights,
+    cfg: &VitConfig,
+    ws: &mut Workspace,
+    patches: &[f32],
+    li: &mut usize,
+    traces: &mut Vec<LayerTrace>,
+) {
+    let m = cfg.embed_dim;
+    let np = cfg.num_patches();
+    let macs = engine.fc_prepared(patches, &plan.patch, np, &mut ws.fc, &mut ws.pe);
+    record_layer(structure, plan, li, macs, traces);
+    ws.x[..m].copy_from_slice(&weights.cls);
+    ws.x[m..].copy_from_slice(&ws.pe);
+    for (xi, pi) in ws.x.iter_mut().zip(&weights.pos) {
+        *xi += pi;
+    }
+}
+
+/// One encoder block (LN1 → QKV → attention → proj+skip → LN2 → MLP →
+/// skip) over the workspace residual stream. `*li` must be the block's
+/// first structure-layer index (`1 + 6·block`).
+#[allow(clippy::too_many_arguments)]
+fn block_phase(
+    engine: &ComputeEngine,
+    structure: &VitStructure,
+    plan: &ExecPlan,
+    cfg: &VitConfig,
+    ws: &mut Workspace,
+    block: usize,
+    head_threads: usize,
+    li: &mut usize,
+    traces: &mut Vec<LayerTrace>,
+) {
+    let m = cfg.embed_dim;
+    let f = cfg.tokens();
+    let nh = cfg.num_heads;
+    let mh = cfg.head_dim();
+    let Workspace {
+        x,
+        h,
+        qkv,
+        attn_heads,
+        attn_concat,
+        proj_out,
+        mlp1_out,
+        gelu: gelu_buf,
+        mlp2_out,
+        fc,
+        heads,
+        ..
+    } = ws;
+    let lw = &plan.layers[block];
+
+    let attn_scale = 1.0 / (mh as f32).sqrt();
+    let qk_macs_per_head = (f * mh * f) as u64;
+    let sv_macs_per_head = (f * f * mh) as u64;
+
+    // LN1 (host) → QKV.
+    layer_norm_into(x, f, m, h);
+    let macs = engine.fc_prepared(h, &lw.qkv, f, fc, qkv);
+    record_layer(structure, plan, li, macs, traces);
+
+    // Attention, one independent task per head: head `hd` reads the
+    // q/k/v column blocks [0,M), [M,2M), [2M,3M) of the shared QKV
+    // output and writes its own F × M_h slice of `attn_heads` through
+    // its own scratch — embarrassingly parallel, bit-identical to the
+    // serial head loop.
+    {
+        let qkv_ro: &[f32] = qkv;
+        let mut tasks: Vec<(&mut HeadScratch, &mut [f32])> = heads
+            .iter_mut()
+            .zip(attn_heads.chunks_mut(f * mh))
+            .collect();
+        let head_work = qk_macs_per_head + sv_macs_per_head;
+        for_each_task(&mut tasks, head_threads, head_work, |hd, (hs, out)| {
+            let qcol = hd * mh;
+            let kcol = m + hd * mh;
+            let vcol = 2 * m + hd * mh;
+            for i in 0..f {
+                let row = &qkv_ro[i * 3 * m..(i + 1) * 3 * m];
+                hs.q[i * mh..(i + 1) * mh].copy_from_slice(&row[qcol..qcol + mh]);
+                hs.k[i * mh..(i + 1) * mh].copy_from_slice(&row[kcol..kcol + mh]);
+                hs.v[i * mh..(i + 1) * mh].copy_from_slice(&row[vcol..vcol + mh]);
+            }
+            // Kᵀ: mh × f.
+            for i in 0..f {
+                for j in 0..mh {
+                    hs.kt[j * f + i] = hs.k[i * mh + j];
+                }
+            }
+            // Q·Kᵀ on the engine, then host scaling + softmax.
+            engine.attn_matmul(&hs.q, &hs.kt, f, mh, f, &mut hs.attn, &mut hs.s);
+            for v in hs.s.iter_mut() {
+                *v *= attn_scale;
+            }
+            softmax_rows(&mut hs.s, f, f);
+            // S·V on the engine, straight into this head's slice.
+            engine.attn_matmul(&hs.s, &hs.v, f, f, mh, &mut hs.attn, out);
+        });
+    }
+    // Reorder head-major → row-major F × M.
+    for hd in 0..nh {
+        let head_out = &attn_heads[hd * f * mh..(hd + 1) * f * mh];
+        for i in 0..f {
+            attn_concat[i * m + hd * mh..i * m + (hd + 1) * mh]
+                .copy_from_slice(&head_out[i * mh..(i + 1) * mh]);
+        }
+    }
+    record_layer(structure, plan, li, qk_macs_per_head * nh as u64, traces);
+    record_layer(structure, plan, li, sv_macs_per_head * nh as u64, traces);
+
+    // Projection + skip.
+    let macs = engine.fc_prepared(attn_concat, &lw.proj, f, fc, proj_out);
+    record_layer(structure, plan, li, macs, traces);
+    for (xi, pi) in x.iter_mut().zip(proj_out.iter()) {
+        *xi += pi;
+    }
+
+    // LN2 → MLP → skip.
+    layer_norm_into(x, f, m, h);
+    let macs = engine.fc_prepared(h, &lw.mlp1, f, fc, mlp1_out);
+    record_layer(structure, plan, li, macs, traces);
+    for (g, &v) in gelu_buf.iter_mut().zip(mlp1_out.iter()) {
+        *g = gelu(v);
+    }
+    let macs = engine.fc_prepared(gelu_buf, &lw.mlp2, f, fc, mlp2_out);
+    record_layer(structure, plan, li, macs, traces);
+    for (xi, mi) in x.iter_mut().zip(mlp2_out.iter()) {
+        *xi += mi;
+    }
+}
+
+/// Classifier head: LN(x[0]) @ W_out (always fixed16). `*li` must be the
+/// head layer's structure index (`1 + 6·depth`).
+fn head_phase(
+    engine: &ComputeEngine,
+    structure: &VitStructure,
+    plan: &ExecPlan,
+    cfg: &VitConfig,
+    ws: &mut Workspace,
+    li: &mut usize,
+    traces: &mut Vec<LayerTrace>,
+) -> Vec<f32> {
+    let m = cfg.embed_dim;
+    layer_norm_into(&ws.x[..m], 1, m, &mut ws.cls);
+    let mut logits = vec![0.0f32; cfg.num_classes];
+    let macs = engine.fc_prepared(&ws.cls, &plan.head, 1, &mut ws.fc, &mut logits);
+    record_layer(structure, plan, li, macs, traces);
+    logits
+}
+
 /// One frame through the prepared plan, using `ws` as the buffer arena.
 /// `head_threads` caps the attention fan-out (inside batch workers it is
 /// the worker's share of the thread pool — 1 for full batches).
@@ -276,141 +554,24 @@ fn execute_frame(
     patches: &[f32],
     head_threads: usize,
 ) -> (Vec<f32>, ExecTrace) {
-    let m = cfg.embed_dim;
-    let f = cfg.tokens();
-    let np = cfg.num_patches();
-    let nh = cfg.num_heads;
-    let mh = cfg.head_dim();
-    let Workspace {
-        x,
-        h,
-        pe,
-        qkv,
-        attn_heads,
-        attn_concat,
-        proj_out,
-        mlp1_out,
-        gelu: gelu_buf,
-        mlp2_out,
-        cls,
-        fc,
-        heads,
-    } = ws;
-
     let mut traces: Vec<LayerTrace> = Vec::with_capacity(structure.layers.len());
     let mut li = 0usize;
-    let record = |li: &mut usize, macs: u64, traces: &mut Vec<LayerTrace>| {
-        debug_assert_eq!(
-            macs,
-            structure.layers[*li].macs(),
-            "MAC mismatch for {}",
-            structure.layers[*li].name
+
+    embed_phase(engine, structure, plan, weights, cfg, ws, patches, &mut li, &mut traces);
+    for block in 0..cfg.depth {
+        block_phase(
+            engine,
+            structure,
+            plan,
+            cfg,
+            ws,
+            block,
+            head_threads,
+            &mut li,
+            &mut traces,
         );
-        let acct = &plan.timings[*li];
-        traces.push(LayerTrace {
-            name: Arc::clone(&acct.name),
-            engine_cycles: acct.timing.total,
-            host_cycles: acct.host,
-            macs,
-            timing: acct.timing,
-        });
-        *li += 1;
-    };
-
-    // ---- patch embedding (always fixed16) + CLS/pos (host) ----------
-    let macs = engine.fc_prepared(patches, &plan.patch, np, fc, pe);
-    record(&mut li, macs, &mut traces);
-    x[..m].copy_from_slice(&weights.cls);
-    x[m..].copy_from_slice(pe);
-    for (xi, pi) in x.iter_mut().zip(&weights.pos) {
-        *xi += pi;
     }
-
-    // ---- encoder layers ----------------------------------------------
-    let attn_scale = 1.0 / (mh as f32).sqrt();
-    let qk_macs_per_head = (f * mh * f) as u64;
-    let sv_macs_per_head = (f * f * mh) as u64;
-    for lw in &plan.layers {
-        // LN1 (host) → QKV.
-        layer_norm_into(x, f, m, h);
-        let macs = engine.fc_prepared(h, &lw.qkv, f, fc, qkv);
-        record(&mut li, macs, &mut traces);
-
-        // Attention, one independent task per head: head `hd` reads the
-        // q/k/v column blocks [0,M), [M,2M), [2M,3M) of the shared QKV
-        // output and writes its own F × M_h slice of `attn_heads` through
-        // its own scratch — embarrassingly parallel, bit-identical to the
-        // serial head loop.
-        {
-            let qkv_ro: &[f32] = qkv;
-            let mut tasks: Vec<(&mut HeadScratch, &mut [f32])> = heads
-                .iter_mut()
-                .zip(attn_heads.chunks_mut(f * mh))
-                .collect();
-            let head_work = qk_macs_per_head + sv_macs_per_head;
-            for_each_task(&mut tasks, head_threads, head_work, |hd, (hs, out)| {
-                let qcol = hd * mh;
-                let kcol = m + hd * mh;
-                let vcol = 2 * m + hd * mh;
-                for i in 0..f {
-                    let row = &qkv_ro[i * 3 * m..(i + 1) * 3 * m];
-                    hs.q[i * mh..(i + 1) * mh].copy_from_slice(&row[qcol..qcol + mh]);
-                    hs.k[i * mh..(i + 1) * mh].copy_from_slice(&row[kcol..kcol + mh]);
-                    hs.v[i * mh..(i + 1) * mh].copy_from_slice(&row[vcol..vcol + mh]);
-                }
-                // Kᵀ: mh × f.
-                for i in 0..f {
-                    for j in 0..mh {
-                        hs.kt[j * f + i] = hs.k[i * mh + j];
-                    }
-                }
-                // Q·Kᵀ on the engine, then host scaling + softmax.
-                engine.attn_matmul(&hs.q, &hs.kt, f, mh, f, &mut hs.attn, &mut hs.s);
-                for v in hs.s.iter_mut() {
-                    *v *= attn_scale;
-                }
-                softmax_rows(&mut hs.s, f, f);
-                // S·V on the engine, straight into this head's slice.
-                engine.attn_matmul(&hs.s, &hs.v, f, f, mh, &mut hs.attn, out);
-            });
-        }
-        // Reorder head-major → row-major F × M.
-        for hd in 0..nh {
-            let head_out = &attn_heads[hd * f * mh..(hd + 1) * f * mh];
-            for i in 0..f {
-                attn_concat[i * m + hd * mh..i * m + (hd + 1) * mh]
-                    .copy_from_slice(&head_out[i * mh..(i + 1) * mh]);
-            }
-        }
-        record(&mut li, qk_macs_per_head * nh as u64, &mut traces);
-        record(&mut li, sv_macs_per_head * nh as u64, &mut traces);
-
-        // Projection + skip.
-        let macs = engine.fc_prepared(attn_concat, &lw.proj, f, fc, proj_out);
-        record(&mut li, macs, &mut traces);
-        for (xi, pi) in x.iter_mut().zip(proj_out.iter()) {
-            *xi += pi;
-        }
-
-        // LN2 → MLP → skip.
-        layer_norm_into(x, f, m, h);
-        let macs = engine.fc_prepared(h, &lw.mlp1, f, fc, mlp1_out);
-        record(&mut li, macs, &mut traces);
-        for (g, &v) in gelu_buf.iter_mut().zip(mlp1_out.iter()) {
-            *g = gelu(v);
-        }
-        let macs = engine.fc_prepared(gelu_buf, &lw.mlp2, f, fc, mlp2_out);
-        record(&mut li, macs, &mut traces);
-        for (xi, mi) in x.iter_mut().zip(mlp2_out.iter()) {
-            *xi += mi;
-        }
-    }
-
-    // ---- head: LN(x[0]) @ W_out (always fixed16) ----------------------
-    layer_norm_into(&x[..m], 1, m, cls);
-    let mut logits = vec![0.0f32; cfg.num_classes];
-    let macs = engine.fc_prepared(cls, &plan.head, 1, fc, &mut logits);
-    record(&mut li, macs, &mut traces);
+    let logits = head_phase(engine, structure, plan, cfg, ws, &mut li, &mut traces);
     assert_eq!(li, structure.layers.len(), "layer walk drifted");
 
     let total: Cycles = traces.iter().map(|t| t.engine_cycles + t.host_cycles).sum();

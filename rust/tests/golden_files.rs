@@ -83,6 +83,19 @@ fn golden_config_json_micro_w1a8() {
 }
 
 #[test]
+fn golden_shard_report_micro_w1a8() {
+    // The sharded report is a pure function of the design and the frame
+    // count: deterministic partition, per-shard co-search, and the
+    // virtual-clock pipeline DES — so its JSON pins byte-exact.
+    let design = micro_session()
+        .compile_for_bits(Some(8))
+        .expect("micro W1A8 compiles on zcu102");
+    let sharded = design.shards(2).expect("micro splits across 2 shards");
+    let report = sharded.report(32);
+    check_golden("shard_report_micro_w1a8.json", &report.to_json().pretty());
+}
+
+#[test]
 fn golden_report_table5_micro() {
     let session = micro_session();
     let rows = session.table5(&[8, 6]).expect("table5 precisions compile");

@@ -859,3 +859,193 @@ fn prop_structure_macs_invariant_under_quantization() {
         assert!(cfg.structure(Some(8)).space_usage_bits() < cfg.structure(None).space_usage_bits());
     }
 }
+
+// ---------------------------------------------------------------------------
+// Sharding properties: the partitioner and the pipelined functional path.
+// ---------------------------------------------------------------------------
+
+/// Every policy must produce exactly `n` contiguous, non-empty ranges
+/// covering `[0, len)` in order.
+#[test]
+fn prop_partition_contiguous_cover_no_empty_shard() {
+    use vaqf::shard::{partition, ShardPolicy};
+    let strat = prop::tuple2(prop::vec_of(prop::u64s(1, 1_000_000), 1, 16), prop::u64s(1, 16));
+    prop::check("partition_cover", &strat, |(costs, n_raw)| {
+        let n = (*n_raw as usize).clamp(1, costs.len());
+        for policy in [ShardPolicy::Balanced, ShardPolicy::Even, ShardPolicy::MinLatency] {
+            let ranges = partition(costs, n, policy).map_err(|e| e.to_string())?;
+            if ranges.len() != n {
+                return Err(format!("{policy:?}: {} ranges, wanted {n}", ranges.len()));
+            }
+            let mut next = 0usize;
+            for r in &ranges {
+                if r.start != next {
+                    return Err(format!("{policy:?}: gap/overlap at {}", r.start));
+                }
+                if r.is_empty() {
+                    return Err(format!("{policy:?}: empty shard {r:?}"));
+                }
+                next = r.end;
+            }
+            if next != costs.len() {
+                return Err(format!("{policy:?}: covered {next} of {}", costs.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The balanced partition's bottleneck equals the true optimum over all
+/// contiguous partitions (brute-forced over every cut combination).
+#[test]
+fn prop_balanced_partition_bottleneck_is_optimal() {
+    use vaqf::shard::{max_stage_cost, partition, ShardPolicy};
+
+    fn brute_force_best(costs: &[u64], n: usize) -> u64 {
+        // Enumerate every way to place n-1 cuts in the len-1 gaps.
+        fn rec(costs: &[u64], start: usize, stages_left: usize, cur_max: u64, best: &mut u64) {
+            if stages_left == 1 {
+                let last: u64 = costs[start..].iter().sum();
+                *best = (*best).min(cur_max.max(last));
+                return;
+            }
+            // The next stage must leave at least stages_left-1 segments.
+            for end in (start + 1)..=(costs.len() - (stages_left - 1)) {
+                let stage: u64 = costs[start..end].iter().sum();
+                if cur_max.max(stage) >= *best {
+                    continue; // prune: cannot improve
+                }
+                rec(costs, end, stages_left - 1, cur_max.max(stage), best);
+            }
+        }
+        let mut best = u64::MAX;
+        rec(costs, 0, n, 0, &mut best);
+        best
+    }
+
+    let strat = prop::tuple2(prop::vec_of(prop::u64s(1, 10_000), 2, 10), prop::u64s(2, 5));
+    prop::check("balanced_optimal", &strat, |(costs, n_raw)| {
+        let n = (*n_raw as usize).clamp(2, costs.len());
+        let ranges = partition(costs, n, vaqf::shard::ShardPolicy::Balanced)
+            .map_err(|e| e.to_string())?;
+        let got = max_stage_cost(costs, &ranges);
+        let best = brute_force_best(costs, n);
+        if got != best {
+            return Err(format!("bottleneck {got} vs optimal {best}"));
+        }
+        // min-latency may trade bottleneck for smoothness, but never
+        // below the provable lower bound (and even must be no better
+        // than optimal).
+        for policy in [ShardPolicy::Even, ShardPolicy::MinLatency] {
+            let r = partition(costs, n, policy).map_err(|e| e.to_string())?;
+            if max_stage_cost(costs, &r) < best {
+                return Err(format!("{policy:?} beat the proven optimum"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The partition (and the whole per-shard co-search) is a pure function
+/// of its inputs: identical across repeated runs and across concurrent
+/// threads.
+#[test]
+fn prop_partition_deterministic_across_threads() {
+    use vaqf::compiler::{optimize_baseline, optimize_for_bits};
+    use vaqf::shard::{co_search, ShardPolicy};
+    let model = vaqf::model::micro();
+    let dev = zcu102();
+    let baseline = optimize_baseline(&model.structure(None), &dev);
+    let reference = optimize_for_bits(&model.structure(Some(8)), &baseline, &dev, 8).unwrap();
+
+    let run = {
+        let model = model.clone();
+        let dev = dev.clone();
+        let reference = reference.clone();
+        move || {
+            let d = co_search(&model, &dev, Some(8), &reference, 2, ShardPolicy::Balanced)
+                .unwrap();
+            d.stages
+                .iter()
+                .map(|s| (s.layer_range.clone(), s.params, s.compute_cycles))
+                .collect::<Vec<_>>()
+        }
+    };
+    let first = run();
+    let handles: Vec<_> = (0..3)
+        .map(|_| {
+            let run = run.clone();
+            std::thread::spawn(run)
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.join().unwrap(), first, "co-search must be deterministic");
+    }
+}
+
+/// Pushing a frame through the sharded pipeline's stages one by one is
+/// bit-identical to `run_frame` on the unsharded model, for every
+/// backend, thread count, precision and shard count.
+#[test]
+fn prop_sharded_execution_bit_identical_to_unsharded() {
+    use vaqf::compiler::{optimize_baseline, optimize_for_bits, DesignPoint};
+    use vaqf::perf::summarize;
+    use vaqf::shard::{co_search, ShardPolicy, ShardedExecutor};
+
+    let dev = zcu102();
+    let mut rng = SplitMix64::new(0xD15C);
+    for trial in 0..6 {
+        let heads = *[2usize, 4].get(rng.next_below(2) as usize).unwrap();
+        let cfg = VitConfig {
+            name: format!("shard-prop-{trial}"),
+            image_size: 32,
+            patch_size: 8,
+            in_chans: 3,
+            embed_dim: heads * (4 + rng.next_below(6) as usize),
+            depth: 1 + rng.next_below(2) as usize,
+            num_heads: heads,
+            mlp_ratio: 4,
+            num_classes: 2 + rng.next_below(8) as usize,
+        };
+        let act_bits = match rng.next_below(3) {
+            0 => None,
+            1 => Some(4u8),
+            _ => Some(8u8),
+        };
+        let baseline = optimize_baseline(&cfg.structure(None), &dev);
+        let reference = match act_bits {
+            None => DesignPoint {
+                params: baseline,
+                summary: summarize(&cfg.structure(None), &baseline, &dev),
+                adjustments: 0,
+            },
+            Some(b) => {
+                optimize_for_bits(&cfg.structure(Some(b)), &baseline, &dev, b).unwrap()
+            }
+        };
+        let seed = rng.next_u64();
+        let weights = generate_weights(&cfg, seed);
+        // One shard count ≥ 2 per trial (n = 1 is covered by unit tests);
+        // the trials between them sweep 2..=4 stages.
+        let max_shards = cfg.depth + 2;
+        let n = 2 + rng.next_below(max_shards as u64 - 1) as usize;
+        let design =
+            co_search(&cfg, &dev, act_bits, &reference, n, ShardPolicy::Balanced).unwrap();
+        for backend in [Backend::Packed, Backend::Scalar] {
+            let threads = 1 + rng.next_below(2) as usize;
+            let mut whole =
+                ModelExecutor::new(weights.clone(), act_bits, reference.params, dev.clone())
+                    .with_backend(backend)
+                    .with_threads(threads);
+            let mut sharded = ShardedExecutor::new(&design, backend, threads, seed);
+            let patches = weights.synthetic_patches(rng.next_below(100));
+            let (expect, _) = whole.run_frame(&patches);
+            let (got, trace) = sharded.run_frame(&patches);
+            assert_eq!(
+                got, expect,
+                "trial {trial} bits {act_bits:?} n {n} backend {backend:?}"
+            );
+            assert_eq!(trace.stages.len(), n);
+        }
+    }
+}

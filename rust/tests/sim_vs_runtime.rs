@@ -36,7 +36,7 @@ fn micro_params(bits: Option<u8>) -> vaqf::perf::AcceleratorParams {
 fn argmax(v: &[f32]) -> usize {
     v.iter()
         .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .max_by(|a, b| a.1.total_cmp(b.1))
         .map(|(i, _)| i)
         .unwrap()
 }
