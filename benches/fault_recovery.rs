@@ -1,0 +1,215 @@
+//! Bench: fault injection, failover and graceful degradation.
+//!
+//! Compiles the DeiT-base preset for the ZCU102 at the paper's 24 FPS
+//! target, then measures `vaqf::fault` end to end on the deterministic
+//! virtual clock:
+//!
+//! 1. **availability vs crash rate** — a seeded Poisson fault generator
+//!    sweeps mean crash rates over a 4-worker pool; availability, p99
+//!    end-to-end latency and frames lost to the retry budget land per
+//!    rate, with frame conservation asserted on every run;
+//! 2. **degrade vs drop** — under a sustained 3× throttle, a precision
+//!    ladder (W1A8 → W1A6 → W1A4 from the compiled session) is compared
+//!    against plain drop-frames shedding at equal board count; the gated
+//!    claim is `sla_violations_degrade ≤ sla_violations_drop`;
+//! 3. **single crash + hot spare** — the 2-shard pipeline takes one board
+//!    crash with a spare in inventory; the gated claim is
+//!    `availability_single_crash_spare ≥ 0.99`;
+//! 4. **byte reproducibility** — the scheduler and pipeline fault
+//!    scenarios each run twice; `byte_identical` is 1 only when both
+//!    replays render byte-identical JSON.
+//!
+//! Everything lands in `BENCH_faults.json`. Run with
+//! `cargo bench --bench fault_recovery` (append `-- --quick` for the
+//! CI-sized subset).
+
+use vaqf::api::{
+    FailoverStrategy, FaultPlan, GeneratorSpec, MultiServingReport, RecoveryConfig, Result,
+    TargetSpec, VaqfError,
+};
+use vaqf::util::bench::{bench_output_path, JsonReport};
+use vaqf::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let quick = args.has_flag("quick");
+    let frames: u64 = if quick { 300 } else { 1200 };
+    let mut report = JsonReport::new("fault_recovery", if quick { "quick" } else { "full" });
+
+    println!("=== fault recovery: DeiT-base on zcu102 ===\n");
+    let session = TargetSpec::new()
+        .model_preset("deit-base")
+        .device_preset("zcu102")
+        .target_fps(24.0)
+        .session()?;
+    let design = session.compile()?;
+    let base = design.frame_latency_s();
+    println!(
+        "compiled {}: {:.1} FPS per worker predicted\n",
+        design.summary().label,
+        design.summary().fps
+    );
+
+    // -- 1. availability & tail latency vs crash rate -----------------------
+    //
+    // 4 streams × 20 FPS against 4 workers (≈ 70% utilisation when
+    // healthy). Crashes repair after ~200 ms, so higher rates directly
+    // translate into lower availability and fatter tails.
+    println!("--- availability vs crash rate (4 workers, repair ≈ 200 ms) ---");
+    let offered_fps = 20.0;
+    let horizon_s = frames as f64 / offered_fps;
+    let crash_scenario = |crash_rate_hz: f64| -> Result<MultiServingReport> {
+        let plan = FaultPlan::new()
+            .generator(GeneratorSpec {
+                seed: 11,
+                units: 4,
+                horizon_s,
+                crash_rate_hz,
+                mttr_s: 0.2,
+                slow_rate_hz: 0.0,
+                slow_factor: 1.0,
+                corrupt_rate_hz: 0.0,
+            })
+            .recovery(RecoveryConfig {
+                max_retries: 3,
+                ..Default::default()
+            });
+        design
+            .server()
+            .streams(4)
+            .workers(4)
+            .policy("least-loaded")
+            .offered_fps(offered_fps)
+            .frames(frames)
+            .queue_depth(4)
+            .sla_ms(base * 3.0 * 1e3)
+            .analytic()
+            .virtual_clock()
+            .faults(plan)
+            .run()
+    };
+    for crash_rate_hz in [0.0, 0.5, 2.0, 8.0] {
+        let r = crash_scenario(crash_rate_hz)?;
+        let a = &r.aggregate;
+        if a.offered != a.completed + a.dropped + a.failed {
+            return Err(VaqfError::runtime(anyhow::anyhow!(
+                "conservation broke at rate {crash_rate_hz}: {} != {} + {} + {}",
+                a.offered,
+                a.completed,
+                a.dropped,
+                a.failed
+            )));
+        }
+        let f = r.faults.as_ref().expect("fault block present");
+        let tag = format!("crash_rate={crash_rate_hz}");
+        report.metric(&format!("{tag} availability"), f.availability, "frac");
+        report.metric(&format!("{tag} p99_e2e"), a.e2e_latency.p99 * 1e3, "ms");
+        report.metric(&format!("{tag} failed"), a.failed as f64, "frames");
+        report.metric(&format!("{tag} retries"), f.retries as f64, "frames");
+        report.metric(&format!("{tag} mttr"), f.mttr_s * 1e3, "ms");
+    }
+    println!();
+
+    // -- 2. graceful degradation vs drop-frames ------------------------------
+    //
+    // A sustained 3× throttle on every worker pushes the pool past
+    // saturation. Same boards, same traffic: the only difference is
+    // whether the scheduler sheds precision (ladder) or frames (drops).
+    println!("--- degrade ladder vs drop-frames under a 3x throttle ---");
+    let ladder = session.precision_ladder(&[8, 6, 4])?;
+    let throttled = |with_ladder: bool| -> Result<MultiServingReport> {
+        let mut plan = FaultPlan::new();
+        for unit in 0..2 {
+            plan = plan.slow_down_at(0.05, unit, 3.0);
+        }
+        let mut b = design
+            .server()
+            .streams(2)
+            .workers(2)
+            .policy("weighted-sla")
+            .offered_fps(design.summary().fps * 0.8)
+            .frames(frames / 2)
+            .queue_depth(2)
+            .sla_ms(base * 2.5 * 1e3)
+            .analytic()
+            .virtual_clock()
+            .faults(plan);
+        if with_ladder {
+            b = b.degrade_ladder(ladder.clone());
+        }
+        b.run()
+    };
+    let degrade = throttled(true)?;
+    let drop = throttled(false)?;
+    let switches = degrade
+        .faults
+        .as_ref()
+        .map(|f| f.precision_switches.len())
+        .unwrap_or(0);
+    report.metric(
+        "sla_violations_degrade",
+        degrade.aggregate.sla_violations as f64,
+        "frames",
+    );
+    report.metric(
+        "sla_violations_drop",
+        drop.aggregate.sla_violations as f64,
+        "frames",
+    );
+    report.metric(
+        "completed_degrade",
+        degrade.aggregate.completed as f64,
+        "frames",
+    );
+    report.metric("completed_drop", drop.aggregate.completed as f64, "frames");
+    report.metric("precision_switches", switches as f64, "count");
+    println!();
+
+    // -- 3. pipeline: single crash with a hot spare --------------------------
+    println!("--- 2-shard pipeline: one crash, one hot spare ---");
+    let sharded = design.shards(2).map_err(VaqfError::runtime)?;
+    let pipe_frames = if quick { 600 } else { 2000 };
+    let pipe_plan = || {
+        FaultPlan::new()
+            .crash_at(50.0 * base, 0)
+            .recovery(RecoveryConfig {
+                spares: 1,
+                swap_s: base,
+                ..Default::default()
+            })
+    };
+    let pipe = sharded
+        .report_with_faults(pipe_frames, &pipe_plan(), FailoverStrategy::Spare)
+        .map_err(VaqfError::runtime)?;
+    let pf = pipe.pipeline.faults.as_ref().expect("fault block present");
+    report.metric(
+        "availability_single_crash_spare",
+        pf.availability,
+        "frac",
+    );
+    report.metric("hot_swaps", pf.hot_swaps as f64, "count");
+    report.metric("rerun_frames", pf.rerun_frames as f64, "frames");
+    report.metric(
+        "steady_fps_under_crash",
+        pipe.pipeline.steady_fps,
+        "fps",
+    );
+    println!();
+
+    // -- 4. byte reproducibility ---------------------------------------------
+    println!("--- byte reproducibility (two executions each) ---");
+    let sched_a = crash_scenario(2.0)?.to_json().pretty();
+    let sched_b = crash_scenario(2.0)?.to_json().pretty();
+    let pipe_b = sharded
+        .report_with_faults(pipe_frames, &pipe_plan(), FailoverStrategy::Spare)
+        .map_err(VaqfError::runtime)?
+        .to_json()
+        .pretty();
+    let identical = sched_a == sched_b && pipe.to_json().pretty() == pipe_b;
+    report.metric("byte_identical", if identical { 1.0 } else { 0.0 }, "bool");
+
+    report
+        .write(bench_output_path("BENCH_faults.json"))
+        .map_err(VaqfError::runtime)?;
+    Ok(())
+}

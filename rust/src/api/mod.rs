@@ -51,11 +51,18 @@ pub use crate::compiler::{
     render_table5, render_table6, table6_rows, CompileOutcome, DesignPoint, SearchRound,
 };
 pub use crate::config::Target;
-pub use crate::coordinator::{MultiServingReport, ServeConfig, ServingReport, StreamReport};
+pub use crate::coordinator::{
+    DegradeRung, HysteresisConfig, MultiServingReport, ServeConfig, ServingReport, StreamReport,
+};
+pub use crate::fault::{
+    FaultEvent, FaultKind, FaultPlan, FaultSummary, GeneratorSpec, PipelineFaultSummary,
+    RecoveryConfig,
+};
 pub use crate::hw::Device;
 pub use crate::model::VitConfig;
 pub use crate::perf::{AcceleratorParams, PerfSummary};
 pub use crate::shard::{
-    PipelineReport, ShardPolicy, ShardReport, ShardStage, ShardedDesign, ShardedExecutor,
+    FailoverStrategy, PipelineReport, ShardPolicy, ShardReport, ShardStage, ShardedDesign,
+    ShardedExecutor,
 };
 pub use crate::sim::Backend;

@@ -11,9 +11,11 @@
 use std::rc::Rc;
 
 use crate::coordinator::{
-    policy_for, serve, AnalyticWorker, FrameSource, MultiServingReport, Scheduler, ServeConfig,
-    ServingReport, SimWorker, StreamConfig, WorkerModel, POLICY_NAMES,
+    policy_for, serve, AnalyticWorker, DegradeRung, FrameSource, HysteresisConfig,
+    MultiServingReport, Scheduler, ServeConfig, ServingReport, SimWorker, StreamConfig,
+    WorkerModel, POLICY_NAMES,
 };
+use crate::fault::FaultPlan;
 use crate::runtime::{InferenceBackend, InferenceEngine, Manifest, PjrtBackend};
 
 use super::error::{Result, VaqfError};
@@ -60,6 +62,10 @@ pub struct ServerBuilder<'d> {
     worker: ServeWorker,
     source_seed: u64,
     weights_seed: u64,
+    faults: Option<FaultPlan>,
+    /// `(label, frame latency seconds)` per rung, rung 0 first.
+    ladder: Option<Vec<(String, f64)>>,
+    hysteresis: HysteresisConfig,
 }
 
 impl CompiledDesign {
@@ -79,6 +85,9 @@ impl CompiledDesign {
             worker: ServeWorker::Simulated { realtime: false },
             source_seed: 11,
             weights_seed: 11,
+            faults: None,
+            ladder: None,
+            hysteresis: HysteresisConfig::default(),
         }
     }
 }
@@ -162,6 +171,35 @@ impl<'d> ServerBuilder<'d> {
         self
     }
 
+    /// Inject a deterministic fault plan (crashes, slow-downs, frame
+    /// corruption) into the run. Virtual clock only — [`run`] rejects a
+    /// plan under the wall clock.
+    ///
+    /// [`run`]: ServerBuilder::run
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Graceful degradation: a precision ladder of `(label, frame
+    /// latency seconds)` rungs, rung 0 = this design's full precision.
+    /// Sustained SLA misses demote service down the ladder (service
+    /// times scale by `latency_i / latency_0`), recovery promotes back —
+    /// both under the hysteresis rule configured with
+    /// [`ServerBuilder::hysteresis`]. Build the rungs with
+    /// [`Session::precision_ladder`](super::Session::precision_ladder).
+    pub fn degrade_ladder(mut self, rungs: Vec<(String, f64)>) -> Self {
+        self.ladder = Some(rungs);
+        self
+    }
+
+    /// Tune the demote/promote hysteresis for
+    /// [`ServerBuilder::degrade_ladder`].
+    pub fn hysteresis(mut self, cfg: HysteresisConfig) -> Self {
+        self.hysteresis = cfg;
+        self
+    }
+
     /// Execute the run; blocks until every offered frame is served or
     /// dropped.
     pub fn run(self) -> Result<MultiServingReport> {
@@ -175,6 +213,22 @@ impl<'d> ServerBuilder<'d> {
         }
         if self.queue_depth == 0 {
             return Err(VaqfError::config("queue_depth must be at least 1"));
+        }
+        if self.clock != ServeClock::Virtual && (self.faults.is_some() || self.ladder.is_some()) {
+            return Err(VaqfError::config(
+                "fault injection and degrade ladders are deterministic features: \
+                 use .virtual_clock()",
+            ));
+        }
+        if let Some(rungs) = &self.ladder {
+            if rungs.is_empty() {
+                return Err(VaqfError::config("degrade ladder must not be empty"));
+            }
+            if rungs.iter().any(|(_, lat)| !lat.is_finite() || *lat <= 0.0) {
+                return Err(VaqfError::config(
+                    "degrade ladder latencies must be positive and finite",
+                ));
+            }
         }
         let policy = policy_for(&self.policy).ok_or_else(|| {
             VaqfError::config(format!(
@@ -221,7 +275,25 @@ impl<'d> ServerBuilder<'d> {
             .collect();
         let realtime = matches!(self.worker, ServeWorker::Simulated { realtime: true });
 
-        let scheduler = Scheduler::new(pairs, workers, policy).realtime(realtime);
+        let mut scheduler = Scheduler::new(pairs, workers, policy).realtime(realtime);
+        if let Some(plan) = self.faults {
+            scheduler = scheduler.faults(plan);
+        }
+        if let Some(rungs) = self.ladder {
+            // Rung latencies normalize to service-time scales against
+            // rung 0 (this design's own latency).
+            let base = rungs[0].1;
+            let rungs: Vec<DegradeRung> = rungs
+                .into_iter()
+                .map(|(label, lat)| DegradeRung {
+                    label,
+                    scale: lat / base,
+                })
+                .collect();
+            scheduler = scheduler
+                .degrade(rungs, self.hysteresis)
+                .map_err(|e| VaqfError::config(e.to_string()))?;
+        }
         match self.clock {
             ServeClock::Virtual => scheduler
                 .run_virtual(self.design.target().device.clock_mhz)

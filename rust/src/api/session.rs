@@ -137,6 +137,26 @@ impl Session {
         })
     }
 
+    /// Compile each precision in `bits` and return `(label, frame
+    /// latency seconds)` rungs for a graceful-degradation ladder —
+    /// feed the result to
+    /// [`ServerBuilder::degrade_ladder`](super::ServerBuilder::degrade_ladder).
+    /// Order is preserved; put the serving design's own precision first
+    /// (rung 0) and coarser, faster precisions after it.
+    pub fn precision_ladder(&self, bits: &[u8]) -> Result<Vec<(String, f64)>> {
+        if bits.is_empty() {
+            return Err(VaqfError::config(
+                "precision ladder needs at least one precision",
+            ));
+        }
+        bits.iter()
+            .map(|&b| {
+                let d = self.compile_for_bits(Some(b))?;
+                Ok((d.summary().label.clone(), d.frame_latency_s()))
+            })
+            .collect()
+    }
+
     /// Evaluate every precision in `bits` once (the `vaqf search` table):
     /// baseline summary plus one design — or a typed failure — per
     /// precision.

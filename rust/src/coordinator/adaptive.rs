@@ -11,53 +11,241 @@
 //! there is headroom. Accuracy is sacrificed exactly when — and only when
 //! — the real-time contract would otherwise break, mirroring the
 //! compile-time trade-off at serve time.
+//!
+//! The windowed decision rule lives in [`HysteresisController`] so the
+//! multi-stream scheduler's fault-driven degradation
+//! ([`Scheduler::degrade`]) applies the identical hysteresis to analytic
+//! service-time scaling.
+//!
+//! [`Scheduler::degrade`]: super::Scheduler::degrade
 
+use crate::api::VaqfError;
 use crate::runtime::InferenceBackend;
 
-/// Hysteresis controller over a precision ladder.
-///
-/// Ladder entries are ordered highest-precision-first. The controller
-/// watches a sliding window of (device-latency, deadline) observations:
-///
-/// * sustained misses (latency > deadline on ≥ `down_frac` of the window)
-///   ⇒ step down (lower precision, faster variant);
-/// * sustained headroom (latency < `up_margin`·deadline on the whole
-///   window) ⇒ step up (higher precision, better accuracy).
-pub struct AdaptivePrecision {
-    /// (label, backend), highest precision first.
-    ladder: Vec<(String, Box<dyn InferenceBackend>)>,
-    current: usize,
-    window: Vec<bool>, // true = missed deadline
-    headroom: Vec<bool>,
-    window_len: usize,
-    down_frac: f64,
-    up_margin: f64,
-    pub switches: Vec<(u64, usize)>,
-    frames_seen: u64,
+/// Tunable knobs of the windowed hysteresis rule (see
+/// [`HysteresisController`]); defaults match the controller's original
+/// hardcoded behaviour.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HysteresisConfig {
+    /// Observations per decision window.
+    pub window_len: usize,
+    /// Demote when ≥ this fraction of a window missed its deadline.
+    pub down_frac: f64,
+    /// Promote when *every* observation in a window finished below
+    /// `up_margin · deadline`.
+    pub up_margin: f64,
 }
 
-impl AdaptivePrecision {
-    pub fn new(ladder: Vec<(String, Box<dyn InferenceBackend>)>) -> AdaptivePrecision {
-        assert!(!ladder.is_empty());
-        AdaptivePrecision {
-            ladder,
-            current: 0,
-            window: Vec::new(),
-            headroom: Vec::new(),
+impl Default for HysteresisConfig {
+    fn default() -> HysteresisConfig {
+        HysteresisConfig {
             window_len: 8,
             down_frac: 0.5,
             up_margin: 0.5,
+        }
+    }
+}
+
+impl HysteresisConfig {
+    /// Reject degenerate configurations (zero-length windows, fractions
+    /// outside `(0, 1]`) with a matchable [`VaqfError::Config`].
+    pub fn validate(&self) -> Result<(), VaqfError> {
+        if self.window_len == 0 {
+            return Err(VaqfError::config("hysteresis window_len must be ≥ 1"));
+        }
+        if !(self.down_frac > 0.0 && self.down_frac <= 1.0) {
+            return Err(VaqfError::config("hysteresis down_frac must be in (0, 1]"));
+        }
+        if !(self.up_margin > 0.0 && self.up_margin <= 1.0) {
+            return Err(VaqfError::config("hysteresis up_margin must be in (0, 1]"));
+        }
+        Ok(())
+    }
+}
+
+/// Hysteresis rule over an abstract rung index `0..rungs` (0 = highest
+/// precision). Watches a sliding window of (latency, deadline)
+/// observations:
+///
+/// * sustained misses (latency > deadline on ≥ `down_frac` of the
+///   window) ⇒ step down (lower precision, faster variant);
+/// * sustained headroom (latency < `up_margin`·deadline on the whole
+///   window) ⇒ step up (higher precision, better accuracy).
+///
+/// Both windows are cleared at every decision boundary, so consecutive
+/// switches are ≥ `window_len` observations apart — the controller
+/// cannot demote→promote→demote within one window on any input.
+#[derive(Debug, Clone)]
+pub struct HysteresisController {
+    cfg: HysteresisConfig,
+    rungs: usize,
+    current: usize,
+    window: Vec<bool>, // true = missed deadline
+    headroom: Vec<bool>,
+    switches: Vec<(u64, usize)>,
+    seen: u64,
+}
+
+impl HysteresisController {
+    pub fn new(rungs: usize, cfg: HysteresisConfig) -> Result<HysteresisController, VaqfError> {
+        if rungs == 0 {
+            return Err(VaqfError::config(
+                "hysteresis controller needs at least one rung",
+            ));
+        }
+        cfg.validate()?;
+        Ok(HysteresisController {
+            cfg,
+            rungs,
+            current: 0,
+            window: Vec::new(),
+            headroom: Vec::new(),
             switches: Vec::new(),
-            frames_seen: 0,
+            seen: 0,
+        })
+    }
+
+    pub fn current(&self) -> usize {
+        self.current
+    }
+
+    pub fn config(&self) -> HysteresisConfig {
+        self.cfg
+    }
+
+    /// Observations consumed so far.
+    pub fn observations(&self) -> u64 {
+        self.seen
+    }
+
+    /// `(observation-count, new-rung)` per switch, in order.
+    pub fn switches(&self) -> &[(u64, usize)] {
+        &self.switches
+    }
+
+    /// Jump to a rung, discarding the partial window (test scaffolding
+    /// and explicit operator overrides).
+    pub fn reset_to(&mut self, rung: usize) {
+        assert!(rung < self.rungs, "rung out of range");
+        self.current = rung;
+        self.window.clear();
+        self.headroom.clear();
+    }
+
+    /// Feed one (latency, deadline) observation; returns `Some(rung)`
+    /// when this observation closed a window and moved the ladder.
+    pub fn observe(&mut self, latency_s: f64, deadline_s: f64) -> Option<usize> {
+        self.seen += 1;
+        self.window.push(latency_s > deadline_s);
+        self.headroom
+            .push(latency_s < deadline_s * self.cfg.up_margin);
+        if self.window.len() < self.cfg.window_len {
+            return None;
+        }
+        let misses = self.window.iter().filter(|&&m| m).count() as f64;
+        let mut switched = None;
+        if misses / self.window.len() as f64 >= self.cfg.down_frac
+            && self.current + 1 < self.rungs
+        {
+            self.current += 1;
+            self.switches.push((self.seen, self.current));
+            switched = Some(self.current);
+        } else if self.headroom.iter().all(|&h| h) && self.current > 0 {
+            self.current -= 1;
+            self.switches.push((self.seen, self.current));
+            switched = Some(self.current);
+        }
+        self.window.clear();
+        self.headroom.clear();
+        switched
+    }
+}
+
+/// Hysteresis controller over a precision ladder of inference backends.
+/// Ladder entries are ordered highest-precision-first; the decision rule
+/// is [`HysteresisController`].
+pub struct AdaptivePrecision {
+    /// (label, backend), highest precision first.
+    ladder: Vec<(String, Box<dyn InferenceBackend>)>,
+    controller: HysteresisController,
+}
+
+/// Configures an [`AdaptivePrecision`] before the first frame; obtained
+/// from [`AdaptivePrecision::builder`].
+pub struct AdaptivePrecisionBuilder {
+    ladder: Vec<(String, Box<dyn InferenceBackend>)>,
+    cfg: HysteresisConfig,
+}
+
+impl AdaptivePrecisionBuilder {
+    pub fn window_len(mut self, n: usize) -> Self {
+        self.cfg.window_len = n;
+        self
+    }
+
+    pub fn down_frac(mut self, f: f64) -> Self {
+        self.cfg.down_frac = f;
+        self
+    }
+
+    pub fn up_margin(mut self, f: f64) -> Self {
+        self.cfg.up_margin = f;
+        self
+    }
+
+    pub fn hysteresis(mut self, cfg: HysteresisConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Validate and build; an empty ladder or a degenerate hysteresis
+    /// configuration is a [`VaqfError::Config`], not a panic.
+    pub fn build(self) -> Result<AdaptivePrecision, VaqfError> {
+        if self.ladder.is_empty() {
+            return Err(VaqfError::config(
+                "adaptive precision needs a non-empty ladder",
+            ));
+        }
+        let controller = HysteresisController::new(self.ladder.len(), self.cfg)?;
+        Ok(AdaptivePrecision {
+            ladder: self.ladder,
+            controller,
+        })
+    }
+}
+
+impl AdaptivePrecision {
+    /// Build with the default hysteresis ([`HysteresisConfig`]).
+    pub fn new(
+        ladder: Vec<(String, Box<dyn InferenceBackend>)>,
+    ) -> Result<AdaptivePrecision, VaqfError> {
+        AdaptivePrecision::builder(ladder).build()
+    }
+
+    /// Start configuring the controller's window/threshold knobs.
+    pub fn builder(ladder: Vec<(String, Box<dyn InferenceBackend>)>) -> AdaptivePrecisionBuilder {
+        AdaptivePrecisionBuilder {
+            ladder,
+            cfg: HysteresisConfig::default(),
         }
     }
 
     pub fn current_label(&self) -> &str {
-        &self.ladder[self.current].0
+        &self.ladder[self.controller.current()].0
     }
 
     pub fn current_index(&self) -> usize {
-        self.current
+        self.controller.current()
+    }
+
+    /// `(frames-seen, new-rung)` per switch, in order.
+    pub fn switches(&self) -> &[(u64, usize)] {
+        self.controller.switches()
+    }
+
+    /// Jump to a rung, discarding the partial window.
+    pub fn reset_to(&mut self, rung: usize) {
+        self.controller.reset_to(rung);
     }
 
     /// Run one frame under a deadline; returns (logits, device seconds,
@@ -67,31 +255,10 @@ impl AdaptivePrecision {
         patches: &[f32],
         deadline_s: f64,
     ) -> anyhow::Result<(Vec<f32>, f64, usize)> {
-        let used = self.current;
+        let used = self.controller.current();
         let (logits, device_s) = self.ladder[used].1.infer(patches)?;
-        self.frames_seen += 1;
-        self.observe(device_s, deadline_s);
+        self.controller.observe(device_s, deadline_s);
         Ok((logits, device_s, used))
-    }
-
-    fn observe(&mut self, device_s: f64, deadline_s: f64) {
-        self.window.push(device_s > deadline_s);
-        self.headroom.push(device_s < deadline_s * self.up_margin);
-        if self.window.len() < self.window_len {
-            return;
-        }
-        let misses = self.window.iter().filter(|&&m| m).count() as f64;
-        if misses / self.window.len() as f64 >= self.down_frac
-            && self.current + 1 < self.ladder.len()
-        {
-            self.current += 1;
-            self.switches.push((self.frames_seen, self.current));
-        } else if self.headroom.iter().all(|&h| h) && self.current > 0 {
-            self.current -= 1;
-            self.switches.push((self.frames_seen, self.current));
-        }
-        self.window.clear();
-        self.headroom.clear();
     }
 }
 
@@ -118,6 +285,7 @@ mod tests {
             ("W1A8".into(), Box::new(FakeBackend { latency_s: lat_hi })),
             ("W1A4".into(), Box::new(FakeBackend { latency_s: lat_lo })),
         ])
+        .unwrap()
     }
 
     #[test]
@@ -127,20 +295,60 @@ mod tests {
     }
 
     #[test]
+    fn empty_ladder_is_a_config_error_not_a_panic() {
+        let err = AdaptivePrecision::new(Vec::new()).unwrap_err();
+        assert!(matches!(err, VaqfError::Config { .. }), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_degenerate_knobs() {
+        fn two_rungs() -> Vec<(String, Box<dyn InferenceBackend>)> {
+            vec![
+                ("a".into(), Box::new(FakeBackend { latency_s: 0.01 }) as Box<_>),
+                ("b".into(), Box::new(FakeBackend { latency_s: 0.001 }) as Box<_>),
+            ]
+        }
+        for build in [
+            AdaptivePrecision::builder(two_rungs()).window_len(0).build(),
+            AdaptivePrecision::builder(two_rungs()).down_frac(0.0).build(),
+            AdaptivePrecision::builder(two_rungs()).down_frac(1.5).build(),
+            AdaptivePrecision::builder(two_rungs()).up_margin(-0.1).build(),
+        ] {
+            assert!(matches!(build.unwrap_err(), VaqfError::Config { .. }));
+        }
+    }
+
+    #[test]
+    fn builder_knobs_change_the_decision_window() {
+        // window_len 4 demotes after 4 misses, not the default 8.
+        let mut ap = AdaptivePrecision::builder(vec![
+            ("hi".into(), Box::new(FakeBackend { latency_s: 0.010 }) as Box<_>),
+            ("lo".into(), Box::new(FakeBackend { latency_s: 0.001 }) as Box<_>),
+        ])
+        .window_len(4)
+        .build()
+        .unwrap();
+        for _ in 0..4 {
+            ap.infer(&[0.0], 0.005).unwrap();
+        }
+        assert_eq!(ap.current_label(), "lo", "switches: {:?}", ap.switches());
+    }
+
+    #[test]
     fn steps_down_under_sustained_misses() {
         // Deadline 5 ms, W1A8 takes 10 ms ⇒ misses ⇒ must degrade.
         let mut ap = ladder(0.010, 0.001);
         for _ in 0..8 {
             ap.infer(&[0.0], 0.005).unwrap();
         }
-        assert_eq!(ap.current_label(), "W1A4", "switches: {:?}", ap.switches);
+        assert_eq!(ap.current_label(), "W1A4", "switches: {:?}", ap.switches());
     }
 
     #[test]
     fn steps_back_up_with_headroom() {
         let mut ap = ladder(0.002, 0.001);
         // Force down first.
-        ap.current = 1;
+        ap.reset_to(1);
         for _ in 0..8 {
             ap.infer(&[0.0], 0.005).unwrap(); // 1 ms ≪ 0.5·5 ms ⇒ headroom
         }
@@ -155,7 +363,7 @@ mod tests {
             ap.infer(&[0.0], 0.005).unwrap();
         }
         assert_eq!(ap.current_label(), "W1A8");
-        assert!(ap.switches.is_empty());
+        assert!(ap.switches().is_empty());
     }
 
     #[test]
@@ -177,9 +385,24 @@ mod tests {
             ap.infer(&[0.0], deadline).unwrap();
         }
         assert!(
-            ap.switches.len() <= 32 / 8,
+            ap.switches().len() <= 32 / 8,
             "at most one switch per window: {:?}",
-            ap.switches
+            ap.switches()
         );
+    }
+
+    #[test]
+    fn bare_controller_reports_switch_points() {
+        let mut c = HysteresisController::new(3, HysteresisConfig::default()).unwrap();
+        for _ in 0..8 {
+            c.observe(0.010, 0.005); // all miss ⇒ demote at the boundary
+        }
+        assert_eq!(c.current(), 1);
+        assert_eq!(c.switches(), &[(8, 1)]);
+        for _ in 0..8 {
+            c.observe(0.001, 0.005); // deep headroom ⇒ promote
+        }
+        assert_eq!(c.current(), 0);
+        assert_eq!(c.switches(), &[(8, 1), (16, 0)]);
     }
 }

@@ -120,6 +120,10 @@ impl ServingReport {
 pub struct StreamStats {
     pub offered: u64,
     pub dropped: u64,
+    /// Frames lost to fault recovery: retry budget exhausted, or still
+    /// undeliverable when the run drained (always 0 without a fault
+    /// plan). Conservation: `offered == completed + dropped + failed`.
+    pub failed: u64,
     pub sla_violations: u64,
     pub e2e: Vec<f64>,
     pub device: Vec<f64>,
@@ -159,6 +163,8 @@ pub struct StreamReport {
     pub offered: u64,
     pub completed: u64,
     pub dropped: u64,
+    /// Frames lost to fault recovery (retry budget / drained in-flight).
+    pub failed: u64,
     pub drop_rate: f64,
     pub sla_violations: u64,
     pub e2e_latency: Summary,
@@ -179,6 +185,7 @@ impl StreamReport {
             offered: stats.offered,
             completed: stats.completed(),
             dropped: stats.dropped,
+            failed: stats.failed,
             drop_rate: stats.dropped as f64 / stats.offered.max(1) as f64,
             sla_violations: stats.sla_violations,
             e2e_latency: Summary::from(&stats.e2e),
@@ -193,6 +200,7 @@ impl StreamReport {
             .set("offered", self.offered)
             .set("completed", self.completed)
             .set("dropped", self.dropped)
+            .set("failed", self.failed)
             .set("drop_rate", self.drop_rate)
             .set("sla_violations", self.sla_violations)
             .set("e2e_latency_ms", latency_ms_json(&self.e2e_latency))
@@ -232,6 +240,8 @@ pub struct AggregateReport {
     pub offered: u64,
     pub completed: u64,
     pub dropped: u64,
+    /// Frames lost to fault recovery (0 without a fault plan).
+    pub failed: u64,
     pub drop_rate: f64,
     pub sla_violations: u64,
     /// Completed frames per second over the run (virtual or wall).
@@ -246,6 +256,7 @@ impl AggregateReport {
             .set("offered", self.offered)
             .set("completed", self.completed)
             .set("dropped", self.dropped)
+            .set("failed", self.failed)
             .set("drop_rate", self.drop_rate)
             .set("sla_violations", self.sla_violations)
             .set("achieved_fps", self.achieved_fps)
@@ -269,11 +280,14 @@ pub struct MultiServingReport {
     pub aggregate: AggregateReport,
     pub streams: Vec<StreamReport>,
     pub workers: Vec<WorkerReport>,
+    /// Fault-and-recovery accounting — `Some` only when a fault plan was
+    /// attached, so fault-free report JSON carries no `faults` key.
+    pub faults: Option<crate::fault::FaultSummary>,
 }
 
 impl MultiServingReport {
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .set("backend", self.backend.as_str())
             .set("policy", self.policy.as_str())
             .set("clock", self.clock.as_str())
@@ -286,7 +300,11 @@ impl MultiServingReport {
             .set(
                 "workers",
                 Json::Arr(self.workers.iter().map(WorkerReport::to_json).collect()),
-            )
+            );
+        if let Some(f) = &self.faults {
+            j = j.set("faults", f.to_json());
+        }
+        j
     }
 
     pub fn render(&self) -> String {
@@ -330,6 +348,9 @@ impl MultiServingReport {
                 n = w.served,
                 u = 100.0 * w.utilization,
             ));
+        }
+        if let Some(f) = &self.faults {
+            out.push_str(&f.render());
         }
         out
     }

@@ -30,7 +30,9 @@ mod scheduler;
 mod server;
 mod source;
 
-pub use adaptive::AdaptivePrecision;
+pub use adaptive::{
+    AdaptivePrecision, AdaptivePrecisionBuilder, HysteresisConfig, HysteresisController,
+};
 pub use clock::{Clock, VirtualClock, WallClock};
 pub use metrics::{
     AggregateReport, Metrics, MultiServingReport, ServingReport, StreamReport, StreamStats,
@@ -38,8 +40,9 @@ pub use metrics::{
 };
 pub use queue::{BoundedQueue, PushOutcome};
 pub use scheduler::{
-    policy_for, AnalyticWorker, DispatchPolicy, LeastLoaded, RoundRobin, Scheduler, SimWorker,
-    StreamConfig, StreamSnapshot, WeightedSla, WorkerModel, WorkerSnapshot, POLICY_NAMES,
+    policy_for, AnalyticWorker, DegradeRung, DispatchPolicy, LeastLoaded, RoundRobin, Scheduler,
+    SimWorker, StreamConfig, StreamSnapshot, WeightedSla, WorkerModel, WorkerSnapshot,
+    POLICY_NAMES,
 };
 pub use server::{serve, ServeConfig};
 pub use source::{Frame, FrameSource};

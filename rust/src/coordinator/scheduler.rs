@@ -27,14 +27,16 @@
 //!   so the policy's stream choice applies and worker selection is
 //!   whichever thread frees up first.
 
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
+use crate::fault::{DowntimeTracker, FaultKind, FaultPlan, FaultSummary, Health, RecoveryConfig};
 use crate::sim::ModelExecutor;
 use crate::util::stats::Summary;
 use crate::Cycles;
 
+use super::adaptive::{HysteresisConfig, HysteresisController};
 use super::clock::{Clock, VirtualClock, WallClock};
 use super::metrics::{
     AggregateReport, MultiServingReport, StreamReport, StreamStats, WorkerReport,
@@ -282,6 +284,23 @@ pub const POLICY_NAMES: [&str; 3] = ["round-robin", "least-loaded", "weighted-sl
 // The scheduler.
 // ---------------------------------------------------------------------------
 
+/// One rung of the analytic degrade ladder ([`Scheduler::degrade`]): a
+/// precision label and the service-time multiplier relative to the
+/// worker's base latency (rung 0 is the compiled full-precision design,
+/// scale 1.0; lower rungs are faster, scale < 1).
+#[derive(Debug, Clone)]
+pub struct DegradeRung {
+    pub label: String,
+    pub scale: f64,
+}
+
+/// The scheduler's precision-degradation state: the rung table plus the
+/// shared hysteresis rule from [`super::AdaptivePrecision`].
+struct DegradeLadder {
+    rungs: Vec<DegradeRung>,
+    controller: HysteresisController,
+}
+
 /// A configured multi-stream serving run; consume it with
 /// [`Scheduler::run_virtual`] or [`Scheduler::run_wall`].
 pub struct Scheduler {
@@ -292,6 +311,9 @@ pub struct Scheduler {
     /// Wall mode only: additionally sleep each frame's device latency, so
     /// host-fast simulation serves at the accelerator's real-time rate.
     realtime: bool,
+    /// Fault injection schedule (virtual clock only).
+    faults: Option<FaultPlan>,
+    degrade: Option<DegradeLadder>,
 }
 
 impl Scheduler {
@@ -310,6 +332,8 @@ impl Scheduler {
             workers,
             policy,
             realtime: false,
+            faults: None,
+            degrade: None,
         }
     }
 
@@ -317,6 +341,36 @@ impl Scheduler {
     pub fn realtime(mut self, yes: bool) -> Scheduler {
         self.realtime = yes;
         self
+    }
+
+    /// Attach a fault-injection plan. Workers gain the
+    /// Up/Degraded/Down health machine, crashed workers' in-flight
+    /// frames are re-dispatched under the plan's [`RecoveryConfig`], and
+    /// the report grows a [`FaultSummary`]. Virtual clock only —
+    /// [`Scheduler::run_wall`] rejects a plan.
+    pub fn faults(mut self, plan: FaultPlan) -> Scheduler {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Attach a precision-degradation ladder: sustained SLA misses step
+    /// service down the rungs (and headroom steps back up) under the
+    /// same hysteresis rule as [`super::AdaptivePrecision`]. Rung 0 must
+    /// be the full-precision design (scale 1.0); scales must be
+    /// positive.
+    pub fn degrade(
+        mut self,
+        rungs: Vec<DegradeRung>,
+        cfg: HysteresisConfig,
+    ) -> anyhow::Result<Scheduler> {
+        anyhow::ensure!(!rungs.is_empty(), "degrade ladder needs at least one rung");
+        anyhow::ensure!(
+            rungs.iter().all(|r| r.scale > 0.0 && r.scale.is_finite()),
+            "degrade rung scales must be positive"
+        );
+        let controller = HysteresisController::new(rungs.len(), cfg)?;
+        self.degrade = Some(DegradeLadder { rungs, controller });
+        Ok(self)
     }
 
     fn deadline(cfg: &StreamConfig, emitted_at: f64) -> f64 {
@@ -335,6 +389,13 @@ impl Scheduler {
     /// Deterministic discrete-event run over a [`VirtualClock`] ticking at
     /// `clock_mhz` (use the target device's clock so service latencies map
     /// 1:1 to `perf::cycles` units).
+    ///
+    /// With a [`FaultPlan`] attached the same event loop additionally
+    /// replays the injection schedule: crashed workers drop out of
+    /// dispatch, their in-flight frames re-dispatch under the retry
+    /// budget, and timed-out / corrupted completions re-run — all on the
+    /// virtual clock, so an injected run is exactly as byte-reproducible
+    /// as a fault-free one.
     pub fn run_virtual(self, clock_mhz: u64) -> anyhow::Result<MultiServingReport> {
         let Scheduler {
             streams,
@@ -342,23 +403,58 @@ impl Scheduler {
             mut workers,
             mut policy,
             realtime: _,
+            faults,
+            degrade,
         } = self;
         let backend = workers[0].name();
         let policy_name = policy.name().to_string();
         let with_patches = workers.iter().any(|w| w.needs_patches());
         let clock = VirtualClock::new(clock_mhz);
 
+        // Any attached plan — even an event-free one carrying only a
+        // recovery config (e.g. a frame timeout) — gets a fault block in
+        // the report; `None` keeps fault-free JSON byte-identical.
+        let injecting = faults.is_some();
+        let plan = faults.unwrap_or_default();
+        let recovery = plan.recovery;
+        let fault_events = plan.sorted_events();
+        let mut ladder = degrade;
+
         let queues: Vec<BoundedQueue<Frame>> = streams
             .iter()
             .map(|c| BoundedQueue::new(c.queue_depth))
             .collect();
         let mut stats: Vec<StreamStats> = vec![StreamStats::default(); streams.len()];
-        let mut busy: Vec<bool> = vec![false; workers.len()];
-        let mut busy_s: Vec<f64> = vec![0.0; workers.len()];
-        let mut served: Vec<u64> = vec![0; workers.len()];
+        let n_workers = workers.len();
+        let mut busy: Vec<bool> = vec![false; n_workers];
+        let mut busy_s: Vec<f64> = vec![0.0; n_workers];
+        let mut served: Vec<u64> = vec![0; n_workers];
+
+        // Fault-recovery state. All of it stays at its initial value on a
+        // plan-free run, so the fault-free event sequence is untouched.
+        let mut health: Vec<Health> = vec![Health::Up; n_workers];
+        let mut slow_factor: Vec<f64> = vec![1.0; n_workers];
+        let mut corrupt_next: Vec<bool> = vec![false; n_workers];
+        let mut inflight: Vec<Option<InFlight>> = (0..n_workers).map(|_| None).collect();
+        let mut dispatch_counter: u64 = 0;
+        let mut retry_pool: VecDeque<Frame> = VecDeque::new();
+        let mut tracker = DowntimeTracker::new(n_workers);
+        let mut summary = FaultSummary::default();
 
         let mut heap: BinaryHeap<Event> = BinaryHeap::new();
         let mut seq: u64 = 0;
+        // Fault events are seeded first (lowest seqs): at an equal cycle a
+        // crash pops before the completions scheduled after it, so a
+        // same-cycle finish on a crashing worker is lost — the
+        // pessimistic, deterministic reading.
+        for (index, ev) in fault_events.iter().enumerate() {
+            heap.push(Event {
+                cycle: clock.seconds_to_cycles(ev.at_s),
+                seq,
+                kind: EventKind::Fault { index },
+            });
+            seq += 1;
+        }
         for (s, src) in sources.iter().enumerate() {
             if streams[s].frames > 0 {
                 heap.push(Event {
@@ -394,45 +490,136 @@ impl Scheduler {
                         seq += 1;
                     }
                 }
+                EventKind::Fault { index } => {
+                    let fev = &fault_events[index];
+                    let w = fev.unit;
+                    if w < n_workers {
+                        match fev.kind {
+                            FaultKind::Crash => {
+                                if health[w] != Health::Down {
+                                    health[w] = Health::Down;
+                                    tracker.mark_down(w, clock.now());
+                                    summary.injected_crashes += 1;
+                                    busy[w] = false;
+                                    // The pending Completion/Timeout events
+                                    // for this dispatch become stale (the
+                                    // dispatch id no longer matches).
+                                    if let Some(fl) = inflight[w].take() {
+                                        if !fl.abandoned {
+                                            summary.redispatches += 1;
+                                            schedule_retry(
+                                                fl.frame, &recovery, &clock, &mut heap,
+                                                &mut seq, &mut stats, &mut summary,
+                                            );
+                                        }
+                                    }
+                                }
+                            }
+                            FaultKind::Recover => {
+                                if health[w] == Health::Down {
+                                    health[w] = if slow_factor[w] > 1.0 {
+                                        Health::Degraded
+                                    } else {
+                                        Health::Up
+                                    };
+                                    tracker.mark_up(w, clock.now());
+                                }
+                            }
+                            FaultKind::SlowDown { factor } => {
+                                summary.injected_slowdowns += 1;
+                                slow_factor[w] = factor.max(1.0);
+                                if health[w] == Health::Up {
+                                    health[w] = Health::Degraded;
+                                }
+                            }
+                            FaultKind::SlowEnd => {
+                                slow_factor[w] = 1.0;
+                                if health[w] == Health::Degraded {
+                                    health[w] = Health::Up;
+                                }
+                            }
+                            FaultKind::Corrupt => {
+                                summary.injected_corruptions += 1;
+                                corrupt_next[w] = true;
+                            }
+                        }
+                    }
+                }
                 EventKind::Completion {
                     worker,
-                    stream,
-                    emitted_at,
+                    dispatch,
                     device_s,
                 } => {
-                    busy[worker] = false;
-                    served[worker] += 1;
-                    busy_s[worker] += device_s;
-                    let e2e = clock.now() - emitted_at;
-                    stats[stream].record(e2e, device_s, Self::is_violation(&streams[stream], e2e));
+                    let matches = inflight[worker]
+                        .as_ref()
+                        .map(|fl| fl.dispatch == dispatch)
+                        .unwrap_or(false);
+                    // A mismatch means the worker crashed under this
+                    // dispatch (frame already re-dispatched): stale event.
+                    if matches {
+                        let fl = inflight[worker].take().expect("matched in-flight");
+                        busy[worker] = false;
+                        served[worker] += 1;
+                        busy_s[worker] += device_s;
+                        if fl.corrupted {
+                            summary.corrupted_frames += 1;
+                            schedule_retry(
+                                fl.frame, &recovery, &clock, &mut heap, &mut seq,
+                                &mut stats, &mut summary,
+                            );
+                        } else if !fl.abandoned {
+                            let e2e = clock.now() - fl.frame.emitted_at;
+                            let stream = fl.frame.stream;
+                            stats[stream].record(
+                                e2e,
+                                device_s,
+                                Self::is_violation(&streams[stream], e2e),
+                            );
+                            if fl.rung > 0 {
+                                summary.degraded_frames += 1;
+                            }
+                            if let Some(lad) = ladder.as_mut() {
+                                let deadline = streams[stream]
+                                    .sla_ms
+                                    .map(|ms| ms / 1e3)
+                                    .unwrap_or(f64::INFINITY);
+                                lad.controller.observe(e2e, deadline);
+                            }
+                        }
+                        // Abandoned dispatches already re-entered the
+                        // retry path at their timeout.
+                    }
+                }
+                EventKind::Timeout { worker, dispatch } => {
+                    let frame = match inflight[worker].as_mut() {
+                        Some(fl) if fl.dispatch == dispatch && !fl.abandoned => {
+                            fl.abandoned = true;
+                            Some(fl.frame.clone())
+                        }
+                        _ => None,
+                    };
+                    if let Some(frame) = frame {
+                        summary.timeouts += 1;
+                        schedule_retry(
+                            frame, &recovery, &clock, &mut heap, &mut seq, &mut stats,
+                            &mut summary,
+                        );
+                    }
+                }
+                EventKind::Retry { frame } => {
+                    // Backoff elapsed: the frame re-enters contention ahead
+                    // of the stream queues (it is the oldest work).
+                    retry_pool.push_back(frame);
                 }
             }
 
-            // Pair waiting frames with idle workers until one side runs dry.
+            // Pair waiting frames with idle (non-down) workers until one
+            // side runs dry. Retried frames jump the queues, FIFO.
             loop {
-                let ready: Vec<StreamSnapshot> = queues
-                    .iter()
-                    .enumerate()
-                    .filter_map(|(s, q)| {
-                        // NB: `len()` takes the queue lock, so it must be
-                        // read before entering the `peek_front` closure
-                        // (which holds that same non-reentrant lock).
-                        let queued = q.len();
-                        q.peek_front(|f| StreamSnapshot {
-                            stream: s,
-                            queued,
-                            head_emitted_at: f.emitted_at,
-                            head_deadline: Self::deadline(&streams[s], f.emitted_at),
-                        })
-                    })
-                    .collect();
-                if ready.is_empty() {
-                    break;
-                }
                 let idle: Vec<WorkerSnapshot> = busy
                     .iter()
                     .enumerate()
-                    .filter(|(_, b)| !**b)
+                    .filter(|(w, b)| !**b && health[*w] != Health::Down)
                     .map(|(w, _)| WorkerSnapshot {
                         worker: w,
                         busy_s: busy_s[w],
@@ -442,26 +629,89 @@ impl Scheduler {
                 if idle.is_empty() {
                     break;
                 }
-                let s = ready[policy.pick_stream(&ready)].stream;
+                let frame = if let Some(f) = retry_pool.pop_front() {
+                    f
+                } else {
+                    let ready: Vec<StreamSnapshot> = queues
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(s, q)| {
+                            // NB: `len()` takes the queue lock, so it must
+                            // be read before entering the `peek_front`
+                            // closure (which holds that same non-reentrant
+                            // lock).
+                            let queued = q.len();
+                            q.peek_front(|f| StreamSnapshot {
+                                stream: s,
+                                queued,
+                                head_emitted_at: f.emitted_at,
+                                head_deadline: Self::deadline(&streams[s], f.emitted_at),
+                            })
+                        })
+                        .collect();
+                    if ready.is_empty() {
+                        break;
+                    }
+                    let s = ready[policy.pick_stream(&ready)].stream;
+                    queues[s].try_pop().expect("ready stream has a frame")
+                };
                 let w = idle[policy.pick_worker(&idle)].worker;
-                let frame = queues[s].try_pop().expect("ready stream has a frame");
-                let device_s = workers[w].service(&frame)?;
+                let base_s = workers[w].service(&frame)?;
+                let rung = ladder
+                    .as_ref()
+                    .map(|l| l.controller.current())
+                    .unwrap_or(0);
+                let scale = ladder.as_ref().map(|l| l.rungs[rung].scale).unwrap_or(1.0);
+                let device_s = base_s * scale * slow_factor[w];
                 let service_cycles = clock.seconds_to_cycles(device_s).max(1);
                 busy[w] = true;
+                dispatch_counter += 1;
+                let corrupted = std::mem::take(&mut corrupt_next[w]);
+                inflight[w] = Some(InFlight {
+                    frame,
+                    dispatch: dispatch_counter,
+                    corrupted,
+                    abandoned: false,
+                    rung,
+                });
                 heap.push(Event {
                     cycle: clock.cycles() + service_cycles,
                     seq,
                     kind: EventKind::Completion {
                         worker: w,
-                        stream: s,
-                        emitted_at: frame.emitted_at,
+                        dispatch: dispatch_counter,
                         device_s,
                     },
                 });
                 seq += 1;
+                if let Some(timeout_s) = recovery.frame_timeout_s {
+                    let timeout_cycles = clock.seconds_to_cycles(timeout_s).max(1);
+                    if timeout_cycles < service_cycles {
+                        heap.push(Event {
+                            cycle: clock.cycles() + timeout_cycles,
+                            seq,
+                            kind: EventKind::Timeout {
+                                worker: w,
+                                dispatch: dispatch_counter,
+                            },
+                        });
+                        seq += 1;
+                    }
+                }
             }
         }
 
+        // Conservation drain: with every capable worker down and no
+        // recovery left in the schedule, frames strand in the queues and
+        // the retry pool — they are `failed`, never silently lost.
+        while let Some(f) = retry_pool.pop_front() {
+            stats[f.stream].failed += 1;
+        }
+        for q in &queues {
+            while let Some(f) = q.try_pop() {
+                stats[f.stream].failed += 1;
+            }
+        }
         for (s, q) in queues.iter().enumerate() {
             stats[s].offered = q.pushed();
             stats[s].dropped = q.dropped();
@@ -472,6 +722,18 @@ impl Scheduler {
             );
         }
         let elapsed = clock.now();
+        tracker.finish(elapsed);
+        let fault_block = if injecting || ladder.is_some() {
+            summary.availability = tracker.availability(elapsed);
+            summary.mttr_s = tracker.mttr_s();
+            if let Some(lad) = &ladder {
+                summary.precision_switches = lad.controller.switches().to_vec();
+                summary.final_rung = lad.controller.current();
+            }
+            Some(summary)
+        } else {
+            None
+        };
         let worker_names: Vec<String> = workers.iter().map(|w| w.name()).collect();
         Ok(build_report(
             backend,
@@ -483,6 +745,7 @@ impl Scheduler {
             served,
             busy_s,
             elapsed,
+            fault_block,
         ))
     }
 
@@ -499,7 +762,15 @@ impl Scheduler {
             workers,
             policy,
             realtime,
+            faults,
+            degrade,
         } = self;
+        if faults.is_some() || degrade.is_some() {
+            anyhow::bail!(
+                "fault injection and precision degradation require the \
+                 deterministic virtual clock — use run_virtual()"
+            );
+        }
         let backend = workers[0].name();
         let policy_name = policy.name().to_string();
         // Collected before the models move into their threads.
@@ -641,6 +912,7 @@ impl Scheduler {
             served,
             busy_s,
             elapsed,
+            None,
         ))
     }
 }
@@ -662,10 +934,67 @@ enum EventKind {
     },
     Completion {
         worker: usize,
-        stream: usize,
-        emitted_at: f64,
+        /// Dispatch id this completion belongs to — a crash bumps the
+        /// worker past it, turning the event into a deterministic no-op.
+        dispatch: u64,
         device_s: f64,
     },
+    /// Injected fault (index into the plan's sorted event list).
+    Fault {
+        index: usize,
+    },
+    /// A re-dispatched frame re-enters contention after its backoff.
+    Retry {
+        frame: Frame,
+    },
+    /// Per-frame watchdog for one dispatch on one worker.
+    Timeout {
+        worker: usize,
+        dispatch: u64,
+    },
+}
+
+/// What a busy worker currently holds (virtual mode, fault path).
+struct InFlight {
+    frame: Frame,
+    /// Monotonic dispatch id — Completion/Timeout events carrying an
+    /// older id (pre-crash) no longer match and are dropped.
+    dispatch: u64,
+    /// An armed corruption fired on this dispatch: the result is
+    /// discarded and the frame re-dispatched.
+    corrupted: bool,
+    /// The watchdog fired: the frame already re-entered the retry path,
+    /// so the eventual completion only frees the worker.
+    abandoned: bool,
+    /// Degrade-ladder rung the frame was served at (0 = full precision).
+    rung: usize,
+}
+
+/// Re-dispatch `frame` after exponential backoff, or account it as
+/// failed once the retry budget is spent. Never silently drops a frame.
+fn schedule_retry(
+    mut frame: Frame,
+    recovery: &RecoveryConfig,
+    clock: &VirtualClock,
+    heap: &mut BinaryHeap<Event>,
+    seq: &mut u64,
+    stats: &mut [StreamStats],
+    summary: &mut FaultSummary,
+) {
+    frame.attempts += 1;
+    if frame.attempts > recovery.max_retries {
+        stats[frame.stream].failed += 1;
+        return;
+    }
+    summary.retries += 1;
+    let shift = (frame.attempts - 1).min(20);
+    let backoff_s = recovery.backoff_base_s * f64::from(1u32 << shift);
+    heap.push(Event {
+        cycle: clock.cycles() + clock.seconds_to_cycles(backoff_s).max(1),
+        seq: *seq,
+        kind: EventKind::Retry { frame },
+    });
+    *seq += 1;
 }
 
 impl PartialEq for Event {
@@ -701,10 +1030,12 @@ fn build_report(
     served: Vec<u64>,
     busy_s: Vec<f64>,
     elapsed: f64,
+    faults: Option<FaultSummary>,
 ) -> MultiServingReport {
     let mut all_e2e: Vec<f64> = Vec::new();
     let mut all_device: Vec<f64> = Vec::new();
     let (mut offered, mut completed, mut dropped, mut violations) = (0u64, 0u64, 0u64, 0u64);
+    let mut failed = 0u64;
     let stream_reports: Vec<StreamReport> = streams
         .iter()
         .zip(stats.iter())
@@ -713,6 +1044,7 @@ fn build_report(
             offered += st.offered;
             completed += st.completed();
             dropped += st.dropped;
+            failed += st.failed;
             violations += st.sla_violations;
             all_e2e.extend_from_slice(&st.e2e);
             all_device.extend_from_slice(&st.device);
@@ -743,6 +1075,7 @@ fn build_report(
             offered,
             completed,
             dropped,
+            failed,
             drop_rate: dropped as f64 / offered.max(1) as f64,
             sla_violations: violations,
             achieved_fps: if elapsed > 0.0 {
@@ -755,5 +1088,6 @@ fn build_report(
         },
         streams: stream_reports,
         workers: worker_reports,
+        faults,
     }
 }

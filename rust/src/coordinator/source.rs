@@ -21,6 +21,9 @@ pub struct Frame {
     /// Clock timestamp (seconds) when the source emitted it, for
     /// end-to-end latency accounting.
     pub emitted_at: f64,
+    /// Dispatch attempts consumed so far (0 on first dispatch; bumped by
+    /// the scheduler's fault-recovery re-dispatch path).
+    pub attempts: u32,
 }
 
 /// Deterministic synthetic camera. Frame contents use the same PRNG
@@ -105,6 +108,7 @@ impl FrameSource {
             stream: self.stream,
             patches,
             emitted_at: 0.0,
+            attempts: 0,
         }
     }
 
@@ -116,6 +120,7 @@ impl FrameSource {
             stream: self.stream,
             patches: Vec::new(),
             emitted_at: 0.0,
+            attempts: 0,
         }
     }
 }

@@ -1,0 +1,35 @@
+//! Deterministic fault injection, failover and graceful degradation
+//! (the ROADMAP's "board failure/hot-swap events" direction).
+//!
+//! Real deployments lose boards, throttle under heat, and flip bits on
+//! links; a serving stack whose numbers only hold while everything is
+//! healthy has not measured availability at all. This module makes
+//! failure a first-class, *reproducible* input:
+//!
+//! ```text
+//! FaultPlan (scripted events + seeded GeneratorSpec, JSON-loadable)
+//!     │ crash / recover / slow-down / corrupt, per unit, at clock seconds
+//!     ├─► coordinator::Scheduler      workers gain Up/Degraded/Down health,
+//!     │   (run_virtual)               retry + backoff + timeout re-dispatch,
+//!     │                               precision demotion via the adaptive
+//!     │                               hysteresis ladder
+//!     └─► shard pipeline DES          stage crash → hot-swap from a spare
+//!         (simulate_pipeline_faulty)  (FIFO re-fill costed) or live
+//!                                     re-partition via the min-max DP
+//! ```
+//!
+//! Both consumers interpret the same [`FaultPlan`] on the shared
+//! `VirtualClock`, so an injected run is byte-reproducible exactly like
+//! a fault-free one — the determinism protocol CI gates on. Reports
+//! grow a fault block ([`FaultSummary`] / [`PipelineFaultSummary`]):
+//! availability (`1 − Σ downtime / (units × elapsed)`), MTTR, retries,
+//! re-dispatches and degraded-frame counts next to the latency
+//! percentiles.
+
+mod plan;
+mod report;
+
+pub use plan::{
+    FaultEvent, FaultKind, FaultPlan, GeneratorSpec, Health, RecoveryConfig,
+};
+pub use report::{DowntimeTracker, FaultSummary, PipelineFaultSummary};

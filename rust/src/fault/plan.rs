@@ -1,0 +1,498 @@
+//! Fault plans: what breaks, when, and how recovery is parameterized.
+//!
+//! A [`FaultPlan`] is a *schedule* — explicit scripted [`FaultEvent`]s
+//! plus an optional seeded [`GeneratorSpec`] that samples more — and a
+//! [`RecoveryConfig`] describing retry budgets, failover costs and spare
+//! inventory. The plan itself is plain data: both the serving scheduler
+//! and the shard pipeline interpret the same plan against their own unit
+//! index space (workers, stages). Everything is timestamped in clock
+//! seconds and converted to cycles by the consuming simulator, so the
+//! injected run is exactly as byte-reproducible as a fault-free one.
+
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+/// What happens to a unit (a worker in the scheduler, a stage board in
+/// the shard pipeline) at a fault event.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The board goes hard down: in-flight work is lost.
+    Crash,
+    /// A crashed board comes back (scheduler: worker rejoins the pool;
+    /// pipeline hot-swap: the board returns to the spare inventory).
+    Recover,
+    /// Thermal throttle: service times are multiplied by `factor`
+    /// until the matching [`FaultKind::SlowEnd`].
+    SlowDown { factor: f64 },
+    /// End of a throttle episode.
+    SlowEnd,
+    /// The unit's next completed frame is corrupted and must be
+    /// re-executed (transient bit-flip, parity error on the link).
+    Corrupt,
+}
+
+impl FaultKind {
+    fn tag(&self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Recover => "recover",
+            FaultKind::SlowDown { .. } => "slow-down",
+            FaultKind::SlowEnd => "slow-end",
+            FaultKind::Corrupt => "corrupt",
+        }
+    }
+
+    /// Stable discriminant for the deterministic event sort.
+    fn order(&self) -> u8 {
+        match self {
+            FaultKind::Crash => 0,
+            FaultKind::Recover => 1,
+            FaultKind::SlowDown { .. } => 2,
+            FaultKind::SlowEnd => 3,
+            FaultKind::Corrupt => 4,
+        }
+    }
+}
+
+/// One scheduled fault against one unit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    /// Clock seconds after the run epoch.
+    pub at_s: f64,
+    /// Worker index (scheduler) or stage index (pipeline).
+    pub unit: usize,
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("at_s", self.at_s)
+            .set("unit", self.unit)
+            .set("kind", self.kind.tag());
+        if let FaultKind::SlowDown { factor } = self.kind {
+            j = j.set("factor", factor);
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<FaultEvent> {
+        let at_s = j
+            .get("at_s")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("fault event needs numeric `at_s`"))?;
+        anyhow::ensure!(at_s >= 0.0 && at_s.is_finite(), "at_s must be ≥ 0");
+        let unit = j
+            .get("unit")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("fault event needs integer `unit`"))?
+            as usize;
+        let kind = match j.get("kind").and_then(Json::as_str) {
+            Some("crash") => FaultKind::Crash,
+            Some("recover") => FaultKind::Recover,
+            Some("slow-down") => {
+                let factor = j.get("factor").and_then(Json::as_f64).unwrap_or(2.0);
+                anyhow::ensure!(factor >= 1.0, "slow-down factor must be ≥ 1");
+                FaultKind::SlowDown { factor }
+            }
+            Some("slow-end") => FaultKind::SlowEnd,
+            Some("corrupt") => FaultKind::Corrupt,
+            other => anyhow::bail!(
+                "unknown fault kind {other:?} (crash/recover/slow-down/slow-end/corrupt)"
+            ),
+        };
+        Ok(FaultEvent { at_s, unit, kind })
+    }
+}
+
+/// Retry budgets and failover costs applied while recovering from the
+/// plan's events. All durations are clock seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryConfig {
+    /// Re-dispatch attempts per frame before it is counted `failed`.
+    pub max_retries: u32,
+    /// First retry backoff; attempt `k` waits `backoff_base_s · 2^(k-1)`.
+    pub backoff_base_s: f64,
+    /// Give up on a dispatched frame after this long (None ⇒ wait for
+    /// the worker, however slow).
+    pub frame_timeout_s: Option<f64>,
+    /// Pipeline hot-swap: time to power a spare board into a stage slot
+    /// (FIFO re-fill transfer cost is added on top, per queued frame).
+    pub swap_s: f64,
+    /// Pipeline live re-partition: drain + reprogram transition time.
+    pub reconfig_s: f64,
+    /// Spare boards available for hot-swap.
+    pub spares: usize,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> RecoveryConfig {
+        RecoveryConfig {
+            max_retries: 3,
+            backoff_base_s: 0.002,
+            frame_timeout_s: None,
+            swap_s: 0.005,
+            reconfig_s: 0.050,
+            spares: 0,
+        }
+    }
+}
+
+impl RecoveryConfig {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("max_retries", u64::from(self.max_retries))
+            .set("backoff_base_s", self.backoff_base_s)
+            .set("swap_s", self.swap_s)
+            .set("reconfig_s", self.reconfig_s)
+            .set("spares", self.spares);
+        if let Some(t) = self.frame_timeout_s {
+            j = j.set("frame_timeout_s", t);
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<RecoveryConfig> {
+        let d = RecoveryConfig::default();
+        let f = |key: &str, dflt: f64| j.get(key).and_then(Json::as_f64).unwrap_or(dflt);
+        let cfg = RecoveryConfig {
+            max_retries: j
+                .get("max_retries")
+                .and_then(Json::as_u64)
+                .unwrap_or(u64::from(d.max_retries)) as u32,
+            backoff_base_s: f("backoff_base_s", d.backoff_base_s),
+            frame_timeout_s: j.get("frame_timeout_s").and_then(Json::as_f64),
+            swap_s: f("swap_s", d.swap_s),
+            reconfig_s: f("reconfig_s", d.reconfig_s),
+            spares: j.get("spares").and_then(Json::as_u64).unwrap_or(0) as usize,
+        };
+        anyhow::ensure!(cfg.backoff_base_s >= 0.0, "backoff_base_s must be ≥ 0");
+        anyhow::ensure!(cfg.swap_s >= 0.0 && cfg.reconfig_s >= 0.0, "costs must be ≥ 0");
+        if let Some(t) = cfg.frame_timeout_s {
+            anyhow::ensure!(t > 0.0, "frame_timeout_s must be positive");
+        }
+        Ok(cfg)
+    }
+}
+
+/// A seeded fault generator: Poisson-like crash/throttle/corruption
+/// arrivals over a horizon, each crash paired with a recovery after an
+/// exponential repair time. Sampling is a pure function of the spec
+/// (SplitMix64 + deterministic `ln`), so a generated plan replays
+/// byte-identically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GeneratorSpec {
+    pub seed: u64,
+    /// How many units the generator targets (events hit `0..units`).
+    pub units: usize,
+    /// Horizon in clock seconds events are sampled over.
+    pub horizon_s: f64,
+    /// Mean crashes per second across all units.
+    pub crash_rate_hz: f64,
+    /// Mean repair time after a crash.
+    pub mttr_s: f64,
+    /// Mean throttle episodes per second (each `mttr_s` long).
+    pub slow_rate_hz: f64,
+    /// Cycle-multiplier applied during throttle episodes.
+    pub slow_factor: f64,
+    /// Mean corruption events per second.
+    pub corrupt_rate_hz: f64,
+}
+
+impl GeneratorSpec {
+    pub fn sample(&self) -> Vec<FaultEvent> {
+        let mut rng = SplitMix64::new(self.seed ^ 0xFA_17_F1A6);
+        let mut out = Vec::new();
+        let mut arrivals = |rate_hz: f64, rng: &mut SplitMix64| -> Vec<f64> {
+            let mut ts = Vec::new();
+            if rate_hz <= 0.0 {
+                return ts;
+            }
+            let mut t = 0.0;
+            loop {
+                // Exponential inter-arrival via inverse CDF.
+                t += -(1.0 - rng.next_f64()).ln() / rate_hz;
+                if t >= self.horizon_s {
+                    return ts;
+                }
+                ts.push(t);
+            }
+        };
+        for t in arrivals(self.crash_rate_hz, &mut rng) {
+            let unit = rng.next_below(self.units.max(1) as u64) as usize;
+            let repair = -(1.0 - rng.next_f64()).ln() * self.mttr_s.max(1e-6);
+            out.push(FaultEvent { at_s: t, unit, kind: FaultKind::Crash });
+            out.push(FaultEvent {
+                at_s: t + repair,
+                unit,
+                kind: FaultKind::Recover,
+            });
+        }
+        for t in arrivals(self.slow_rate_hz, &mut rng) {
+            let unit = rng.next_below(self.units.max(1) as u64) as usize;
+            out.push(FaultEvent {
+                at_s: t,
+                unit,
+                kind: FaultKind::SlowDown { factor: self.slow_factor.max(1.0) },
+            });
+            out.push(FaultEvent {
+                at_s: t + self.mttr_s.max(1e-6),
+                unit,
+                kind: FaultKind::SlowEnd,
+            });
+        }
+        for t in arrivals(self.corrupt_rate_hz, &mut rng) {
+            let unit = rng.next_below(self.units.max(1) as u64) as usize;
+            out.push(FaultEvent { at_s: t, unit, kind: FaultKind::Corrupt });
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("seed", self.seed)
+            .set("units", self.units)
+            .set("horizon_s", self.horizon_s)
+            .set("crash_rate_hz", self.crash_rate_hz)
+            .set("mttr_s", self.mttr_s)
+            .set("slow_rate_hz", self.slow_rate_hz)
+            .set("slow_factor", self.slow_factor)
+            .set("corrupt_rate_hz", self.corrupt_rate_hz)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<GeneratorSpec> {
+        let f = |key: &str, dflt: f64| j.get(key).and_then(Json::as_f64).unwrap_or(dflt);
+        let spec = GeneratorSpec {
+            seed: j.get("seed").and_then(Json::as_u64).unwrap_or(11),
+            units: j.get("units").and_then(Json::as_u64).unwrap_or(1) as usize,
+            horizon_s: f("horizon_s", 1.0),
+            crash_rate_hz: f("crash_rate_hz", 0.0),
+            mttr_s: f("mttr_s", 0.05),
+            slow_rate_hz: f("slow_rate_hz", 0.0),
+            slow_factor: f("slow_factor", 2.0),
+            corrupt_rate_hz: f("corrupt_rate_hz", 0.0),
+        };
+        anyhow::ensure!(spec.horizon_s > 0.0, "generator horizon_s must be positive");
+        anyhow::ensure!(spec.units > 0, "generator units must be ≥ 1");
+        Ok(spec)
+    }
+}
+
+/// The full injection schedule handed to a simulator.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Explicitly scripted events.
+    pub events: Vec<FaultEvent>,
+    /// Optional seeded generator whose samples are merged with `events`.
+    pub generator: Option<GeneratorSpec>,
+    pub recovery: RecoveryConfig,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn recovery(mut self, recovery: RecoveryConfig) -> FaultPlan {
+        self.recovery = recovery;
+        self
+    }
+
+    pub fn generator(mut self, spec: GeneratorSpec) -> FaultPlan {
+        self.generator = Some(spec);
+        self
+    }
+
+    pub fn crash_at(mut self, at_s: f64, unit: usize) -> FaultPlan {
+        self.events.push(FaultEvent { at_s, unit, kind: FaultKind::Crash });
+        self
+    }
+
+    pub fn recover_at(mut self, at_s: f64, unit: usize) -> FaultPlan {
+        self.events.push(FaultEvent { at_s, unit, kind: FaultKind::Recover });
+        self
+    }
+
+    pub fn slow_down_at(mut self, at_s: f64, unit: usize, factor: f64) -> FaultPlan {
+        self.events.push(FaultEvent {
+            at_s,
+            unit,
+            kind: FaultKind::SlowDown { factor },
+        });
+        self
+    }
+
+    pub fn slow_end_at(mut self, at_s: f64, unit: usize) -> FaultPlan {
+        self.events.push(FaultEvent { at_s, unit, kind: FaultKind::SlowEnd });
+        self
+    }
+
+    pub fn corrupt_at(mut self, at_s: f64, unit: usize) -> FaultPlan {
+        self.events.push(FaultEvent { at_s, unit, kind: FaultKind::Corrupt });
+        self
+    }
+
+    /// Scripted events merged with the generator's samples, in the
+    /// deterministic injection order: `(at_s, unit, kind)` ascending.
+    pub fn sorted_events(&self) -> Vec<FaultEvent> {
+        let mut all = self.events.clone();
+        if let Some(spec) = &self.generator {
+            all.extend(spec.sample());
+        }
+        all.sort_by(|a, b| {
+            a.at_s
+                .total_cmp(&b.at_s)
+                .then(a.unit.cmp(&b.unit))
+                .then(a.kind.order().cmp(&b.kind.order()))
+        });
+        all
+    }
+
+    /// True when the plan injects nothing and recovery is all defaults —
+    /// a simulator may take its unperturbed fast path.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.generator.is_none()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set(
+                "events",
+                Json::Arr(self.events.iter().map(FaultEvent::to_json).collect()),
+            )
+            .set("recovery", self.recovery.to_json());
+        if let Some(g) = &self.generator {
+            j = j.set("generator", g.to_json());
+        }
+        j
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<FaultPlan> {
+        let events = match j.get("events").and_then(Json::as_arr) {
+            Some(items) => items
+                .iter()
+                .map(FaultEvent::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            None => Vec::new(),
+        };
+        let recovery = match j.get("recovery") {
+            Some(r) => RecoveryConfig::from_json(r)?,
+            None => RecoveryConfig::default(),
+        };
+        let generator = match j.get("generator") {
+            Some(g) => Some(GeneratorSpec::from_json(g)?),
+            None => None,
+        };
+        Ok(FaultPlan { events, generator, recovery })
+    }
+
+    /// Load a plan from a JSON file (the `--faults <plan.json>` path).
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<FaultPlan> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        FaultPlan::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Runtime health of one unit, as tracked by the simulators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    Up,
+    /// Serving, but thermally throttled (service times scaled).
+    Degraded,
+    Down,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_json_round_trips() {
+        let plan = FaultPlan::new()
+            .crash_at(0.5, 1)
+            .recover_at(0.6, 1)
+            .slow_down_at(0.1, 0, 2.5)
+            .slow_end_at(0.2, 0)
+            .corrupt_at(0.3, 1)
+            .recovery(RecoveryConfig {
+                max_retries: 5,
+                backoff_base_s: 0.001,
+                frame_timeout_s: Some(0.02),
+                swap_s: 0.004,
+                reconfig_s: 0.1,
+                spares: 2,
+            })
+            .generator(GeneratorSpec {
+                seed: 7,
+                units: 3,
+                horizon_s: 2.0,
+                crash_rate_hz: 1.5,
+                mttr_s: 0.05,
+                slow_rate_hz: 0.5,
+                slow_factor: 3.0,
+                corrupt_rate_hz: 0.25,
+            });
+        let back = FaultPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(plan, back);
+    }
+
+    #[test]
+    fn sorted_events_are_deterministic_and_ordered() {
+        let plan = FaultPlan::new().crash_at(0.9, 0).crash_at(0.1, 2).generator(
+            GeneratorSpec {
+                seed: 3,
+                units: 2,
+                horizon_s: 1.0,
+                crash_rate_hz: 4.0,
+                mttr_s: 0.02,
+                slow_rate_hz: 1.0,
+                slow_factor: 2.0,
+                corrupt_rate_hz: 1.0,
+            },
+        );
+        let a = plan.sorted_events();
+        let b = plan.sorted_events();
+        assert_eq!(a, b, "sampling must be a pure function of the plan");
+        assert!(a.windows(2).all(|w| w[0].at_s <= w[1].at_s));
+        assert!(a.len() >= 2, "scripted events survive the merge");
+    }
+
+    #[test]
+    fn generator_pairs_every_crash_with_a_recovery() {
+        let spec = GeneratorSpec {
+            seed: 42,
+            units: 4,
+            horizon_s: 10.0,
+            crash_rate_hz: 2.0,
+            mttr_s: 0.1,
+            slow_rate_hz: 0.0,
+            slow_factor: 2.0,
+            corrupt_rate_hz: 0.0,
+        };
+        let events = spec.sample();
+        let crashes = events.iter().filter(|e| e.kind == FaultKind::Crash).count();
+        let recovers = events
+            .iter()
+            .filter(|e| e.kind == FaultKind::Recover)
+            .count();
+        assert!(crashes > 0, "10 s at 2 Hz should crash at least once");
+        assert_eq!(crashes, recovers);
+    }
+
+    #[test]
+    fn rejects_malformed_events() {
+        assert!(FaultEvent::from_json(&Json::obj().set("unit", 0u64)).is_err());
+        let bad_kind = Json::obj().set("at_s", 0.1).set("unit", 0u64).set("kind", "melt");
+        assert!(FaultEvent::from_json(&bad_kind).is_err());
+        let neg = Json::obj().set("at_s", -1.0).set("unit", 0u64).set("kind", "crash");
+        assert!(FaultEvent::from_json(&neg).is_err());
+    }
+
+    #[test]
+    fn empty_plan_is_empty() {
+        assert!(FaultPlan::new().is_empty());
+        assert!(!FaultPlan::new().crash_at(0.0, 0).is_empty());
+    }
+}

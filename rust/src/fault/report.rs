@@ -1,0 +1,254 @@
+//! Recovery accounting shared by both injected simulators: per-unit
+//! downtime → availability, repair durations → MTTR, plus the summary
+//! blocks the serving and shard reports embed (rendered only when a
+//! fault plan was actually attached, so fault-free report JSON is
+//! byte-identical to pre-fault builds).
+
+use crate::util::json::Json;
+
+/// Tracks per-unit down intervals on the simulation clock.
+#[derive(Debug, Clone)]
+pub struct DowntimeTracker {
+    down_since: Vec<Option<f64>>,
+    downtime_s: Vec<f64>,
+    /// Completed crash→restore durations (feeds MTTR).
+    repairs: Vec<f64>,
+    crashes: u64,
+}
+
+impl DowntimeTracker {
+    pub fn new(units: usize) -> DowntimeTracker {
+        DowntimeTracker {
+            down_since: vec![None; units],
+            downtime_s: vec![0.0; units],
+            repairs: Vec::new(),
+            crashes: 0,
+        }
+    }
+
+    pub fn mark_down(&mut self, unit: usize, now_s: f64) {
+        if self.down_since[unit].is_none() {
+            self.down_since[unit] = Some(now_s);
+            self.crashes += 1;
+        }
+    }
+
+    /// Unit restored to service: closes its down interval and records
+    /// the repair duration.
+    pub fn mark_up(&mut self, unit: usize, now_s: f64) {
+        if let Some(since) = self.down_since[unit].take() {
+            let d = (now_s - since).max(0.0);
+            self.downtime_s[unit] += d;
+            self.repairs.push(d);
+        }
+    }
+
+    pub fn is_down(&self, unit: usize) -> bool {
+        self.down_since[unit].is_some()
+    }
+
+    /// Close any still-open down interval at the end of the run (no
+    /// repair recorded — the unit never came back).
+    pub fn finish(&mut self, end_s: f64) {
+        for unit in 0..self.down_since.len() {
+            if let Some(since) = self.down_since[unit].take() {
+                self.downtime_s[unit] += (end_s - since).max(0.0);
+            }
+        }
+    }
+
+    pub fn crashes(&self) -> u64 {
+        self.crashes
+    }
+
+    /// `1 − Σ unit downtime / (units × elapsed)` — fraction of unit-time
+    /// the fleet was serving.
+    pub fn availability(&self, elapsed_s: f64) -> f64 {
+        let units = self.down_since.len().max(1) as f64;
+        if elapsed_s <= 0.0 {
+            return 1.0;
+        }
+        (1.0 - self.downtime_s.iter().sum::<f64>() / (units * elapsed_s)).clamp(0.0, 1.0)
+    }
+
+    /// Mean time to repair over completed crash→restore cycles (0 when
+    /// nothing was repaired).
+    pub fn mttr_s(&self) -> f64 {
+        if self.repairs.is_empty() {
+            0.0
+        } else {
+            self.repairs.iter().sum::<f64>() / self.repairs.len() as f64
+        }
+    }
+}
+
+/// Fault-and-recovery block of a scheduler [`MultiServingReport`].
+///
+/// [`MultiServingReport`]: crate::coordinator::MultiServingReport
+#[derive(Debug, Clone, Default)]
+pub struct FaultSummary {
+    pub injected_crashes: u64,
+    pub injected_slowdowns: u64,
+    pub injected_corruptions: u64,
+    /// Re-dispatch attempts scheduled (backoff path), any cause.
+    pub retries: u64,
+    /// Frames pulled off a crashed worker and re-dispatched.
+    pub redispatches: u64,
+    /// Dispatches abandoned at the per-frame timeout.
+    pub timeouts: u64,
+    /// Completions discarded as corrupted (frame re-ran).
+    pub corrupted_frames: u64,
+    /// Frames served below the top precision rung.
+    pub degraded_frames: u64,
+    /// Precision-ladder moves as (frames-seen, new-rung) pairs.
+    pub precision_switches: Vec<(u64, usize)>,
+    /// Rung in effect when the run ended (0 = full precision).
+    pub final_rung: usize,
+    pub availability: f64,
+    pub mttr_s: f64,
+}
+
+impl FaultSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("injected_crashes", self.injected_crashes)
+            .set("injected_slowdowns", self.injected_slowdowns)
+            .set("injected_corruptions", self.injected_corruptions)
+            .set("retries", self.retries)
+            .set("redispatches", self.redispatches)
+            .set("timeouts", self.timeouts)
+            .set("corrupted_frames", self.corrupted_frames)
+            .set("degraded_frames", self.degraded_frames)
+            .set(
+                "precision_switches",
+                Json::Arr(
+                    self.precision_switches
+                        .iter()
+                        .map(|&(frame, rung)| {
+                            Json::obj().set("at_frame", frame).set("rung", rung)
+                        })
+                        .collect(),
+                ),
+            )
+            .set("final_rung", self.final_rung)
+            .set("availability", self.availability)
+            .set("mttr_ms", self.mttr_s * 1e3)
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "  faults: {c} crashes, {s} slowdowns, {k} corruptions injected — \
+             availability {a:.4}, MTTR {m:.2} ms\n  \
+             recovery: {r} retries ({rd} off crashed workers), {t} timeouts, \
+             {cf} corrupted re-runs, {df} degraded frames, {sw} precision switches\n",
+            c = self.injected_crashes,
+            s = self.injected_slowdowns,
+            k = self.injected_corruptions,
+            a = self.availability,
+            m = self.mttr_s * 1e3,
+            r = self.retries,
+            rd = self.redispatches,
+            t = self.timeouts,
+            cf = self.corrupted_frames,
+            df = self.degraded_frames,
+            sw = self.precision_switches.len(),
+        )
+    }
+}
+
+/// Fault-and-recovery block of a shard [`PipelineReport`].
+///
+/// [`PipelineReport`]: crate::shard::PipelineReport
+#[derive(Debug, Clone, Default)]
+pub struct PipelineFaultSummary {
+    /// `"spare"` or `"repartition"`.
+    pub strategy: String,
+    pub injected_crashes: u64,
+    pub injected_slowdowns: u64,
+    pub injected_corruptions: u64,
+    /// Crashed stages restored from the spare inventory.
+    pub hot_swaps: u64,
+    /// Live re-partitions of the surviving boards (min-max DP re-run).
+    pub repartitions: u64,
+    /// Frames pulled back for re-execution (lost in-flight work +
+    /// corrupted completions).
+    pub rerun_frames: u64,
+    /// Stages in the final configuration (≠ initial after repartition).
+    pub final_stages: usize,
+    pub spares_remaining: usize,
+    pub availability: f64,
+    pub mttr_s: f64,
+}
+
+impl PipelineFaultSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("strategy", self.strategy.as_str())
+            .set("injected_crashes", self.injected_crashes)
+            .set("injected_slowdowns", self.injected_slowdowns)
+            .set("injected_corruptions", self.injected_corruptions)
+            .set("hot_swaps", self.hot_swaps)
+            .set("repartitions", self.repartitions)
+            .set("rerun_frames", self.rerun_frames)
+            .set("final_stages", self.final_stages)
+            .set("spares_remaining", self.spares_remaining)
+            .set("availability", self.availability)
+            .set("mttr_ms", self.mttr_s * 1e3)
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "  faults: {c} crashes injected ({strat} failover) — availability {a:.4}, \
+             MTTR {m:.2} ms\n  \
+             recovery: {hs} hot-swaps, {rp} re-partitions, {rr} re-run frames, \
+             {fs} final stages, {sp} spares left\n",
+            c = self.injected_crashes,
+            strat = self.strategy,
+            a = self.availability,
+            m = self.mttr_s * 1e3,
+            hs = self.hot_swaps,
+            rp = self.repartitions,
+            rr = self.rerun_frames,
+            fs = self.final_stages,
+            sp = self.spares_remaining,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn availability_integrates_down_intervals() {
+        let mut t = DowntimeTracker::new(2);
+        t.mark_down(0, 1.0);
+        t.mark_up(0, 2.0); // 1 s down out of 2 units × 10 s
+        t.finish(10.0);
+        assert!((t.availability(10.0) - 0.95).abs() < 1e-12);
+        assert!((t.mttr_s() - 1.0).abs() < 1e-12);
+        assert_eq!(t.crashes(), 1);
+    }
+
+    #[test]
+    fn unrepaired_unit_counts_until_the_end() {
+        let mut t = DowntimeTracker::new(1);
+        t.mark_down(0, 4.0);
+        t.finish(10.0);
+        assert!((t.availability(10.0) - 0.4).abs() < 1e-12);
+        assert_eq!(t.mttr_s(), 0.0, "no completed repair");
+    }
+
+    #[test]
+    fn double_down_is_idempotent() {
+        let mut t = DowntimeTracker::new(1);
+        t.mark_down(0, 1.0);
+        t.mark_down(0, 2.0);
+        assert!(t.is_down(0));
+        t.mark_up(0, 3.0);
+        assert!(!t.is_down(0));
+        t.finish(10.0);
+        assert!((t.availability(10.0) - 0.8).abs() < 1e-12);
+        assert_eq!(t.crashes(), 1);
+    }
+}

@@ -35,6 +35,7 @@
 //! | [`runtime`] | PJRT execution of AOT artifacts (functional reference) |
 //! | [`shard`] | pipeline-parallel multi-accelerator sharding (partition → per-shard co-search → pipeline DES) |
 //! | [`coordinator`] | serving: bounded queues, multi-stream scheduler, wall/virtual clocks |
+//! | [`fault`] | deterministic fault injection: crash/recover/throttle/corrupt plans, failover, availability accounting |
 //! | [`config`] | TOML/JSON config system for models/devices/targets |
 //!
 //! [`api`] is the front door: a typed facade (`TargetSpec → Session →
@@ -47,6 +48,7 @@ pub mod api;
 pub mod compiler;
 pub mod config;
 pub mod coordinator;
+pub mod fault;
 pub mod hw;
 pub mod model;
 pub mod perf;

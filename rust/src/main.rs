@@ -10,10 +10,13 @@
 //! vaqf serve    --variant micro_w1a8 --backend sim|pjrt --fps 30 --frames 90
 //!               [--streams N] [--workers W] [--policy round-robin|least-loaded|weighted-sla]
 //!               [--clock wall|virtual] [--sla-ms MS] [--analytic] [--realtime]
+//!               [--faults plan.json] [--ladder 8,6,4] [--window-len N]
+//!               [--down-frac F] [--up-margin F]
 //!               [--kernels scalar|packed] [--threads N] [--config target.json]
 //! vaqf shard    --model deit-base --device zcu102 --shards 2
 //!               [--policy balanced|even|min-latency] [--bits B] [--frames N]
-//!               [--fifo-depth F] [--json]
+//!               [--fifo-depth F] [--faults plan.json] [--failover spare|repartition]
+//!               [--spares N] [--json]
 //! ```
 //!
 //! Every subcommand is a thin layer over `vaqf::api`: flags feed a
@@ -26,10 +29,10 @@
 //! options and the config-file schema.
 
 use vaqf::api::{
-    render_table5, render_table6, table6_rows, PjrtRuntime, Result, ServeClock, ServeConfig,
-    Session, ShardPolicy, TargetSpec, VaqfError,
+    render_table5, render_table6, table6_rows, FailoverStrategy, FaultPlan, HysteresisConfig,
+    PjrtRuntime, Result, ServeClock, ServeConfig, Session, ShardPolicy, TargetSpec, VaqfError,
 };
-use vaqf::shard::simulate_pipeline;
+use vaqf::shard::{simulate_pipeline, simulate_pipeline_faulty};
 use vaqf::model::micro;
 use vaqf::runtime::Manifest;
 use vaqf::util::cli::Args;
@@ -241,6 +244,34 @@ fn cmd_serve(args: &Args) -> Result<()> {
             if let Some(ms) = sla_ms {
                 builder = builder.sla_ms(ms);
             }
+            if let Some(path) = args.get("faults") {
+                builder = builder.faults(FaultPlan::load(path).map_err(cli)?);
+            }
+            if let Some(spec) = args.get("ladder") {
+                // `--ladder 8,6,4`: activation precisions, the serving
+                // precision first (rung 0).
+                let bits = spec
+                    .split(',')
+                    .map(|t| t.trim().parse::<u8>())
+                    .collect::<std::result::Result<Vec<u8>, _>>()
+                    .map_err(|_| {
+                        VaqfError::config(format!(
+                            "--ladder expects comma-separated bit widths, got `{spec}`"
+                        ))
+                    })?;
+                builder = builder.degrade_ladder(session.precision_ladder(&bits)?);
+                let mut h = HysteresisConfig::default();
+                if let Some(w) = args.get_u64("window-len").map_err(cli)? {
+                    h.window_len = w as usize;
+                }
+                if let Some(f) = args.get_f64("down-frac").map_err(cli)? {
+                    h.down_frac = f;
+                }
+                if let Some(m) = args.get_f64("up-margin").map_err(cli)? {
+                    h.up_margin = m;
+                }
+                builder = builder.hysteresis(h);
+            }
             builder = if args.has_flag("analytic") {
                 builder.analytic()
             } else {
@@ -262,12 +293,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 || args.get("policy").is_some()
                 || args.get("clock").is_some()
                 || sla_ms.is_some()
+                || args.get("faults").is_some()
+                || args.get("ladder").is_some()
                 || args.has_flag("analytic");
             if scheduler_only {
                 return Err(VaqfError::config(
                     "pjrt serving is single-stream/single-worker; \
-                     --streams/--workers/--policy/--clock/--sla-ms/--analytic \
-                     apply to --backend sim",
+                     --streams/--workers/--policy/--clock/--sla-ms/--faults/--ladder/\
+                     --analytic apply to --backend sim",
                 ));
             }
             let runtime = PjrtRuntime::load_variant(artifacts, variant)?;
@@ -317,8 +350,25 @@ fn cmd_shard(args: &Args) -> Result<()> {
         None => session.compile()?,
     };
     let sharded = design.shards_with(shards, policy)?;
+    let pipeline = match args.get("faults") {
+        Some(path) => {
+            let mut plan = FaultPlan::load(path).map_err(cli)?;
+            if let Some(n) = args.get_u64("spares").map_err(cli)? {
+                plan.recovery.spares = n as usize;
+            }
+            let failover_name = args.get_or("failover", "spare");
+            let strategy = FailoverStrategy::parse(failover_name).ok_or_else(|| {
+                VaqfError::config(format!(
+                    "unknown failover strategy {failover_name} (spare|repartition)"
+                ))
+            })?;
+            simulate_pipeline_faulty(&sharded, frames, fifo_depth, &plan, strategy)
+                .map_err(VaqfError::runtime)?
+        }
+        None => simulate_pipeline(&sharded, frames, fifo_depth),
+    };
     let report = vaqf::shard::ShardReport {
-        pipeline: simulate_pipeline(&sharded, frames, fifo_depth),
+        pipeline,
         design: sharded,
     };
     print!("{}", report.render());

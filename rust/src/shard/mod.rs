@@ -39,5 +39,7 @@ mod report;
 pub use cosearch::{co_search, FifoSpec, ShardStage, ShardedDesign};
 pub use exec::{ShardedExecutor, ShardedTrace, StageTrace};
 pub use partition::{max_stage_cost, partition, segments_for, Segment, ShardPolicy};
-pub use pipeline::{simulate_pipeline, PipelineReport, StageOccupancy};
+pub use pipeline::{
+    simulate_pipeline, simulate_pipeline_faulty, FailoverStrategy, PipelineReport, StageOccupancy,
+};
 pub use report::ShardReport;

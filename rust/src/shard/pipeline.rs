@@ -19,10 +19,11 @@
 use std::collections::VecDeque;
 
 use crate::coordinator::VirtualClock;
+use crate::fault::{DowntimeTracker, FaultKind, FaultPlan, PipelineFaultSummary};
 use crate::util::stats::Summary;
 use crate::Cycles;
 
-use super::cosearch::ShardedDesign;
+use super::cosearch::{co_search, ShardedDesign};
 
 /// Per-stage accounting of one pipeline run.
 #[derive(Debug, Clone)]
@@ -59,6 +60,10 @@ pub struct PipelineReport {
     /// Per-frame emit→complete latency, in seconds.
     pub latency: Summary,
     pub stages: Vec<StageOccupancy>,
+    /// Fault-and-recovery accounting — `Some` only for
+    /// [`simulate_pipeline_faulty`] runs, so plain-run report JSON is
+    /// unchanged.
+    pub faults: Option<PipelineFaultSummary>,
 }
 
 /// What one stage is doing between events.
@@ -229,6 +234,7 @@ pub fn simulate_pipeline(
         overall_fps: completed as f64 / clock.cycles_to_seconds(elapsed),
         latency: Summary::from(&latencies_s),
         stages: occupancy,
+        faults: None,
     }
 }
 
@@ -238,6 +244,412 @@ impl ShardedDesign {
     pub fn simulate_pipeline(&self, frames: u64) -> PipelineReport {
         simulate_pipeline(self, frames, None)
     }
+}
+
+// ---------------------------------------------------------------------------
+// Fault-injected pipeline.
+// ---------------------------------------------------------------------------
+
+/// How the pipeline reacts when a board crashes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailoverStrategy {
+    /// Hot-swap the crashed slot from the spare-board inventory
+    /// (`RecoveryConfig::spares`); falls back to re-partitioning when
+    /// the inventory is empty.
+    Spare,
+    /// Re-run the min-max partition DP over the surviving boards and
+    /// replay the in-pipeline frames through the new stage 0.
+    Repartition,
+}
+
+impl FailoverStrategy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FailoverStrategy::Spare => "spare",
+            FailoverStrategy::Repartition => "repartition",
+        }
+    }
+
+    /// CLI lookup (`spare` / `repartition`).
+    pub fn parse(s: &str) -> Option<FailoverStrategy> {
+        match s {
+            "spare" => Some(FailoverStrategy::Spare),
+            "repartition" | "repart" => Some(FailoverStrategy::Repartition),
+            _ => None,
+        }
+    }
+}
+
+/// Drain blocked stages downstream-first, start idle non-down servers,
+/// admit replayed then fresh frames — until quiescent (the faulty-path
+/// twin of the base `settle` closure; identical order, so a plan with no
+/// events replays the base schedule).
+#[allow(clippy::too_many_arguments)]
+fn settle_faulty(
+    stages: &mut [StageState],
+    slot_of_stage: &[usize],
+    down_of_slot: &[Option<Cycles>],
+    slow_of_slot: &[f64],
+    backlog: &mut VecDeque<u64>,
+    emitted: &mut u64,
+    frames: u64,
+    emit_cycle: &mut [Cycles],
+    now: Cycles,
+) {
+    let n = stages.len();
+    loop {
+        let mut progressed = false;
+        for i in (0..n).rev() {
+            if let Some((frame, since)) = stages[i].blocked {
+                if i + 1 < n && stages[i + 1].queue.len() < stages[i + 1].capacity {
+                    stages[i + 1].queue.push_back(QueuedFrame {
+                        id: frame,
+                        enqueued_at: now,
+                    });
+                    let occ = stages[i + 1].queue.len();
+                    stages[i + 1].peak_queue = stages[i + 1].peak_queue.max(occ);
+                    stages[i].blocked = None;
+                    stages[i].blocked_cycles += now - since;
+                    progressed = true;
+                }
+            }
+            let up = down_of_slot[slot_of_stage[i]].is_none();
+            if up && stages[i].in_service.is_none() && stages[i].blocked.is_none() {
+                if let Some(qf) = stages[i].queue.pop_front() {
+                    stages[i].queue_wait_cycles += now - qf.enqueued_at;
+                    let slow = slow_of_slot[slot_of_stage[i]];
+                    let dur = ((stages[i].service as f64) * slow).ceil().max(1.0) as Cycles;
+                    stages[i].in_service = Some((qf.id, now + dur));
+                    stages[i].busy_cycles += dur;
+                    progressed = true;
+                }
+            }
+        }
+        // Source: replayed frames first (oldest work), then fresh ones.
+        while stages[0].queue.len() < stages[0].capacity {
+            if let Some(id) = backlog.pop_front() {
+                stages[0].queue.push_back(QueuedFrame {
+                    id,
+                    enqueued_at: now,
+                });
+            } else if *emitted < frames {
+                stages[0].queue.push_back(QueuedFrame {
+                    id: *emitted,
+                    enqueued_at: now,
+                });
+                emit_cycle[*emitted as usize] = now;
+                *emitted += 1;
+            } else {
+                break;
+            }
+            let occ = stages[0].queue.len();
+            stages[0].peak_queue = stages[0].peak_queue.max(occ);
+            progressed = true;
+        }
+        if !progressed {
+            break;
+        }
+    }
+}
+
+/// [`simulate_pipeline`] with a [`FaultPlan`] injected on the same
+/// virtual clock. Crashed boards lose their in-flight frame (re-run);
+/// the pipeline either hot-swaps the slot from the spare inventory
+/// ([`FailoverStrategy::Spare`]: down for `swap_s` plus re-streaming the
+/// input FIFO) or re-partitions the survivors with the co-search DP
+/// ([`FailoverStrategy::Repartition`]: every in-pipeline frame replays
+/// through the new stage 0 after a `reconfig_s` pause, original emit
+/// times kept). Slow-downs multiply a board's service time; corruptions
+/// discard the board's next completion and re-run the frame.
+///
+/// Deterministic tie-break at one cycle: completions, then board
+/// restorations, then injected events. Occupancy covers the *final*
+/// configuration (a re-partition resets per-stage counters).
+///
+/// Errors when the last board crashes with an empty spare inventory, or
+/// when the surviving-board re-partition itself fails.
+pub fn simulate_pipeline_faulty(
+    design: &ShardedDesign,
+    frames: u64,
+    fifo_frames: Option<u64>,
+    plan: &FaultPlan,
+    strategy: FailoverStrategy,
+) -> anyhow::Result<PipelineReport> {
+    anyhow::ensure!(frames > 0, "simulate at least one frame");
+    let clock = VirtualClock::new(design.device.clock_mhz);
+    let recovery = plan.recovery;
+    let n0 = design.shards();
+
+    let make_stages = |d: &ShardedDesign| -> Vec<StageState> {
+        d.stages
+            .iter()
+            .map(|s| StageState {
+                queue: VecDeque::new(),
+                capacity: fifo_frames.unwrap_or(s.fifo.frames).max(1) as usize,
+                service: s.service_cycles().max(1),
+                in_service: None,
+                blocked: None,
+                busy_cycles: 0,
+                blocked_cycles: 0,
+                served: 0,
+                queue_wait_cycles: 0,
+                peak_queue: 0,
+            })
+            .collect()
+    };
+
+    let mut cur = design.clone();
+    let mut stages = make_stages(&cur);
+    // Board-slot ids of the current stages; plan events address slots.
+    let mut slot_of_stage: Vec<usize> = (0..n0).collect();
+    let mut down_of_slot: Vec<Option<Cycles>> = vec![None; n0];
+    let mut slow_of_slot: Vec<f64> = vec![1.0; n0];
+    let mut corrupt_slot: Vec<bool> = vec![false; n0];
+    let mut spares = recovery.spares;
+    let mut tracker = DowntimeTracker::new(n0);
+    let mut summary = PipelineFaultSummary {
+        strategy: strategy.as_str().to_string(),
+        ..PipelineFaultSummary::default()
+    };
+
+    let fevents: Vec<(Cycles, crate::fault::FaultEvent)> = plan
+        .sorted_events()
+        .into_iter()
+        .map(|e| (clock.seconds_to_cycles(e.at_s), e))
+        .collect();
+    let mut fidx = 0usize;
+
+    let mut emitted = 0u64;
+    let mut emit_cycle = vec![0 as Cycles; frames as usize];
+    let mut backlog: VecDeque<u64> = VecDeque::new();
+    let mut latencies_s: Vec<f64> = Vec::with_capacity(frames as usize);
+    let mut first_done: Option<Cycles> = None;
+    let mut last_done: Cycles = 0;
+    let mut completed = 0u64;
+
+    settle_faulty(
+        &mut stages, &slot_of_stage, &down_of_slot, &slow_of_slot, &mut backlog,
+        &mut emitted, frames, &mut emit_cycle, 0,
+    );
+    while completed < frames {
+        // Next event: earliest completion, board restoration, or injection.
+        let mut next: Option<Cycles> = stages
+            .iter()
+            .filter_map(|s| s.in_service.map(|(_, done)| done))
+            .min();
+        for t in down_of_slot.iter().flatten() {
+            next = Some(next.map_or(*t, |c| c.min(*t)));
+        }
+        if fidx < fevents.len() {
+            let t = fevents[fidx].0;
+            next = Some(next.map_or(t, |c| c.min(t)));
+        }
+        let now = match next {
+            Some(t) => t,
+            None => anyhow::bail!(
+                "pipeline stalled with {} frames outstanding: every path down \
+                 and no recovery scheduled",
+                frames - completed
+            ),
+        };
+        clock.advance_to(now);
+
+        // 1. Completions (a same-cycle crash arrives after them).
+        let n = stages.len();
+        for i in 0..n {
+            if let Some((frame, done)) = stages[i].in_service {
+                if done == now {
+                    stages[i].in_service = None;
+                    let slot = slot_of_stage[i];
+                    if corrupt_slot[slot] {
+                        // Discard the corrupted result; the frame re-runs
+                        // on this stage.
+                        corrupt_slot[slot] = false;
+                        summary.rerun_frames += 1;
+                        stages[i].queue.push_front(QueuedFrame {
+                            id: frame,
+                            enqueued_at: now,
+                        });
+                        continue;
+                    }
+                    stages[i].served += 1;
+                    if i + 1 == n {
+                        let lat = now - emit_cycle[frame as usize];
+                        latencies_s.push(clock.cycles_to_seconds(lat));
+                        first_done.get_or_insert(now);
+                        last_done = now;
+                        completed += 1;
+                    } else {
+                        stages[i].blocked = Some((frame, now));
+                    }
+                }
+            }
+        }
+
+        // 2. Board restorations (hot-swap / reconfiguration finished).
+        for slot in 0..down_of_slot.len() {
+            if matches!(down_of_slot[slot], Some(t) if t <= now) {
+                down_of_slot[slot] = None;
+                tracker.mark_up(slot, clock.now());
+            }
+        }
+
+        // 3. Injected events due at this cycle.
+        while fidx < fevents.len() && fevents[fidx].0 <= now {
+            let ev = fevents[fidx].1.clone();
+            fidx += 1;
+            if ev.unit >= n0 {
+                continue; // plan written for a larger fleet
+            }
+            match ev.kind {
+                FaultKind::Crash => {
+                    let Some(si) = slot_of_stage.iter().position(|&s| s == ev.unit) else {
+                        continue; // board already removed by a re-partition
+                    };
+                    if down_of_slot[ev.unit].is_some() {
+                        continue; // already mid-swap
+                    }
+                    summary.injected_crashes += 1;
+                    tracker.mark_down(ev.unit, clock.now());
+                    let use_spare = strategy == FailoverStrategy::Spare && spares > 0;
+                    if use_spare {
+                        // In-flight work on the crashed board is lost and
+                        // re-runs on the replacement.
+                        if let Some((f, _)) = stages[si].in_service.take() {
+                            summary.rerun_frames += 1;
+                            stages[si].queue.push_front(QueuedFrame {
+                                id: f,
+                                enqueued_at: now,
+                            });
+                        }
+                        if let Some((f, since)) = stages[si].blocked.take() {
+                            stages[si].blocked_cycles += now - since;
+                            summary.rerun_frames += 1;
+                            stages[si].queue.push_front(QueuedFrame {
+                                id: f,
+                                enqueued_at: now,
+                            });
+                        }
+                        spares -= 1;
+                        summary.hot_swaps += 1;
+                        // Bring-up plus re-streaming the input FIFO into
+                        // the replacement board.
+                        let refill = cur.stages[si].fifo.transfer_cycles
+                            * stages[si].queue.len() as u64;
+                        let cost = clock.seconds_to_cycles(recovery.swap_s).max(1) + refill;
+                        down_of_slot[ev.unit] = Some(now + cost);
+                    } else {
+                        let survivors = stages.len() - 1;
+                        anyhow::ensure!(
+                            survivors >= 1,
+                            "pipeline lost its last board at t={:.6}s with no spare",
+                            ev.at_s
+                        );
+                        summary.repartitions += 1;
+                        // Pull every in-pipeline frame back for replay
+                        // (stage boundaries are about to move).
+                        let mut ids: Vec<u64> = backlog.drain(..).collect();
+                        for (j, st) in stages.iter_mut().enumerate() {
+                            if let Some((f, _)) = st.in_service.take() {
+                                summary.rerun_frames += 1;
+                                ids.push(f);
+                            }
+                            if let Some((f, since)) = st.blocked.take() {
+                                st.blocked_cycles += now - since;
+                                summary.rerun_frames += 1;
+                                ids.push(f);
+                            }
+                            for qf in st.queue.drain(..) {
+                                if j > 0 {
+                                    summary.rerun_frames += 1;
+                                }
+                                ids.push(qf.id);
+                            }
+                        }
+                        ids.sort_unstable();
+                        backlog = ids.into();
+                        slot_of_stage.remove(si);
+                        cur = co_search(
+                            &cur.model,
+                            &cur.device,
+                            cur.act_bits,
+                            &cur.reference,
+                            survivors,
+                            cur.policy,
+                        )?;
+                        stages = make_stages(&cur);
+                        // Reconfiguration drains and refills the whole
+                        // chain: every survivor pauses.
+                        let resume = now + clock.seconds_to_cycles(recovery.reconfig_s).max(1);
+                        for &slot in &slot_of_stage {
+                            tracker.mark_down(slot, clock.now());
+                            down_of_slot[slot] = Some(resume);
+                        }
+                    }
+                }
+                FaultKind::Recover => {
+                    if strategy == FailoverStrategy::Spare {
+                        // The repaired board rejoins the spare inventory.
+                        spares += 1;
+                    }
+                }
+                FaultKind::SlowDown { factor } => {
+                    summary.injected_slowdowns += 1;
+                    slow_of_slot[ev.unit] = factor.max(1.0);
+                }
+                FaultKind::SlowEnd => {
+                    slow_of_slot[ev.unit] = 1.0;
+                }
+                FaultKind::Corrupt => {
+                    summary.injected_corruptions += 1;
+                    corrupt_slot[ev.unit] = true;
+                }
+            }
+        }
+
+        settle_faulty(
+            &mut stages, &slot_of_stage, &down_of_slot, &slow_of_slot, &mut backlog,
+            &mut emitted, frames, &mut emit_cycle, now,
+        );
+    }
+
+    let elapsed = last_done.max(1);
+    let fill = first_done.unwrap_or(elapsed);
+    let steady_fps = if completed > 1 && last_done > fill {
+        (completed - 1) as f64 / clock.cycles_to_seconds(last_done - fill)
+    } else {
+        cur.device.fps(elapsed)
+    };
+    let occupancy = stages
+        .iter()
+        .enumerate()
+        .map(|(i, s)| StageOccupancy {
+            stage: i,
+            served: s.served,
+            busy_frac: s.busy_cycles as f64 / elapsed as f64,
+            blocked_frac: s.blocked_cycles as f64 / elapsed as f64,
+            mean_queue_wait_cycles: s.queue_wait_cycles as f64 / s.served.max(1) as f64,
+            peak_queue: s.peak_queue,
+        })
+        .collect();
+    let elapsed_s = clock.cycles_to_seconds(elapsed);
+    tracker.finish(elapsed_s);
+    summary.availability = tracker.availability(elapsed_s);
+    summary.mttr_s = tracker.mttr_s();
+    summary.final_stages = stages.len();
+    summary.spares_remaining = spares;
+    Ok(PipelineReport {
+        shards: n0,
+        frames,
+        clock_mhz: design.device.clock_mhz,
+        fill_cycles: fill,
+        elapsed_cycles: elapsed,
+        steady_fps,
+        overall_fps: completed as f64 / elapsed_s,
+        latency: Summary::from(&latencies_s),
+        stages: occupancy,
+        faults: Some(summary),
+    })
 }
 
 #[cfg(test)]

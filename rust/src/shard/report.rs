@@ -24,6 +24,23 @@ impl ShardedDesign {
             design: self.clone(),
         }
     }
+
+    /// [`ShardedDesign::report`] with a fault plan injected into the
+    /// pipeline run (see
+    /// [`simulate_pipeline_faulty`](super::simulate_pipeline_faulty)).
+    pub fn report_with_faults(
+        &self,
+        frames: u64,
+        plan: &crate::fault::FaultPlan,
+        strategy: super::pipeline::FailoverStrategy,
+    ) -> anyhow::Result<ShardReport> {
+        Ok(ShardReport {
+            pipeline: super::pipeline::simulate_pipeline_faulty(
+                self, frames, None, plan, strategy,
+            )?,
+            design: self.clone(),
+        })
+    }
 }
 
 fn latency_ms_json(s: &Summary) -> Json {
@@ -79,7 +96,7 @@ impl ShardReport {
     pub fn to_json(&self) -> Json {
         let d = &self.design;
         let p = &self.pipeline;
-        Json::obj()
+        let mut j = Json::obj()
             .set("model", d.model.name.as_str())
             .set("device", d.device.name.as_str())
             .set("precision", d.reference.summary.label.as_str())
@@ -122,7 +139,13 @@ impl ShardReport {
                         })
                         .collect(),
                 ),
-            )
+            );
+        // Only fault-injected runs carry the block, so fault-free report
+        // JSON (golden-snapshotted) is byte-identical to earlier builds.
+        if let Some(f) = &p.faults {
+            j = j.set("faults", f.to_json());
+        }
+        j
     }
 
     pub fn render(&self) -> String {
@@ -185,6 +208,9 @@ impl ShardReport {
                 qw = s.mean_queue_wait_cycles,
                 pk = s.peak_queue,
             );
+        }
+        if let Some(f) = &p.faults {
+            out.push_str(&f.render());
         }
         out
     }

@@ -404,6 +404,88 @@ pub fn queue_ops(max_ops: usize) -> VecOf<QueueOpStrategy> {
     vec_of(QueueOpStrategy, 0, max_ops)
 }
 
+// ---------------------------------------------------------------------------
+// Fault-event scripts (fault-injection property testing).
+// ---------------------------------------------------------------------------
+
+/// One fault-injection event against `units` simulated boards/workers
+/// inside a `horizon_s`-second run. Weighted toward crashes (the
+/// interesting case), with recovers so runs usually heal; times shrink
+/// toward zero, units toward zero, kinds toward plain crash/recover.
+#[derive(Debug, Clone)]
+pub struct FaultEventStrategy {
+    pub units: usize,
+    pub horizon_s: f64,
+}
+
+impl Strategy for FaultEventStrategy {
+    type Value = crate::fault::FaultEvent;
+
+    fn generate(&self, rng: &mut SplitMix64) -> crate::fault::FaultEvent {
+        use crate::fault::{FaultEvent, FaultKind};
+        let at_s = self.horizon_s * rng.next_f64();
+        let unit = rng.next_below(self.units.max(1) as u64) as usize;
+        let kind = match rng.next_below(10) {
+            0..=3 => FaultKind::Crash,
+            4..=6 => FaultKind::Recover,
+            7 => FaultKind::SlowDown {
+                factor: 1.0 + 7.0 * rng.next_f64(),
+            },
+            8 => FaultKind::SlowEnd,
+            _ => FaultKind::Corrupt,
+        };
+        FaultEvent { at_s, unit, kind }
+    }
+
+    fn shrink(&self, value: &Self::Value) -> Vec<Self::Value> {
+        use crate::fault::FaultKind;
+        let mut out = Vec::new();
+        if value.at_s > 0.0 {
+            let mut v = value.clone();
+            v.at_s = 0.0;
+            out.push(v);
+            let mut v = value.clone();
+            v.at_s /= 2.0;
+            out.push(v);
+        }
+        if value.unit > 0 {
+            let mut v = value.clone();
+            v.unit = 0;
+            out.push(v);
+        }
+        match value.kind {
+            FaultKind::SlowDown { factor } if factor > 1.0 => {
+                let mut v = value.clone();
+                v.kind = FaultKind::SlowDown {
+                    factor: 1.0 + (factor - 1.0) / 2.0,
+                };
+                out.push(v);
+                let mut v = value.clone();
+                v.kind = FaultKind::Recover;
+                out.push(v);
+            }
+            FaultKind::Corrupt => {
+                let mut v = value.clone();
+                v.kind = FaultKind::Recover;
+                out.push(v);
+            }
+            _ => {}
+        }
+        out
+    }
+}
+
+/// A script of up to `max_events` fault events over `units` units within
+/// `horizon_s` seconds — feed the result into a
+/// [`FaultPlan`](crate::fault::FaultPlan)'s `events`.
+pub fn fault_events(
+    units: usize,
+    horizon_s: f64,
+    max_events: usize,
+) -> VecOf<FaultEventStrategy> {
+    vec_of(FaultEventStrategy { units, horizon_s }, 0, max_events)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

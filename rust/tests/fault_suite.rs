@@ -1,0 +1,573 @@
+//! Fault-injection suite: conservation, determinism, hysteresis and
+//! availability invariants of `vaqf::fault` across the serving scheduler
+//! and the shard pipeline.
+//!
+//! The load-bearing properties:
+//!
+//! * **conservation** — no frame is ever silently lost: every offered
+//!   frame is completed, dropped (backpressure) or failed (retry budget),
+//!   under *any* sampled fault plan;
+//! * **determinism** — a fault-injected virtual-clock run is exactly as
+//!   byte-reproducible as a fault-free one;
+//! * **hysteresis** — the degrade controller never flaps: switches are
+//!   at least one observation window apart, and a monotone-worsening
+//!   trace can only ever demote;
+//! * **availability** — a single crash with a hot spare keeps pipeline
+//!   availability at three nines over a steady run.
+
+use vaqf::api::{
+    FailoverStrategy, FaultPlan, GeneratorSpec, HysteresisConfig, RecoveryConfig, TargetSpec,
+};
+use vaqf::coordinator::HysteresisController;
+use vaqf::util::prop;
+
+fn micro_design() -> vaqf::api::CompiledDesign {
+    TargetSpec::new()
+        .model(vaqf::model::micro())
+        .device_preset("zcu102")
+        .target_fps(100.0)
+        .session()
+        .expect("micro session resolves")
+        .compile_for_bits(Some(8))
+        .expect("micro W1A8 compiles on zcu102")
+}
+
+// ---------------------------------------------------------------------------
+// Conservation: offered == completed + dropped + failed, always.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_scheduler_conserves_frames_under_sampled_fault_plans() {
+    // Random scripted fault plans (crashes that may never recover,
+    // throttles, corruption) over a 3-stream × 3-worker analytic run:
+    // the ledger must balance no matter what dies when. Failing plans
+    // shrink to a minimal event script.
+    let design = micro_design();
+    // 3 streams × 15 frames at 200 fps ≈ a 75 ms run; a 100 ms horizon
+    // keeps most sampled events inside it.
+    let strat = prop::fault_events(3, 0.1, 12);
+    let cfg = prop::Config {
+        trials: 30,
+        ..Default::default()
+    };
+    prop::check_with(&cfg, "scheduler_frame_conservation", &strat, |events| {
+        let mut plan = FaultPlan::new();
+        plan.events = events.clone();
+        let report = design
+            .server()
+            .streams(3)
+            .workers(3)
+            .policy("least-loaded")
+            .offered_fps(200.0)
+            .frames(15)
+            .queue_depth(4)
+            .sla_ms(30.0)
+            .analytic()
+            .virtual_clock()
+            .faults(plan)
+            .run()
+            .map_err(|e| e.to_string())?;
+        let a = &report.aggregate;
+        if a.offered != 45 {
+            return Err(format!("offered {} != 3 streams × 15 frames", a.offered));
+        }
+        if a.offered != a.completed + a.dropped + a.failed {
+            return Err(format!(
+                "conservation broke: offered {} != completed {} + dropped {} + failed {}",
+                a.offered, a.completed, a.dropped, a.failed
+            ));
+        }
+        if report.faults.is_none() {
+            return Err("fault plan attached but report carries no fault block".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn scheduler_survives_unrecovered_crash() {
+    // One of two workers dies early and never comes back: the survivor
+    // absorbs the load, in-flight work re-dispatches, and nothing leaks.
+    let design = micro_design();
+    let plan = FaultPlan::new().crash_at(0.005, 1);
+    let report = design
+        .server()
+        .streams(2)
+        .workers(2)
+        .policy("round-robin")
+        .offered_fps(150.0)
+        .frames(40)
+        .queue_depth(8)
+        .analytic()
+        .virtual_clock()
+        .faults(plan)
+        .run()
+        .expect("crashed run completes");
+    let a = &report.aggregate;
+    assert_eq!(a.offered, 80);
+    assert_eq!(a.offered, a.completed + a.dropped + a.failed);
+    assert!(a.completed > 0, "survivor worker served nothing");
+    let f = report.faults.expect("fault block present");
+    assert_eq!(f.injected_crashes, 1);
+    assert!(
+        f.availability < 1.0,
+        "a dead worker must dent availability (got {})",
+        f.availability
+    );
+}
+
+#[test]
+fn scheduler_frame_timeout_exhausts_retry_budget() {
+    // A frame timeout shorter than the service time forces every
+    // dispatch through the retry ladder until the budget runs out: all
+    // frames end up `failed`, none vanish.
+    let design = micro_design();
+    let latency = design.frame_latency_s();
+    let plan = FaultPlan::new().recovery(RecoveryConfig {
+        frame_timeout_s: Some(latency / 4.0),
+        max_retries: 2,
+        ..Default::default()
+    });
+    let report = design
+        .server()
+        .streams(1)
+        .workers(1)
+        .offered_fps(50.0)
+        .frames(10)
+        .queue_depth(10)
+        .analytic()
+        .virtual_clock()
+        .faults(plan)
+        .run()
+        .expect("timeout run completes");
+    let a = &report.aggregate;
+    assert_eq!(a.offered, a.completed + a.dropped + a.failed);
+    assert_eq!(a.completed, 0, "no dispatch can beat a timeout < service");
+    let f = report.faults.expect("fault block present");
+    assert!(f.timeouts > 0, "timeouts should have fired");
+    assert!(f.retries > 0, "retries should have been scheduled");
+}
+
+// ---------------------------------------------------------------------------
+// Determinism: identical runs, identical bytes.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn scheduler_fault_run_byte_reproducible() {
+    // Scripted events, a seeded generator AND a degrade ladder at once —
+    // two executions must render byte-identical JSON.
+    let design = micro_design();
+    let base = design.frame_latency_s();
+    let run = || {
+        let plan = FaultPlan::new()
+            .crash_at(0.004, 0)
+            .recover_at(0.02, 0)
+            .slow_down_at(0.01, 1, 3.0)
+            .corrupt_at(0.015, 1)
+            .generator(GeneratorSpec {
+                seed: 7,
+                units: 2,
+                horizon_s: 0.3,
+                crash_rate_hz: 15.0,
+                mttr_s: 0.01,
+                slow_rate_hz: 8.0,
+                slow_factor: 2.5,
+                corrupt_rate_hz: 20.0,
+            });
+        design
+            .server()
+            .streams(3)
+            .workers(2)
+            .policy("weighted-sla")
+            .offered_fps(250.0)
+            .frames(30)
+            .queue_depth(4)
+            .sla_ms(20.0)
+            .analytic()
+            .virtual_clock()
+            .faults(plan)
+            .degrade_ladder(vec![
+                ("w1a8".to_string(), base),
+                ("w1a6".to_string(), base * 0.8),
+                ("w1a4".to_string(), base * 0.6),
+            ])
+            .run()
+            .expect("fault+ladder run completes")
+            .to_json()
+            .pretty()
+    };
+    let first = run();
+    let second = run();
+    assert_eq!(first, second, "fault-injected run is not byte-reproducible");
+}
+
+#[test]
+fn pipeline_fault_run_byte_reproducible() {
+    let design = micro_design();
+    let sharded = design.shards(2).expect("micro splits across 2 shards");
+    // Fault times scale with the design's own frame latency so the
+    // events land mid-run whatever micro's absolute throughput is (a
+    // 64-frame 2-stage run lasts roughly 32 frame-times).
+    let base = design.frame_latency_s();
+    let run = |strategy: FailoverStrategy| {
+        let plan = FaultPlan::new()
+            .crash_at(5.0 * base, 0)
+            .slow_down_at(2.0 * base, 1, 2.0)
+            .slow_end_at(8.0 * base, 1)
+            .recovery(RecoveryConfig {
+                spares: 1,
+                swap_s: base,
+                ..Default::default()
+            });
+        sharded
+            .report_with_faults(64, &plan, strategy)
+            .expect("faulty pipeline completes")
+            .to_json()
+            .pretty()
+    };
+    for strategy in [FailoverStrategy::Spare, FailoverStrategy::Repartition] {
+        assert_eq!(
+            run(strategy),
+            run(strategy),
+            "{strategy:?} pipeline run is not byte-reproducible"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline failover: both strategies finish every frame.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pipeline_failover_completes_all_frames() {
+    let design = micro_design();
+    let sharded = design.shards(2).expect("micro splits across 2 shards");
+    let base = design.frame_latency_s();
+    for strategy in [FailoverStrategy::Spare, FailoverStrategy::Repartition] {
+        let plan = FaultPlan::new()
+            .crash_at(5.0 * base, 0)
+            .recovery(RecoveryConfig {
+                spares: 1,
+                swap_s: base,
+                ..Default::default()
+            });
+        let report = sharded
+            .report_with_faults(48, &plan, strategy)
+            .expect("faulty pipeline completes");
+        let p = &report.pipeline;
+        assert_eq!(p.frames, 48, "{strategy:?}: frame count off");
+        assert!(p.elapsed_cycles > 0 && p.steady_fps > 0.0);
+        let f = p.faults.as_ref().expect("fault block present");
+        assert_eq!(f.injected_crashes, 1);
+        match strategy {
+            FailoverStrategy::Spare => {
+                assert_eq!(f.hot_swaps, 1, "spare strategy should hot-swap");
+                assert_eq!(f.final_stages, 2, "swap keeps the stage count");
+            }
+            FailoverStrategy::Repartition => {
+                assert_eq!(f.repartitions, 1, "should re-partition once");
+                assert_eq!(f.final_stages, 1, "2-stage pipeline collapses to 1");
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_last_board_crash_without_spare_is_typed_error() {
+    let design = micro_design();
+    let sharded = design.shards(2).expect("micro splits across 2 shards");
+    let base = design.frame_latency_s();
+    // Two crashes, no spares: the first re-partitions onto the survivor
+    // (short reconfig so the pipeline is back up), the second takes the
+    // last board.
+    let plan = FaultPlan::new()
+        .crash_at(2.0 * base, 0)
+        .crash_at(10.0 * base, 1)
+        .recovery(RecoveryConfig {
+            reconfig_s: base,
+            ..Default::default()
+        });
+    let err = sharded
+        .report_with_faults(64, &plan, FailoverStrategy::Repartition)
+        .expect_err("losing every board must error, not hang");
+    assert!(
+        format!("{err:#}").contains("last board"),
+        "unexpected error: {err:#}"
+    );
+}
+
+#[test]
+fn prop_pipeline_conserves_frames_under_sampled_fault_plans() {
+    // Random plans against the 2-stage pipeline: either the run finishes
+    // with every frame accounted for, or it fails with the typed
+    // last-board error — never a stall, never a lost frame.
+    let design = micro_design();
+    let sharded = design.shards(2).expect("micro splits across 2 shards");
+    // A 24-frame 2-stage run lasts ~12 frame-times.
+    let strat = prop::fault_events(2, 12.0 * design.frame_latency_s(), 8);
+    let cfg = prop::Config {
+        trials: 25,
+        ..Default::default()
+    };
+    prop::check_with(&cfg, "pipeline_frame_conservation", &strat, |events| {
+        let mut plan = FaultPlan::new().recovery(RecoveryConfig {
+            spares: 1,
+            ..Default::default()
+        });
+        plan.events = events.clone();
+        match sharded.report_with_faults(24, &plan, FailoverStrategy::Spare) {
+            Ok(report) => {
+                if report.pipeline.frames != 24 {
+                    return Err(format!("frames {} != 24", report.pipeline.frames));
+                }
+                Ok(())
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                if msg.contains("last board") {
+                    Ok(()) // all boards dead: typed refusal is the contract
+                } else {
+                    Err(format!("unexpected pipeline error: {msg}"))
+                }
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Availability: one crash + hot spare stays ≥ 99%.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pipeline_single_crash_with_spare_keeps_three_nines() {
+    let design = micro_design();
+    let sharded = design.shards(2).expect("micro splits across 2 shards");
+    let base = design.frame_latency_s();
+    // Swap cost = one frame-time against a ~1000-frame-time run: the
+    // crashed slot's downtime is a fraction of a percent of unit-time.
+    let plan = FaultPlan::new()
+        .crash_at(100.0 * base, 0)
+        .recovery(RecoveryConfig {
+            spares: 1,
+            swap_s: base,
+            ..Default::default()
+        });
+    let report = sharded
+        .report_with_faults(2000, &plan, FailoverStrategy::Spare)
+        .expect("spare failover completes");
+    let f = report.pipeline.faults.as_ref().expect("fault block present");
+    assert_eq!(f.hot_swaps, 1);
+    assert!(
+        f.availability >= 0.99,
+        "single crash with a hot spare must stay ≥ 99% available, got {}",
+        f.availability
+    );
+    assert!(f.mttr_s > 0.0, "a completed swap has a measurable MTTR");
+}
+
+// ---------------------------------------------------------------------------
+// Hysteresis: the degrade controller never flaps.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_hysteresis_monotone_trace_only_demotes() {
+    // On a non-decreasing latency trace a promote can never follow a
+    // demote (promotion needs a full window of headroom, but misses only
+    // accumulate), and any two switches sit ≥ window_len observations
+    // apart — the "no demote→promote→demote inside one window" contract.
+    let strat = prop::vec_of(prop::f64s(0.0, 2.0), 1, 120);
+    let cfg = prop::Config {
+        trials: 200,
+        ..Default::default()
+    };
+    prop::check_with(&cfg, "hysteresis_monotone_no_flap", &strat, |trace| {
+        let mut trace = trace.clone();
+        trace.sort_by(|a, b| a.total_cmp(b));
+        let hcfg = HysteresisConfig {
+            window_len: 4,
+            down_frac: 0.5,
+            up_margin: 0.5,
+        };
+        let mut ctl =
+            HysteresisController::new(3, hcfg).map_err(|e| e.to_string())?;
+        for &lat in &trace {
+            ctl.observe(lat, 1.0);
+        }
+        let switches = ctl.switches();
+        for pair in switches.windows(2) {
+            let (o1, r1) = pair[0];
+            let (o2, r2) = pair[1];
+            if r2 <= r1 {
+                return Err(format!(
+                    "promote on a monotone-worsening trace: rung {r1} → {r2} at obs {o2}"
+                ));
+            }
+            if o2 - o1 < hcfg.window_len as u64 {
+                return Err(format!(
+                    "switches {o1} and {o2} closer than one window ({})",
+                    hcfg.window_len
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hysteresis_switch_spacing_on_arbitrary_traces() {
+    // Even on adversarial (unsorted) traces, consecutive switches are
+    // always at least one full observation window apart.
+    let strat = prop::vec_of(prop::f64s(0.0, 2.0), 1, 200);
+    let cfg = prop::Config {
+        trials: 200,
+        ..Default::default()
+    };
+    prop::check_with(&cfg, "hysteresis_switch_spacing", &strat, |trace| {
+        let hcfg = HysteresisConfig {
+            window_len: 5,
+            down_frac: 0.6,
+            up_margin: 0.4,
+        };
+        let mut ctl =
+            HysteresisController::new(4, hcfg).map_err(|e| e.to_string())?;
+        for &lat in trace {
+            ctl.observe(lat, 1.0);
+        }
+        for pair in ctl.switches().windows(2) {
+            if pair[1].0 - pair[0].0 < hcfg.window_len as u64 {
+                return Err(format!(
+                    "switches at obs {} and {} inside one window",
+                    pair[0].0, pair[1].0
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Plan round-trips and builder validation.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fault_plan_json_roundtrip_preserves_schedule() {
+    let plan = FaultPlan::new()
+        .crash_at(0.01, 0)
+        .recover_at(0.03, 0)
+        .slow_down_at(0.02, 1, 4.0)
+        .slow_end_at(0.05, 1)
+        .corrupt_at(0.04, 2)
+        .recovery(RecoveryConfig {
+            max_retries: 5,
+            spares: 2,
+            frame_timeout_s: Some(0.01),
+            ..Default::default()
+        })
+        .generator(GeneratorSpec {
+            seed: 42,
+            units: 3,
+            horizon_s: 1.0,
+            crash_rate_hz: 2.0,
+            mttr_s: 0.05,
+            slow_rate_hz: 1.0,
+            slow_factor: 3.0,
+            corrupt_rate_hz: 4.0,
+        });
+    let back = FaultPlan::from_json(&plan.to_json()).expect("roundtrip parses");
+    assert_eq!(back, plan);
+    assert_eq!(back.sorted_events(), plan.sorted_events());
+}
+
+#[test]
+fn server_rejects_faults_and_ladders_on_wall_clock() {
+    let design = micro_design();
+    let err = design
+        .server()
+        .analytic()
+        .faults(FaultPlan::new().crash_at(0.01, 0))
+        .run()
+        .expect_err("wall clock + faults must be rejected");
+    assert!(err.to_string().contains("virtual_clock"), "got: {err}");
+
+    let err = design
+        .server()
+        .analytic()
+        .degrade_ladder(vec![("full".to_string(), 0.01)])
+        .run()
+        .expect_err("wall clock + ladder must be rejected");
+    assert!(err.to_string().contains("virtual_clock"), "got: {err}");
+}
+
+#[test]
+fn server_rejects_malformed_ladders() {
+    let design = micro_design();
+    assert!(design
+        .server()
+        .analytic()
+        .virtual_clock()
+        .degrade_ladder(vec![])
+        .run()
+        .is_err());
+    assert!(design
+        .server()
+        .analytic()
+        .virtual_clock()
+        .degrade_ladder(vec![("full".to_string(), 0.0)])
+        .run()
+        .is_err());
+    assert!(HysteresisConfig {
+        window_len: 0,
+        ..Default::default()
+    }
+    .validate()
+    .is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Degrade-via-ladder beats drop-frames on SLA violations.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn degrade_ladder_beats_plain_drop_under_throttle() {
+    // A sustained 4× throttle on the only worker overloads the stream.
+    // With a degrade ladder the scheduler sheds precision instead of
+    // deadline: SLA violations must not exceed the drop-frames baseline.
+    let design = micro_design();
+    let base = design.frame_latency_s();
+    let sla_ms = base * 2.0 * 1e3;
+    let run = |ladder: bool| {
+        let plan = FaultPlan::new().slow_down_at(base, 0, 4.0);
+        let mut b = design
+            .server()
+            .streams(2)
+            .workers(1)
+            .offered_fps(0.5 / base)
+            .frames(60)
+            .queue_depth(2)
+            .sla_ms(sla_ms)
+            .analytic()
+            .virtual_clock()
+            .faults(plan);
+        if ladder {
+            b = b.degrade_ladder(vec![
+                ("full".to_string(), base),
+                ("half".to_string(), base * 0.5),
+                ("quarter".to_string(), base * 0.25),
+            ]);
+        }
+        b.run().expect("throttled run completes")
+    };
+    let degrade = run(true);
+    let drop = run(false);
+    assert!(
+        degrade.aggregate.sla_violations <= drop.aggregate.sla_violations,
+        "ladder ({}) should not violate SLA more than plain dropping ({})",
+        degrade.aggregate.sla_violations,
+        drop.aggregate.sla_violations
+    );
+    let f = degrade.faults.expect("fault block present");
+    assert!(
+        !f.precision_switches.is_empty(),
+        "the throttle should push the ladder down at least once"
+    );
+}

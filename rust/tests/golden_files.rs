@@ -14,7 +14,7 @@
 
 use std::path::PathBuf;
 
-use vaqf::api::TargetSpec;
+use vaqf::api::{FailoverStrategy, FaultPlan, RecoveryConfig, TargetSpec};
 use vaqf::compiler::render_table5;
 
 fn golden_dir() -> PathBuf {
@@ -93,6 +93,68 @@ fn golden_shard_report_micro_w1a8() {
     let sharded = design.shards(2).expect("micro splits across 2 shards");
     let report = sharded.report(32);
     check_golden("shard_report_micro_w1a8.json", &report.to_json().pretty());
+}
+
+#[test]
+fn golden_serving_report_faults_micro_w1a8() {
+    // A scripted (generator-free) fault plan plus a degrade ladder over
+    // the analytic virtual-clock scheduler: the whole run — fault block
+    // included — is a pure function of the design, so it pins byte-exact.
+    let design = micro_session()
+        .compile_for_bits(Some(8))
+        .expect("micro W1A8 compiles on zcu102");
+    let base = design.frame_latency_s();
+    let plan = FaultPlan::new()
+        .crash_at(0.01, 0)
+        .recover_at(0.05, 0)
+        .slow_down_at(0.03, 1, 3.0)
+        .slow_end_at(0.08, 1)
+        .corrupt_at(0.06, 1);
+    let report = design
+        .server()
+        .streams(2)
+        .workers(2)
+        .policy("weighted-sla")
+        .offered_fps(200.0)
+        .frames(25)
+        .queue_depth(4)
+        .sla_ms(base * 2.0 * 1e3)
+        .analytic()
+        .virtual_clock()
+        .faults(plan)
+        .degrade_ladder(vec![
+            ("w1a8".to_string(), base),
+            ("w1a4".to_string(), base * 0.6),
+        ])
+        .run()
+        .expect("fault-injected serving run completes");
+    check_golden(
+        "serving_report_faults_micro_w1a8.json",
+        &report.to_json().pretty(),
+    );
+}
+
+#[test]
+fn golden_shard_report_faults_micro_w1a8() {
+    let design = micro_session()
+        .compile_for_bits(Some(8))
+        .expect("micro W1A8 compiles on zcu102");
+    let base = design.frame_latency_s();
+    let sharded = design.shards(2).expect("micro splits across 2 shards");
+    let plan = FaultPlan::new()
+        .crash_at(4.0 * base, 0)
+        .recovery(RecoveryConfig {
+            spares: 1,
+            swap_s: base,
+            ..Default::default()
+        });
+    let report = sharded
+        .report_with_faults(32, &plan, FailoverStrategy::Spare)
+        .expect("spare failover completes");
+    check_golden(
+        "shard_report_faults_micro_w1a8.json",
+        &report.to_json().pretty(),
+    );
 }
 
 #[test]
