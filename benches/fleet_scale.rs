@@ -1,0 +1,174 @@
+//! Bench: fleet scale-out — pipelining vs replication at equal board
+//! count.
+//!
+//! Compiles DeiT-base for the ZCU102 at the paper's 24 FPS target, then
+//! carves 1→4 boards into each applicable topology preset (`replicated`,
+//! `pipelined`, `mixed`) and replays the *same* Poisson trace — offered
+//! at 95% of N single boards' aggregate throughput — through every fleet
+//! on the virtual clock. Achieved FPS, drop rate, tail latency and mean
+//! per-board utilization land in `BENCH_fleet.json`; CI gates on
+//! (a) the best 4-board topology achieving ≥ 3× the single-board
+//! throughput, (b) replication beating pipelining on these shallow
+//! traces, and (c) two runs rendering byte-identical report JSON.
+//!
+//! Because time is simulated, the numbers measure the *fleet model*
+//! (balancing, admission, stage backpressure), not host speed.
+//!
+//! Run with: `cargo bench --bench fleet_scale` (append `-- --quick`
+//! for the CI-sized subset).
+
+use vaqf::api::{Result, TargetSpec, TraceSpec};
+use vaqf::util::bench::{bench_output_path, JsonReport};
+use vaqf::util::cli::Args;
+
+/// Presets that make sense at a board count (a 1-board pipeline or mix
+/// is just a replica).
+fn presets_at(boards: usize) -> &'static [&'static str] {
+    match boards {
+        0 | 1 => &["replicated"],
+        2 => &["replicated", "pipelined"],
+        _ => &["replicated", "pipelined", "mixed"],
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let quick = args.has_flag("quick");
+    let horizon_s = if quick { 1.0 } else { 4.0 };
+    let board_counts: &[usize] = if quick { &[1, 4] } else { &[1, 2, 3, 4] };
+    let mut report = JsonReport::new("fleet_scale", if quick { "quick" } else { "full" });
+
+    println!("=== fleet scale: DeiT-base on zcu102, 1→4 boards ===\n");
+    let design = TargetSpec::new()
+        .model_preset("deit-base")
+        .device_preset("zcu102")
+        .target_fps(24.0)
+        .session()?
+        .compile()?;
+    let single_fps = 1.0 / design.frame_latency_s();
+    println!(
+        "compiled {}: {:.1} FPS single-board\n",
+        design.summary().label,
+        single_fps
+    );
+
+    let mut single_achieved = 0.0f64;
+    let mut best4 = 0.0f64;
+    let mut replicated4 = 0.0f64;
+    let mut pipelined4 = 0.0f64;
+    for &boards in board_counts {
+        // Offered load scales with the board budget, so every topology
+        // at a given count faces the identical near-saturation trace.
+        let trace = TraceSpec::poisson(0.95 * boards as f64 * single_fps, horizon_s, 42);
+        for &preset in presets_at(boards) {
+            let r = design
+                .fleet()
+                .boards(boards)
+                .topology(preset)
+                .balancer("least-outstanding")
+                .trace(trace.clone())
+                .run()?;
+            let a = &r.aggregate;
+            let mean_util = if r.units.is_empty() {
+                0.0
+            } else {
+                r.units.iter().map(|u| u.utilization).sum::<f64>() / r.units.len() as f64
+            };
+            println!(
+                "--- {boards} board(s), {preset}: {:.1} FPS achieved, \
+                 {:.1}% dropped, p99 {:.2} ms ---",
+                a.achieved_fps,
+                100.0 * a.drop_rate,
+                a.e2e_latency.p99 * 1e3
+            );
+            report.metric(
+                &format!("boards={boards} {preset} achieved_fps"),
+                a.achieved_fps,
+                "fps",
+            );
+            report.metric(
+                &format!("boards={boards} {preset} drop_rate"),
+                a.drop_rate,
+                "frac",
+            );
+            report.metric(
+                &format!("boards={boards} {preset} p50_latency"),
+                a.e2e_latency.p50 * 1e3,
+                "ms",
+            );
+            report.metric(
+                &format!("boards={boards} {preset} p99_latency"),
+                a.e2e_latency.p99 * 1e3,
+                "ms",
+            );
+            report.metric(
+                &format!("boards={boards} {preset} mean_utilization"),
+                mean_util,
+                "frac",
+            );
+            if boards == 1 && preset == "replicated" {
+                single_achieved = a.achieved_fps;
+            }
+            if boards == 4 {
+                best4 = best4.max(a.achieved_fps);
+                match preset {
+                    "replicated" => replicated4 = a.achieved_fps,
+                    "pipelined" => pipelined4 = a.achieved_fps,
+                    _ => {}
+                }
+            }
+        }
+        println!();
+    }
+
+    report.metric("single-board achieved_fps", single_achieved, "fps");
+    report.metric("best 4-board achieved_fps", best4, "fps");
+    report.metric(
+        "best 4-board scaling",
+        if single_achieved > 0.0 { best4 / single_achieved } else { 0.0 },
+        "x",
+    );
+    report.metric("replicated 4-board achieved_fps", replicated4, "fps");
+    report.metric("pipelined 4-board achieved_fps", pipelined4, "fps");
+
+    // Determinism probe: the 4-board mixed fleet under a flash crowd
+    // with a mid-burst crash must render byte-identical JSON twice.
+    let run_mixed = || -> Result<String> {
+        let burst = TraceSpec::flash_crowd(
+            0.5 * single_fps,
+            5.0 * single_fps,
+            0.3 * horizon_s,
+            0.05 * horizon_s,
+            0.2 * horizon_s,
+            horizon_s,
+            7,
+        );
+        let plan = vaqf::api::FaultPlan::new()
+            .crash_at(0.4 * horizon_s, 0)
+            .recovery(vaqf::api::RecoveryConfig {
+                spares: 1,
+                ..vaqf::api::RecoveryConfig::default()
+            });
+        Ok(design
+            .fleet()
+            .boards(4)
+            .topology("mixed")
+            .balancer("sla-weighted")
+            .trace(burst)
+            .faults(plan)
+            .run()?
+            .to_json()
+            .pretty())
+    };
+    let deterministic = if run_mixed()? == run_mixed()? { 1.0 } else { 0.0 };
+    report.metric("deterministic", deterministic, "bool");
+    println!(
+        "determinism probe: two fleet runs {}",
+        if deterministic == 1.0 { "byte-identical" } else { "DIVERGED" }
+    );
+
+    report
+        .write(bench_output_path("BENCH_fleet.json"))
+        .map_err(vaqf::api::VaqfError::runtime)?;
+    Ok(())
+}

@@ -1,0 +1,242 @@
+//! Fleet facade.
+//!
+//! [`CompiledDesign::fleet`] — a builder over the fleet simulator:
+//! `design.fleet().boards(4).topology("mixed").balancer("sla-weighted")
+//! .trace(TraceSpec::flash_crowd(...)).run()` carves a board budget into
+//! serving units (replicas and/or shard pipelines), fronts them with a
+//! load balancer, replays a trace through them on one virtual clock and
+//! returns a [`FleetReport`]. [`Session::compile_fleet`] is the one-call
+//! shortcut (compile, then fleet-builder with defaults).
+
+use crate::coordinator::VirtualClock;
+use crate::fault::FaultPlan;
+use crate::fleet::{
+    balancer_for, simulate_fleet, FleetConfig, FleetReport, FleetTopology, ServingUnit, StageSpec,
+    TraceSource, TraceSpec, UnitKind, BALANCER_NAMES, TOPOLOGY_PRESETS,
+};
+use crate::shard::ShardPolicy;
+
+use super::error::{Result, VaqfError};
+use super::session::{CompiledDesign, Session};
+
+/// Builder for a trace-driven fleet run over a compiled design.
+/// Constructed by [`CompiledDesign::fleet`]; defaults to 4 boards,
+/// `replicated` topology, `round-robin` balancing and a Poisson trace
+/// offering 80% of the fleet's aggregate throughput for one second.
+#[derive(Debug, Clone)]
+pub struct FleetBuilder {
+    design: CompiledDesign,
+    boards: usize,
+    preset: String,
+    layout: Option<FleetTopology>,
+    balancer: String,
+    trace: Option<TraceSpec>,
+    streams: usize,
+    queue_depth: usize,
+    sla_ms: Option<f64>,
+    source_seed: u64,
+    faults: Option<FaultPlan>,
+    shard_policy: ShardPolicy,
+}
+
+impl CompiledDesign {
+    /// Configure a fleet run of this design; finish with
+    /// [`FleetBuilder::run`].
+    pub fn fleet(&self) -> FleetBuilder {
+        FleetBuilder {
+            design: self.clone(),
+            boards: 4,
+            preset: "replicated".to_string(),
+            layout: None,
+            balancer: "round-robin".to_string(),
+            trace: None,
+            streams: 1,
+            queue_depth: 2,
+            sla_ms: None,
+            source_seed: 11,
+            faults: None,
+            shard_policy: ShardPolicy::Balanced,
+        }
+    }
+}
+
+impl Session {
+    /// Compile this session's design and hand back a fleet builder over
+    /// it — the one-call path from a target spec to a fleet run.
+    pub fn compile_fleet(&self) -> Result<FleetBuilder> {
+        Ok(self.compile()?.fleet())
+    }
+}
+
+impl FleetBuilder {
+    /// Total board budget the topology preset carves up (ignored when an
+    /// explicit [`FleetBuilder::layout`] is set).
+    pub fn boards(mut self, n: usize) -> Self {
+        self.boards = n;
+        self
+    }
+
+    /// Topology preset by name: `replicated`, `pipelined`, `mixed`
+    /// (validated at [`FleetBuilder::run`]).
+    pub fn topology(mut self, name: &str) -> Self {
+        self.preset = name.to_string();
+        self
+    }
+
+    /// Explicit unit-by-unit topology; overrides
+    /// [`FleetBuilder::topology`] and [`FleetBuilder::boards`].
+    pub fn layout(mut self, topology: FleetTopology) -> Self {
+        self.layout = Some(topology);
+        self
+    }
+
+    /// Balancer policy by name: `round-robin`, `least-outstanding`,
+    /// `join-shortest-queue`, `sla-weighted` (validated at
+    /// [`FleetBuilder::run`]).
+    pub fn balancer(mut self, name: &str) -> Self {
+        self.balancer = name.to_string();
+        self
+    }
+
+    /// Arrival trace (recorded timestamps or a seeded generator).
+    /// Default: Poisson at 80% of the fleet's aggregate single-board
+    /// throughput for 1 s.
+    pub fn trace(mut self, spec: TraceSpec) -> Self {
+        self.trace = Some(spec);
+        self
+    }
+
+    /// Number of logical streams arrivals are assigned to (round-robin).
+    pub fn streams(mut self, n: usize) -> Self {
+        self.streams = n;
+        self
+    }
+
+    /// Admission-queue depth per serving unit.
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.queue_depth = depth;
+        self
+    }
+
+    /// End-to-end latency SLA in milliseconds.
+    pub fn sla_ms(mut self, ms: f64) -> Self {
+        self.sla_ms = Some(ms);
+        self
+    }
+
+    /// Seed for the per-stream frame sources.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.source_seed = seed;
+        self
+    }
+
+    /// Inject a deterministic fault plan; event `unit` indices address
+    /// serving units in topology order.
+    pub fn faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Partition policy used when a pipeline unit shards the design.
+    pub fn shard_policy(mut self, policy: ShardPolicy) -> Self {
+        self.shard_policy = policy;
+        self
+    }
+
+    /// Execute the run; returns the deterministic fleet report.
+    pub fn run(self) -> Result<FleetReport> {
+        if self.streams == 0 {
+            return Err(VaqfError::config("fleet needs at least 1 stream"));
+        }
+        if self.queue_depth == 0 {
+            return Err(VaqfError::config("queue_depth must be at least 1"));
+        }
+        let topology = match &self.layout {
+            Some(t) => {
+                if t.is_empty() {
+                    return Err(VaqfError::config(
+                        "explicit fleet layout must have at least one unit",
+                    ));
+                }
+                t.clone()
+            }
+            None => {
+                if self.boards == 0 {
+                    return Err(VaqfError::config("fleet needs at least 1 board"));
+                }
+                FleetTopology::preset(&self.preset, self.boards).ok_or_else(|| {
+                    VaqfError::config(format!(
+                        "unknown fleet topology `{}` (expected one of: {})",
+                        self.preset,
+                        TOPOLOGY_PRESETS.join(", ")
+                    ))
+                })?
+            }
+        };
+        let balancer = balancer_for(&self.balancer).ok_or_else(|| {
+            VaqfError::config(format!(
+                "unknown balancer policy `{}` (expected one of: {})",
+                self.balancer,
+                BALANCER_NAMES.join(", ")
+            ))
+        })?;
+
+        let clock_mhz = self.design.target().device.clock_mhz;
+        let clock = VirtualClock::new(clock_mhz);
+        let frame_latency_s = self.design.frame_latency_s();
+
+        let spec = self.trace.clone().unwrap_or_else(|| {
+            // Offer 80% of what `boards` independent replicas of this
+            // design could serve: loaded but not saturated.
+            let fleet_fps = topology.boards() as f64 / frame_latency_s;
+            TraceSpec::poisson(0.8 * fleet_fps, 1.0, self.source_seed)
+        });
+        let source = TraceSource::from_spec(spec)
+            .map_err(|e| VaqfError::config(format!("invalid trace: {e}")))?;
+
+        let mut units: Vec<ServingUnit> = Vec::with_capacity(topology.len());
+        for kind in &topology.units {
+            match kind {
+                UnitKind::Replica => units.push(ServingUnit::replica(
+                    clock.seconds_to_cycles(frame_latency_s).max(1),
+                    self.queue_depth,
+                )),
+                UnitKind::Pipeline { depth } => {
+                    let sharded = self.design.shards_with(*depth, self.shard_policy)?;
+                    let stages: Vec<StageSpec> = sharded
+                        .stages
+                        .iter()
+                        .enumerate()
+                        .map(|(i, st)| StageSpec {
+                            service_cycles: st.service_cycles().max(1),
+                            capacity: if i == 0 {
+                                self.queue_depth
+                            } else {
+                                (st.fifo.frames as usize).max(1)
+                            },
+                        })
+                        .collect();
+                    units.push(ServingUnit::pipeline(*depth, stages));
+                }
+            }
+        }
+
+        let cfg = FleetConfig {
+            backend: format!("analytic:{}", self.design.summary().label),
+            topology: topology.label(),
+            streams: self.streams,
+            sla_ms: self.sla_ms,
+            source_seed: self.source_seed,
+        };
+        simulate_fleet(
+            &self.design.target().model,
+            clock_mhz,
+            &units,
+            &source,
+            balancer,
+            &cfg,
+            self.faults.as_ref(),
+        )
+        .map_err(VaqfError::runtime)
+    }
+}

@@ -35,11 +35,13 @@
 //! layers over this module.
 
 mod error;
+mod fleet;
 mod serve;
 mod session;
 mod spec;
 
 pub use error::{Result, VaqfError};
+pub use fleet::FleetBuilder;
 pub use serve::{PjrtRuntime, ServeClock, ServeWorker, ServerBuilder};
 pub use session::{CodegenArtifacts, CompiledDesign, PrecisionSweep, Session, SweepPoint};
 pub use spec::TargetSpec;
@@ -58,6 +60,7 @@ pub use crate::fault::{
     FaultEvent, FaultKind, FaultPlan, FaultSummary, GeneratorSpec, PipelineFaultSummary,
     RecoveryConfig,
 };
+pub use crate::fleet::{FleetReport, FleetTopology, TraceSpec};
 pub use crate::hw::Device;
 pub use crate::model::VitConfig;
 pub use crate::perf::{AcceleratorParams, PerfSummary};

@@ -144,16 +144,6 @@ impl StreamStats {
     }
 }
 
-/// Latency summary rendered in milliseconds (shared JSON shape).
-fn latency_ms_json(s: &Summary) -> Json {
-    Json::obj()
-        .set("p50", s.p50 * 1e3)
-        .set("p95", s.p95 * 1e3)
-        .set("p99", s.p99 * 1e3)
-        .set("mean", s.mean * 1e3)
-        .set("max", s.max * 1e3)
-}
-
 /// One stream's slice of a [`MultiServingReport`].
 #[derive(Debug, Clone)]
 pub struct StreamReport {
@@ -203,8 +193,8 @@ impl StreamReport {
             .set("failed", self.failed)
             .set("drop_rate", self.drop_rate)
             .set("sla_violations", self.sla_violations)
-            .set("e2e_latency_ms", latency_ms_json(&self.e2e_latency))
-            .set("device_latency_ms", latency_ms_json(&self.device_latency));
+            .set("e2e_latency_ms", self.e2e_latency.to_ms_json())
+            .set("device_latency_ms", self.device_latency.to_ms_json());
         if let Some(sla) = self.sla_ms {
             j = j.set("sla_ms", sla);
         }
@@ -260,8 +250,8 @@ impl AggregateReport {
             .set("drop_rate", self.drop_rate)
             .set("sla_violations", self.sla_violations)
             .set("achieved_fps", self.achieved_fps)
-            .set("e2e_latency_ms", latency_ms_json(&self.e2e_latency))
-            .set("device_latency_ms", latency_ms_json(&self.device_latency))
+            .set("e2e_latency_ms", self.e2e_latency.to_ms_json())
+            .set("device_latency_ms", self.device_latency.to_ms_json())
     }
 }
 

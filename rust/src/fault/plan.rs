@@ -10,7 +10,7 @@
 //! injected run is exactly as byte-reproducible as a fault-free one.
 
 use crate::util::json::Json;
-use crate::util::rng::SplitMix64;
+use crate::util::rng::{poisson_arrivals, SplitMix64};
 
 /// What happens to a unit (a worker in the scheduler, a stage board in
 /// the shard pipeline) at a fault event.
@@ -201,26 +201,14 @@ pub struct GeneratorSpec {
 
 impl GeneratorSpec {
     pub fn sample(&self) -> Vec<FaultEvent> {
+        // Arrival sampling lives in util::rng (shared with the fleet trace
+        // generators); the draw sequence is unchanged, so sampled plans
+        // replay byte-identically across the refactor.
         let mut rng = SplitMix64::new(self.seed ^ 0xFA_17_F1A6);
         let mut out = Vec::new();
-        let mut arrivals = |rate_hz: f64, rng: &mut SplitMix64| -> Vec<f64> {
-            let mut ts = Vec::new();
-            if rate_hz <= 0.0 {
-                return ts;
-            }
-            let mut t = 0.0;
-            loop {
-                // Exponential inter-arrival via inverse CDF.
-                t += -(1.0 - rng.next_f64()).ln() / rate_hz;
-                if t >= self.horizon_s {
-                    return ts;
-                }
-                ts.push(t);
-            }
-        };
-        for t in arrivals(self.crash_rate_hz, &mut rng) {
+        for t in poisson_arrivals(&mut rng, self.crash_rate_hz, self.horizon_s) {
             let unit = rng.next_below(self.units.max(1) as u64) as usize;
-            let repair = -(1.0 - rng.next_f64()).ln() * self.mttr_s.max(1e-6);
+            let repair = rng.next_exp_mean(self.mttr_s.max(1e-6));
             out.push(FaultEvent { at_s: t, unit, kind: FaultKind::Crash });
             out.push(FaultEvent {
                 at_s: t + repair,
@@ -228,7 +216,7 @@ impl GeneratorSpec {
                 kind: FaultKind::Recover,
             });
         }
-        for t in arrivals(self.slow_rate_hz, &mut rng) {
+        for t in poisson_arrivals(&mut rng, self.slow_rate_hz, self.horizon_s) {
             let unit = rng.next_below(self.units.max(1) as u64) as usize;
             out.push(FaultEvent {
                 at_s: t,
@@ -241,7 +229,7 @@ impl GeneratorSpec {
                 kind: FaultKind::SlowEnd,
             });
         }
-        for t in arrivals(self.corrupt_rate_hz, &mut rng) {
+        for t in poisson_arrivals(&mut rng, self.corrupt_rate_hz, self.horizon_s) {
             let unit = rng.next_below(self.units.max(1) as u64) as usize;
             out.push(FaultEvent { at_s: t, unit, kind: FaultKind::Corrupt });
         }

@@ -1,0 +1,220 @@
+//! Load-balancer policies: which serving unit an arriving frame joins.
+//!
+//! The fleet front-end extends the scheduler's [`DispatchPolicy`]
+//! pattern one level up: instead of pairing frames with idle workers, a
+//! [`BalancerPolicy`] routes each arrival to a whole serving unit
+//! (replica or pipeline), which then queues it internally. Policies see
+//! non-empty snapshot slices of the *healthy* units in ascending unit
+//! order and return a position in the slice — the same contract
+//! `DispatchPolicy::pick_worker` uses, and round-robin literally
+//! delegates to it.
+
+use crate::coordinator::{DispatchPolicy, RoundRobin, WorkerSnapshot};
+
+/// A healthy serving unit, as seen by a balancer.
+#[derive(Debug, Clone, Copy)]
+pub struct UnitSnapshot {
+    pub unit: usize,
+    /// Frames waiting in the unit's entry queue.
+    pub queued: usize,
+    /// Everything the unit holds: entry queue + all pipeline stages.
+    pub outstanding: usize,
+    /// Cumulative busy seconds across the unit's boards.
+    pub busy_s: f64,
+    /// Frames the unit has completed.
+    pub served: u64,
+    /// Steady-state seconds per frame (the unit's bottleneck cadence) —
+    /// what an SLA-aware balancer weighs queue length by.
+    pub service_s: f64,
+}
+
+impl UnitSnapshot {
+    fn as_worker(&self) -> WorkerSnapshot {
+        WorkerSnapshot {
+            worker: self.unit,
+            busy_s: self.busy_s,
+            served: self.served,
+        }
+    }
+}
+
+/// Routes each arrival to one healthy serving unit. `pick_unit` receives
+/// a non-empty slice and returns a position in it.
+pub trait BalancerPolicy: Send {
+    fn name(&self) -> &'static str;
+    fn pick_unit(&mut self, healthy: &[UnitSnapshot]) -> usize;
+}
+
+/// Cycle fairly through units regardless of load — delegates to the
+/// scheduler's `RoundRobin::pick_worker`, so skip-over-down-units
+/// behavior is identical to worker dispatch.
+#[derive(Debug, Default)]
+pub struct RoundRobinBalancer {
+    inner: RoundRobin,
+}
+
+impl BalancerPolicy for RoundRobinBalancer {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn pick_unit(&mut self, healthy: &[UnitSnapshot]) -> usize {
+        let workers: Vec<WorkerSnapshot> = healthy.iter().map(UnitSnapshot::as_worker).collect();
+        self.inner.pick_worker(&workers)
+    }
+}
+
+/// Fewest frames anywhere inside the unit (queue + stages in flight);
+/// ties go to the lowest unit index.
+#[derive(Debug, Default)]
+pub struct LeastOutstanding;
+
+impl BalancerPolicy for LeastOutstanding {
+    fn name(&self) -> &'static str {
+        "least-outstanding"
+    }
+
+    fn pick_unit(&mut self, healthy: &[UnitSnapshot]) -> usize {
+        healthy
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, u)| (u.outstanding, u.unit))
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+/// Classic JSQ: shortest entry queue, ignoring frames already inside the
+/// pipeline; ties go to the lowest unit index.
+#[derive(Debug, Default)]
+pub struct JoinShortestQueue;
+
+impl BalancerPolicy for JoinShortestQueue {
+    fn name(&self) -> &'static str {
+        "join-shortest-queue"
+    }
+
+    fn pick_unit(&mut self, healthy: &[UnitSnapshot]) -> usize {
+        healthy
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, u)| (u.queued, u.unit))
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+/// Deadline-aware: minimize the estimated completion time
+/// `(outstanding + 1) · service_s`, so a short queue on a slow pipeline
+/// loses to a longer queue on a fast replica; ties go to the lowest
+/// unit index.
+#[derive(Debug, Default)]
+pub struct SlaWeighted;
+
+impl BalancerPolicy for SlaWeighted {
+    fn name(&self) -> &'static str {
+        "sla-weighted"
+    }
+
+    fn pick_unit(&mut self, healthy: &[UnitSnapshot]) -> usize {
+        healthy
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                let ea = (a.outstanding as f64 + 1.0) * a.service_s;
+                let eb = (b.outstanding as f64 + 1.0) * b.service_s;
+                ea.total_cmp(&eb).then(a.unit.cmp(&b.unit))
+            })
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+}
+
+/// Look up a balancer by CLI name (`round-robin`/`rr`,
+/// `least-outstanding`/`lo`, `join-shortest-queue`/`jsq`,
+/// `sla-weighted`/`sla`).
+pub fn balancer_for(name: &str) -> Option<Box<dyn BalancerPolicy>> {
+    match name {
+        "round-robin" | "rr" => Some(Box::new(RoundRobinBalancer::default())),
+        "least-outstanding" | "lo" => Some(Box::new(LeastOutstanding)),
+        "join-shortest-queue" | "jsq" => Some(Box::new(JoinShortestQueue)),
+        "sla-weighted" | "sla" => Some(Box::new(SlaWeighted)),
+        _ => None,
+    }
+}
+
+/// The balancer names [`balancer_for`] accepts (canonical spellings).
+pub const BALANCER_NAMES: [&str; 4] = [
+    "round-robin",
+    "least-outstanding",
+    "join-shortest-queue",
+    "sla-weighted",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(unit: usize, queued: usize, outstanding: usize, service_s: f64) -> UnitSnapshot {
+        UnitSnapshot {
+            unit,
+            queued,
+            outstanding,
+            busy_s: 0.0,
+            served: 0,
+            service_s,
+        }
+    }
+
+    #[test]
+    fn round_robin_cycles_units() {
+        let mut p = RoundRobinBalancer::default();
+        let snaps = [snap(0, 0, 0, 0.01), snap(1, 0, 0, 0.01), snap(2, 0, 0, 0.01)];
+        let picks: Vec<usize> = (0..6).map(|_| snaps[p.pick_unit(&snaps)].unit).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn round_robin_skips_missing_units() {
+        let mut p = RoundRobinBalancer::default();
+        let all = [snap(0, 0, 0, 0.01), snap(1, 0, 0, 0.01)];
+        assert_eq!(p.pick_unit(&all), 0);
+        // Unit 1 went down: the survivor keeps serving.
+        let up = [snap(0, 0, 0, 0.01)];
+        assert_eq!(up[p.pick_unit(&up)].unit, 0);
+    }
+
+    #[test]
+    fn least_outstanding_counts_in_flight_work() {
+        let mut p = LeastOutstanding;
+        let snaps = [snap(0, 0, 5, 0.01), snap(1, 2, 2, 0.01)];
+        assert_eq!(snaps[p.pick_unit(&snaps)].unit, 1);
+    }
+
+    #[test]
+    fn jsq_ignores_in_flight_work() {
+        let mut p = JoinShortestQueue;
+        let snaps = [snap(0, 0, 5, 0.01), snap(1, 2, 2, 0.01)];
+        assert_eq!(snaps[p.pick_unit(&snaps)].unit, 0);
+    }
+
+    #[test]
+    fn sla_weighted_prefers_faster_units() {
+        let mut p = SlaWeighted;
+        // Unit 0: 3 outstanding × 10 ms = 40 ms estimate. Unit 1: empty
+        // but 100 ms per frame = 100 ms estimate.
+        let snaps = [snap(0, 3, 3, 0.010), snap(1, 0, 0, 0.100)];
+        assert_eq!(snaps[p.pick_unit(&snaps)].unit, 0);
+    }
+
+    #[test]
+    fn lookup_accepts_all_names_and_aliases() {
+        for name in BALANCER_NAMES {
+            assert!(balancer_for(name).is_some(), "{name}");
+        }
+        for alias in ["rr", "lo", "jsq", "sla"] {
+            assert!(balancer_for(alias).is_some(), "{alias}");
+        }
+        assert!(balancer_for("random").is_none());
+    }
+}

@@ -1,0 +1,36 @@
+//! `vaqf::fleet` — one-clock fleet simulator: load-balanced replica
+//! groups × N-board pipelines under trace-driven traffic.
+//!
+//! The serving scheduler (PR 3/6) answers "how do frames share one
+//! accelerator"; the shard pipeline (PR 5) answers "how does one model
+//! span N accelerators". This module composes both one level up: a
+//! **fleet** is an ordered list of serving units — data-parallel
+//! replicas and/or N-board shard pipelines ([`topology`]) — fronted by
+//! a pluggable load balancer ([`balancer`]) and driven by recorded or
+//! seeded arrival traces ([`trace`]) on a single shared
+//! [`VirtualClock`](crate::coordinator::VirtualClock). Fault plans
+//! ([`crate::fault`]) address whole serving units, so the
+//! pipelining-vs-replication question can be asked under crashes,
+//! slow-downs and flash crowds, not just steady state.
+//!
+//! Everything is deterministic: same design + topology + balancer +
+//! trace + fault plan ⇒ byte-identical report JSON.
+//!
+//! Entry points: [`crate::api::FleetBuilder`] (via
+//! `CompiledDesign::fleet()` or `Session::compile_fleet()`), the
+//! `vaqf fleet` CLI subcommand, or [`simulate_fleet`] directly.
+
+mod balancer;
+mod report;
+mod sim;
+mod topology;
+mod trace;
+
+pub use balancer::{
+    balancer_for, BalancerPolicy, JoinShortestQueue, LeastOutstanding, RoundRobinBalancer,
+    SlaWeighted, UnitSnapshot, BALANCER_NAMES,
+};
+pub use report::{FleetFaultSummary, FleetReport, UnitReport};
+pub use sim::{simulate_fleet, FleetConfig, ServingUnit, StageSpec};
+pub use topology::{FleetTopology, UnitKind, TOPOLOGY_PRESETS};
+pub use trace::{TraceKind, TraceSource, TraceSpec};

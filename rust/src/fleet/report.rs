@@ -1,0 +1,184 @@
+//! Fleet run reports: per-unit utilization, per-stream and aggregate
+//! latency/drop/SLA accounting, and fleet-level fault bookkeeping.
+//!
+//! The stream and aggregate blocks reuse the coordinator's
+//! [`StreamReport`]/[`AggregateReport`] types (all latency blocks render
+//! through `Summary::to_ms_json`), so fleet JSON aggregates the same
+//! metrics shape as the serving scheduler and the shard pipeline.
+
+use crate::coordinator::{AggregateReport, StreamReport};
+use crate::util::json::Json;
+
+/// One serving unit's slice of a [`FleetReport`].
+#[derive(Debug, Clone)]
+pub struct UnitReport {
+    pub unit: usize,
+    /// `replica` or `pipeline:<depth>`.
+    pub label: String,
+    pub boards: usize,
+    /// Frames this unit completed.
+    pub served: u64,
+    /// Cumulative busy seconds summed over the unit's boards.
+    pub busy_seconds: f64,
+    /// Per-board busy fraction of the run
+    /// (`busy_seconds / (boards · elapsed)`, 0..=1).
+    pub utilization: f64,
+}
+
+impl UnitReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("unit", self.unit)
+            .set("label", self.label.as_str())
+            .set("boards", self.boards)
+            .set("served", self.served)
+            .set("busy_seconds", self.busy_seconds)
+            .set("utilization", self.utilization)
+    }
+}
+
+/// Fleet-level fault-and-failover accounting — `Some` on a
+/// [`FleetReport`] only when a fault plan was attached.
+#[derive(Debug, Clone, Default)]
+pub struct FleetFaultSummary {
+    pub injected_crashes: u64,
+    pub injected_slowdowns: u64,
+    pub injected_corruptions: u64,
+    /// Crashed units restored from the spare inventory after `swap_s`.
+    pub hot_swaps: u64,
+    /// Frames pulled out of a crashed unit and routed back through the
+    /// balancer.
+    pub redispatches: u64,
+    /// Retry attempts scheduled (≤ `max_retries` per frame).
+    pub retries: u64,
+    /// Corrupted completions re-executed by their unit.
+    pub rerun_frames: u64,
+    pub spares_remaining: usize,
+    /// Mean fraction of the run each unit was serving (1.0 = no downtime).
+    pub availability: f64,
+    /// Mean time-to-restore across crash episodes (seconds).
+    pub mttr_s: f64,
+}
+
+impl FleetFaultSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("injected_crashes", self.injected_crashes)
+            .set("injected_slowdowns", self.injected_slowdowns)
+            .set("injected_corruptions", self.injected_corruptions)
+            .set("hot_swaps", self.hot_swaps)
+            .set("redispatches", self.redispatches)
+            .set("retries", self.retries)
+            .set("rerun_frames", self.rerun_frames)
+            .set("spares_remaining", self.spares_remaining)
+            .set("availability", self.availability)
+            .set("mttr_ms", self.mttr_s * 1e3)
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "  faults: {c} crashes ({h} hot-swapped, {sp} spares left), \
+             {s} slowdowns, {co} corruptions → {r} retries, {rd} redispatches, \
+             {rr} reruns; availability {a:.4}, MTTR {m:.2} ms\n",
+            c = self.injected_crashes,
+            h = self.hot_swaps,
+            sp = self.spares_remaining,
+            s = self.injected_slowdowns,
+            co = self.injected_corruptions,
+            r = self.retries,
+            rd = self.redispatches,
+            rr = self.rerun_frames,
+            a = self.availability,
+            m = self.mttr_s * 1e3,
+        )
+    }
+}
+
+/// Final report of a fleet run. Under the virtual clock every field is a
+/// pure function of (design, topology, balancer, trace, fault plan) —
+/// `to_json().pretty()` is byte-identical across runs.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub backend: String,
+    /// Topology label, e.g. `replicated(4)` or `2×replica+pipeline:2`.
+    pub topology: String,
+    pub balancer: String,
+    /// Always `"virtual"` — the fleet simulator has no wall-clock mode.
+    pub clock: String,
+    /// Trace kind tag (`poisson`, `flash-crowd`, …).
+    pub trace: String,
+    pub boards: usize,
+    /// Run length in simulated clock seconds.
+    pub elapsed_seconds: f64,
+    pub aggregate: AggregateReport,
+    pub streams: Vec<StreamReport>,
+    pub units: Vec<UnitReport>,
+    pub faults: Option<FleetFaultSummary>,
+}
+
+impl FleetReport {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("backend", self.backend.as_str())
+            .set("topology", self.topology.as_str())
+            .set("balancer", self.balancer.as_str())
+            .set("clock", self.clock.as_str())
+            .set("trace", self.trace.as_str())
+            .set("boards", self.boards)
+            .set("elapsed_seconds", self.elapsed_seconds)
+            .set("aggregate", self.aggregate.to_json())
+            .set(
+                "streams",
+                Json::Arr(self.streams.iter().map(StreamReport::to_json).collect()),
+            )
+            .set(
+                "units",
+                Json::Arr(self.units.iter().map(UnitReport::to_json).collect()),
+            );
+        if let Some(f) = &self.faults {
+            j = j.set("faults", f.to_json());
+        }
+        j
+    }
+
+    pub fn render(&self) -> String {
+        let a = &self.aggregate;
+        let mut out = format!(
+            "fleet {t}  ({b} boards, {u} units, {p} balancer, {tr} trace, {be})\n  \
+             aggregate: offered {o} → completed {cmp}, dropped {d} ({dr:.1}%), \
+             failed {f}, {fps:.1} FPS achieved, {v} SLA violations\n  \
+             e2e latency  p50 {p50:.2} ms  p95 {p95:.2} ms  p99 {p99:.2} ms\n",
+            t = self.topology,
+            b = self.boards,
+            u = self.units.len(),
+            p = self.balancer,
+            tr = self.trace,
+            be = self.backend,
+            o = a.offered,
+            cmp = a.completed,
+            d = a.dropped,
+            dr = 100.0 * a.drop_rate,
+            f = a.failed,
+            fps = a.achieved_fps,
+            v = a.sla_violations,
+            p50 = a.e2e_latency.p50 * 1e3,
+            p95 = a.e2e_latency.p95 * 1e3,
+            p99 = a.e2e_latency.p99 * 1e3,
+        );
+        for u in &self.units {
+            out.push_str(&format!(
+                "  unit {i} ({l}, {bd} board{s}): served {n} frames, {ut:.0}% busy/board\n",
+                i = u.unit,
+                l = u.label,
+                bd = u.boards,
+                s = if u.boards == 1 { "" } else { "s" },
+                n = u.served,
+                ut = 100.0 * u.utilization,
+            ));
+        }
+        if let Some(f) = &self.faults {
+            out.push_str(&f.render());
+        }
+        out
+    }
+}

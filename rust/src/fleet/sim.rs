@@ -1,0 +1,888 @@
+//! The one-clock fleet simulator.
+//!
+//! A discrete-event loop on the shared [`VirtualClock`] where the
+//! schedulable entity is a **serving unit**: a data-parallel replica
+//! (one board, one service time for the whole compiled design) or an
+//! N-board shard pipeline (the PR 5 stage model — per-stage service
+//! cycles and bounded inter-stage FIFOs with downstream-first
+//! backpressure). A [`BalancerPolicy`] routes every trace arrival to
+//! one healthy unit; frames then flow through the unit's stages like
+//! `shard::simulate_pipeline` frames flow through boards.
+//!
+//! Event ordering is the scheduler's: a max-heap popping the smallest
+//! `(cycle, seq)`, fault events seeded with the lowest sequence numbers
+//! so a same-cycle crash beats the completion racing it. Fault plans
+//! address serving units (unit 0 is the first in the topology); a crash
+//! pulls every frame inside the unit back through the balancer on the
+//! scheduler's retry/backoff path, and the spare inventory hot-swaps
+//! crashed units back after `swap_s`, mirroring the pipeline failover
+//! path at fleet granularity. Conservation holds per stream and in
+//! aggregate: `offered == completed + dropped + failed`.
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::coordinator::{
+    AggregateReport, Clock, Frame, FrameSource, StreamReport, StreamStats, VirtualClock,
+};
+use crate::fault::{DowntimeTracker, FaultKind, FaultPlan, Health};
+use crate::model::VitConfig;
+use crate::util::stats::Summary;
+use crate::Cycles;
+
+use super::balancer::{BalancerPolicy, UnitSnapshot};
+use super::report::{FleetFaultSummary, FleetReport, UnitReport};
+use super::trace::TraceSource;
+
+/// One pipeline stage (or the whole design, for a replica) as the
+/// simulator sees it: deterministic service plus a bounded input FIFO.
+#[derive(Debug, Clone, Copy)]
+pub struct StageSpec {
+    pub service_cycles: Cycles,
+    /// Input FIFO capacity in frames (stage 0's FIFO is the unit's
+    /// admission queue).
+    pub capacity: usize,
+}
+
+/// A serving unit handed to [`simulate_fleet`].
+#[derive(Debug, Clone)]
+pub struct ServingUnit {
+    /// `replica` or `pipeline:<depth>`.
+    pub label: String,
+    pub boards: usize,
+    pub stages: Vec<StageSpec>,
+}
+
+impl ServingUnit {
+    /// One board serving whole frames in `service_cycles`, admitting up
+    /// to `queue_depth` waiting frames.
+    pub fn replica(service_cycles: Cycles, queue_depth: usize) -> ServingUnit {
+        ServingUnit {
+            label: "replica".to_string(),
+            boards: 1,
+            stages: vec![StageSpec {
+                service_cycles: service_cycles.max(1),
+                capacity: queue_depth.max(1),
+            }],
+        }
+    }
+
+    /// An N-board pipeline; `stages[0].capacity` is the admission queue.
+    pub fn pipeline(boards: usize, stages: Vec<StageSpec>) -> ServingUnit {
+        ServingUnit {
+            label: format!("pipeline:{boards}"),
+            boards,
+            stages,
+        }
+    }
+}
+
+/// Run-level configuration and report labels.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Backend label for the report, e.g. `analytic:W1A8`.
+    pub backend: String,
+    /// Topology label for the report, e.g. `replicated(4)`.
+    pub topology: String,
+    /// Arrivals are assigned round-robin across this many streams.
+    pub streams: usize,
+    pub sla_ms: Option<f64>,
+    /// Seed for the per-stream `FrameSource`s (frame ids and payloads).
+    pub source_seed: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            backend: "analytic".to_string(),
+            topology: "replicated(1)".to_string(),
+            streams: 1,
+            sla_ms: None,
+            source_seed: 11,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Internal state.
+// ---------------------------------------------------------------------------
+
+#[derive(Debug)]
+struct InService {
+    frame: Frame,
+    /// Dispatch id — a crash invalidates it, turning the pending
+    /// `StageDone` into a deterministic no-op (scheduler idiom).
+    dispatch: u64,
+}
+
+#[derive(Debug)]
+struct Stage {
+    service: Cycles,
+    capacity: usize,
+    queue: VecDeque<Frame>,
+    in_service: Option<InService>,
+    /// Finished this stage but waiting for room in the next FIFO.
+    blocked: Option<Frame>,
+    busy_cycles: Cycles,
+}
+
+#[derive(Debug)]
+struct Unit {
+    label: String,
+    boards: usize,
+    stages: Vec<Stage>,
+    health: Health,
+    slow: f64,
+    corrupt_next: bool,
+    served: u64,
+}
+
+impl Unit {
+    fn is_up(&self) -> bool {
+        self.health != Health::Down
+    }
+
+    fn outstanding(&self) -> usize {
+        self.stages
+            .iter()
+            .map(|s| {
+                s.queue.len()
+                    + usize::from(s.in_service.is_some())
+                    + usize::from(s.blocked.is_some())
+            })
+            .sum()
+    }
+
+    /// Steady-state cadence: the slowest stage bounds throughput.
+    fn bottleneck_cycles(&self) -> Cycles {
+        self.stages.iter().map(|s| s.service).max().unwrap_or(1)
+    }
+
+    /// Nominal whole-unit compute per frame (for device-latency stats).
+    fn device_cycles(&self) -> Cycles {
+        self.stages.iter().map(|s| s.service).sum()
+    }
+
+    fn busy_cycles(&self) -> Cycles {
+        self.stages.iter().map(|s| s.busy_cycles).sum()
+    }
+
+    fn has_room(&self) -> bool {
+        self.stages[0].queue.len() < self.stages[0].capacity
+    }
+}
+
+struct Event {
+    cycle: Cycles,
+    seq: u64,
+    kind: EventKind,
+}
+
+enum EventKind {
+    /// Arrival `idx` of the trace (streams are assigned round-robin).
+    Arrival { idx: u64 },
+    /// A stage finished its current frame.
+    StageDone { unit: usize, stage: usize, dispatch: u64 },
+    /// Hot-swap complete: a spare restored the crashed unit.
+    UnitUp { unit: usize },
+    /// Index into the sorted fault-event schedule.
+    Fault { index: usize },
+    /// Retry backoff elapsed: the frame re-enters the balancer.
+    Retry { frame: Frame },
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Event) -> bool {
+        self.cycle == other.cycle && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Event) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Event) -> std::cmp::Ordering {
+        // Reversed so `BinaryHeap` (a max-heap) pops the earliest
+        // (cycle, seq) first — a deterministic total order.
+        (other.cycle, other.seq).cmp(&(self.cycle, self.seq))
+    }
+}
+
+fn scaled_cycles(service: Cycles, slow: f64) -> Cycles {
+    ((service as f64) * slow).ceil().max(1.0) as Cycles
+}
+
+/// Let frames flow inside one unit until nothing moves: downstream-first
+/// unblock, then start service on idle stages — the
+/// `shard::simulate_pipeline` settle loop, driven by heap events instead
+/// of a closed-loop source.
+fn settle_unit(
+    unit_idx: usize,
+    unit: &mut Unit,
+    now: Cycles,
+    heap: &mut BinaryHeap<Event>,
+    seq: &mut u64,
+    dispatch_counter: &mut u64,
+) {
+    let n = unit.stages.len();
+    loop {
+        let mut progressed = false;
+        for i in (0..n).rev() {
+            if i + 1 < n {
+                if let Some(frame) = unit.stages[i].blocked.take() {
+                    if unit.stages[i + 1].queue.len() < unit.stages[i + 1].capacity {
+                        unit.stages[i + 1].queue.push_back(frame);
+                        progressed = true;
+                    } else {
+                        unit.stages[i].blocked = Some(frame);
+                    }
+                }
+            }
+            if unit.is_up()
+                && unit.stages[i].in_service.is_none()
+                && unit.stages[i].blocked.is_none()
+            {
+                if let Some(frame) = unit.stages[i].queue.pop_front() {
+                    let dur = scaled_cycles(unit.stages[i].service, unit.slow);
+                    *dispatch_counter += 1;
+                    unit.stages[i].busy_cycles += dur;
+                    unit.stages[i].in_service = Some(InService {
+                        frame,
+                        dispatch: *dispatch_counter,
+                    });
+                    heap.push(Event {
+                        cycle: now + dur,
+                        seq: *seq,
+                        kind: EventKind::StageDone {
+                            unit: unit_idx,
+                            stage: i,
+                            dispatch: *dispatch_counter,
+                        },
+                    });
+                    *seq += 1;
+                    progressed = true;
+                }
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+}
+
+/// Healthy-unit snapshots in ascending unit order (the balancer
+/// contract).
+fn snapshots(units: &[Unit], clock: &VirtualClock) -> Vec<UnitSnapshot> {
+    units
+        .iter()
+        .enumerate()
+        .filter(|(_, u)| u.is_up())
+        .map(|(i, u)| UnitSnapshot {
+            unit: i,
+            queued: u.stages[0].queue.len(),
+            outstanding: u.outstanding(),
+            busy_s: clock.cycles_to_seconds(u.busy_cycles()),
+            served: u.served,
+            service_s: clock.cycles_to_seconds(u.bottleneck_cycles()),
+        })
+        .collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn route(
+    frame: Frame,
+    is_retry: bool,
+    units: &mut [Unit],
+    balancer: &mut dyn BalancerPolicy,
+    stats: &mut [StreamStats],
+    clock: &VirtualClock,
+    heap: &mut BinaryHeap<Event>,
+    seq: &mut u64,
+    dispatch_counter: &mut u64,
+) {
+    let healthy = snapshots(units, clock);
+    if healthy.is_empty() {
+        // Nobody to serve: fresh arrivals are shed at admission, retried
+        // frames exhaust their recovery (conservation either way).
+        if is_retry {
+            stats[frame.stream].failed += 1;
+        } else {
+            stats[frame.stream].dropped += 1;
+        }
+        return;
+    }
+    let u = healthy[balancer.pick_unit(&healthy)].unit;
+    if is_retry {
+        // Oldest work jumps the admission gate, mirroring the
+        // scheduler's retry pool jumping the stream queues.
+        units[u].stages[0].queue.push_front(frame);
+    } else if units[u].has_room() {
+        units[u].stages[0].queue.push_back(frame);
+    } else {
+        stats[frame.stream].dropped += 1;
+        return;
+    }
+    settle_unit(u, &mut units[u], clock.cycles(), heap, seq, dispatch_counter);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn schedule_retry(
+    mut frame: Frame,
+    recovery: &crate::fault::RecoveryConfig,
+    clock: &VirtualClock,
+    heap: &mut BinaryHeap<Event>,
+    seq: &mut u64,
+    stats: &mut [StreamStats],
+    summary: &mut FleetFaultSummary,
+) {
+    frame.attempts += 1;
+    if frame.attempts > recovery.max_retries {
+        stats[frame.stream].failed += 1;
+        return;
+    }
+    summary.retries += 1;
+    let shift = (frame.attempts - 1).min(20);
+    let backoff_s = recovery.backoff_base_s * f64::from(1u32 << shift);
+    heap.push(Event {
+        cycle: clock.cycles() + clock.seconds_to_cycles(backoff_s).max(1),
+        seq: *seq,
+        kind: EventKind::Retry { frame },
+    });
+    *seq += 1;
+}
+
+// ---------------------------------------------------------------------------
+// The simulator.
+// ---------------------------------------------------------------------------
+
+/// Drive `trace` through `units` under `balancer` on one virtual clock.
+///
+/// Pure function of its inputs: two calls with equal arguments render
+/// byte-identical reports.
+pub fn simulate_fleet(
+    model: &VitConfig,
+    clock_mhz: u64,
+    units_spec: &[ServingUnit],
+    trace: &TraceSource,
+    mut balancer: Box<dyn BalancerPolicy>,
+    cfg: &FleetConfig,
+    faults: Option<&FaultPlan>,
+) -> anyhow::Result<FleetReport> {
+    anyhow::ensure!(!units_spec.is_empty(), "fleet needs at least one serving unit");
+    for u in units_spec {
+        anyhow::ensure!(!u.stages.is_empty(), "serving unit `{}` has no stages", u.label);
+    }
+    let clock = VirtualClock::new(clock_mhz);
+    let n_streams = cfg.streams.max(1);
+
+    let injecting = faults.is_some();
+    let plan = faults.cloned().unwrap_or_default();
+    let recovery = plan.recovery;
+    let fault_events = plan.sorted_events();
+    let mut spares = recovery.spares;
+
+    let mut units: Vec<Unit> = units_spec
+        .iter()
+        .map(|spec| Unit {
+            label: spec.label.clone(),
+            boards: spec.boards.max(1),
+            stages: spec
+                .stages
+                .iter()
+                .map(|s| Stage {
+                    service: s.service_cycles.max(1),
+                    capacity: s.capacity.max(1),
+                    queue: VecDeque::new(),
+                    in_service: None,
+                    blocked: None,
+                    busy_cycles: 0,
+                })
+                .collect(),
+            health: Health::Up,
+            slow: 1.0,
+            corrupt_next: false,
+            served: 0,
+        })
+        .collect();
+    let n_units = units.len();
+
+    // Frame payloads replay through the existing FrameSource machinery:
+    // arrival `idx` maps to stream `idx % n_streams`, frame ids count up
+    // per stream, and the trace supplies the arrival timetable.
+    let sources: Vec<FrameSource> = (0..n_streams)
+        .map(|s| {
+            FrameSource::new(model.clone(), cfg.source_seed.wrapping_add(s as u64), None)
+                .with_stream(s)
+        })
+        .collect();
+    let mut next_frame_id: Vec<u64> = vec![0; n_streams];
+    let mut stats: Vec<StreamStats> = vec![StreamStats::default(); n_streams];
+    let mut tracker = DowntimeTracker::new(n_units);
+    let mut summary = FleetFaultSummary::default();
+    let mut dispatch_counter: u64 = 0;
+
+    let mut heap: BinaryHeap<Event> = BinaryHeap::new();
+    let mut seq: u64 = 0;
+    // Fault events get the lowest seqs: at an equal cycle a crash pops
+    // before the completions scheduled after it (scheduler idiom).
+    for (index, ev) in fault_events.iter().enumerate() {
+        heap.push(Event {
+            cycle: clock.seconds_to_cycles(ev.at_s),
+            seq,
+            kind: EventKind::Fault { index },
+        });
+        seq += 1;
+    }
+    if !trace.is_empty() {
+        heap.push(Event {
+            cycle: clock.seconds_to_cycles(trace.arrivals()[0]),
+            seq,
+            kind: EventKind::Arrival { idx: 0 },
+        });
+        seq += 1;
+    }
+
+    while let Some(ev) = heap.pop() {
+        clock.advance_to(ev.cycle);
+        match ev.kind {
+            EventKind::Arrival { idx } => {
+                let stream = (idx as usize) % n_streams;
+                let id = next_frame_id[stream];
+                next_frame_id[stream] += 1;
+                let mut frame = sources[stream].make_stub(id);
+                frame.emitted_at = clock.now();
+                stats[stream].offered += 1;
+                if (idx as usize) + 1 < trace.len() {
+                    heap.push(Event {
+                        cycle: clock.seconds_to_cycles(trace.arrivals()[idx as usize + 1]),
+                        seq,
+                        kind: EventKind::Arrival { idx: idx + 1 },
+                    });
+                    seq += 1;
+                }
+                route(
+                    frame, false, &mut units, balancer.as_mut(), &mut stats, &clock,
+                    &mut heap, &mut seq, &mut dispatch_counter,
+                );
+            }
+            EventKind::StageDone { unit, stage, dispatch } => {
+                let matches = units[unit].stages[stage]
+                    .in_service
+                    .as_ref()
+                    .map(|s| s.dispatch == dispatch)
+                    .unwrap_or(false);
+                // A mismatch means the unit crashed under this dispatch
+                // (frame already re-routed): stale event.
+                if matches {
+                    let done = units[unit].stages[stage]
+                        .in_service
+                        .take()
+                        .expect("matched in-service frame");
+                    let frame = done.frame;
+                    let last = stage + 1 == units[unit].stages.len();
+                    if last {
+                        if units[unit].corrupt_next {
+                            // Corrupted completion: discard and re-run the
+                            // final stage (shard-pipeline semantics).
+                            units[unit].corrupt_next = false;
+                            summary.rerun_frames += 1;
+                            units[unit].stages[stage].queue.push_front(frame);
+                        } else {
+                            units[unit].served += 1;
+                            let e2e = clock.now() - frame.emitted_at;
+                            let device_s =
+                                clock.cycles_to_seconds(units[unit].device_cycles());
+                            let violation = cfg
+                                .sla_ms
+                                .map(|ms| e2e > ms / 1e3)
+                                .unwrap_or(false);
+                            stats[frame.stream].record(e2e, device_s, violation);
+                        }
+                    } else {
+                        units[unit].stages[stage].blocked = Some(frame);
+                    }
+                    settle_unit(
+                        unit, &mut units[unit], clock.cycles(), &mut heap, &mut seq,
+                        &mut dispatch_counter,
+                    );
+                }
+            }
+            EventKind::UnitUp { unit } => {
+                if units[unit].health == Health::Down {
+                    units[unit].health = if units[unit].slow > 1.0 {
+                        Health::Degraded
+                    } else {
+                        Health::Up
+                    };
+                    tracker.mark_up(unit, clock.now());
+                    settle_unit(
+                        unit, &mut units[unit], clock.cycles(), &mut heap, &mut seq,
+                        &mut dispatch_counter,
+                    );
+                }
+            }
+            EventKind::Fault { index } => {
+                let fev = &fault_events[index];
+                let u = fev.unit;
+                if u < n_units {
+                    match fev.kind {
+                        FaultKind::Crash => {
+                            if units[u].health != Health::Down {
+                                units[u].health = Health::Down;
+                                tracker.mark_down(u, clock.now());
+                                summary.injected_crashes += 1;
+                                // Pull every frame out of the unit, in
+                                // stage order, and re-route it through the
+                                // balancer on the retry path.
+                                let mut pulled: Vec<Frame> = Vec::new();
+                                for st in units[u].stages.iter_mut() {
+                                    if let Some(s) = st.in_service.take() {
+                                        pulled.push(s.frame);
+                                    }
+                                    if let Some(f) = st.blocked.take() {
+                                        pulled.push(f);
+                                    }
+                                    pulled.extend(st.queue.drain(..));
+                                }
+                                for frame in pulled {
+                                    summary.redispatches += 1;
+                                    schedule_retry(
+                                        frame, &recovery, &clock, &mut heap, &mut seq,
+                                        &mut stats, &mut summary,
+                                    );
+                                }
+                                if spares > 0 {
+                                    // Hot-swap: a spare board set powers
+                                    // the unit back up after `swap_s`.
+                                    spares -= 1;
+                                    summary.hot_swaps += 1;
+                                    heap.push(Event {
+                                        cycle: clock.cycles()
+                                            + clock.seconds_to_cycles(recovery.swap_s).max(1),
+                                        seq,
+                                        kind: EventKind::UnitUp { unit: u },
+                                    });
+                                    seq += 1;
+                                }
+                            }
+                        }
+                        FaultKind::Recover => {
+                            if units[u].health == Health::Down {
+                                units[u].health = if units[u].slow > 1.0 {
+                                    Health::Degraded
+                                } else {
+                                    Health::Up
+                                };
+                                tracker.mark_up(u, clock.now());
+                                settle_unit(
+                                    u, &mut units[u], clock.cycles(), &mut heap, &mut seq,
+                                    &mut dispatch_counter,
+                                );
+                            }
+                        }
+                        FaultKind::SlowDown { factor } => {
+                            summary.injected_slowdowns += 1;
+                            units[u].slow = factor.max(1.0);
+                            if units[u].health == Health::Up {
+                                units[u].health = Health::Degraded;
+                            }
+                        }
+                        FaultKind::SlowEnd => {
+                            units[u].slow = 1.0;
+                            if units[u].health == Health::Degraded {
+                                units[u].health = Health::Up;
+                            }
+                        }
+                        FaultKind::Corrupt => {
+                            summary.injected_corruptions += 1;
+                            units[u].corrupt_next = true;
+                        }
+                    }
+                }
+            }
+            EventKind::Retry { frame } => {
+                route(
+                    frame, true, &mut units, balancer.as_mut(), &mut stats, &clock,
+                    &mut heap, &mut seq, &mut dispatch_counter,
+                );
+            }
+        }
+    }
+
+    // Conservation drain: a unit that died with no spare and no scripted
+    // recovery was emptied at crash time, so nothing should remain — but
+    // any stragglers are `failed`, never silently lost.
+    for unit in &mut units {
+        for st in unit.stages.iter_mut() {
+            let mut leftovers: Vec<Frame> = Vec::new();
+            if let Some(s) = st.in_service.take() {
+                leftovers.push(s.frame);
+            }
+            if let Some(f) = st.blocked.take() {
+                leftovers.push(f);
+            }
+            leftovers.extend(st.queue.drain(..));
+            for f in leftovers {
+                stats[f.stream].failed += 1;
+            }
+        }
+    }
+    for s in &stats {
+        debug_assert_eq!(
+            s.offered,
+            s.completed() + s.dropped + s.failed,
+            "fleet run must conserve frames per stream"
+        );
+    }
+
+    let elapsed = clock.now();
+    tracker.finish(elapsed);
+
+    let per_stream_fps = trace.mean_rate_hz() / n_streams as f64;
+    let streams: Vec<StreamReport> = stats
+        .iter()
+        .enumerate()
+        .map(|(s, st)| StreamReport::from_stats(s, per_stream_fps, cfg.sla_ms, st))
+        .collect();
+
+    let mut all_e2e: Vec<f64> = Vec::new();
+    let mut all_device: Vec<f64> = Vec::new();
+    let (mut offered, mut completed, mut dropped, mut failed, mut violations) =
+        (0u64, 0u64, 0u64, 0u64, 0u64);
+    for st in &stats {
+        offered += st.offered;
+        completed += st.completed();
+        dropped += st.dropped;
+        failed += st.failed;
+        violations += st.sla_violations;
+        all_e2e.extend_from_slice(&st.e2e);
+        all_device.extend_from_slice(&st.device);
+    }
+    let aggregate = AggregateReport {
+        offered,
+        completed,
+        dropped,
+        failed,
+        drop_rate: dropped as f64 / offered.max(1) as f64,
+        sla_violations: violations,
+        achieved_fps: if elapsed > 0.0 {
+            completed as f64 / elapsed
+        } else {
+            0.0
+        },
+        e2e_latency: Summary::from(&all_e2e),
+        device_latency: Summary::from(&all_device),
+    };
+
+    let unit_reports: Vec<UnitReport> = units
+        .iter()
+        .enumerate()
+        .map(|(i, u)| {
+            let busy_seconds = clock.cycles_to_seconds(u.busy_cycles());
+            UnitReport {
+                unit: i,
+                label: u.label.clone(),
+                boards: u.boards,
+                served: u.served,
+                busy_seconds,
+                utilization: if elapsed > 0.0 {
+                    busy_seconds / (u.boards as f64 * elapsed)
+                } else {
+                    0.0
+                },
+            }
+        })
+        .collect();
+
+    let fault_block = if injecting {
+        summary.spares_remaining = spares;
+        summary.availability = tracker.availability(elapsed);
+        summary.mttr_s = tracker.mttr_s();
+        Some(summary)
+    } else {
+        None
+    };
+
+    Ok(FleetReport {
+        backend: cfg.backend.clone(),
+        topology: cfg.topology.clone(),
+        balancer: balancer.name().to_string(),
+        clock: "virtual".to_string(),
+        trace: trace.spec().tag().to_string(),
+        boards: units.iter().map(|u| u.boards).sum(),
+        elapsed_seconds: elapsed,
+        aggregate,
+        streams,
+        units: unit_reports,
+        faults: fault_block,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::balancer::balancer_for;
+    use crate::fleet::trace::TraceSpec;
+
+    fn micro_model() -> VitConfig {
+        crate::model::micro()
+    }
+
+    fn run(
+        units: &[ServingUnit],
+        trace: TraceSpec,
+        balancer: &str,
+        faults: Option<&FaultPlan>,
+    ) -> FleetReport {
+        let source = TraceSource::from_spec(trace).unwrap();
+        simulate_fleet(
+            &micro_model(),
+            150,
+            units,
+            &source,
+            balancer_for(balancer).unwrap(),
+            &FleetConfig {
+                streams: 2,
+                ..FleetConfig::default()
+            },
+            faults,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn single_replica_completes_a_light_trace() {
+        // 1 ms service, 100 Hz offered: no contention, nothing dropped.
+        let units = [ServingUnit::replica(150_000, 4)];
+        let r = run(&units, TraceSpec::poisson(100.0, 0.5, 1), "round-robin", None);
+        let a = &r.aggregate;
+        assert_eq!(a.offered, a.completed);
+        assert_eq!(a.dropped + a.failed, 0);
+        assert!(a.e2e_latency.p50 >= 0.001, "latency includes service time");
+        assert!(r.faults.is_none(), "no fault plan ⇒ no fault block");
+    }
+
+    #[test]
+    fn overload_drops_at_admission_but_conserves() {
+        // 10 ms service vs 1000 Hz offered: the queue sheds most frames.
+        let units = [ServingUnit::replica(1_500_000, 2)];
+        let r = run(&units, TraceSpec::poisson(1000.0, 0.2, 2), "least-outstanding", None);
+        let a = &r.aggregate;
+        assert!(a.dropped > 0, "saturated replica must shed load");
+        assert_eq!(a.offered, a.completed + a.dropped + a.failed);
+    }
+
+    #[test]
+    fn two_replicas_beat_one_under_load() {
+        let one = [ServingUnit::replica(750_000, 2)];
+        let two = [ServingUnit::replica(750_000, 2), ServingUnit::replica(750_000, 2)];
+        let trace = TraceSpec::poisson(350.0, 0.5, 3);
+        let r1 = run(&one, trace.clone(), "least-outstanding", None);
+        let r2 = run(&two, trace, "least-outstanding", None);
+        assert!(
+            r2.aggregate.completed > r1.aggregate.completed,
+            "2 replicas ({}) must complete more than 1 ({})",
+            r2.aggregate.completed,
+            r1.aggregate.completed
+        );
+    }
+
+    #[test]
+    fn pipeline_unit_flows_frames_through_stages() {
+        let stages = vec![
+            StageSpec { service_cycles: 40_000, capacity: 4 },
+            StageSpec { service_cycles: 60_000, capacity: 2 },
+            StageSpec { service_cycles: 50_000, capacity: 2 },
+        ];
+        let units = [ServingUnit::pipeline(3, stages)];
+        let r = run(&units, TraceSpec::poisson(400.0, 0.5, 4), "round-robin", None);
+        let a = &r.aggregate;
+        assert!(a.completed > 0);
+        assert_eq!(a.offered, a.completed + a.dropped + a.failed);
+        // Per-frame latency ≥ sum of stage services (1 ms at 150 MHz).
+        assert!(a.e2e_latency.min >= 0.001 - 1e-9);
+        assert_eq!(r.units[0].boards, 3);
+    }
+
+    #[test]
+    fn crash_without_recovery_fails_inflight_frames_and_conserves() {
+        let units = [ServingUnit::replica(150_000, 8), ServingUnit::replica(150_000, 8)];
+        let plan = FaultPlan::new().crash_at(0.05, 0);
+        let r = run(&units, TraceSpec::poisson(500.0, 0.3, 5), "round-robin", Some(&plan));
+        let a = &r.aggregate;
+        assert_eq!(a.offered, a.completed + a.dropped + a.failed);
+        let f = r.faults.as_ref().expect("fault plan ⇒ fault block");
+        assert_eq!(f.injected_crashes, 1);
+        assert!(f.availability < 1.0, "unit 0 stayed down");
+        // The survivor kept serving.
+        assert!(r.units[1].served > 0);
+    }
+
+    #[test]
+    fn spare_hot_swaps_a_crashed_unit_back() {
+        let units = [ServingUnit::replica(150_000, 8)];
+        let plan = FaultPlan::new().crash_at(0.05, 0).recovery(
+            crate::fault::RecoveryConfig {
+                spares: 1,
+                swap_s: 0.002,
+                ..Default::default()
+            },
+        );
+        let r = run(&units, TraceSpec::poisson(300.0, 0.3, 6), "round-robin", Some(&plan));
+        let f = r.faults.as_ref().unwrap();
+        assert_eq!(f.hot_swaps, 1);
+        assert_eq!(f.spares_remaining, 0);
+        assert!(f.availability > 0.9, "2 ms outage in 300 ms");
+        // Frames keep completing after the swap.
+        assert!(r.aggregate.completed > 0);
+        assert_eq!(
+            r.aggregate.offered,
+            r.aggregate.completed + r.aggregate.dropped + r.aggregate.failed
+        );
+    }
+
+    #[test]
+    fn slowdown_and_corrupt_are_accounted() {
+        let units = [ServingUnit::replica(150_000, 8)];
+        let plan = FaultPlan::new()
+            .slow_down_at(0.02, 0, 3.0)
+            .slow_end_at(0.1, 0)
+            .corrupt_at(0.05, 0);
+        let r = run(&units, TraceSpec::poisson(200.0, 0.3, 7), "sla-weighted", Some(&plan));
+        let f = r.faults.as_ref().unwrap();
+        assert_eq!(f.injected_slowdowns, 1);
+        assert_eq!(f.injected_corruptions, 1);
+        assert_eq!(f.rerun_frames, 1, "one corrupted completion re-ran");
+        assert_eq!(
+            r.aggregate.offered,
+            r.aggregate.completed + r.aggregate.dropped + r.aggregate.failed
+        );
+    }
+
+    #[test]
+    fn two_runs_render_byte_identical_reports() {
+        let units = [
+            ServingUnit::replica(150_000, 4),
+            ServingUnit::pipeline(
+                2,
+                vec![
+                    StageSpec { service_cycles: 80_000, capacity: 4 },
+                    StageSpec { service_cycles: 90_000, capacity: 2 },
+                ],
+            ),
+        ];
+        let plan = FaultPlan::new().crash_at(0.04, 1).recover_at(0.08, 1);
+        let trace = TraceSpec::flash_crowd(100.0, 600.0, 0.1, 0.02, 0.05, 0.3, 8);
+        let a = run(&units, trace.clone(), "sla-weighted", Some(&plan));
+        let b = run(&units, trace, "sla-weighted", Some(&plan));
+        assert_eq!(
+            a.to_json().pretty(),
+            b.to_json().pretty(),
+            "fleet runs must be byte-reproducible"
+        );
+    }
+}

@@ -1,0 +1,180 @@
+//! Fleet topology: how a fixed board count is carved into serving units.
+//!
+//! A serving unit is either a data-parallel **replica** (one board
+//! running the whole compiled design) or an N-board **pipeline** (the
+//! PR 5 shard stage model). The central deployment question — at equal
+//! board count, pipeline, replicate, or mix? — is a choice of
+//! [`FleetTopology`], compared under identical traffic.
+
+/// One serving unit's shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnitKind {
+    /// One board running the full compiled design.
+    Replica,
+    /// `depth` boards running the co-searched shard pipeline.
+    Pipeline { depth: usize },
+}
+
+impl UnitKind {
+    pub fn boards(&self) -> usize {
+        match self {
+            UnitKind::Replica => 1,
+            UnitKind::Pipeline { depth } => *depth,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            UnitKind::Replica => "replica".to_string(),
+            UnitKind::Pipeline { depth } => format!("pipeline:{depth}"),
+        }
+    }
+}
+
+/// An ordered list of serving units (order fixes unit indices, which
+/// balancer tie-breaks and fault plans refer to).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FleetTopology {
+    pub units: Vec<UnitKind>,
+}
+
+/// Preset names accepted by [`FleetTopology::preset`] and the CLI.
+pub const TOPOLOGY_PRESETS: [&str; 3] = ["replicated", "pipelined", "mixed"];
+
+impl FleetTopology {
+    pub fn new() -> FleetTopology {
+        FleetTopology::default()
+    }
+
+    /// Append one replica unit.
+    pub fn replica(mut self) -> FleetTopology {
+        self.units.push(UnitKind::Replica);
+        self
+    }
+
+    /// Append `n` replica units.
+    pub fn replicas(mut self, n: usize) -> FleetTopology {
+        for _ in 0..n {
+            self.units.push(UnitKind::Replica);
+        }
+        self
+    }
+
+    /// Append one pipeline unit of `depth` boards (`depth ≤ 1` collapses
+    /// to a replica).
+    pub fn pipeline(mut self, depth: usize) -> FleetTopology {
+        self.units.push(if depth <= 1 {
+            UnitKind::Replica
+        } else {
+            UnitKind::Pipeline { depth }
+        });
+        self
+    }
+
+    /// `boards` independent replicas — pure data parallelism.
+    pub fn replicated(boards: usize) -> FleetTopology {
+        FleetTopology::new().replicas(boards.max(1))
+    }
+
+    /// One pipeline across all `boards` — pure model parallelism.
+    pub fn pipelined(boards: usize) -> FleetTopology {
+        FleetTopology::new().pipeline(boards.max(1))
+    }
+
+    /// Half the boards (rounded up) as one pipeline, the rest as
+    /// replicas; below 3 boards this collapses to `replicated`.
+    pub fn mixed(boards: usize) -> FleetTopology {
+        if boards < 3 {
+            return FleetTopology::replicated(boards);
+        }
+        let depth = boards.div_ceil(2);
+        FleetTopology::new().replicas(boards - depth).pipeline(depth)
+    }
+
+    /// Resolve a preset name at a board count.
+    pub fn preset(name: &str, boards: usize) -> Option<FleetTopology> {
+        match name {
+            "replicated" | "rep" => Some(FleetTopology::replicated(boards)),
+            "pipelined" | "pipe" => Some(FleetTopology::pipelined(boards)),
+            "mixed" | "mix" => Some(FleetTopology::mixed(boards)),
+            _ => None,
+        }
+    }
+
+    /// Total boards across all units.
+    pub fn boards(&self) -> usize {
+        self.units.iter().map(UnitKind::boards).sum()
+    }
+
+    /// Number of serving units the balancer spreads over.
+    pub fn len(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.units.is_empty()
+    }
+
+    /// Human label, e.g. `replicated(4)`, `pipelined(4)`,
+    /// `2×replica+pipeline:2`.
+    pub fn label(&self) -> String {
+        let boards = self.boards();
+        if !self.units.is_empty() && self.units.iter().all(|u| *u == UnitKind::Replica) {
+            return format!("replicated({boards})");
+        }
+        if self.units.len() == 1 {
+            return format!("pipelined({boards})");
+        }
+        let replicas = self.units.iter().filter(|u| **u == UnitKind::Replica).count();
+        let mut parts = Vec::new();
+        if replicas > 0 {
+            parts.push(format!("{replicas}×replica"));
+        }
+        for u in &self.units {
+            if let UnitKind::Pipeline { depth } = u {
+                parts.push(format!("pipeline:{depth}"));
+            }
+        }
+        parts.join("+")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_conserve_board_count() {
+        for boards in 1..=6 {
+            for name in TOPOLOGY_PRESETS {
+                let t = FleetTopology::preset(name, boards).unwrap();
+                assert_eq!(t.boards(), boards, "{name} at {boards} boards");
+                assert!(!t.is_empty());
+            }
+        }
+        assert!(FleetTopology::preset("torus", 4).is_none());
+    }
+
+    #[test]
+    fn mixed_splits_replicas_and_a_pipeline() {
+        let t = FleetTopology::mixed(4);
+        assert_eq!(
+            t.units,
+            vec![UnitKind::Replica, UnitKind::Replica, UnitKind::Pipeline { depth: 2 }]
+        );
+        assert_eq!(t.label(), "2×replica+pipeline:2");
+        assert_eq!(FleetTopology::mixed(2), FleetTopology::replicated(2));
+    }
+
+    #[test]
+    fn labels_identify_presets() {
+        assert_eq!(FleetTopology::replicated(4).label(), "replicated(4)");
+        assert_eq!(FleetTopology::pipelined(4).label(), "pipelined(4)");
+        assert_eq!(FleetTopology::pipelined(1).label(), "replicated(1)");
+    }
+
+    #[test]
+    fn shallow_pipelines_collapse_to_replicas() {
+        assert_eq!(FleetTopology::new().pipeline(1).units, vec![UnitKind::Replica]);
+    }
+}

@@ -1,0 +1,467 @@
+//! Trace-driven traffic: arrival-timestamp schedules for the fleet
+//! simulator.
+//!
+//! A [`TraceSpec`] is plain data — either an explicit timestamp list
+//! (loaded from JSON, the replay path) or a seeded generator (Poisson
+//! baseline, diurnal sinusoid, flash-crowd burst, on/off bursty).
+//! Sampling is a pure function of the spec: generators draw from
+//! `util::rng::SplitMix64` via inverse-CDF exponentials and
+//! Lewis–Shedler thinning, so a given spec produces byte-identical
+//! arrivals on every run, exactly like `fault::GeneratorSpec`.
+
+use crate::util::json::Json;
+use crate::util::rng::{poisson_arrivals, SplitMix64};
+
+/// Seed salt so trace draws never collide with fault-generator draws
+/// that share a user-facing seed value.
+const TRACE_SALT: u64 = 0x7_2ACE_5EED;
+
+/// The shape of offered traffic over the horizon.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceKind {
+    /// Homogeneous Poisson arrivals at `rate_hz`.
+    Poisson { rate_hz: f64 },
+    /// Sinusoidal day/night swing:
+    /// `rate(t) = base_hz + amplitude_hz · sin(2π t / period_s)`,
+    /// clamped at 0.
+    Diurnal {
+        base_hz: f64,
+        amplitude_hz: f64,
+        period_s: f64,
+    },
+    /// Steady `base_hz` with one burst: a linear ramp to `peak_hz` over
+    /// `ramp_s` starting at `at_s`, held for `hold_s`, then a symmetric
+    /// ramp back down.
+    FlashCrowd {
+        base_hz: f64,
+        peak_hz: f64,
+        at_s: f64,
+        ramp_s: f64,
+        hold_s: f64,
+    },
+    /// Bursty on/off source: Poisson at `on_hz` for `on_s` seconds, then
+    /// silent for `off_s`, repeating.
+    OnOff { on_hz: f64, on_s: f64, off_s: f64 },
+    /// Explicit arrival timestamps (clock seconds), e.g. replayed from a
+    /// production log. Stored sorted ascending.
+    Explicit { timestamps: Vec<f64> },
+}
+
+impl TraceKind {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            TraceKind::Poisson { .. } => "poisson",
+            TraceKind::Diurnal { .. } => "diurnal",
+            TraceKind::FlashCrowd { .. } => "flash-crowd",
+            TraceKind::OnOff { .. } => "on-off",
+            TraceKind::Explicit { .. } => "explicit",
+        }
+    }
+
+    /// Instantaneous offered rate at time `t` (generator kinds only).
+    fn rate_at(&self, t: f64) -> f64 {
+        match self {
+            TraceKind::Poisson { rate_hz } => *rate_hz,
+            TraceKind::Diurnal { base_hz, amplitude_hz, period_s } => {
+                (base_hz + amplitude_hz * (2.0 * std::f64::consts::PI * t / period_s).sin())
+                    .max(0.0)
+            }
+            TraceKind::FlashCrowd { base_hz, peak_hz, at_s, ramp_s, hold_s } => {
+                let up_end = at_s + ramp_s;
+                let hold_end = up_end + hold_s;
+                let down_end = hold_end + ramp_s;
+                if t < *at_s || t >= down_end {
+                    *base_hz
+                } else if t < up_end {
+                    base_hz + (peak_hz - base_hz) * (t - at_s) / ramp_s.max(1e-12)
+                } else if t < hold_end {
+                    *peak_hz
+                } else {
+                    peak_hz - (peak_hz - base_hz) * (t - hold_end) / ramp_s.max(1e-12)
+                }
+            }
+            TraceKind::OnOff { on_hz, on_s, off_s } => {
+                let phase = t % (on_s + off_s);
+                if phase < *on_s {
+                    *on_hz
+                } else {
+                    0.0
+                }
+            }
+            TraceKind::Explicit { .. } => 0.0,
+        }
+    }
+
+    /// Upper bound on `rate_at` over the horizon — the thinning envelope.
+    fn rate_max(&self) -> f64 {
+        match self {
+            TraceKind::Poisson { rate_hz } => *rate_hz,
+            TraceKind::Diurnal { base_hz, amplitude_hz, .. } => base_hz + amplitude_hz.abs(),
+            TraceKind::FlashCrowd { base_hz, peak_hz, .. } => base_hz.max(*peak_hz),
+            TraceKind::OnOff { on_hz, .. } => *on_hz,
+            TraceKind::Explicit { .. } => 0.0,
+        }
+    }
+}
+
+/// A complete traffic schedule: kind + seed + horizon. Plain data with a
+/// JSON round trip, like `FaultPlan`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSpec {
+    pub kind: TraceKind,
+    /// Generator seed (ignored by `Explicit`).
+    pub seed: u64,
+    /// Arrivals are sampled on `[0, horizon_s)`. For `Explicit` traces
+    /// this is the replay window (defaults to just past the last
+    /// timestamp).
+    pub horizon_s: f64,
+}
+
+impl TraceSpec {
+    pub fn poisson(rate_hz: f64, horizon_s: f64, seed: u64) -> TraceSpec {
+        TraceSpec { kind: TraceKind::Poisson { rate_hz }, seed, horizon_s }
+    }
+
+    pub fn diurnal(
+        base_hz: f64,
+        amplitude_hz: f64,
+        period_s: f64,
+        horizon_s: f64,
+        seed: u64,
+    ) -> TraceSpec {
+        TraceSpec {
+            kind: TraceKind::Diurnal { base_hz, amplitude_hz, period_s },
+            seed,
+            horizon_s,
+        }
+    }
+
+    pub fn flash_crowd(
+        base_hz: f64,
+        peak_hz: f64,
+        at_s: f64,
+        ramp_s: f64,
+        hold_s: f64,
+        horizon_s: f64,
+        seed: u64,
+    ) -> TraceSpec {
+        TraceSpec {
+            kind: TraceKind::FlashCrowd { base_hz, peak_hz, at_s, ramp_s, hold_s },
+            seed,
+            horizon_s,
+        }
+    }
+
+    pub fn on_off(on_hz: f64, on_s: f64, off_s: f64, horizon_s: f64, seed: u64) -> TraceSpec {
+        TraceSpec {
+            kind: TraceKind::OnOff { on_hz, on_s, off_s },
+            seed,
+            horizon_s,
+        }
+    }
+
+    /// Explicit timestamp trace; sorts the list and derives the horizon
+    /// from the last arrival.
+    pub fn explicit(mut timestamps: Vec<f64>) -> TraceSpec {
+        timestamps.sort_by(f64::total_cmp);
+        let horizon_s = timestamps.last().copied().unwrap_or(0.0) + 1e-9;
+        TraceSpec {
+            kind: TraceKind::Explicit { timestamps },
+            seed: 0,
+            horizon_s,
+        }
+    }
+
+    pub fn tag(&self) -> &'static str {
+        self.kind.tag()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let nonneg = |v: f64, what: &str| {
+            anyhow::ensure!(v.is_finite() && v >= 0.0, "trace {what} must be finite and ≥ 0");
+            Ok(())
+        };
+        match &self.kind {
+            TraceKind::Poisson { rate_hz } => nonneg(*rate_hz, "rate_hz")?,
+            TraceKind::Diurnal { base_hz, amplitude_hz, period_s } => {
+                nonneg(*base_hz, "base_hz")?;
+                nonneg(*amplitude_hz, "amplitude_hz")?;
+                anyhow::ensure!(
+                    period_s.is_finite() && *period_s > 0.0,
+                    "diurnal period_s must be positive"
+                );
+            }
+            TraceKind::FlashCrowd { base_hz, peak_hz, at_s, ramp_s, hold_s } => {
+                nonneg(*base_hz, "base_hz")?;
+                nonneg(*peak_hz, "peak_hz")?;
+                nonneg(*at_s, "at_s")?;
+                nonneg(*ramp_s, "ramp_s")?;
+                nonneg(*hold_s, "hold_s")?;
+            }
+            TraceKind::OnOff { on_hz, on_s, off_s } => {
+                nonneg(*on_hz, "on_hz")?;
+                nonneg(*off_s, "off_s")?;
+                anyhow::ensure!(
+                    on_s.is_finite() && *on_s > 0.0,
+                    "on-off on_s must be positive"
+                );
+            }
+            TraceKind::Explicit { timestamps } => {
+                for &t in timestamps {
+                    nonneg(t, "timestamp")?;
+                }
+            }
+        }
+        if !matches!(self.kind, TraceKind::Explicit { .. }) {
+            anyhow::ensure!(
+                self.horizon_s.is_finite() && self.horizon_s > 0.0,
+                "trace horizon_s must be positive"
+            );
+        }
+        Ok(())
+    }
+
+    /// Arrival timestamps on `[0, horizon_s)`, sorted ascending — a pure
+    /// function of the spec.
+    pub fn sample(&self) -> Vec<f64> {
+        if let TraceKind::Explicit { timestamps } = &self.kind {
+            let mut ts = timestamps.clone();
+            ts.sort_by(f64::total_cmp);
+            return ts;
+        }
+        let mut rng = SplitMix64::new(self.seed ^ TRACE_SALT);
+        if let TraceKind::Poisson { rate_hz } = self.kind {
+            // Literal reuse of the fault-generator loop: one draw per
+            // arrival, no thinning overhead on the homogeneous baseline.
+            return poisson_arrivals(&mut rng, rate_hz, self.horizon_s);
+        }
+        // Lewis–Shedler thinning against the envelope rate: sample a
+        // homogeneous process at `rate_max`, accept each point with
+        // probability `rate(t) / rate_max`.
+        let lambda = self.kind.rate_max();
+        let mut ts = Vec::new();
+        if lambda <= 0.0 {
+            return ts;
+        }
+        let mut t = 0.0_f64;
+        loop {
+            t += rng.next_exp(lambda);
+            if t >= self.horizon_s {
+                return ts;
+            }
+            if rng.next_f64() * lambda < self.kind.rate_at(t) {
+                ts.push(t);
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let j = Json::obj()
+            .set("kind", self.tag())
+            .set("seed", self.seed)
+            .set("horizon_s", self.horizon_s);
+        match &self.kind {
+            TraceKind::Poisson { rate_hz } => j.set("rate_hz", *rate_hz),
+            TraceKind::Diurnal { base_hz, amplitude_hz, period_s } => j
+                .set("base_hz", *base_hz)
+                .set("amplitude_hz", *amplitude_hz)
+                .set("period_s", *period_s),
+            TraceKind::FlashCrowd { base_hz, peak_hz, at_s, ramp_s, hold_s } => j
+                .set("base_hz", *base_hz)
+                .set("peak_hz", *peak_hz)
+                .set("at_s", *at_s)
+                .set("ramp_s", *ramp_s)
+                .set("hold_s", *hold_s),
+            TraceKind::OnOff { on_hz, on_s, off_s } => {
+                j.set("on_hz", *on_hz).set("on_s", *on_s).set("off_s", *off_s)
+            }
+            TraceKind::Explicit { timestamps } => {
+                j.set("timestamps", Json::Arr(timestamps.iter().map(|&t| Json::Num(t)).collect()))
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<TraceSpec> {
+        let f = |key: &str, dflt: f64| j.get(key).and_then(Json::as_f64).unwrap_or(dflt);
+        let kind = match j.get("kind").and_then(Json::as_str) {
+            Some("poisson") => TraceKind::Poisson { rate_hz: f("rate_hz", 30.0) },
+            Some("diurnal") => TraceKind::Diurnal {
+                base_hz: f("base_hz", 30.0),
+                amplitude_hz: f("amplitude_hz", 15.0),
+                period_s: f("period_s", 1.0),
+            },
+            Some("flash-crowd") => TraceKind::FlashCrowd {
+                base_hz: f("base_hz", 30.0),
+                peak_hz: f("peak_hz", 90.0),
+                at_s: f("at_s", 0.25),
+                ramp_s: f("ramp_s", 0.05),
+                hold_s: f("hold_s", 0.25),
+            },
+            Some("on-off") => TraceKind::OnOff {
+                on_hz: f("on_hz", 60.0),
+                on_s: f("on_s", 0.1),
+                off_s: f("off_s", 0.1),
+            },
+            Some("explicit") => {
+                let ts = j
+                    .get("timestamps")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("explicit trace needs a `timestamps` array")
+                    })?
+                    .iter()
+                    .map(|v| {
+                        v.as_f64()
+                            .ok_or_else(|| anyhow::anyhow!("trace timestamps must be numeric"))
+                    })
+                    .collect::<anyhow::Result<Vec<f64>>>()?;
+                let mut ts = ts;
+                ts.sort_by(f64::total_cmp);
+                TraceKind::Explicit { timestamps: ts }
+            }
+            other => anyhow::bail!(
+                "unknown trace kind {other:?} (poisson/diurnal/flash-crowd/on-off/explicit)"
+            ),
+        };
+        let default_horizon = match &kind {
+            TraceKind::Explicit { timestamps } => {
+                timestamps.last().copied().unwrap_or(0.0) + 1e-9
+            }
+            _ => 1.0,
+        };
+        let spec = TraceSpec {
+            kind,
+            seed: j.get("seed").and_then(Json::as_u64).unwrap_or(0),
+            horizon_s: f("horizon_s", default_horizon),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load a trace from a JSON file (the `--trace <trace.json>` path).
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<TraceSpec> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        TraceSpec::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// A sampled trace: the spec plus its realized arrival timestamps,
+/// ready for the simulator to replay.
+#[derive(Debug, Clone)]
+pub struct TraceSource {
+    spec: TraceSpec,
+    arrivals: Vec<f64>,
+}
+
+impl TraceSource {
+    pub fn from_spec(spec: TraceSpec) -> anyhow::Result<TraceSource> {
+        spec.validate()?;
+        let arrivals = spec.sample();
+        Ok(TraceSource { spec, arrivals })
+    }
+
+    pub fn spec(&self) -> &TraceSpec {
+        &self.spec
+    }
+
+    /// Sorted arrival timestamps in clock seconds.
+    pub fn arrivals(&self) -> &[f64] {
+        &self.arrivals
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    pub fn horizon_s(&self) -> f64 {
+        self.spec.horizon_s
+    }
+
+    /// Average offered rate over the horizon.
+    pub fn mean_rate_hz(&self) -> f64 {
+        if self.spec.horizon_s > 0.0 {
+            self.arrivals.len() as f64 / self.spec.horizon_s
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_kind_round_trips_through_json() {
+        let specs = [
+            TraceSpec::poisson(120.0, 2.0, 7),
+            TraceSpec::diurnal(60.0, 30.0, 0.5, 2.0, 7),
+            TraceSpec::flash_crowd(40.0, 200.0, 0.5, 0.05, 0.2, 2.0, 7),
+            TraceSpec::on_off(100.0, 0.1, 0.15, 2.0, 7),
+            TraceSpec::explicit(vec![0.3, 0.1, 0.2]),
+        ];
+        for spec in specs {
+            let back = TraceSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(spec, back, "{} spec must round-trip", spec.tag());
+        }
+    }
+
+    #[test]
+    fn sampling_is_a_pure_function_of_the_spec() {
+        for spec in [
+            TraceSpec::poisson(200.0, 1.0, 3),
+            TraceSpec::diurnal(100.0, 80.0, 0.25, 1.0, 3),
+            TraceSpec::flash_crowd(50.0, 400.0, 0.25, 0.05, 0.25, 1.0, 3),
+            TraceSpec::on_off(150.0, 0.05, 0.05, 1.0, 3),
+        ] {
+            let a = spec.sample();
+            let b = spec.sample();
+            assert_eq!(a, b, "{} sampling must be deterministic", spec.tag());
+            assert!(!a.is_empty(), "{} should emit arrivals", spec.tag());
+            assert!(a.windows(2).all(|w| w[0] <= w[1]), "arrivals sorted");
+            assert!(a.iter().all(|&t| t >= 0.0 && t < spec.horizon_s));
+        }
+    }
+
+    #[test]
+    fn explicit_trace_replays_sorted() {
+        let spec = TraceSpec::explicit(vec![0.5, 0.1, 0.9, 0.3]);
+        assert_eq!(spec.sample(), vec![0.1, 0.3, 0.5, 0.9]);
+        assert!(spec.horizon_s > 0.9);
+    }
+
+    #[test]
+    fn on_off_trace_respects_silent_windows() {
+        let spec = TraceSpec::on_off(400.0, 0.1, 0.1, 1.0, 9);
+        for t in spec.sample() {
+            let phase = t % 0.2;
+            assert!(phase < 0.1, "arrival {t} fell in an off window");
+        }
+    }
+
+    #[test]
+    fn flash_crowd_bursts_above_baseline() {
+        let spec = TraceSpec::flash_crowd(20.0, 500.0, 0.4, 0.05, 0.2, 1.0, 5);
+        let ts = spec.sample();
+        let burst = ts.iter().filter(|&&t| t >= 0.4 && t < 0.7).count();
+        let quiet = ts.iter().filter(|&&t| t < 0.3).count();
+        assert!(
+            burst > 2 * quiet.max(1),
+            "burst window ({burst}) should dominate an equal quiet window ({quiet})"
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(TraceSpec::from_json(&Json::obj().set("kind", "sawtooth")).is_err());
+        assert!(TraceSpec::poisson(-1.0, 1.0, 0).validate().is_err());
+        assert!(TraceSpec::poisson(10.0, 0.0, 0).validate().is_err());
+        assert!(TraceSpec::on_off(10.0, 0.0, 0.1, 1.0, 0).validate().is_err());
+    }
+}

@@ -36,6 +36,7 @@
 //! | [`shard`] | pipeline-parallel multi-accelerator sharding (partition → per-shard co-search → pipeline DES) |
 //! | [`coordinator`] | serving: bounded queues, multi-stream scheduler, wall/virtual clocks |
 //! | [`fault`] | deterministic fault injection: crash/recover/throttle/corrupt plans, failover, availability accounting |
+//! | [`fleet`] | fleet-scale serving: replica/pipeline topologies, load balancers, trace-driven one-clock simulation |
 //! | [`config`] | TOML/JSON config system for models/devices/targets |
 //!
 //! [`api`] is the front door: a typed facade (`TargetSpec → Session →
@@ -49,6 +50,7 @@ pub mod compiler;
 pub mod config;
 pub mod coordinator;
 pub mod fault;
+pub mod fleet;
 pub mod hw;
 pub mod model;
 pub mod perf;

@@ -17,6 +17,15 @@
 //!               [--policy balanced|even|min-latency] [--bits B] [--frames N]
 //!               [--fifo-depth F] [--faults plan.json] [--failover spare|repartition]
 //!               [--spares N] [--json]
+//! vaqf fleet    --model deit-base --device zcu102 --boards 4
+//!               [--topology replicated|pipelined|mixed] [--bits B]
+//!               [--balancer round-robin|least-outstanding|join-shortest-queue|sla-weighted]
+//!               [--trace trace.json | --trace-kind poisson|diurnal|flash-crowd|on-off
+//!                --rate-hz R --horizon-s S --trace-seed N [--peak-hz R] [--amplitude-hz R]
+//!                [--period-s S] [--at-s S] [--ramp-s S] [--hold-s S] [--on-s S] [--off-s S]]
+//!               [--streams N] [--queue-depth D] [--sla-ms MS]
+//!               [--shard-policy balanced|even|min-latency]
+//!               [--faults plan.json] [--spares N] [--json]
 //! ```
 //!
 //! Every subcommand is a thin layer over `vaqf::api`: flags feed a
@@ -30,7 +39,8 @@
 
 use vaqf::api::{
     render_table5, render_table6, table6_rows, FailoverStrategy, FaultPlan, HysteresisConfig,
-    PjrtRuntime, Result, ServeClock, ServeConfig, Session, ShardPolicy, TargetSpec, VaqfError,
+    PjrtRuntime, Result, ServeClock, ServeConfig, Session, ShardPolicy, TargetSpec, TraceSpec,
+    VaqfError,
 };
 use vaqf::shard::{simulate_pipeline, simulate_pipeline_faulty};
 use vaqf::model::micro;
@@ -378,7 +388,95 @@ fn cmd_shard(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: vaqf <compile|search|report|codegen|simulate|serve|shard> [--options]
+/// `vaqf fleet` — carve a board budget into replica / pipeline serving
+/// units, front them with a load balancer, and replay a recorded or
+/// generated arrival trace through the fleet on one virtual clock.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let session = cli_session(args, "backend")?;
+    let bits = args.get_u64("bits").map_err(cli)?.map(|b| b as u8);
+    // `--bits` pins the precision; otherwise the §3 frame-rate search
+    // picks it, exactly like `vaqf compile` and `vaqf shard`.
+    let design = match bits {
+        Some(b) => session.compile_for_bits(Some(b))?,
+        None => session.compile()?,
+    };
+    let mut builder = design
+        .fleet()
+        .boards(args.get_u64("boards").map_err(cli)?.unwrap_or(4) as usize)
+        .topology(args.get_or("topology", "replicated"))
+        .balancer(args.get_or("balancer", "round-robin"))
+        .streams(args.get_u64("streams").map_err(cli)?.unwrap_or(1) as usize)
+        .queue_depth(args.get_u64("queue-depth").map_err(cli)?.unwrap_or(2) as usize)
+        .seed(args.get_u64("seed").map_err(cli)?.unwrap_or(11));
+    if let Some(ms) = args.get_f64("sla-ms").map_err(cli)? {
+        builder = builder.sla_ms(ms);
+    }
+    if let Some(name) = args.get("shard-policy") {
+        let policy = ShardPolicy::from_name(name).ok_or_else(|| {
+            VaqfError::config(format!(
+                "unknown shard policy {name} (expected {})",
+                ShardPolicy::NAMES
+            ))
+        })?;
+        builder = builder.shard_policy(policy);
+    }
+    if let Some(path) = args.get("trace") {
+        builder = builder.trace(TraceSpec::load(path).map_err(cli)?);
+    } else if args.get("trace-kind").is_some() || args.get("rate-hz").is_some() {
+        let horizon = args.get_f64("horizon-s").map_err(cli)?.unwrap_or(1.0);
+        let seed = args.get_u64("trace-seed").map_err(cli)?.unwrap_or(11);
+        let rate = args.get_f64("rate-hz").map_err(cli)?.unwrap_or(30.0);
+        // Unset shape parameters default to fractions of the horizon, so
+        // `--trace-kind flash-crowd --rate-hz 100` alone is a valid burst.
+        let spec = match args.get_or("trace-kind", "poisson") {
+            "poisson" => TraceSpec::poisson(rate, horizon, seed),
+            "diurnal" => TraceSpec::diurnal(
+                rate,
+                args.get_f64("amplitude-hz").map_err(cli)?.unwrap_or(0.5 * rate),
+                args.get_f64("period-s").map_err(cli)?.unwrap_or(horizon),
+                horizon,
+                seed,
+            ),
+            "flash-crowd" => TraceSpec::flash_crowd(
+                rate,
+                args.get_f64("peak-hz").map_err(cli)?.unwrap_or(4.0 * rate),
+                args.get_f64("at-s").map_err(cli)?.unwrap_or(0.3 * horizon),
+                args.get_f64("ramp-s").map_err(cli)?.unwrap_or(0.05 * horizon),
+                args.get_f64("hold-s").map_err(cli)?.unwrap_or(0.2 * horizon),
+                horizon,
+                seed,
+            ),
+            "on-off" => TraceSpec::on_off(
+                rate,
+                args.get_f64("on-s").map_err(cli)?.unwrap_or(0.1 * horizon),
+                args.get_f64("off-s").map_err(cli)?.unwrap_or(0.1 * horizon),
+                horizon,
+                seed,
+            ),
+            other => {
+                return Err(VaqfError::config(format!(
+                    "unknown trace kind `{other}` (poisson|diurnal|flash-crowd|on-off)"
+                )))
+            }
+        };
+        builder = builder.trace(spec);
+    }
+    if let Some(path) = args.get("faults") {
+        let mut plan = FaultPlan::load(path).map_err(cli)?;
+        if let Some(n) = args.get_u64("spares").map_err(cli)? {
+            plan.recovery.spares = n as usize;
+        }
+        builder = builder.faults(plan);
+    }
+    let report = builder.run()?;
+    print!("{}", report.render());
+    if args.has_flag("json") {
+        println!("{}", report.to_json().pretty());
+    }
+    Ok(())
+}
+
+const USAGE: &str = "usage: vaqf <compile|search|report|codegen|simulate|serve|shard|fleet> [--options]
 see README.md for per-command options";
 
 fn main() {
@@ -392,6 +490,7 @@ fn main() {
         "simulate" => cmd_simulate(&args),
         "serve" => cmd_serve(&args),
         "shard" => cmd_shard(&args),
+        "fleet" => cmd_fleet(&args),
         _ => {
             eprintln!("{USAGE}");
             std::process::exit(2);

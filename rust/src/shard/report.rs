@@ -2,7 +2,6 @@
 //! JSON (golden-snapshotted in `rust/tests/golden_files.rs`).
 
 use crate::util::json::Json;
-use crate::util::stats::Summary;
 
 use super::cosearch::{ShardStage, ShardedDesign};
 use super::pipeline::PipelineReport;
@@ -41,15 +40,6 @@ impl ShardedDesign {
             design: self.clone(),
         })
     }
-}
-
-fn latency_ms_json(s: &Summary) -> Json {
-    Json::obj()
-        .set("p50", s.p50 * 1e3)
-        .set("p95", s.p95 * 1e3)
-        .set("p99", s.p99 * 1e3)
-        .set("mean", s.mean * 1e3)
-        .set("max", s.max * 1e3)
 }
 
 fn stage_json(stage: &ShardStage, design: &ShardedDesign) -> Json {
@@ -122,7 +112,7 @@ impl ShardReport {
             .set("frames", p.frames)
             .set("fill_ms", d.device.cycles_to_seconds(p.fill_cycles) * 1e3)
             .set("elapsed_ms", d.device.cycles_to_seconds(p.elapsed_cycles) * 1e3)
-            .set("latency_ms", latency_ms_json(&p.latency))
+            .set("latency_ms", p.latency.to_ms_json())
             .set(
                 "occupancy",
                 Json::Arr(

@@ -59,6 +59,40 @@ impl SplitMix64 {
             data.swap(i, j);
         }
     }
+
+    /// Exponential variate with rate `rate_hz` (inverse-CDF; consumes
+    /// exactly one `next_f64`). Used for Poisson inter-arrival times by
+    /// both the fault generators and the fleet trace generators, so all
+    /// stochastic schedules are pure functions of (spec, seed).
+    pub fn next_exp(&mut self, rate_hz: f64) -> f64 {
+        -(1.0 - self.next_f64()).ln() / rate_hz
+    }
+
+    /// Exponential variate with mean `mean_s`. Kept as a multiply (not
+    /// `next_exp(1.0 / mean_s)`) so existing sampled schedules stay
+    /// bit-identical after the fault-plan refactor onto this module.
+    pub fn next_exp_mean(&mut self, mean_s: f64) -> f64 {
+        -(1.0 - self.next_f64()).ln() * mean_s
+    }
+}
+
+/// Homogeneous Poisson arrival timestamps on `[0, horizon_s)`.
+///
+/// Exactly the loop `fault::GeneratorSpec` has always used, extracted so
+/// trace generators share it: each arrival consumes one `next_f64`.
+pub fn poisson_arrivals(rng: &mut SplitMix64, rate_hz: f64, horizon_s: f64) -> Vec<f64> {
+    let mut ts = Vec::new();
+    if rate_hz <= 0.0 {
+        return ts;
+    }
+    let mut t = 0.0_f64;
+    loop {
+        t += rng.next_exp(rate_hz);
+        if t >= horizon_s {
+            return ts;
+        }
+        ts.push(t);
+    }
 }
 
 #[cfg(test)]
@@ -100,6 +134,30 @@ mod tests {
         s.sort();
         assert_eq!(s, (0..50).collect::<Vec<_>>());
         assert_ne!(v, (0..50).collect::<Vec<_>>(), "shuffle should move things");
+    }
+
+    #[test]
+    fn exp_mean_matches_multiplied_rate_form_bitwise() {
+        // next_exp_mean(m) must be the literal multiply-by-mean expression
+        // (the historical fault-plan form), byte-for-byte.
+        let mut a = SplitMix64::new(11);
+        let mut b = SplitMix64::new(11);
+        for _ in 0..64 {
+            let m = 0.0123;
+            let got = a.next_exp_mean(m);
+            let want = -(1.0 - b.next_f64()).ln() * m;
+            assert_eq!(got.to_bits(), want.to_bits());
+        }
+    }
+
+    #[test]
+    fn poisson_arrivals_sorted_and_bounded() {
+        let mut r = SplitMix64::new(5);
+        let ts = poisson_arrivals(&mut r, 100.0, 1.0);
+        assert!(!ts.is_empty());
+        assert!(ts.windows(2).all(|w| w[0] < w[1]));
+        assert!(ts.iter().all(|&t| t > 0.0 && t < 1.0));
+        assert!(poisson_arrivals(&mut r, 0.0, 1.0).is_empty());
     }
 
     #[test]

@@ -46,6 +46,20 @@ impl Summary {
     }
 }
 
+impl Summary {
+    /// Latency block in milliseconds (`{p50, p95, p99, mean, max}`) —
+    /// the one JSON shape every simulator report shares (serving,
+    /// shard-pipeline, fleet), so aggregation code sees a single type.
+    pub fn to_ms_json(&self) -> super::json::Json {
+        super::json::Json::obj()
+            .set("p50", self.p50 * 1e3)
+            .set("p95", self.p95 * 1e3)
+            .set("p99", self.p99 * 1e3)
+            .set("mean", self.mean * 1e3)
+            .set("max", self.max * 1e3)
+    }
+}
+
 /// Online histogram with fixed log-spaced buckets (latencies in seconds).
 #[derive(Debug, Clone)]
 pub struct LatencyHistogram {

@@ -1,0 +1,262 @@
+//! Fleet suite: conservation, reproducibility and API invariants of
+//! `vaqf::fleet` end to end through the facade.
+//!
+//! The load-bearing properties:
+//!
+//! * **conservation** — every trace arrival is completed, dropped
+//!   (admission shed) or failed (retry budget), summed across serving
+//!   units, under *any* sampled fault plan and every trace generator;
+//! * **round-trip** — a trace spec survives JSON emit → parse → emit
+//!   byte-identically, so recorded traffic is a portable artifact;
+//! * **reproducibility** — two identical fleet runs render
+//!   byte-identical report JSON (the one-clock design is deterministic);
+//! * **scaling** — four balanced replicas complete ≥ 3× what one board
+//!   completes under the same per-board offered load.
+
+use vaqf::api::{FaultPlan, RecoveryConfig, TargetSpec, VaqfError};
+use vaqf::fleet::{FleetTopology, TraceSpec};
+use vaqf::util::json::Json;
+use vaqf::util::prop;
+
+fn micro_design() -> vaqf::api::CompiledDesign {
+    TargetSpec::new()
+        .model(vaqf::model::micro())
+        .device_preset("zcu102")
+        .target_fps(100.0)
+        .session()
+        .expect("micro session resolves")
+        .compile_for_bits(Some(8))
+        .expect("micro W1A8 compiles on zcu102")
+}
+
+// ---------------------------------------------------------------------------
+// Conservation under sampled traces and fault plans.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_fleet_conserves_frames_under_sampled_traces_and_faults() {
+    // Random scripted fault plans (crashes that may never recover,
+    // throttles, corruption) against a mixed 2-replica + 2-shard fleet,
+    // each trial on a different trace generator: the ledger must balance
+    // no matter what dies when. Failing plans shrink to a minimal script.
+    let design = micro_design();
+    let lat = design.frame_latency_s();
+    let rate = 2.0 / lat; // ~2 boards' worth offered to a 4-board fleet
+    let horizon = 400.0 * lat;
+    let traces = [
+        TraceSpec::poisson(rate, horizon, 21),
+        TraceSpec::diurnal(rate, 0.8 * rate, horizon / 2.0, horizon, 22),
+        TraceSpec::flash_crowd(
+            0.5 * rate,
+            4.0 * rate,
+            0.3 * horizon,
+            0.05 * horizon,
+            0.2 * horizon,
+            horizon,
+            23,
+        ),
+        TraceSpec::on_off(2.0 * rate, 0.1 * horizon, 0.1 * horizon, horizon, 24),
+    ];
+    let strat = prop::fault_events(3, horizon, 10);
+    let cfg = prop::Config {
+        trials: 24,
+        ..Default::default()
+    };
+    let trial = std::cell::Cell::new(0usize);
+    prop::check_with(&cfg, "fleet_frame_conservation", &strat, |events| {
+        let mut plan = FaultPlan::new();
+        plan.events = events.clone();
+        plan.recovery = RecoveryConfig {
+            spares: events.len() % 2,
+            ..RecoveryConfig::default()
+        };
+        let trace = traces[trial.get() % traces.len()].clone();
+        trial.set(trial.get() + 1);
+        let report = design
+            .fleet()
+            .layout(FleetTopology::new().replicas(2).pipeline(2))
+            .balancer("least-outstanding")
+            .streams(3)
+            .trace(trace)
+            .faults(plan)
+            .run()
+            .map_err(|e| format!("fleet run failed: {e}"))?;
+        let a = &report.aggregate;
+        if a.offered != a.completed + a.dropped + a.failed {
+            return Err(format!(
+                "aggregate ledger broke: {} offered != {} + {} + {}",
+                a.offered, a.completed, a.dropped, a.failed
+            ));
+        }
+        for s in &report.streams {
+            if s.offered != s.completed + s.dropped + s.failed {
+                return Err(format!("stream {} ledger broke", s.stream));
+            }
+        }
+        // Completions are exactly the frames the units served.
+        let served: u64 = report.units.iter().map(|u| u.served).sum();
+        if served != a.completed {
+            return Err(format!(
+                "units served {served} != aggregate completed {}",
+                a.completed
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn offered_equals_trace_arrivals() {
+    let design = micro_design();
+    let lat = design.frame_latency_s();
+    let trace = TraceSpec::poisson(1.0 / lat, 200.0 * lat, 9);
+    let n = vaqf::fleet::TraceSource::from_spec(trace.clone())
+        .expect("valid spec")
+        .len() as u64;
+    let report = design
+        .fleet()
+        .boards(2)
+        .topology("replicated")
+        .trace(trace)
+        .run()
+        .expect("fleet runs");
+    assert_eq!(report.aggregate.offered, n, "every arrival is offered exactly once");
+}
+
+// ---------------------------------------------------------------------------
+// Trace JSON round-trip.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trace_specs_round_trip_through_json_byte_identically() {
+    let specs = [
+        TraceSpec::poisson(120.0, 2.0, 1),
+        TraceSpec::diurnal(60.0, 30.0, 1.0, 3.0, 2),
+        TraceSpec::flash_crowd(40.0, 400.0, 0.5, 0.1, 0.3, 2.0, 3),
+        TraceSpec::on_off(200.0, 0.2, 0.3, 2.5, 4),
+        TraceSpec::explicit(vec![0.4, 0.1, 0.1, 0.25]),
+    ];
+    for spec in &specs {
+        let text = spec.to_json().pretty();
+        let parsed = TraceSpec::from_json(&Json::parse(&text).expect("emitted JSON parses"))
+            .expect("emitted JSON round-trips");
+        assert_eq!(&parsed, spec, "parse(emit(spec)) == spec");
+        assert_eq!(parsed.to_json().pretty(), text, "emit is a fixed point");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Byte-reproducibility through the facade.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fleet_runs_are_byte_reproducible_through_the_api() {
+    let design = micro_design();
+    let lat = design.frame_latency_s();
+    let run = || {
+        design
+            .fleet()
+            .boards(4)
+            .topology("mixed")
+            .balancer("sla-weighted")
+            .streams(2)
+            .sla_ms(8.0 * lat * 1e3)
+            .trace(TraceSpec::flash_crowd(
+                1.0 / lat,
+                6.0 / lat,
+                100.0 * lat,
+                10.0 * lat,
+                50.0 * lat,
+                300.0 * lat,
+                5,
+            ))
+            .faults(FaultPlan::new().crash_at(120.0 * lat, 0).recovery(RecoveryConfig {
+                spares: 1,
+                ..RecoveryConfig::default()
+            }))
+            .run()
+            .expect("fleet runs")
+            .to_json()
+            .pretty()
+    };
+    assert_eq!(run(), run(), "identical inputs must render identical JSON");
+}
+
+// ---------------------------------------------------------------------------
+// Scaling and topology sanity.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn four_replicas_complete_at_least_three_times_one_board() {
+    let design = micro_design();
+    let lat = design.frame_latency_s();
+    let horizon = 500.0 * lat;
+    // Per-board offered load is identical; only the board count changes.
+    let completed = |boards: usize| {
+        design
+            .fleet()
+            .boards(boards)
+            .topology("replicated")
+            .balancer("least-outstanding")
+            .trace(TraceSpec::poisson(
+                0.95 * boards as f64 / lat,
+                horizon,
+                42,
+            ))
+            .run()
+            .expect("fleet runs")
+            .aggregate
+            .completed
+    };
+    let one = completed(1);
+    let four = completed(4);
+    assert!(
+        four as f64 >= 3.0 * one as f64,
+        "4 boards completed {four}, expected ≥ 3× single board ({one})"
+    );
+}
+
+#[test]
+fn topology_presets_conserve_boards_in_reports() {
+    let design = micro_design();
+    let lat = design.frame_latency_s();
+    for preset in ["replicated", "pipelined", "mixed"] {
+        let report = design
+            .fleet()
+            .boards(4)
+            .topology(preset)
+            .trace(TraceSpec::poisson(1.0 / lat, 100.0 * lat, 6))
+            .run()
+            .expect("fleet runs");
+        assert_eq!(report.boards, 4, "{preset} must spend exactly 4 boards");
+        let unit_boards: usize = report.units.iter().map(|u| u.boards).sum();
+        assert_eq!(unit_boards, 4, "{preset} unit boards must sum to the budget");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Error paths.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn unknown_names_fail_with_listed_alternatives() {
+    let design = micro_design();
+    let err = design.fleet().balancer("random").run().unwrap_err();
+    match err {
+        VaqfError::Config { message } => {
+            assert!(message.contains("unknown balancer policy `random`"), "{message}");
+            assert!(message.contains("round-robin"), "{message}");
+        }
+        other => panic!("expected Config error, got {other}"),
+    }
+    let err = design.fleet().topology("torus").run().unwrap_err();
+    match err {
+        VaqfError::Config { message } => {
+            assert!(message.contains("unknown fleet topology `torus`"), "{message}");
+            assert!(message.contains("replicated"), "{message}");
+        }
+        other => panic!("expected Config error, got {other}"),
+    }
+    let err = design.fleet().boards(0).run().unwrap_err();
+    assert!(matches!(err, VaqfError::Config { .. }), "0 boards is a config error");
+}

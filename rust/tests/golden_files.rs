@@ -158,6 +158,46 @@ fn golden_shard_report_faults_micro_w1a8() {
 }
 
 #[test]
+fn golden_fleet_report_micro() {
+    // A scripted flash-crowd trace with a mid-burst crash against a
+    // mixed 2-replica + 2-shard-pipeline fleet on the virtual clock:
+    // topology carving, balancing, trace sampling, failover and the
+    // report are all pure functions of the design, so the JSON pins
+    // byte-exact.
+    let design = micro_session()
+        .compile_for_bits(Some(8))
+        .expect("micro W1A8 compiles on zcu102");
+    let base = design.frame_latency_s();
+    let trace = vaqf::fleet::TraceSpec::flash_crowd(
+        1.0 / base,       // baseline: one board's worth
+        8.0 / base,       // burst beyond the fleet's capacity
+        60.0 * base,      // burst onset
+        10.0 * base,      // ramp
+        40.0 * base,      // hold
+        200.0 * base,     // horizon
+        13,
+    );
+    let plan = FaultPlan::new()
+        .crash_at(70.0 * base, 0)
+        .recovery(RecoveryConfig {
+            spares: 1,
+            swap_s: 2.0 * base,
+            ..Default::default()
+        });
+    let report = design
+        .fleet()
+        .layout(vaqf::fleet::FleetTopology::new().replicas(2).pipeline(2))
+        .balancer("sla-weighted")
+        .streams(2)
+        .sla_ms(6.0 * base * 1e3)
+        .trace(trace)
+        .faults(plan)
+        .run()
+        .expect("fleet run completes");
+    check_golden("fleet_report_micro.json", &report.to_json().pretty());
+}
+
+#[test]
 fn golden_report_table5_micro() {
     let session = micro_session();
     let rows = session.table5(&[8, 6]).expect("table5 precisions compile");
