@@ -29,12 +29,13 @@ use vaqf::coordinator::{serve, FrameSource, ServeConfig};
 use vaqf::hw::zcu102;
 use vaqf::model::deit_base;
 use vaqf::perf::AcceleratorParams;
-use vaqf::quant::binarize;
+use vaqf::quant::{binarize, pack_bit_planes, pack_sign_planes};
 use vaqf::runtime::{InferenceEngine, Manifest, PjrtBackend};
 use vaqf::sim::{generate_weights, reference_forward, Backend, ComputeEngine, ModelExecutor};
 use vaqf::util::bench::{bench_output_path, report_metric, Bench, JsonReport};
 use vaqf::util::parallel::default_threads;
 use vaqf::util::rng::SplitMix64;
+use vaqf::util::simd::{self, SimdTier};
 
 /// Counting allocator: the per-frame allocation numbers in
 /// `BENCH_hotpath.json` are exact counts of `alloc`/`realloc`/
@@ -228,6 +229,73 @@ fn engine_section(quick: bool, report: &mut JsonReport) {
             "x",
         );
     }
+}
+
+/// Section 1b: the SIMD popcount primitive itself, per dispatch tier, on
+/// a DeiT-base qkv-shaped panel (768×2304 W1A8 — 8 activation planes ×
+/// 2304 packed weight columns per "frame" of dots). Per-tier results are
+/// cross-checked bit-for-bit before timing; the speedup ratio lands in
+/// `BENCH_hotpath.json` and CI gates it at ≥ 0.9 — a vector tier must
+/// never lose to the scalar loop it replaced (methodology:
+/// EXPERIMENTS.md §Perf).
+fn simd_section(quick: bool, report: &mut JsonReport) {
+    let mut bench = Bench::heavy();
+    if quick {
+        bench.warmup_iters = 1;
+        bench.min_iters = 2;
+        bench.max_iters = 8;
+        bench.budget = std::time::Duration::from_millis(400);
+    }
+    let (n, m, bits) = (768usize, 2304usize, 8u32);
+    let mut rng = SplitMix64::new(20260808);
+    let vals: Vec<i32> = (0..n)
+        .map(|_| {
+            let hi = (1i64 << (bits - 1)) - 1;
+            let lo = -(1i64 << (bits - 1));
+            (lo + rng.next_below((hi - lo + 1) as u64) as i64) as i32
+        })
+        .collect();
+    let row = pack_bit_planes(&vals, bits);
+    let signs: Vec<bool> = (0..n * m).map(|_| rng.next_below(2) == 1).collect();
+    let w = pack_sign_planes(&signs, n, m);
+
+    let dot_all = |tier: SimdTier| -> u64 {
+        let mut pop = 0u64;
+        for j in 0..m {
+            let col = w.col(j);
+            for b in 0..bits {
+                pop += simd::and_popcount_with(tier, row.plane(b), col);
+            }
+        }
+        pop
+    };
+
+    let tiers = SimdTier::supported_tiers();
+    println!(
+        "\n== SIMD popcount tiers (qkv panel {n}x{m} w1a{bits}, active tier: {}) ==",
+        simd::active()
+    );
+    let want = dot_all(SimdTier::Scalar);
+    for &tier in &tiers {
+        assert_eq!(dot_all(tier), want, "tier {tier} diverged from the scalar tier");
+    }
+    let mut scalar_s = f64::NAN;
+    for &tier in &tiers {
+        let r = bench.run(&format!("and_popcount qkv panel, {tier} tier"), || {
+            let _ = std::hint::black_box(dot_all(tier));
+        });
+        report.result(&r);
+        if tier == SimdTier::Scalar {
+            scalar_s = r.mean_s();
+        } else {
+            report.metric(
+                &format!("simd speedup ({tier}/scalar tier)"),
+                scalar_s / r.mean_s(),
+                "x",
+            );
+        }
+    }
+    report.metric("simd active tier", simd::active() as u8 as f64, "tier");
 }
 
 /// Section 2: prepared plan + workspace vs the PR 3 path, whole model.
@@ -429,6 +497,7 @@ fn main() -> anyhow::Result<()> {
 
     let out = bench_output_path("BENCH_hotpath.json");
     engine_section(quick, &mut report);
+    simd_section(quick, &mut report);
     report.write(&out)?;
 
     prepared_section(quick, &mut report);

@@ -8,10 +8,18 @@
 //! admitted item is eventually popped or evicted by drop-oldest —
 //! `pushed() == popped() + dropped() + len()` at any quiescent point, and
 //! `close()` never discards items that were already admitted.
+//!
+//! Poison policy: every lock acquisition recovers from poisoning
+//! (`unwrap_or_else(|e| e.into_inner())`). A producer or consumer that
+//! panics while holding the queue lock (e.g. inside a `peek_front`
+//! closure) mutates nothing the invariant depends on — the deque and
+//! counters are updated only on the non-panicking paths — so the state
+//! stays consistent and the rest of the scheduler keeps draining instead
+//! of cascade-panicking on `PoisonError`.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
 
 /// What happened to a [`BoundedQueue::push`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -54,6 +62,12 @@ struct Inner<T> {
 }
 
 impl<T> BoundedQueue<T> {
+    /// Take the queue lock, recovering the guard if a previous holder
+    /// panicked (see the module-level poison policy).
+    fn lock(&self) -> MutexGuard<'_, Inner<T>> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         BoundedQueue {
@@ -72,7 +86,7 @@ impl<T> BoundedQueue<T> {
     /// Admit an item, dropping the oldest if full; see [`PushOutcome`]
     /// for the three distinguishable results.
     pub fn push(&self, item: T) -> PushOutcome {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         if g.closed {
             return PushOutcome::RejectedClosed;
         }
@@ -91,7 +105,7 @@ impl<T> BoundedQueue<T> {
 
     /// Blocking pop; `None` once closed and drained.
     pub fn pop(&self) -> Option<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         loop {
             if let Some(item) = g.items.pop_front() {
                 self.popped.fetch_add(1, Ordering::Relaxed);
@@ -100,13 +114,13 @@ impl<T> BoundedQueue<T> {
             if g.closed {
                 return None;
             }
-            g = self.cv.wait(g).unwrap();
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
         }
     }
 
     /// Non-blocking pop: `None` when currently empty (closed or not).
     pub fn try_pop(&self) -> Option<T> {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.lock();
         let item = g.items.pop_front();
         if item.is_some() {
             self.popped.fetch_add(1, Ordering::Relaxed);
@@ -118,22 +132,22 @@ impl<T> BoundedQueue<T> {
     /// when the queue is currently empty. The closure runs under the
     /// queue lock — keep it cheap and lock-free.
     pub fn peek_front<R>(&self, f: impl FnOnce(&T) -> R) -> Option<R> {
-        let g = self.inner.lock().unwrap();
+        let g = self.lock();
         g.items.front().map(f)
     }
 
     /// Close: wake all consumers; queued items still drain.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        self.lock().closed = true;
         self.cv.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().unwrap().closed
+        self.lock().closed
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().items.len()
+        self.lock().items.len()
     }
 
     pub fn is_empty(&self) -> bool {

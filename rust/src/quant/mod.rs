@@ -28,8 +28,8 @@ pub use fixed::{
 pub use packing::{
     field_mask, lane_words, pack_bit_planes, pack_bit_planes_into, pack_col_planes,
     pack_col_planes_into, pack_factor, pack_sign_bits, pack_sign_bits_into, pack_sign_planes,
-    pack_words, plane_coeff, popcount_and_dot, unpack_bit_planes, unpack_words, xnor_sign_dot,
-    BitPlanes, ColPlanes, PackedBuffer, SignPlanes,
+    pack_words, padded_lane_words, plane_coeff, popcount_and_dot, unpack_bit_planes, unpack_words,
+    xnor_sign_dot, BitPlanes, ColPlanes, PackedBuffer, SignPlanes, SIMD_PAD_WORDS,
 };
 pub use progressive::{progressive_schedule, ProgressiveMask};
 

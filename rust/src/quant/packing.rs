@@ -12,7 +12,11 @@
 //!   lane words. A multiply-accumulate against ±1 weights then collapses
 //!   to AND/XNOR + `count_ones()` with a per-plane shift-accumulate —
 //!   exactly the LUT add/sub datapath of §5.1, and the kernel the packed
-//!   simulator backend (`sim::kernels`) runs on.
+//!   simulator backend (`sim::kernels`) runs on. Every plane/column is
+//!   allocated at the [`padded_lane_words`] stride (zero-padded to whole
+//!   64-byte vectors) so the `util::simd` popcount tiers run tail-free,
+//!   and the `ExecPlan`-prepared weights land in that SIMD-friendly
+//!   layout once at prepare time.
 //!
 //! All bit-plane encodings are exact over the quantizer's integer range,
 //! so the packed kernels are bit-identical to the scalar reference
@@ -115,6 +119,22 @@ pub fn lane_words(n: usize) -> usize {
     n.div_ceil(64)
 }
 
+/// Lane-word alignment of every packed bit-plane: 8 words = 64 bytes,
+/// one full AVX-512 vector (two AVX2 vectors, a cache line). Padding
+/// each plane/column up to this multiple means the SIMD kernels never
+/// need a sub-vector tail loop, and plane starts stay cache-line
+/// aligned within their buffer.
+pub const SIMD_PAD_WORDS: usize = 8;
+
+/// [`lane_words`] rounded up to the [`SIMD_PAD_WORDS`] alignment — the
+/// allocated stride of every packed plane/column. Pad words are zero:
+/// harmless under AND-popcount, and [`xnor_sign_dot`] never reads past
+/// `lane_words(n)`, so the padding is invisible to every kernel.
+#[inline]
+pub fn padded_lane_words(n: usize) -> usize {
+    lane_words(n).next_multiple_of(SIMD_PAD_WORDS)
+}
+
 /// Shift-accumulate coefficient of two's-complement plane `b` out of
 /// `bits`: `+2^b` for the magnitude planes, `−2^(bits−1)` for the sign
 /// plane (so `q = Σ_b coeff(b) · bit_b(q)` exactly).
@@ -129,32 +149,28 @@ pub fn plane_coeff(b: u32, bits: u32) -> i64 {
 }
 
 /// Σ popcount(a & b) over two equal-length lane-word slices — the packed
-/// dot product of two 0/1 bit vectors.
+/// dot product of two 0/1 bit vectors, dispatched to the active SIMD
+/// tier (`util::simd`). The accumulator is 64-bit at every tier: the
+/// pre-PR8 `u32` sum wrapped silently past 2³² set bits (and panicked in
+/// debug), which the regression suite now pins.
 #[inline]
 pub fn popcount_and_dot(a: &[u64], b: &[u64]) -> i64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut pop = 0u32;
-    for (&x, &y) in a.iter().zip(b) {
-        pop += (x & y).count_ones();
-    }
-    pop as i64
+    crate::util::simd::and_popcount(a, b) as i64
 }
 
 /// Dot product of two ±1 vectors stored as sign bitmaps (bit = 1 ⇒ +1)
 /// over `n` valid lanes: XNOR matches signs, so the dot is
 /// `2·popcount(XNOR) − n`. Invalid high lanes of the last word must be
-/// masked because XNOR sets them (0 ⊕̄ 0 = 1).
+/// masked because XNOR sets them (0 ⊕̄ 0 = 1); for the same reason the
+/// zero pad words past `lane_words(n)` (the [`SIMD_PAD_WORDS`]
+/// alignment) are never read at all. Dispatched to the active SIMD tier
+/// with a 64-bit accumulator (see [`popcount_and_dot`]).
 #[inline]
 pub fn xnor_sign_dot(a: &[u64], b: &[u64], n: usize) -> i64 {
-    debug_assert_eq!(a.len(), lane_words(n));
-    debug_assert_eq!(b.len(), lane_words(n));
-    let mut pop = 0u32;
-    for (w, (&x, &y)) in a.iter().zip(b).enumerate() {
-        let valid = n - w * 64;
-        let mask = field_mask(valid.min(64) as u32);
-        pop += (!(x ^ y) & mask).count_ones();
-    }
-    2 * pop as i64 - n as i64
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert!(a.len() >= lane_words(n));
+    2 * crate::util::simd::xnor_popcount(a, b, n) as i64 - n as i64
 }
 
 /// Pack the signs of an integer slice (> 0 ⇒ bit set) into lane words —
@@ -171,7 +187,7 @@ pub fn pack_sign_bits(q: &[i32]) -> Vec<u64> {
 /// and in-place packers.
 pub fn pack_sign_bits_into(q: &[i32], words: &mut Vec<u64>) {
     words.clear();
-    words.resize(lane_words(q.len()), 0);
+    words.resize(padded_lane_words(q.len()), 0);
     for (p, &v) in q.iter().enumerate() {
         if v > 0 {
             words[p / 64] |= 1 << (p % 64);
@@ -183,7 +199,8 @@ pub fn pack_sign_bits_into(q: &[i32], words: &mut Vec<u64>) {
 /// output column `j`, `col(j)` holds the sign bits of all `rows` weights
 /// feeding that output (bit = 1 ⇒ +1), ready for a popcount dot against
 /// activation bit-planes. This is the layout the BRAM-resident LUT array
-/// holds on the board.
+/// holds on the board. Columns are strided at [`padded_lane_words`]
+/// (zero-padded), so `col(j)` is always a whole number of SIMD vectors.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SignPlanes {
     words: Vec<u64>,
@@ -195,7 +212,7 @@ pub struct SignPlanes {
 /// Pack a row-major `rows × cols` sign matrix (`true` ⇒ +1) column-major.
 pub fn pack_sign_planes(signs: &[bool], rows: usize, cols: usize) -> SignPlanes {
     assert_eq!(signs.len(), rows * cols, "shape mismatch");
-    let wpc = lane_words(rows);
+    let wpc = padded_lane_words(rows);
     let mut words = vec![0u64; cols * wpc];
     for p in 0..rows {
         let row = &signs[p * cols..(p + 1) * cols];
@@ -260,7 +277,7 @@ pub fn pack_bit_planes(q: &[i32], bits: u32) -> BitPlanes {
 /// zero heap traffic after the first call.
 pub fn pack_bit_planes_into(q: &[i32], bits: u32, bp: &mut BitPlanes) {
     assert!((1..=16).contains(&bits), "activation bits must be 1..=16");
-    let wpp = lane_words(q.len());
+    let wpp = padded_lane_words(q.len());
     bp.bits = bits;
     bp.len = q.len();
     bp.words_per_plane = wpp;
@@ -370,7 +387,7 @@ pub fn pack_col_planes_into(q: &[i32], rows: usize, cols: usize, bits: u32, cp: 
     assert_eq!(q.len(), rows * cols, "shape mismatch");
     assert!((1..=16).contains(&bits), "activation bits must be 1..=16");
     let planes = if bits == 1 { 1 } else { bits as usize };
-    let wpc = lane_words(rows);
+    let wpc = padded_lane_words(rows);
     cp.words.clear();
     cp.words.resize(cols * planes * wpc, 0);
     cp.words_per_col = wpc;
@@ -504,7 +521,8 @@ mod tests {
         let cols = 5;
         let signs: Vec<bool> = (0..rows * cols).map(|i| i % 3 == 0).collect();
         let sp = pack_sign_planes(&signs, rows, cols);
-        assert_eq!(sp.words_per_col(), 1);
+        // 3 rows need one lane word, padded to the SIMD stride.
+        assert_eq!(sp.words_per_col(), SIMD_PAD_WORDS);
         for j in 0..cols {
             for p in 0..rows {
                 let bit = sp.col(j)[p / 64] >> (p % 64) & 1 == 1;
@@ -549,6 +567,33 @@ mod tests {
         let want: i64 = a.iter().zip(&b).map(|(&x, &y)| (x * y) as i64).sum();
         let got = xnor_sign_dot(&pack_sign_bits(&a), &pack_sign_bits(&b), n);
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn xnor_dot_exact_at_tail_lane_boundaries() {
+        // n % 64 ∈ {0, 1, 63} around every word edge up to three words,
+        // the masks the old per-word `valid = n - w*64` code got right
+        // only for unpadded slices.
+        for n in [1usize, 63, 64, 65, 127, 128, 129, 191, 192, 193] {
+            let a: Vec<i32> = (0..n).map(|i| if i % 5 < 2 { 1 } else { -1 }).collect();
+            let b: Vec<i32> = (0..n).map(|i| if (i / 3) % 2 == 0 { 1 } else { -1 }).collect();
+            let want: i64 = a.iter().zip(&b).map(|(&x, &y)| (x * y) as i64).sum();
+            assert_eq!(xnor_sign_dot(&pack_sign_bits(&a), &pack_sign_bits(&b), n), want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn padded_words_are_zero_and_invisible_to_the_dots() {
+        let n = 70; // 2 lane words, padded to 8
+        let a: Vec<i32> = (0..n).map(|i| if i % 2 == 0 { 1 } else { -1 }).collect();
+        let pa = pack_sign_bits(&a);
+        assert_eq!(pa.len(), padded_lane_words(n as usize));
+        assert!(pa[lane_words(n as usize)..].iter().all(|&w| w == 0));
+        // Self XNOR-dot over n lanes must be exactly +n: pad words XNOR
+        // to all-ones and would inflate the count if they were read.
+        assert_eq!(xnor_sign_dot(&pa, &pa, n as usize), n as i64);
+        // AND-popcount tolerates the pad because it is zero.
+        assert_eq!(popcount_and_dot(&pa, &pa), (n as i64 + 1) / 2);
     }
 
     #[test]

@@ -144,16 +144,17 @@ impl ComputeEngine {
                 let xq = &scratch.xq;
                 for_each_row_chunk(out, f, m, self.threads, work, |row0, chunk| {
                     let rows = chunk.len() / m;
-                    // One bit-plane scratch per chunk, reused across the
-                    // chunk's rows (each worker owns its own).
-                    let mut bp = BitPlanes::empty();
+                    // One block of bit-plane scratches per chunk (each
+                    // worker owns its own), reused across the chunk's
+                    // row blocks by the tiled kernel.
+                    let mut bps = Vec::new();
                     kernels::binary_rows_packed(
                         &xq[row0 * n..(row0 + rows) * n],
                         planes,
                         bits as u32,
                         scale,
                         chunk,
-                        &mut bp,
+                        &mut bps,
                     );
                 });
             }

@@ -27,6 +27,10 @@
 //! `bits · ⌈n/64⌉` word ops — ≥ 4× for every `bits ≤ 16`, ~8× at the
 //! paper's W1A8 operating point (measured in `benches/runtime_hotpath.rs`,
 //! recorded in BENCH_hotpath.json; methodology in EXPERIMENTS.md §Perf).
+//! Since PR 8 the word loops themselves run on the runtime-dispatched
+//! SIMD tiers of `util::simd` (scalar / AVX2 / opt-in AVX-512) and the
+//! binary FC walks its operands in L1-sized row-block × column-panel
+//! tiles — same sums in the same order, so bit-exactness is untouched.
 
 use std::fmt;
 
@@ -164,51 +168,102 @@ pub(crate) fn binary_rows_scalar(
     }
 }
 
+/// L1 working-set target per tile operand, in bytes. Half a typical
+/// 32 KiB L1d: one half for the row block's activation planes, one for
+/// the column panel's weight bitmaps, leaving slack for accumulators.
+const L1_TILE_BYTES: usize = 16 * 1024;
+
+/// Upper bound on rows packed per block (also sizes the fixed on-stack
+/// `row_const` array — no per-tile heap traffic).
+const MAX_ROW_BLOCK: usize = 16;
+
+/// Rows per block: as many rows' bit-plane decompositions as fit the L1
+/// tile target, ≥ 1, ≤ [`MAX_ROW_BLOCK`].
+#[inline]
+fn row_block_len(planes_per_row: usize, words_per_plane: usize) -> usize {
+    (L1_TILE_BYTES / (planes_per_row * words_per_plane * 8).max(1)).clamp(1, MAX_ROW_BLOCK)
+}
+
+/// Columns per panel: as many weight columns as fit the L1 tile target
+/// (each column is `words_per_col` lane words).
+#[inline]
+fn col_panel_len(words_per_col: usize) -> usize {
+    (L1_TILE_BYTES / (words_per_col * 8).max(1)).max(8)
+}
+
 /// Binary-weight FC, packed: activation bit-planes × column sign bitmaps.
 ///
 /// Per row: `Σ_p q_p·s_p = Σ_b coeff(b)·(2·pop(plane_b ∧ W_j) − total_b)`
 /// `= 2·Σ_b coeff(b)·pop(plane_b ∧ W_j) − row_const` — the `row_const`
 /// is column-independent and hoisted. `bits == 1` degenerates to the pure
-/// XNOR form (both operands ±1). `bp` is the caller's reusable bit-plane
-/// scratch, repacked in place per row.
+/// XNOR form (both operands ±1).
+///
+/// Tiling (§Perf): rows are packed in blocks of up to [`MAX_ROW_BLOCK`]
+/// and columns walked in L1-sized panels, loop order row-block →
+/// col-panel → row → col. Within a panel each row's planes stay L1-hot,
+/// and each panel's weight columns are reused by every row of the block
+/// before being evicted — cutting weight traffic from L2/L3 by the block
+/// factor. The dots themselves run on the `util::simd` dispatch tier;
+/// the plane buffers carry the `SIMD_PAD_WORDS` stride, so every dot is
+/// whole vectors. Integer sums are order-identical to the untiled loop,
+/// hence still bit-exact vs the scalar oracle. `bps` is the caller's
+/// reusable block scratch (one [`BitPlanes`] per block row), grown once
+/// and repacked in place thereafter.
 pub(crate) fn binary_rows_packed(
     xq: &[i32],
     w: &SignPlanes,
     bits: u32,
     scale: f32,
     out: &mut [f32],
-    bp: &mut BitPlanes,
+    bps: &mut Vec<BitPlanes>,
 ) {
     let n = w.rows;
     let m = w.cols;
     let rows = out.len() / m;
     debug_assert_eq!(xq.len(), rows * n);
-    for i in 0..rows {
-        let xrow = &xq[i * n..(i + 1) * n];
-        let orow = &mut out[i * m..(i + 1) * m];
-        pack_bit_planes_into(xrow, bits, bp);
-        if bits == 1 {
-            let arow = bp.plane(0);
-            for (j, o) in orow.iter_mut().enumerate() {
-                let acc = xnor_sign_dot(arow, w.col(j), n);
-                *o = acc as f32 * scale;
-            }
-            continue;
+    let planes_per_row = if bits == 1 { 1 } else { bits as usize };
+    let block = row_block_len(planes_per_row, w.words_per_col()).min(rows.max(1));
+    let panel = col_panel_len(w.words_per_col());
+    if bps.len() < block {
+        bps.resize_with(block, BitPlanes::empty);
+    }
+    let mut row_consts = [0i64; MAX_ROW_BLOCK];
+    for i0 in (0..rows).step_by(block) {
+        let blen = block.min(rows - i0);
+        for (i, bp) in bps.iter_mut().enumerate().take(blen) {
+            pack_bit_planes_into(&xq[(i0 + i) * n..(i0 + i + 1) * n], bits, bp);
+            row_consts[i] = if bits == 1 {
+                0
+            } else {
+                (0..bits).map(|b| plane_coeff(b, bits) * bp.totals[b as usize]).sum()
+            };
         }
-        let row_const: i64 = (0..bits)
-            .map(|b| plane_coeff(b, bits) * bp.totals[b as usize])
-            .sum();
-        for (j, o) in orow.iter_mut().enumerate() {
-            let col = w.col(j);
-            let mut plus = 0i64;
-            for b in 0..bits {
-                if bp.totals[b as usize] == 0 {
-                    continue; // empty plane: popcount would be 0 anyway
+        for j0 in (0..m).step_by(panel) {
+            let j1 = (j0 + panel).min(m);
+            for i in 0..blen {
+                let bp = &bps[i];
+                let orow = &mut out[(i0 + i) * m + j0..(i0 + i) * m + j1];
+                if bits == 1 {
+                    let arow = bp.plane(0);
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        let acc = xnor_sign_dot(arow, w.col(j0 + j), n);
+                        *o = acc as f32 * scale;
+                    }
+                    continue;
                 }
-                plus += plane_coeff(b, bits) * popcount_and_dot(bp.plane(b), col);
+                for (j, o) in orow.iter_mut().enumerate() {
+                    let col = w.col(j0 + j);
+                    let mut plus = 0i64;
+                    for b in 0..bits {
+                        if bp.totals[b as usize] == 0 {
+                            continue; // empty plane: popcount would be 0 anyway
+                        }
+                        plus += plane_coeff(b, bits) * popcount_and_dot(bp.plane(b), col);
+                    }
+                    let acc = 2 * plus - row_consts[i];
+                    *o = acc as f32 * scale;
+                }
             }
-            let acc = 2 * plus - row_const;
-            *o = acc as f32 * scale;
         }
     }
 }

@@ -48,7 +48,10 @@ pub enum PreparedFc {
         rows: usize,
         cols: usize,
     },
-    /// Column-major 64-lane packed sign planes (LUT path, packed backend).
+    /// Column-major 64-lane packed sign planes (LUT path, packed
+    /// backend), column-strided at the `SIMD_PAD_WORDS` alignment so the
+    /// dispatched popcount tiers run whole vectors — the SIMD-friendly
+    /// layout is paid for once here at prepare time, never per frame.
     BinaryPacked { planes: SignPlanes, scale: f32 },
     /// Row-major ±1 materialization (LUT path, scalar oracle backend).
     BinaryScalar {

@@ -254,6 +254,52 @@ fn prepared_plan_survives_backend_swap() {
 }
 
 #[test]
+fn qq_compact_bound_exact_boundary_values() {
+    // The compact qq kernel is exact iff every partial sum fits an i32:
+    // k products each bounded by 2^(bits−1)·2^(bits−1), so the admissible
+    // depth is exactly kmax = ⌊i32::MAX / 2^(2·bits−2)⌋. Pin the fence
+    // for every width: largest k that must pass, smallest that must fall
+    // back — the SIMD-era dispatch must never drift across it.
+    use super::kernels::qq_compact_ok;
+    for bits in 2..=16u32 {
+        let kmax = (i32::MAX >> (2 * bits - 2)) as usize;
+        assert!(qq_compact_ok(bits, kmax), "bits={bits}: k={kmax} must pass");
+        assert!(!qq_compact_ok(bits, kmax + 1), "bits={bits}: k={} must fall back", kmax + 1);
+    }
+    // Spot anchors: the full-width fence (one product of 2^30 fits, two
+    // don't) and the paper's W1A8 attention point, deep inside the bound.
+    assert!(qq_compact_ok(16, 1) && !qq_compact_ok(16, 2));
+    assert!(qq_compact_ok(8, 197));
+    // 1-bit rows use the XNOR form, never the compact kernel.
+    assert!(!qq_compact_ok(1, 1));
+    assert!(!qq_compact_ok(17, 1));
+}
+
+#[test]
+fn qq_compact_worst_case_at_the_bound_is_exact() {
+    // Numeric proof at the fence: bits=15 admits kmax=7 — seven worst-
+    // case products (−2^14)·(−2^14) sum to 7·2^28 = 1 879 048 192 ≤
+    // i32::MAX (all partials same-signed, so no intermediate wraps
+    // either). The compact kernel must agree with the i64 oracle exactly;
+    // one more product would overflow, which qq_compact_ok forbids.
+    use super::kernels::{qq_compact_ok, qq_rows_compact, qq_rows_scalar};
+    let bits = 15u32;
+    let k = (i32::MAX >> (2 * bits - 2)) as usize;
+    assert_eq!(k, 7);
+    let lo = -(1i32 << (bits - 1)); // −16384, the largest-magnitude code
+    let aq = vec![lo; k];
+    let bq = vec![lo; k]; // k×1 matrix: one output, the full-depth sum
+    let scale = 1.0f32;
+    let mut compact = [0.0f32; 1];
+    let mut oracle = [0.0f32; 1];
+    qq_rows_compact(&aq, &bq, k, 1, scale, &mut compact, &mut Vec::new());
+    qq_rows_scalar(&aq, &bq, k, 1, scale, &mut oracle, &mut Vec::new());
+    assert_eq!(compact, oracle);
+    assert_eq!(compact[0], (k as i64 * (lo as i64 * lo as i64)) as f32);
+    assert!(!qq_compact_ok(bits, k + 1), "k+1 worst case would exceed i32::MAX");
+}
+
+#[test]
 fn softmax_and_layernorm_invariants() {
     let mut s = vec![1.0f32, 2.0, 3.0, 4.0, -1.0, 0.0, 1.0, 2.0];
     super::exec::softmax_rows(&mut s, 2, 4);

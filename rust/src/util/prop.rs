@@ -173,6 +173,52 @@ impl Strategy for U64Range {
     }
 }
 
+/// Bit-lane counts for the SIMD-vs-scalar popcount sweeps: lengths
+/// biased onto the 64-lane word edges (`n % 64 ∈ {0, 1, 63}`, where tail
+/// masking breaks) mixed with uniform lengths, up to `max_words` lane
+/// words; shrinks toward 1, preferring candidates snapped to the word
+/// edges so boundary counterexamples stay boundary cases as they shrink.
+#[derive(Debug, Clone)]
+pub struct LaneLen {
+    pub max_words: u64,
+}
+
+pub fn lane_lens(max_words: u64) -> LaneLen {
+    assert!(max_words >= 1);
+    LaneLen { max_words }
+}
+
+impl Strategy for LaneLen {
+    type Value = u64;
+
+    fn generate(&self, rng: &mut SplitMix64) -> u64 {
+        let words = 1 + rng.next_below(self.max_words);
+        match rng.next_below(4) {
+            0 => words * 64,                     // exact multiple: no tail
+            1 => words * 64 - 1,                 // 63-lane tail
+            2 => (words - 1) * 64 + 1,           // 1-lane tail
+            _ => 1 + rng.next_below(words * 64), // anywhere in range
+        }
+    }
+
+    fn shrink(&self, value: &u64) -> Vec<u64> {
+        let v = *value;
+        if v <= 1 {
+            return Vec::new();
+        }
+        let down = v / 64 * 64;
+        let mut out = vec![1];
+        for c in [down.saturating_sub(1), down, down + 1, v / 2, v - 1] {
+            if c >= 1 && c < v {
+                out.push(c);
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
 /// Uniform `f64` in `[lo, hi)`, shrinking toward zero / the bounds.
 #[derive(Debug, Clone)]
 pub struct F64Range {

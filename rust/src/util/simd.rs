@@ -1,0 +1,445 @@
+//! Runtime-dispatched SIMD popcount primitives — the inner loop of every
+//! packed XNOR/popcount kernel (`sim::kernels` via `quant::packing`).
+//!
+//! The packed backend reduces each matmul output to sums of
+//! `popcount(a ∧ b)` / `popcount(XNOR(a, b))` over `u64` lane-word
+//! slices. This module is the one place those word loops live, at three
+//! dispatch tiers selected once per process:
+//!
+//! * **`scalar`** — the plain `count_ones()` loop with a `u64`
+//!   accumulator: always available, and the in-module reference the
+//!   vector tiers are property-tested against (the *kernel*-level oracle
+//!   remains `Backend::Scalar`, which never touches this module's vector
+//!   paths).
+//! * **`avx2`** — 256-bit `vpshufb` nibble-LUT popcount (Muła's
+//!   algorithm) with per-vector `vpsadbw` reduction into 64-bit lanes,
+//!   so no intermediate accumulator can wrap at any input length.
+//! * **`avx512`** — native `vpopcntq` (`_mm512_popcnt_epi64`) over
+//!   512-bit words. Compile-time opt-in via the `avx512` cargo feature
+//!   (the intrinsics need rustc ≥ 1.89); runtime-gated on
+//!   `avx512f` + `avx512vpopcntdq`.
+//!
+//! Selection: the best tier the CPU (and build) supports, clamped by the
+//! `VAQF_SIMD=scalar|avx2|avx512` environment override (requesting a
+//! tier the machine lacks falls back to the best supported one — the
+//! override can only *lower* the tier, never fake one). CI runs the test
+//! suite under `VAQF_SIMD=scalar` and the auto-detected best tier so a
+//! divergence cannot hide behind either (see EXPERIMENTS.md §Perf).
+//!
+//! All tiers are bit-identical by contract: exact `u64` popcounts, no
+//! rounding anywhere. `rust/tests/property_suite.rs` sweeps every
+//! supported tier against the scalar tier over random lane lengths
+//! (including the `n % 64 ∈ {0, 1, 63}` tail boundaries) and the
+//! `u32`-accumulator overflow boundary that motivated the widened sums.
+
+use std::fmt;
+use std::sync::OnceLock;
+
+/// One SIMD dispatch tier, ordered weakest → strongest (so clamping an
+/// environment request to hardware support is just `min`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum SimdTier {
+    Scalar = 0,
+    Avx2 = 1,
+    Avx512 = 2,
+}
+
+impl SimdTier {
+    /// Tier-name hint for error messages (keep in sync with
+    /// [`SimdTier::from_name`]).
+    pub const NAMES: &'static str = "scalar|avx2|avx512";
+
+    /// Parse a tier name (the `VAQF_SIMD` env surface).
+    pub fn from_name(name: &str) -> Option<SimdTier> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(SimdTier::Scalar),
+            "avx2" => Some(SimdTier::Avx2),
+            "avx512" => Some(SimdTier::Avx512),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Avx512 => "avx512",
+        }
+    }
+
+    /// Every tier this machine (and build) can actually run, weakest
+    /// first — the sweep axis for per-tier property tests and benches.
+    pub fn supported_tiers() -> Vec<SimdTier> {
+        let best = supported();
+        let mut tiers = vec![SimdTier::Scalar];
+        if best >= SimdTier::Avx2 {
+            tiers.push(SimdTier::Avx2);
+        }
+        if best >= SimdTier::Avx512 {
+            tiers.push(SimdTier::Avx512);
+        }
+        tiers
+    }
+}
+
+impl fmt::Display for SimdTier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Best tier the CPU supports (cached; pure in the hardware).
+pub fn supported() -> SimdTier {
+    static SUPPORTED: OnceLock<SimdTier> = OnceLock::new();
+    *SUPPORTED.get_or_init(detect)
+}
+
+/// The tier every dispatched call runs: `min(VAQF_SIMD request,
+/// supported)`, defaulting to the best supported tier. Cached on first
+/// use (the kernels are hot enough that even an env read per call would
+/// show up).
+pub fn active() -> SimdTier {
+    static ACTIVE: OnceLock<SimdTier> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let best = supported();
+        match std::env::var("VAQF_SIMD").ok().and_then(|v| SimdTier::from_name(&v)) {
+            Some(requested) => requested.min(best),
+            None => best,
+        }
+    })
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect() -> SimdTier {
+    #[cfg(feature = "avx512")]
+    {
+        if is_x86_feature_detected!("avx512f") && is_x86_feature_detected!("avx512vpopcntdq") {
+            return SimdTier::Avx512;
+        }
+    }
+    if is_x86_feature_detected!("avx2") {
+        SimdTier::Avx2
+    } else {
+        SimdTier::Scalar
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detect() -> SimdTier {
+    SimdTier::Scalar
+}
+
+/// `Σ popcount(aᵢ ∧ bᵢ)` over two equal-length lane-word slices, on the
+/// process-wide [`active`] tier. Exact `u64` accumulation at every tier
+/// (the pre-PR8 `u32` accumulator wrapped past 2³² set bits).
+#[inline]
+pub fn and_popcount(a: &[u64], b: &[u64]) -> u64 {
+    and_popcount_with(active(), a, b)
+}
+
+/// [`and_popcount`] on an explicit tier (tests/benches force each
+/// supported tier through this). Panics if `tier` exceeds what the CPU
+/// supports — the caller cannot conjure instructions the machine lacks.
+pub fn and_popcount_with(tier: SimdTier, a: &[u64], b: &[u64]) -> u64 {
+    assert!(tier <= supported(), "SIMD tier {tier} unsupported on this CPU");
+    debug_assert_eq!(a.len(), b.len());
+    match tier {
+        SimdTier::Scalar => and_popcount_scalar(a, b),
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { avx2::and_popcount(a, b) },
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        SimdTier::Avx512 => unsafe { avx512::and_popcount(a, b) },
+        #[allow(unreachable_patterns)]
+        _ => and_popcount_scalar(a, b),
+    }
+}
+
+/// `Σ popcount(XNOR(aᵢ, bᵢ))` over the first `n` *bit lanes* (the ±1
+/// sign-dot popcount), on the process-wide [`active`] tier.
+///
+/// Only `⌈n/64⌉` words are read and the final partial word is masked to
+/// its `n % 64` valid low bits — trailing padding words (the 64-byte
+/// panel alignment of the packed layouts) are ignored entirely, so the
+/// XNOR of two zero pad words (= all ones) can never leak into the
+/// count. Requires `a.len() == b.len() ≥ ⌈n/64⌉`.
+#[inline]
+pub fn xnor_popcount(a: &[u64], b: &[u64], n: usize) -> u64 {
+    xnor_popcount_with(active(), a, b, n)
+}
+
+/// [`xnor_popcount`] on an explicit tier; panics if `tier` exceeds CPU
+/// support.
+pub fn xnor_popcount_with(tier: SimdTier, a: &[u64], b: &[u64], n: usize) -> u64 {
+    assert!(tier <= supported(), "SIMD tier {tier} unsupported on this CPU");
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert!(a.len() >= n.div_ceil(64), "slice shorter than {n} lanes");
+    match tier {
+        SimdTier::Scalar => xnor_popcount_scalar(a, b, n),
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => unsafe { avx2::xnor_popcount(a, b, n) },
+        #[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+        SimdTier::Avx512 => unsafe { avx512::xnor_popcount(a, b, n) },
+        #[allow(unreachable_patterns)]
+        _ => xnor_popcount_scalar(a, b, n),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar tier — the always-available fallback and in-module reference.
+// ---------------------------------------------------------------------------
+
+fn and_popcount_scalar(a: &[u64], b: &[u64]) -> u64 {
+    let mut pop = 0u64;
+    for (&x, &y) in a.iter().zip(b) {
+        pop += u64::from((x & y).count_ones());
+    }
+    pop
+}
+
+fn xnor_popcount_scalar(a: &[u64], b: &[u64], n: usize) -> u64 {
+    let full = n / 64;
+    let rem = n % 64;
+    let mut pop = 0u64;
+    for i in 0..full {
+        pop += u64::from((!(a[i] ^ b[i])).count_ones());
+    }
+    if rem > 0 {
+        let mask = (1u64 << rem) - 1;
+        pop += u64::from(((!(a[full] ^ b[full])) & mask).count_ones());
+    }
+    pop
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 tier: vpshufb nibble-LUT popcount (Muła), vpsadbw-reduced per
+// vector so every accumulator is 64-bit from the first add.
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Per-byte popcount of a 256-bit vector: each nibble indexes a
+    /// 16-entry popcount LUT via `vpshufb`, low + high nibble summed.
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn popcount_bytes(v: __m256i) -> __m256i {
+        let lut = _mm256_setr_epi8(
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+            0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        );
+        let low = _mm256_set1_epi8(0x0f);
+        let lo = _mm256_and_si256(v, low);
+        let hi = _mm256_and_si256(_mm256_srli_epi32::<4>(v), low);
+        _mm256_add_epi8(_mm256_shuffle_epi8(lut, lo), _mm256_shuffle_epi8(lut, hi))
+    }
+
+    #[target_feature(enable = "avx2")]
+    #[inline]
+    unsafe fn hsum_epi64(acc: __m256i) -> u64 {
+        let mut lanes = [0u64; 4];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+        lanes[0] + lanes[1] + lanes[2] + lanes[3]
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn and_popcount(a: &[u64], b: &[u64]) -> u64 {
+        let words = a.len();
+        let zero = _mm256_setzero_si256();
+        let mut acc = zero;
+        let chunks = words / 4;
+        for c in 0..chunks {
+            let va = _mm256_loadu_si256(a.as_ptr().add(4 * c) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(4 * c) as *const __m256i);
+            let bytes = popcount_bytes(_mm256_and_si256(va, vb));
+            // vpsadbw against zero: 8-byte group sums into the four
+            // 64-bit lanes — ≤ 64 per lane per vector, so the epi64
+            // accumulator is exact at any slice length.
+            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(bytes, zero));
+        }
+        let mut pop = hsum_epi64(acc);
+        for i in 4 * chunks..words {
+            pop += u64::from((a[i] & b[i]).count_ones());
+        }
+        pop
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn xnor_popcount(a: &[u64], b: &[u64], n: usize) -> u64 {
+        let full = n / 64;
+        let rem = n % 64;
+        let zero = _mm256_setzero_si256();
+        let ones = _mm256_set1_epi8(-1);
+        let mut acc = zero;
+        let chunks = full / 4;
+        for c in 0..chunks {
+            let va = _mm256_loadu_si256(a.as_ptr().add(4 * c) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(4 * c) as *const __m256i);
+            let xnor = _mm256_xor_si256(_mm256_xor_si256(va, vb), ones);
+            acc = _mm256_add_epi64(acc, _mm256_sad_epu8(popcount_bytes(xnor), zero));
+        }
+        let mut pop = hsum_epi64(acc);
+        for i in 4 * chunks..full {
+            pop += u64::from((!(a[i] ^ b[i])).count_ones());
+        }
+        if rem > 0 {
+            pop += u64::from(((!(a[full] ^ b[full])) & ((1u64 << rem) - 1)).count_ones());
+        }
+        pop
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX-512 tier: native vpopcntq. Opt-in (`--features avx512`, rustc ≥
+// 1.89 for the stabilized intrinsics); runtime-gated in `detect`.
+// ---------------------------------------------------------------------------
+
+#[cfg(all(target_arch = "x86_64", feature = "avx512"))]
+mod avx512 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx512f,avx512vpopcntdq")]
+    pub unsafe fn and_popcount(a: &[u64], b: &[u64]) -> u64 {
+        let words = a.len();
+        let mut acc = _mm512_setzero_si512();
+        let chunks = words / 8;
+        for c in 0..chunks {
+            let va = _mm512_loadu_si512(a.as_ptr().add(8 * c) as *const _);
+            let vb = _mm512_loadu_si512(b.as_ptr().add(8 * c) as *const _);
+            acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(_mm512_and_si512(va, vb)));
+        }
+        let mut pop = _mm512_reduce_add_epi64(acc) as u64;
+        for i in 8 * chunks..words {
+            pop += u64::from((a[i] & b[i]).count_ones());
+        }
+        pop
+    }
+
+    #[target_feature(enable = "avx512f,avx512vpopcntdq")]
+    pub unsafe fn xnor_popcount(a: &[u64], b: &[u64], n: usize) -> u64 {
+        let full = n / 64;
+        let rem = n % 64;
+        let ones = _mm512_set1_epi64(-1);
+        let mut acc = _mm512_setzero_si512();
+        let chunks = full / 8;
+        for c in 0..chunks {
+            let va = _mm512_loadu_si512(a.as_ptr().add(8 * c) as *const _);
+            let vb = _mm512_loadu_si512(b.as_ptr().add(8 * c) as *const _);
+            let xnor = _mm512_xor_si512(_mm512_xor_si512(va, vb), ones);
+            acc = _mm512_add_epi64(acc, _mm512_popcnt_epi64(xnor));
+        }
+        let mut pop = _mm512_reduce_add_epi64(acc) as u64;
+        for i in 8 * chunks..full {
+            pop += u64::from((!(a[i] ^ b[i])).count_ones());
+        }
+        if rem > 0 {
+            pop += u64::from(((!(a[full] ^ b[full])) & ((1u64 << rem) - 1)).count_ones());
+        }
+        pop
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    /// Bit-by-bit reference counts, independent of any word loop.
+    fn ref_and(a: &[u64], b: &[u64]) -> u64 {
+        a.iter().zip(b).map(|(&x, &y)| u64::from((x & y).count_ones())).sum()
+    }
+
+    fn ref_xnor(a: &[u64], b: &[u64], n: usize) -> u64 {
+        (0..n)
+            .filter(|&p| (a[p / 64] >> (p % 64)) & 1 == (b[p / 64] >> (p % 64)) & 1)
+            .count() as u64
+    }
+
+    fn rand_words(rng: &mut SplitMix64, len: usize) -> Vec<u64> {
+        (0..len).map(|_| rng.next_u64()).collect()
+    }
+
+    #[test]
+    fn tier_names_round_trip_and_order() {
+        for tier in [SimdTier::Scalar, SimdTier::Avx2, SimdTier::Avx512] {
+            assert_eq!(SimdTier::from_name(tier.name()), Some(tier));
+        }
+        assert_eq!(SimdTier::from_name(" AVX2 "), Some(SimdTier::Avx2));
+        assert_eq!(SimdTier::from_name("neon"), None);
+        assert!(SimdTier::Scalar < SimdTier::Avx2 && SimdTier::Avx2 < SimdTier::Avx512);
+    }
+
+    #[test]
+    fn active_never_exceeds_supported() {
+        assert!(active() <= supported());
+        let tiers = SimdTier::supported_tiers();
+        assert_eq!(tiers[0], SimdTier::Scalar);
+        assert!(tiers.contains(&supported()));
+        assert!(tiers.windows(2).all(|w| w[0] < w[1]), "tiers must be sorted");
+    }
+
+    #[test]
+    fn all_supported_tiers_match_reference_counts() {
+        let mut rng = SplitMix64::new(0x51D);
+        for trial in 0..200 {
+            // Lengths hammer the 4/8-word vector chunk boundaries and
+            // the empty slice.
+            let words = (rng.next_below(40)) as usize;
+            let a = rand_words(&mut rng, words);
+            let b = rand_words(&mut rng, words);
+            let want = ref_and(&a, &b);
+            for tier in SimdTier::supported_tiers() {
+                assert_eq!(
+                    and_popcount_with(tier, &a, &b),
+                    want,
+                    "trial {trial}: and tier {tier} words {words}"
+                );
+            }
+            if words == 0 {
+                continue;
+            }
+            // Lane counts stress the n % 64 ∈ {0, 1, 63} tail masks and
+            // ignored padding words beyond ⌈n/64⌉.
+            let max = words * 64;
+            for n in [
+                max,
+                max - 1,
+                (words - 1) * 64 + 1,
+                1 + rng.next_below(max as u64) as usize,
+            ] {
+                let want = ref_xnor(&a, &b, n);
+                for tier in SimdTier::supported_tiers() {
+                    assert_eq!(
+                        xnor_popcount_with(tier, &a, &b, n),
+                        want,
+                        "trial {trial}: xnor tier {tier} n {n} words {words}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn xnor_ignores_padding_words_past_the_lane_count() {
+        // Zero pad words XNOR to all-ones; they must contribute nothing.
+        let a = vec![u64::MAX, 0, 0, 0, 0, 0, 0, 0];
+        let b = vec![u64::MAX, 0, 0, 0, 0, 0, 0, 0];
+        for tier in SimdTier::supported_tiers() {
+            assert_eq!(xnor_popcount_with(tier, &a, &b, 64), 64, "tier {tier}");
+            assert_eq!(xnor_popcount_with(tier, &a, &b, 1), 1, "tier {tier}");
+        }
+    }
+
+    #[test]
+    #[cfg(target_arch = "x86_64")]
+    fn forcing_an_unsupported_tier_panics() {
+        if supported() >= SimdTier::Avx512 {
+            return; // everything is supported here; nothing to force
+        }
+        let r = std::panic::catch_unwind(|| {
+            and_popcount_with(SimdTier::Avx512, &[1], &[1]);
+        });
+        assert!(r.is_err(), "unsupported tier must refuse to run");
+    }
+}

@@ -224,3 +224,46 @@ fn blocking_pop_wakes_on_late_push_and_close() {
     assert_eq!(first, Some(42));
     assert_eq!(second, None);
 }
+
+#[test]
+fn queue_survives_a_panic_under_its_lock() {
+    // Panic-injection: a consumer that panics inside a `peek_front`
+    // closure dies holding the queue mutex, poisoning it. Every queue
+    // operation must recover the lock (PR 8's poison-recovering locks —
+    // previously each of these calls would cascade-panic on
+    // `PoisonError`) and the conservation invariant must still hold.
+    let q: Arc<BoundedQueue<u64>> = Arc::new(BoundedQueue::new(4));
+    q.push(item(0, 0));
+    q.push(item(0, 1));
+
+    let victim = {
+        let q = Arc::clone(&q);
+        std::thread::spawn(move || {
+            q.peek_front(|_| panic!("injected panic under the queue lock"));
+        })
+    };
+    assert!(victim.join().is_err(), "the injected panic must propagate to its own thread");
+
+    // Full API sweep over the poisoned-then-recovered queue.
+    assert_eq!(q.len(), 2);
+    assert!(!q.is_closed());
+    assert_eq!(q.peek_front(|&v| v), Some(item(0, 0)));
+    assert!(q.push(item(0, 2)).admitted());
+    assert_eq!(q.try_pop(), Some(item(0, 0)));
+    assert_eq!(q.pop(), Some(item(0, 1)));
+
+    // A late blocking pop still wakes on push after the poisoning.
+    let consumer = {
+        let q = Arc::clone(&q);
+        std::thread::spawn(move || (q.pop(), q.pop()))
+    };
+    std::thread::sleep(std::time::Duration::from_millis(20));
+    q.push(item(0, 3));
+    q.close();
+    let (first, second) = consumer.join().unwrap();
+    assert_eq!(first, Some(item(0, 2)));
+    assert_eq!(second, Some(item(0, 3)));
+
+    assert_eq!(q.pushed(), 4);
+    assert_eq!(q.pushed(), q.popped() + q.dropped() + q.len() as u64, "conservation violated");
+}

@@ -19,7 +19,9 @@ use vaqf::perf::{
     layer_cycles, layer_cycles_opt, model_cycles, resources_for, AcceleratorParams, ModelOptions,
 };
 use vaqf::quant::{
-    binarize, pack_bit_planes, pack_words, unpack_bit_planes, unpack_words, ActQuantizer,
+    binarize, pack_bit_planes, pack_bit_planes_into, pack_sign_bits, pack_words,
+    padded_lane_words, popcount_and_dot, unpack_bit_planes, unpack_words, xnor_sign_dot,
+    ActQuantizer, BitPlanes,
 };
 use vaqf::sim::{
     generate_weights, layer_timing, reference_forward, Backend, ComputeEngine, FcScratch,
@@ -27,6 +29,7 @@ use vaqf::sim::{
 };
 use vaqf::util::prop::{self, QueueOp};
 use vaqf::util::rng::SplitMix64;
+use vaqf::util::simd::{self, SimdTier};
 
 // ---------------------------------------------------------------------------
 // Generators.
@@ -610,6 +613,145 @@ fn prop_row_parallel_fixed16_bitexact_vs_serial() {
         let serial = engine_with(8, Backend::Packed, 1).fc_fixed16(&x, &w, f, n, m);
         let parallel = engine_with(8, Backend::Packed, threads).fc_fixed16(&x, &w, f, n, m);
         assert_eq!(serial.out, parallel.out, "trial {trial}: f={f} threads={threads}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SIMD-tier properties (PR 8): every tier the machine supports must be
+// BIT-IDENTICAL to the scalar tier (and a bit-by-bit reference) on the
+// popcount primitives the packed kernels are built from — over random
+// lane lengths that land on the n % 64 ∈ {0, 1, 63} tail boundaries,
+// bit widths 1–8 through the real pack→dot pipeline with a dirty reused
+// scratch, and at the u32-accumulator overflow boundary. `VAQF_SIMD` in
+// CI additionally pins the *dispatched* (cached) path to each tier
+// end-to-end; these in-process sweeps force every tier explicitly.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_simd_tiers_bitexact_on_random_lane_lengths() {
+    let tiers = SimdTier::supported_tiers();
+    let strat = prop::tuple2(prop::lane_lens(24), prop::seeds());
+    prop::check("simd_tiers_bitexact", &strat, |&(n, seed)| {
+        let n = n as usize;
+        let mut rng = SplitMix64::new(seed);
+        // Padded operand slices as the packers emit them — but with
+        // RANDOM garbage in the pad words past ⌈n/64⌉, which the masked
+        // XNOR contract must never read.
+        let words = padded_lane_words(n);
+        let a: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+        let b: Vec<u64> = (0..words).map(|_| rng.next_u64()).collect();
+        let want_and: u64 =
+            a.iter().zip(&b).map(|(&x, &y)| u64::from((x & y).count_ones())).sum();
+        let want_xnor = (0..n)
+            .filter(|&p| (a[p / 64] >> (p % 64)) & 1 == (b[p / 64] >> (p % 64)) & 1)
+            .count() as u64;
+        for &tier in &tiers {
+            let got = simd::and_popcount_with(tier, &a, &b);
+            if got != want_and {
+                return Err(format!("and tier {tier}: {got} != {want_and} (n={n})"));
+            }
+            let got = simd::xnor_popcount_with(tier, &a, &b, n);
+            if got != want_xnor {
+                return Err(format!("xnor tier {tier}: {got} != {want_xnor} (n={n})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simd_dots_bitexact_all_widths_on_dirty_scratch() {
+    // Bit widths 1–8 through the real pack → dot pipeline, with ONE
+    // BitPlanes scratch reused dirty across every trial and shape: pack
+    // a random row, dot each plane against a random packed ±1 column on
+    // every supported tier, and check against integer plane arithmetic
+    // (and the exact ±1 dot for bits == 1).
+    let tiers = SimdTier::supported_tiers();
+    let strat = prop::tuple3(prop::lane_lens(4), prop::u64s(1, 8), prop::seeds());
+    let scratch = std::cell::RefCell::new(BitPlanes::empty());
+    prop::check("simd_dots_all_widths", &strat, |&(n, bits, seed)| {
+        let n = n as usize;
+        let bits = bits as u32;
+        let mut rng = SplitMix64::new(seed);
+        let vals: Vec<i32> = (0..n)
+            .map(|_| {
+                if bits == 1 {
+                    if rng.next_below(2) == 1 {
+                        1
+                    } else {
+                        -1
+                    }
+                } else {
+                    let hi = (1i64 << (bits - 1)) - 1;
+                    let lo = -(1i64 << (bits - 1));
+                    (lo + rng.next_below((hi - lo + 1) as u64) as i64) as i32
+                }
+            })
+            .collect();
+        let wsigns: Vec<i32> =
+            (0..n).map(|_| if rng.next_below(2) == 1 { 1 } else { -1 }).collect();
+        let mut bp = scratch.borrow_mut();
+        pack_bit_planes_into(&vals, bits, &mut bp);
+        let wcol = pack_sign_bits(&wsigns);
+        if bits == 1 {
+            let want: i64 = vals.iter().zip(&wsigns).map(|(&a, &w)| (a * w) as i64).sum();
+            let got = xnor_sign_dot(bp.plane(0), &wcol, n);
+            if got != want {
+                return Err(format!("xnor_sign_dot dispatched: {got} != {want} (n={n})"));
+            }
+            for &tier in &tiers {
+                let got =
+                    2 * simd::xnor_popcount_with(tier, bp.plane(0), &wcol, n) as i64 - n as i64;
+                if got != want {
+                    return Err(format!("sign dot tier {tier}: {got} != {want} (n={n})"));
+                }
+            }
+            return Ok(());
+        }
+        for b in 0..bits {
+            // Lanes where bit b of the two's-complement encoding is set
+            // AND the weight sign bit is set.
+            let want = vals
+                .iter()
+                .zip(&wsigns)
+                .filter(|&(&v, &w)| (v as i64 as u64) >> b & 1 == 1 && w > 0)
+                .count() as i64;
+            let got = popcount_and_dot(bp.plane(b), &wcol);
+            if got != want {
+                return Err(format!("plane {b} dispatched: {got} != {want} (bits={bits} n={n})"));
+            }
+            for &tier in &tiers {
+                let got = simd::and_popcount_with(tier, bp.plane(b), &wcol) as i64;
+                if got != want {
+                    return Err(format!(
+                        "plane {b} tier {tier}: {got} != {want} (bits={bits} n={n})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn popcount_accumulator_survives_u32_overflow_boundary() {
+    // Regression for the pre-PR8 u32 accumulators: 2²⁶ + 1 all-ones
+    // words hold 2³² + 64 set bits — one word past what a u32 can count
+    // (the old loop wrapped to 64 in release and panicked in debug).
+    // The widened u64/i64 sums must be exact on the dispatched path and
+    // on every supported tier.
+    let words = vec![u64::MAX; (1usize << 26) + 1];
+    let lanes = words.len() * 64; // 2³² + 64
+    assert!(lanes as u64 > u32::MAX as u64);
+    assert_eq!(popcount_and_dot(&words, &words), lanes as i64);
+    assert_eq!(xnor_sign_dot(&words, &words, lanes), lanes as i64);
+    for tier in SimdTier::supported_tiers() {
+        assert_eq!(simd::and_popcount_with(tier, &words, &words), lanes as u64, "and {tier}");
+        assert_eq!(
+            simd::xnor_popcount_with(tier, &words, &words, lanes),
+            lanes as u64,
+            "xnor {tier}"
+        );
     }
 }
 
