@@ -1,33 +1,191 @@
 //! Bench: the cost of the VAQF compilation step (paper §3: "several
 //! minutes to several hours" with Vivado in the loop; our analytical
-//! substitute runs in milliseconds-to-seconds) and the ≤4-round search
-//! guarantee — each compile driven through a `vaqf::api` session.
+//! substitute runs in milliseconds) — and what the pruned, deduplicated,
+//! parallel search engine plus the incremental `SearchCtx` memo buy over
+//! the literal exhaustive sweep.
 //!
-//! Run with: `cargo bench --bench search_cost`
+//! Four measurements land in `BENCH_search.json`:
+//!
+//! * cold vs warm session compile (fresh session per run vs a session
+//!   whose `SearchCtx` has already seen the design);
+//! * the §5.3.2 per-precision search, pruned vs the exhaustive oracle,
+//!   on DeiT-base @ ZCU102 — plus a `search_result_equal` bit asserting
+//!   the two picked the same design;
+//! * cold vs warm 2-way shard repartition (the failover path: a board
+//!   dies and `co_search` re-runs — warm when the surviving shards'
+//!   sub-searches are memo-served);
+//! * the ≤4-round precision-search accounting from the paper.
+//!
+//! Run with: `cargo bench --bench search_cost` (append `-- --quick`
+//! for the CI-sized subset).
 
-use vaqf::api::TargetSpec;
-use vaqf::util::bench::{report_metric, Bench};
+use std::sync::Arc;
 
-fn main() {
-    println!("== VAQF compilation-step cost ==\n");
+use vaqf::api::{Result, TargetSpec, VaqfError};
+use vaqf::compiler::{optimize_for_bits_exhaustive, SearchCtx};
+use vaqf::shard::{co_search_with_ctx, ShardPolicy};
+use vaqf::util::bench::{bench_output_path, Bench, JsonReport};
+use vaqf::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let quick = args.has_flag("quick");
+    let mut report = JsonReport::new("search_cost", if quick { "quick" } else { "full" });
     let mut bench = Bench::heavy();
-    for model in ["deit-tiny", "deit-small", "deit-base"] {
-        for dev_name in ["zcu102", "zcu111"] {
-            let name = format!("compile {model} @24FPS on {dev_name}");
-            // Fresh session per run: the session-level baseline cache
-            // would otherwise drop the baseline search from the cost.
-            bench.run(&name, || {
-                let session = TargetSpec::new()
-                    .model_preset(model)
-                    .device_preset(dev_name)
-                    .target_fps(24.0)
-                    .session()
-                    .expect("presets resolve");
-                let _ = session.compile();
-            });
+
+    // ---- cold vs warm session compile -----------------------------------
+    println!("== compilation-step cost: cold vs warm sessions ==\n");
+    let pairs: &[(&str, &str)] = if quick {
+        &[("deit-base", "zcu102")]
+    } else {
+        &[
+            ("deit-tiny", "zcu102"),
+            ("deit-small", "zcu102"),
+            ("deit-base", "zcu102"),
+            ("deit-base", "zcu111"),
+        ]
+    };
+    let mut cold_base_ms = 0.0f64;
+    let mut warm_base_ms = 0.0f64;
+    for &(model, dev_name) in pairs {
+        // Fresh session per run: baseline + every probed precision search
+        // from scratch — the pre-memo cost of one compile.
+        let cold = bench.run(&format!("compile cold {model}@{dev_name}"), || {
+            let session = TargetSpec::new()
+                .model_preset(model)
+                .device_preset(dev_name)
+                .target_fps(24.0)
+                .session()
+                .expect("presets resolve");
+            let _ = session.compile();
+        });
+        // One long-lived session: after the first compile, every probe is
+        // a design-memo hit on the shared SearchCtx.
+        let session = TargetSpec::new()
+            .model_preset(model)
+            .device_preset(dev_name)
+            .target_fps(24.0)
+            .session()
+            .expect("presets resolve");
+        let _ = session.compile();
+        let warm = bench.run(&format!("compile warm {model}@{dev_name}"), || {
+            let _ = session.compile();
+        });
+        report.result(&cold);
+        report.result(&warm);
+        if model == "deit-base" && dev_name == "zcu102" {
+            cold_base_ms = cold.mean_s() * 1e3;
+            warm_base_ms = warm.mean_s() * 1e3;
         }
     }
+    report.metric("compile cold deit-base@zcu102", cold_base_ms, "ms");
+    report.metric("compile warm deit-base@zcu102", warm_base_ms, "ms");
+    report.metric(
+        "warm compile speedup",
+        if warm_base_ms > 0.0 { cold_base_ms / warm_base_ms } else { 0.0 },
+        "x",
+    );
 
+    // ---- pruned vs exhaustive §5.3.2 search -----------------------------
+    println!("\n== per-precision search: pruned+parallel vs exhaustive oracle ==\n");
+    let model = vaqf::model::deit_base();
+    let dev = vaqf::hw::zcu102();
+    let warm_ctx = SearchCtx::new();
+    let baseline = warm_ctx.optimize_baseline(&model.structure(None), &dev);
+    let s8 = model.structure(Some(8));
+    let exhaustive = bench.run("search exhaustive deit-base@zcu102 b8", || {
+        let _ = optimize_for_bits_exhaustive(&s8, &baseline, &dev, 8);
+    });
+    // Fresh ctx per run: pruning + dedup + parallel fan-out, no memo.
+    let pruned = bench.run("search pruned-cold deit-base@zcu102 b8", || {
+        let ctx = SearchCtx::new();
+        let _ = ctx.optimize_for_bits(&s8, &baseline, &dev, 8);
+    });
+    report.result(&exhaustive);
+    report.result(&pruned);
+    let speedup = exhaustive.mean_s() / pruned.mean_s();
+    report.metric("exhaustive compile-step", exhaustive.mean_s() * 1e3, "ms");
+    report.metric("pruned compile-step", pruned.mean_s() * 1e3, "ms");
+    report.metric("pruned-vs-exhaustive speedup", speedup, "x");
+    println!("\npruned-vs-exhaustive speedup: {speedup:.1}x");
+
+    let want = optimize_for_bits_exhaustive(&s8, &baseline, &dev, 8).ok();
+    let got = warm_ctx.optimize_for_bits(&s8, &baseline, &dev, 8).ok();
+    let equal = match (&want, &got) {
+        (Some(w), Some(g)) => {
+            w.params == g.params
+                && w.adjustments == g.adjustments
+                && w.summary.cycles_per_frame == g.summary.cycles_per_frame
+        }
+        (None, None) => true,
+        _ => false,
+    };
+    report.metric("search_result_equal", if equal { 1.0 } else { 0.0 }, "bool");
+    println!(
+        "result equality: pruned {} exhaustive",
+        if equal { "==" } else { "DIVERGED FROM" }
+    );
+
+    // ---- cold vs warm shard repartition ---------------------------------
+    println!("\n== 2-way shard repartition: cold vs memo-warm ==\n");
+    let (part_model, part_dev) = if quick {
+        (vaqf::model::deit_tiny(), dev.clone())
+    } else {
+        (vaqf::model::deit_base(), dev.clone())
+    };
+    let part_ctx = Arc::new(SearchCtx::new());
+    let part_base = part_ctx.optimize_baseline(&part_model.structure(None), &part_dev);
+    let reference = part_ctx
+        .optimize_for_bits(&part_model.structure(Some(8)), &part_base, &part_dev, 8)
+        .map_err(VaqfError::runtime)?;
+    let repart_cold = bench.run(&format!("repartition cold {}", part_model.name), || {
+        let _ = co_search_with_ctx(
+            &part_model,
+            &part_dev,
+            Some(8),
+            &reference,
+            2,
+            ShardPolicy::Balanced,
+            Arc::new(SearchCtx::new()),
+        );
+    });
+    // Warm the shared ctx once, then every repartition is the failover
+    // fast path: per-stage searches served from the memo.
+    let _ = co_search_with_ctx(
+        &part_model,
+        &part_dev,
+        Some(8),
+        &reference,
+        2,
+        ShardPolicy::Balanced,
+        part_ctx.clone(),
+    );
+    let repart_warm = bench.run(&format!("repartition warm {}", part_model.name), || {
+        let _ = co_search_with_ctx(
+            &part_model,
+            &part_dev,
+            Some(8),
+            &reference,
+            2,
+            ShardPolicy::Balanced,
+            part_ctx.clone(),
+        );
+    });
+    report.result(&repart_cold);
+    report.result(&repart_warm);
+    report.metric("repartition cold", repart_cold.mean_s() * 1e3, "ms");
+    report.metric("repartition warm", repart_warm.mean_s() * 1e3, "ms");
+    report.metric(
+        "warm repartition speedup",
+        if repart_warm.mean_s() > 0.0 {
+            repart_cold.mean_s() / repart_warm.mean_s()
+        } else {
+            0.0
+        },
+        "x",
+    );
+
+    // ---- search-round accounting ----------------------------------------
     println!("\nsearch-round accounting (paper: ≤4 rounds for range 1..16):");
     for fps in [5.0, 12.0, 24.0, 30.0, 40.0] {
         let session = TargetSpec::new()
@@ -39,13 +197,19 @@ fn main() {
         match session.compile() {
             Ok(design) => {
                 let out = design.outcome().expect("compile() records the search outcome");
-                report_metric(
-                    &format!("target {fps:>4.0} FPS → W1A{} rounds", out.act_bits),
-                    (out.rounds.len() - 1) as f64,
-                    "probes (excl. FR_max)",
+                let rounds = (out.rounds.len() - 1) as f64;
+                println!(
+                    "  target {fps:>4.0} FPS → W1A{} in {rounds} probes (excl. FR_max)",
+                    out.act_bits
                 );
+                report.metric(&format!("rounds @{fps:.0}fps"), rounds, "probes");
             }
             Err(e) => println!("  target {fps:>4.0} FPS infeasible: {e}"),
         }
     }
+
+    report
+        .write(bench_output_path("BENCH_search.json"))
+        .map_err(VaqfError::runtime)?;
+    Ok(())
 }

@@ -15,8 +15,9 @@
 //! ```
 
 use std::cell::OnceCell;
+use std::sync::Arc;
 
-use crate::compiler::{self, CompileOutcome, CompileRequest, DesignPoint};
+use crate::compiler::{self, CompileOutcome, CompileRequest, DesignPoint, SearchCtx};
 use crate::config::Target;
 use crate::perf::{summarize, AcceleratorParams, PerfSummary};
 use crate::shard::{ShardPolicy, ShardedDesign};
@@ -32,6 +33,12 @@ pub struct Session {
     /// The baseline design-space search is pure in (model, device), so one
     /// session computes it at most once across compile/sweep/probe calls.
     baseline: OnceCell<AcceleratorParams>,
+    /// The incremental design-space-search context: every search this
+    /// session (or a design/shard derived from it) runs shares these memo
+    /// tables, so repeated and overlapping searches — precision sweeps,
+    /// co-search stages, live repartitions — re-optimize warm. Cloned
+    /// sessions share the same context.
+    ctx: Arc<SearchCtx>,
 }
 
 impl Session {
@@ -39,6 +46,7 @@ impl Session {
         Session {
             target,
             baseline: OnceCell::new(),
+            ctx: Arc::new(SearchCtx::new()),
         }
     }
 
@@ -47,9 +55,17 @@ impl Session {
         &self.target
     }
 
+    /// This session's shared design-space-search context (memo stats,
+    /// thread budget) — hand it to `compiler::*_with_ctx` entry points to
+    /// keep external searches warm too.
+    pub fn search_ctx(&self) -> &Arc<SearchCtx> {
+        &self.ctx
+    }
+
     fn baseline_params(&self) -> AcceleratorParams {
         *self.baseline.get_or_init(|| {
-            compiler::optimize_baseline(&self.target.model.structure(None), &self.target.device)
+            self.ctx
+                .optimize_baseline(&self.target.model.structure(None), &self.target.device)
         })
     }
 
@@ -77,10 +93,10 @@ impl Session {
         let t0 = std::time::Instant::now();
         let baseline = self.baseline_params();
         let baseline_seconds = t0.elapsed().as_secs_f64();
-        match compiler::compile_with_baseline(&req, baseline) {
+        match compiler::compile_with_baseline_ctx(&req, baseline, &self.ctx) {
             Ok(mut outcome) => {
                 outcome.compile_seconds += baseline_seconds;
-                Ok(CompiledDesign::from_outcome(&target, outcome))
+                Ok(CompiledDesign::from_outcome(&target, outcome, self.ctx.clone()))
             }
             Err(e) => Err(self.classify_compile_error(target_fps, e)),
         }
@@ -93,7 +109,7 @@ impl Session {
     fn classify_compile_error(&self, target_fps: f64, e: anyhow::Error) -> VaqfError {
         let baseline = self.baseline_params();
         let s1 = self.target.model.structure(Some(1));
-        if let Ok(d1) = compiler::optimize_for_bits(&s1, &baseline, &self.target.device, 1) {
+        if let Ok(d1) = self.ctx.optimize_for_bits(&s1, &baseline, &self.target.device, 1) {
             if target_fps > d1.summary.fps {
                 return VaqfError::Infeasible {
                     model: self.target.model.name.clone(),
@@ -124,7 +140,8 @@ impl Session {
             },
             Some(bits) => {
                 let s = self.target.model.structure(Some(bits));
-                compiler::optimize_for_bits(&s, &baseline, &self.target.device, bits)
+                self.ctx
+                    .optimize_for_bits(&s, &baseline, &self.target.device, bits)
                     .map_err(VaqfError::search)?
             }
         };
@@ -134,6 +151,7 @@ impl Session {
             design,
             baseline,
             outcome: None,
+            ctx: self.ctx.clone(),
         })
     }
 
@@ -169,7 +187,9 @@ impl Session {
                 let s = self.target.model.structure(Some(b));
                 SweepPoint {
                     bits: b,
-                    design: compiler::optimize_for_bits(&s, &baseline, &self.target.device, b)
+                    design: self
+                        .ctx
+                        .optimize_for_bits(&s, &baseline, &self.target.device, b)
                         .map_err(VaqfError::search),
                 }
             })
@@ -200,11 +220,12 @@ impl Session {
     /// surfaces as a matchable [`VaqfError::Search`].
     pub fn table5(&self, precisions: &[u8]) -> Result<Vec<PerfSummary>> {
         let baseline = self.baseline_params();
-        compiler::table5_rows_with_baseline(
+        compiler::table5_rows_with_baseline_ctx(
             &self.target.model,
             &self.target.device,
             &baseline,
             precisions,
+            &self.ctx,
         )
         .map_err(VaqfError::search)
     }
@@ -235,6 +256,10 @@ pub struct CompiledDesign {
     design: DesignPoint,
     baseline: AcceleratorParams,
     outcome: Option<CompileOutcome>,
+    /// The session's search context, carried so sharding (and the live
+    /// repartitions a sharded pipeline may run after board crashes)
+    /// re-searches warm.
+    ctx: Arc<SearchCtx>,
 }
 
 /// Files written by [`CompiledDesign::codegen`].
@@ -247,13 +272,18 @@ pub struct CodegenArtifacts {
 }
 
 impl CompiledDesign {
-    fn from_outcome(target: &Target, outcome: CompileOutcome) -> CompiledDesign {
+    fn from_outcome(
+        target: &Target,
+        outcome: CompileOutcome,
+        ctx: Arc<SearchCtx>,
+    ) -> CompiledDesign {
         CompiledDesign {
             target: target.clone(),
             act_bits: Some(outcome.act_bits),
             design: outcome.design.clone(),
             baseline: outcome.baseline,
             outcome: Some(outcome),
+            ctx,
         }
     }
 
@@ -380,13 +410,14 @@ impl CompiledDesign {
 
     /// [`CompiledDesign::shards`] under an explicit partition policy.
     pub fn shards_with(&self, n: usize, policy: ShardPolicy) -> Result<ShardedDesign> {
-        crate::shard::co_search(
+        crate::shard::co_search_with_ctx(
             &self.target.model,
             &self.target.device,
             self.act_bits,
             &self.design,
             n,
             policy,
+            self.ctx.clone(),
         )
         .map_err(VaqfError::search)
     }

@@ -8,7 +8,7 @@
 
 use crate::hw::Device;
 use crate::model::VitStructure;
-use crate::perf::{model_cycles, resources_for, AcceleratorParams};
+use crate::perf::{model_cycles_total, resources_for, AcceleratorParams};
 
 /// Exhaustively optimize the baseline accelerator for an *unquantized*
 /// structure (act_bits = None).
@@ -33,18 +33,29 @@ pub fn optimize_baseline(structure: &VitStructure, device: &Device) -> Accelerat
 
     let mut best: Option<(u64, AcceleratorParams)> = None;
     // T_m: multiples of G up to 512; T_n: 1..=64 (DSP budget caps the
-    // product well before these bounds on real devices).
+    // product well before these bounds on real devices). Every resource
+    // component is monotone non-decreasing in T_m and T_n, so the
+    // feasibility region is downward-closed: the scans break (rather than
+    // `continue`) at their first infeasible point, visiting only the
+    // feasible grid plus one boundary probe per row — the same points in
+    // the same order, so the strict-`<` winner is unchanged.
     for t_m in (g..=512).step_by(g as usize) {
+        let mut row_feasible = false;
         for t_n in 1..=64u64 {
             let cand = AcceleratorParams::baseline(t_m, t_n, g, p_h);
             let res = resources_for(structure, &cand, device);
             if !res.feasible(device) {
-                continue;
+                break;
             }
-            let (cycles, _) = model_cycles(structure, &cand, device);
+            row_feasible = true;
+            let cycles = model_cycles_total(structure, &cand, device);
             if best.as_ref().map(|(c, _)| cycles < *c).unwrap_or(true) {
                 best = Some((cycles, cand));
             }
+        }
+        if !row_feasible {
+            // (T_m, 1) infeasible ⇒ every larger T_m is too.
+            break;
         }
     }
     best.expect("no feasible baseline design — device too small for any tiling")

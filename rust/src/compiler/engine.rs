@@ -1,0 +1,978 @@
+//! The shared design-space-search engine: memoized point evaluation,
+//! branch-and-bound pruning, container dedup, and parallel candidate
+//! evaluation behind one [`SearchCtx`] carried by every search caller
+//! (`api::Session`, `shard::cosearch`, `shard::pipeline`'s repartition
+//! failover).
+//!
+//! ## Why the pruning is exact
+//!
+//! Every component of the resource model (`perf::resources_for`) is
+//! monotone non-decreasing in each tile dimension `T_m`/`T_m^q`/`T_n^q`
+//! with the others held fixed: BRAM terms are products of `⌈tile/g⌉`
+//! factors, DSP is `T_m·P_h·T_n`, LUT/FF are affine in the MAC-array
+//! sizes. Feasibility (`Eq. 14`: every resource under budget) is
+//! therefore *downward-closed* on the sweep grid — once a point is
+//! infeasible, every coordinate-wise larger point is too. The phase-B
+//! sweep exploits exactly that and nothing else:
+//!
+//! * the `T_m^q` scan breaks at its first infeasible point;
+//! * a whole `T_m` plane is skipped when its coordinate-wise minimal
+//!   point is infeasible;
+//! * the `T_m^q` upper bound is derived per class as the largest multiple
+//!   of `lcm(G, G^q)` still feasible at the grid-minimal `(T_m, T_n^q)`
+//!   (replacing the old hardcoded 512 cap, which both wasted probes on
+//!   small devices and silently truncated the space on big ones).
+//!
+//! Cycles are *not* assumed antitone (remainder-tile effects break
+//! that), so no point with a chance of winning is ever skipped: pruning
+//! only removes infeasible points the exhaustive scan would `continue`
+//! past anyway.
+//!
+//! ## Why the container dedup is exact
+//!
+//! `optimize_for_bits` probes every storage container width
+//! `c ∈ bits..=16`, but the search depends on `c` only through
+//! `G^q = ⌊S_port/c⌋` and `step = lcm(G, G^q)` — resources are costed at
+//! the *stored* width `⌊S_port/G^q⌋`, not the container width (see
+//! `perf::resources_for`). Containers in the same `(G^q, step)` class
+//! therefore produce byte-identical searches, and each class is probed
+//! once. Classes are consecutive runs of the container range, so
+//! first-occurrence order preserves the legacy tie-break.
+//!
+//! ## Why the parallel result is deterministic
+//!
+//! Candidates are ranked by the total order `(cycles, legacy enumeration
+//! index)` — the exact order the serial strict-`<` first-seen-wins scan
+//! induces. Workers only *evaluate*; selection is a serial fold over that
+//! order, so the winner is byte-identical for every thread count. The
+//! retained exhaustive oracle ([`optimize_for_bits_exhaustive`]) and the
+//! `search_suite` property sweep enforce this.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::hw::Device;
+use crate::model::{HostOp, LayerKind, Precision, VitStructure};
+use crate::perf::{
+    lut_cost_per_mac, model_cycles_total, resources_for, summarize, AcceleratorParams,
+};
+use crate::util::parallel;
+use crate::Cycles;
+
+use super::params::DesignPoint;
+
+pub(crate) fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+pub(crate) fn lcm(a: u64, b: u64) -> u64 {
+    a / gcd(a, b) * b
+}
+
+/// Everything the resource/latency models read from one layer — the
+/// memo-key identity of a layer. (`name` is deliberately excluded: two
+/// structures differing only in labels evaluate identically.)
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct LayerShape {
+    kind: LayerKind,
+    m: usize,
+    n: usize,
+    f: usize,
+    heads: usize,
+    inputs: Precision,
+    weights: Precision,
+    outputs: Precision,
+    /// Host-op multiset as counts of (softmax, layernorm, gelu, skip, scale).
+    host_ops: [u8; 5],
+}
+
+/// Memo-key identity of a whole structure.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct ShapeKey {
+    act_bits: Option<u8>,
+    layers: Vec<LayerShape>,
+}
+
+impl ShapeKey {
+    fn of(structure: &VitStructure) -> ShapeKey {
+        let layers = structure
+            .layers
+            .iter()
+            .map(|l| {
+                let mut host_ops = [0u8; 5];
+                for op in &l.host_ops {
+                    let slot = match op {
+                        HostOp::Softmax => 0,
+                        HostOp::LayerNorm => 1,
+                        HostOp::Gelu => 2,
+                        HostOp::SkipAdd => 3,
+                        HostOp::Scale => 4,
+                    };
+                    host_ops[slot] = host_ops[slot].saturating_add(1);
+                }
+                LayerShape {
+                    kind: l.kind,
+                    m: l.m,
+                    n: l.n,
+                    f: l.f,
+                    heads: l.heads,
+                    inputs: l.inputs,
+                    weights: l.weights,
+                    outputs: l.outputs,
+                    host_ops,
+                }
+            })
+            .collect();
+        ShapeKey {
+            act_bits: structure.act_bits,
+            layers,
+        }
+    }
+}
+
+/// Memo-key identity of a device: every field of [`Device`] (floats as
+/// bit patterns). Shard co-search debits per-stage BRAM budgets, and the
+/// whole-design memo stores summaries (clock-dependent) and error text
+/// (name-dependent), so nothing can be left out.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct DeviceKey {
+    name: String,
+    dsp: u64,
+    lut: u64,
+    bram18k: u64,
+    ff: u64,
+    clock_mhz: u64,
+    axi_port_bits: u32,
+    axi_ports_in: u64,
+    axi_ports_wgt: u64,
+    axi_ports_out: u64,
+    r_dsp_bits: u64,
+    r_lut_bits: u64,
+    static_power_bits: u64,
+}
+
+impl DeviceKey {
+    fn of(device: &Device) -> DeviceKey {
+        DeviceKey {
+            name: device.name.clone(),
+            dsp: device.budget.dsp,
+            lut: device.budget.lut,
+            bram18k: device.budget.bram18k,
+            ff: device.budget.ff,
+            clock_mhz: device.clock_mhz,
+            axi_port_bits: device.axi_port_bits,
+            axi_ports_in: device.axi_ports_in,
+            axi_ports_wgt: device.axi_ports_wgt,
+            axi_ports_out: device.axi_ports_out,
+            r_dsp_bits: device.r_dsp.to_bits(),
+            r_lut_bits: device.r_lut.to_bits(),
+            static_power_bits: device.static_power_w.to_bits(),
+        }
+    }
+}
+
+/// One memoized `(structure, device, params)` evaluation.
+#[derive(Clone, Copy)]
+struct EvalEntry {
+    feasible: bool,
+    /// Valid only when `feasible` (infeasible points never need cycles).
+    cycles: Cycles,
+}
+
+/// Key of one grid point in the sharded eval cache.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+struct PointKey {
+    shape: u32,
+    device: u32,
+    params: AcceleratorParams,
+}
+
+impl PointKey {
+    /// Shard selector — a cheap mix of the fields that actually vary
+    /// inside one sweep (the tile dims).
+    fn shard(&self) -> usize {
+        let p = &self.params;
+        let mix = p
+            .t_m
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .wrapping_add(p.t_m_q.wrapping_mul(0xff51_afd7_ed55_8ccd))
+            .wrapping_add(p.t_n_q.wrapping_mul(0xc4ce_b9fe_1a85_ec53))
+            .wrapping_add((self.shape as u64) << 32 | self.device as u64);
+        (mix >> 57) as usize % EVAL_SHARDS
+    }
+}
+
+const EVAL_SHARDS: usize = 16;
+
+/// Whole-result memo for `optimize_for_bits` — errors are memoized as
+/// their rendered message so warm replays surface identical text.
+type DesignMemo = HashMap<(u32, u32, AcceleratorParams, u8), Result<DesignPoint, String>>;
+
+#[derive(Default)]
+struct Interner {
+    shapes: HashMap<ShapeKey, u32>,
+    devices: HashMap<DeviceKey, u32>,
+    baselines: HashMap<(u32, u32), AcceleratorParams>,
+    designs: DesignMemo,
+}
+
+/// Cache/telemetry counters of one [`SearchCtx`] (all monotone).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SearchStats {
+    /// Grid points actually evaluated (resource + cycle model).
+    pub point_evals: u64,
+    /// Grid points served from the memo.
+    pub point_hits: u64,
+    /// Whole `optimize_for_bits` results served from the memo.
+    pub design_hits: u64,
+    /// Whole baseline searches served from the memo.
+    pub baseline_hits: u64,
+}
+
+/// The incremental re-search context: memo tables + thread budget shared
+/// by every search the same session (or sharded design) runs. Cloned
+/// handles (`Arc<SearchCtx>`) share one cache, so a repartition after a
+/// board crash re-optimizes warm instead of cold.
+pub struct SearchCtx {
+    interner: Mutex<Interner>,
+    evals: [Mutex<HashMap<PointKey, EvalEntry>>; EVAL_SHARDS],
+    threads: usize,
+    point_evals: AtomicU64,
+    point_hits: AtomicU64,
+    design_hits: AtomicU64,
+    baseline_hits: AtomicU64,
+}
+
+impl std::fmt::Debug for SearchCtx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let stats = self.stats();
+        f.debug_struct("SearchCtx")
+            .field("threads", &self.threads)
+            .field("stats", &stats)
+            .finish()
+    }
+}
+
+impl Default for SearchCtx {
+    fn default() -> Self {
+        SearchCtx::new()
+    }
+}
+
+impl SearchCtx {
+    /// A fresh context with the crate's default thread fan-out
+    /// (`VAQF_THREADS` / available parallelism).
+    pub fn new() -> SearchCtx {
+        SearchCtx::with_threads(parallel::default_threads())
+    }
+
+    /// A fresh context evaluating candidates across up to `threads`
+    /// workers. `with_threads(1)` is fully serial (useful to demonstrate
+    /// thread-count independence; results are identical either way).
+    pub fn with_threads(threads: usize) -> SearchCtx {
+        SearchCtx {
+            interner: Mutex::new(Interner::default()),
+            evals: std::array::from_fn(|_| Mutex::new(HashMap::new())),
+            threads: threads.clamp(1, parallel::MAX_THREADS),
+            point_evals: AtomicU64::new(0),
+            point_hits: AtomicU64::new(0),
+            design_hits: AtomicU64::new(0),
+            baseline_hits: AtomicU64::new(0),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn stats(&self) -> SearchStats {
+        SearchStats {
+            point_evals: self.point_evals.load(Ordering::Relaxed),
+            point_hits: self.point_hits.load(Ordering::Relaxed),
+            design_hits: self.design_hits.load(Ordering::Relaxed),
+            baseline_hits: self.baseline_hits.load(Ordering::Relaxed),
+        }
+    }
+
+    fn intern(&self, structure: &VitStructure, device: &Device) -> (u32, u32) {
+        let shape = ShapeKey::of(structure);
+        let dev = DeviceKey::of(device);
+        let mut guard = self.interner.lock().unwrap();
+        let ns = guard.shapes.len() as u32;
+        let sid = *guard.shapes.entry(shape).or_insert(ns);
+        let nd = guard.devices.len() as u32;
+        let did = *guard.devices.entry(dev).or_insert(nd);
+        (sid, did)
+    }
+
+    /// Memoized feasibility + cycles for one grid point. Pure in its
+    /// inputs, so concurrent duplicate computation is benign (both
+    /// writers insert the identical entry).
+    fn eval(
+        &self,
+        sid: u32,
+        did: u32,
+        structure: &VitStructure,
+        device: &Device,
+        params: &AcceleratorParams,
+    ) -> EvalEntry {
+        let key = PointKey {
+            shape: sid,
+            device: did,
+            params: *params,
+        };
+        let shard = &self.evals[key.shard()];
+        if let Some(e) = shard.lock().unwrap().get(&key) {
+            self.point_hits.fetch_add(1, Ordering::Relaxed);
+            return *e;
+        }
+        let feasible = resources_for(structure, params, device).feasible(device);
+        let entry = EvalEntry {
+            feasible,
+            cycles: if feasible {
+                model_cycles_total(structure, params, device)
+            } else {
+                0
+            },
+        };
+        self.point_evals.fetch_add(1, Ordering::Relaxed);
+        shard.lock().unwrap().insert(key, entry);
+        entry
+    }
+
+    /// Memoized baseline (W16A16) search — same result as
+    /// [`super::optimize_baseline`], computed at most once per distinct
+    /// `(structure, device)` this context has seen.
+    pub fn optimize_baseline(
+        &self,
+        structure: &VitStructure,
+        device: &Device,
+    ) -> AcceleratorParams {
+        let (sid, did) = self.intern(structure, device);
+        if let Some(p) = self.interner.lock().unwrap().baselines.get(&(sid, did)) {
+            self.baseline_hits.fetch_add(1, Ordering::Relaxed);
+            return *p;
+        }
+        // Compute outside the lock: the search is pure, so a racing
+        // duplicate inserts the identical params.
+        let params = super::baseline::optimize_baseline(structure, device);
+        self.interner.lock().unwrap().baselines.insert((sid, did), params);
+        params
+    }
+
+    /// Memoized, pruned, container-deduped, parallel §5.3.2 search —
+    /// byte-identical results to [`optimize_for_bits_exhaustive`] (the
+    /// `search_suite` property sweep holds it to that).
+    pub fn optimize_for_bits(
+        &self,
+        structure: &VitStructure,
+        baseline: &AcceleratorParams,
+        device: &Device,
+        bits: u8,
+    ) -> anyhow::Result<DesignPoint> {
+        anyhow::ensure!(
+            structure.act_bits == Some(bits),
+            "structure quantization ({:?}) must match requested bits ({bits})",
+            structure.act_bits
+        );
+        let (sid, did) = self.intern(structure, device);
+        let memo_key = (sid, did, *baseline, bits);
+        if let Some(cached) = self.interner.lock().unwrap().designs.get(&memo_key) {
+            self.design_hits.fetch_add(1, Ordering::Relaxed);
+            return cached.clone().map_err(|m| anyhow::anyhow!(m));
+        }
+        let result = search_classes(
+            Some((self, sid, did)),
+            self.threads,
+            structure,
+            baseline,
+            device,
+            bits,
+        );
+        self.interner.lock().unwrap().designs.insert(
+            memo_key,
+            result
+                .as_ref()
+                .map(Clone::clone)
+                .map_err(|e| format!("{e:#}")),
+        );
+        result
+    }
+}
+
+/// The pruned + deduped + parallel search without a memo context — what
+/// [`super::optimize_for_bits`] delegates to. One-shot callers get the
+/// algorithmic speedups; repeated callers should go through a
+/// [`SearchCtx`] for the caches too.
+pub(crate) fn optimize_for_bits_pruned(
+    structure: &VitStructure,
+    baseline: &AcceleratorParams,
+    device: &Device,
+    bits: u8,
+) -> anyhow::Result<DesignPoint> {
+    anyhow::ensure!(
+        structure.act_bits == Some(bits),
+        "structure quantization ({:?}) must match requested bits ({bits})",
+        structure.act_bits
+    );
+    search_classes(
+        None,
+        parallel::default_threads(),
+        structure,
+        baseline,
+        device,
+        bits,
+    )
+}
+
+/// Container dedup + class fan-out + deterministic selection — the body
+/// shared by the context-backed and one-shot pruned searches.
+fn search_classes(
+    ctx: Option<(&SearchCtx, u32, u32)>,
+    threads: usize,
+    structure: &VitStructure,
+    baseline: &AcceleratorParams,
+    device: &Device,
+    bits: u8,
+) -> anyhow::Result<DesignPoint> {
+    // Container dedup: the search depends on the container width only
+    // through (G^q, step) — probe each equivalence class once, in
+    // first-occurrence (ascending-container) order so the legacy
+    // first-seen-wins tie-break is preserved.
+    let g = baseline.g;
+    let mut classes: Vec<(u64, u64)> = Vec::new();
+    for container in bits..=16 {
+        let g_q = AcceleratorParams::g_q_for(device.axi_port_bits, container);
+        let step = lcm(g, g_q);
+        if classes.last() != Some(&(g_q, step)) {
+            // g_q is non-increasing in the container width, so equal
+            // classes are consecutive runs.
+            classes.push((g_q, step));
+        }
+    }
+
+    // Evaluate every class, fanning out across the thread budget.
+    // Selection below is a serial fold in class order, so the winner is
+    // independent of the fan-out.
+    let outcomes = parallel::map_tasks(classes.len(), threads, parallel::MIN_WORK_PER_THREAD, |i| {
+        let (g_q, step) = classes[i];
+        optimize_class(ctx, structure, baseline, device, bits, g_q, step)
+    });
+
+    let mut best: Option<ClassResult> = None;
+    let mut last_err = None;
+    for outcome in outcomes {
+        match outcome {
+            Ok(r) => {
+                if best.as_ref().map(|b| r.cycles < b.cycles).unwrap_or(true) {
+                    best = Some(r);
+                }
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    match best {
+        Some(r) => finish_design(structure, device, r),
+        None => Err(last_err.unwrap_or_else(|| anyhow::anyhow!("no container feasible"))),
+    }
+}
+
+/// The winning candidate of one container class, before summarization.
+struct ClassResult {
+    cycles: Cycles,
+    params: AcceleratorParams,
+    adjustments: u32,
+}
+
+fn finish_design(
+    structure: &VitStructure,
+    device: &Device,
+    r: ClassResult,
+) -> anyhow::Result<DesignPoint> {
+    r.params.validate()?;
+    Ok(DesignPoint {
+        summary: summarize(structure, &r.params, device),
+        params: r.params,
+        adjustments: r.adjustments,
+    })
+}
+
+/// Feasibility of one grid point — through the context's memo when one is
+/// supplied, direct otherwise (the oracle path).
+fn point_eval(
+    ctx: Option<(&SearchCtx, u32, u32)>,
+    structure: &VitStructure,
+    device: &Device,
+    params: &AcceleratorParams,
+) -> EvalEntry {
+    match ctx {
+        Some((ctx, sid, did)) => ctx.eval(sid, did, structure, device, params),
+        None => {
+            let feasible = resources_for(structure, params, device).feasible(device);
+            EvalEntry {
+                feasible,
+                cycles: if feasible {
+                    model_cycles_total(structure, params, device)
+                } else {
+                    0
+                },
+            }
+        }
+    }
+}
+
+/// §5.3.2 phases A and B for one `(G^q, step)` container class: the
+/// feasibility descent, then the pruned `(T_m, T_m^q, T_n^q)` sweep with
+/// selection by `(cycles, legacy enumeration index)` and the legacy
+/// improvement count replayed from the visited feasible points.
+fn optimize_class(
+    ctx: Option<(&SearchCtx, u32, u32)>,
+    structure: &VitStructure,
+    baseline: &AcceleratorParams,
+    device: &Device,
+    bits: u8,
+    g_q: u64,
+    step: u64,
+) -> anyhow::Result<ClassResult> {
+    let g = baseline.g;
+    // Rule 2: T_m near T_m^base, divisible by G and G^q.
+    let t_m0 = ((baseline.t_m + step - 1) / step * step).max(step);
+    // Rule 3.
+    let t_n = baseline.t_n;
+    let t_n_q = (t_n * g_q / g).max(1);
+
+    let mut params = AcceleratorParams {
+        t_m: t_m0,
+        t_n,
+        t_m_q: t_m0,
+        t_n_q,
+        g,
+        g_q,
+        p_h: baseline.p_h,
+        act_bits: Some(bits),
+    };
+
+    let mut adjustments = 0u32;
+
+    // Phase A: if the initial try does not "place and route"
+    // (resource-model infeasibility), shrink the tile that owns the
+    // oversubscribed resource: LUT/FF pressure comes from the quantized
+    // array (T_m^q), DSP pressure from the unquantized array (T_m).
+    loop {
+        let res = resources_for(structure, &params, device);
+        if res.feasible(device) {
+            break;
+        }
+        let lut_over = res.lut as f64 > device.budget.lut as f64 * device.r_lut
+            || res.ff > device.budget.ff;
+        let dsp_over = res.dsp as f64 > device.budget.dsp as f64 * device.r_dsp;
+        // LUT pressure is only relieved by shrinking the quantized array if
+        // that array is actually a significant consumer. The array is
+        // costed at the *stored* width ⌊S_port/G^q⌋ (what resources_for
+        // charges), which also makes the whole class search a pure
+        // function of (G^q, step) — the dedup above relies on that.
+        let b_q = (u64::from(device.axi_port_bits) / g_q).max(1);
+        let q_array_luts = lut_cost_per_mac(b_q.min(16) as u8) * params.lut_macs();
+        let q_array_significant = q_array_luts * 8 > res.lut;
+        // DSP pressure can only come from the unquantized array — relieve
+        // it first (it also sheds the LUT glue around the DSP lanes).
+        let shrink_q =
+            !dsp_over && ((lut_over && q_array_significant) || params.t_m_q >= params.t_m);
+        if shrink_q {
+            if params.t_m_q > step {
+                params.t_m_q -= step;
+            } else if params.t_n_q > 1 {
+                // Last resort: narrow the quantized input unroll below the
+                // §5.3.2 rule value (costs BRAM efficiency, saves LUTs).
+                params.t_n_q = (params.t_n_q / 2).max(1);
+            } else {
+                anyhow::bail!(
+                    "no feasible design for {bits}-bit activations on {} (LUT-bound)",
+                    device.name
+                );
+            }
+        } else {
+            anyhow::ensure!(
+                params.t_m > step,
+                "no feasible design for {bits}-bit activations on {}",
+                device.name
+            );
+            params.t_m -= step;
+        }
+        adjustments += 1;
+    }
+
+    // Phase B: sweep the (T_m, T_m^q, T_n^q) grid for the latency argmin.
+    let init = params;
+    let init_cycles = point_eval(ctx, structure, device, &init).cycles;
+
+    // T_n^q candidates: multiples of the §5.3.2 rule value (and G^q below
+    // it) — the input unroll must stay word-aligned. Legacy order.
+    let mut cands: Vec<u64> = (1..=8).map(|k| k * t_n_q).collect();
+    cands.push(g_q);
+    let n_cands = cands.len() as u64;
+    let min_cand = *cands.iter().min().expect("candidate list is non-empty");
+
+    // Derived T_m^q bound: the largest multiple of `step` feasible at the
+    // grid-minimal other coordinates. Everything above it is infeasible
+    // at *every* grid point (monotonicity), so the bound loses nothing —
+    // unlike the old hardcoded 512 cap.
+    let mut t_m_q_hi = 0u64;
+    let mut q = step;
+    loop {
+        let probe = AcceleratorParams {
+            t_m: step,
+            t_m_q: q,
+            t_n_q: min_cand,
+            ..init
+        };
+        if !point_eval(ctx, structure, device, &probe).feasible {
+            break;
+        }
+        t_m_q_hi = q;
+        q += step;
+    }
+    let n_tmq = t_m_q_hi / step;
+
+    // The pruned sweep: visit exactly the feasible grid points (plus one
+    // boundary probe per scan), recording each with its legacy
+    // enumeration index.
+    let mut visited: Vec<(u64, Cycles, AcceleratorParams)> = Vec::new();
+    let t_m_range: Vec<u64> = (1..=init.t_m / step).map(|k| k * step).collect();
+    'planes: for (tm_i, &t_m) in t_m_range.iter().enumerate() {
+        if n_tmq == 0 {
+            break;
+        }
+        // Skip the whole plane when its minimal point cannot place.
+        let plane_min = AcceleratorParams {
+            t_m,
+            t_m_q: step,
+            t_n_q: min_cand,
+            ..init
+        };
+        if !point_eval(ctx, structure, device, &plane_min).feasible {
+            break 'planes;
+        }
+        for (ci, &t_n_q_c) in cands.iter().enumerate() {
+            for tmq_i in 0..n_tmq {
+                let t_m_q = (tmq_i + 1) * step;
+                let cand = AcceleratorParams {
+                    t_m,
+                    t_m_q,
+                    t_n_q: t_n_q_c,
+                    ..init
+                };
+                let e = point_eval(ctx, structure, device, &cand);
+                if !e.feasible {
+                    // Monotone in T_m^q: the rest of this scan is
+                    // infeasible too.
+                    break;
+                }
+                let legacy_index = (tm_i as u64 * n_tmq + tmq_i) * n_cands + ci as u64;
+                visited.push((legacy_index, e.cycles, cand));
+            }
+        }
+    }
+
+    // Selection: minimum under the total order (cycles, legacy index),
+    // with the phase-A params ranked before every sweep candidate — the
+    // exact winner of the serial strict-`<` scan.
+    let mut best = ClassResult {
+        cycles: init_cycles,
+        params: init,
+        adjustments: 0,
+    };
+    let mut best_index = None::<u64>;
+    for &(index, cycles, cand) in &visited {
+        let better = cycles < best.cycles
+            || (cycles == best.cycles && best_index.map(|b| index < b).unwrap_or(false));
+        if better {
+            best.cycles = cycles;
+            best.params = cand;
+            best_index = Some(index);
+        }
+    }
+
+    // Legacy `adjustments` accounting: the number of strict improvements
+    // the serial scan would have made, replayed in enumeration order.
+    visited.sort_unstable_by_key(|&(index, _, _)| index);
+    let mut cur = init_cycles;
+    for &(_, cycles, _) in &visited {
+        if cycles < cur {
+            cur = cycles;
+            adjustments += 1;
+        }
+    }
+    best.adjustments = adjustments;
+    Ok(best)
+}
+
+/// The retained exhaustive oracle: the literal pre-engine triple loop
+/// (no memo, no pruning, no dedup, no parallelism) — the ground truth the
+/// property sweep holds [`SearchCtx::optimize_for_bits`] to.
+pub fn optimize_for_bits_exhaustive(
+    structure: &VitStructure,
+    baseline: &AcceleratorParams,
+    device: &Device,
+    bits: u8,
+) -> anyhow::Result<DesignPoint> {
+    anyhow::ensure!(
+        structure.act_bits == Some(bits),
+        "structure quantization ({:?}) must match requested bits ({bits})",
+        structure.act_bits
+    );
+    let mut best: Option<ClassResult> = None;
+    let mut last_err = None;
+    for container in bits..=16 {
+        let g_q = AcceleratorParams::g_q_for(device.axi_port_bits, container);
+        let step = lcm(baseline.g, g_q);
+        match exhaustive_class(structure, baseline, device, bits, g_q, step) {
+            Ok(d) => {
+                if best.as_ref().map(|b| d.cycles < b.cycles).unwrap_or(true) {
+                    best = Some(d);
+                }
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+    match best {
+        Some(r) => finish_design(structure, device, r),
+        None => Err(last_err.unwrap_or_else(|| anyhow::anyhow!("no container feasible"))),
+    }
+}
+
+/// One container's exhaustive search: phase A (shared with the engine),
+/// then the unpruned serial strict-`<` sweep over the full grid.
+fn exhaustive_class(
+    structure: &VitStructure,
+    baseline: &AcceleratorParams,
+    device: &Device,
+    bits: u8,
+    g_q: u64,
+    step: u64,
+) -> anyhow::Result<ClassResult> {
+    // Phase A and the derived bound are identical by construction; reuse
+    // them (unmemoized), then redo phase B the slow way.
+    let pruned = optimize_class(None, structure, baseline, device, bits, g_q, step)?;
+    let g = baseline.g;
+    let t_m0 = ((baseline.t_m + step - 1) / step * step).max(step);
+    let t_n = baseline.t_n;
+    let t_n_q = (t_n * g_q / g).max(1);
+    let mut params = AcceleratorParams {
+        t_m: t_m0,
+        t_n,
+        t_m_q: t_m0,
+        t_n_q,
+        g,
+        g_q,
+        p_h: baseline.p_h,
+        act_bits: Some(bits),
+    };
+    let mut adjustments = 0u32;
+    loop {
+        let res = resources_for(structure, &params, device);
+        if res.feasible(device) {
+            break;
+        }
+        let lut_over = res.lut as f64 > device.budget.lut as f64 * device.r_lut
+            || res.ff > device.budget.ff;
+        let dsp_over = res.dsp as f64 > device.budget.dsp as f64 * device.r_dsp;
+        let b_q = (u64::from(device.axi_port_bits) / g_q).max(1);
+        let q_array_luts = lut_cost_per_mac(b_q.min(16) as u8) * params.lut_macs();
+        let q_array_significant = q_array_luts * 8 > res.lut;
+        let shrink_q =
+            !dsp_over && ((lut_over && q_array_significant) || params.t_m_q >= params.t_m);
+        if shrink_q {
+            if params.t_m_q > step {
+                params.t_m_q -= step;
+            } else if params.t_n_q > 1 {
+                params.t_n_q = (params.t_n_q / 2).max(1);
+            } else {
+                anyhow::bail!(
+                    "no feasible design for {bits}-bit activations on {} (LUT-bound)",
+                    device.name
+                );
+            }
+        } else {
+            anyhow::ensure!(
+                params.t_m > step,
+                "no feasible design for {bits}-bit activations on {}",
+                device.name
+            );
+            params.t_m -= step;
+        }
+        adjustments += 1;
+    }
+
+    let mut best_cycles = model_cycles_total(structure, &params, device);
+    let init = params;
+    // Same derived bound as the engine (the oracle checks pruning and
+    // parallelism, not the bound — the bound's own regression test lives
+    // in compiler::params::tests).
+    let mut cands: Vec<u64> = (1..=8).map(|k| k * t_n_q).collect();
+    cands.push(g_q);
+    let min_cand = *cands.iter().min().expect("candidate list is non-empty");
+    let mut t_m_q_hi = 0u64;
+    let mut q = step;
+    loop {
+        let probe = AcceleratorParams {
+            t_m: step,
+            t_m_q: q,
+            t_n_q: min_cand,
+            ..init
+        };
+        if !resources_for(structure, &probe, device).feasible(device) {
+            break;
+        }
+        t_m_q_hi = q;
+        q += step;
+    }
+
+    for t_m in (1..=init.t_m / step).map(|k| k * step) {
+        for t_m_q in (1..=t_m_q_hi / step).map(|k| k * step) {
+            for &t_n_q_c in &cands {
+                let cand = AcceleratorParams {
+                    t_m,
+                    t_m_q,
+                    t_n_q: t_n_q_c,
+                    ..init
+                };
+                if !resources_for(structure, &cand, device).feasible(device) {
+                    continue;
+                }
+                let c = model_cycles_total(structure, &cand, device);
+                if c < best_cycles {
+                    params = cand;
+                    best_cycles = c;
+                    adjustments += 1;
+                }
+            }
+        }
+    }
+    let result = ClassResult {
+        cycles: best_cycles,
+        params,
+        adjustments,
+    };
+    // The pruned class search must agree with the literal scan; catching
+    // a divergence here (debug builds/tests) beats shipping it.
+    debug_assert_eq!(pruned.cycles, result.cycles, "pruned class diverged");
+    debug_assert_eq!(pruned.params, result.params, "pruned class diverged");
+    debug_assert_eq!(pruned.adjustments, result.adjustments, "pruned class diverged");
+    Ok(result)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::{zcu102, Device, ResourceBudget};
+    use crate::model::{deit_base, micro};
+
+    fn mega_device(scale: u64) -> Device {
+        let mut dev = zcu102();
+        dev.name = format!("mega{scale}");
+        dev.budget = ResourceBudget {
+            dsp: dev.budget.dsp * scale,
+            lut: dev.budget.lut * scale,
+            bram18k: dev.budget.bram18k * scale,
+            ff: dev.budget.ff * scale,
+        };
+        dev
+    }
+
+    #[test]
+    fn container_classes_collapse() {
+        // Port 64, bits 8: containers 8..=16 → g_q ∈ {8,7,6,5,4} ⇒ 5
+        // classes instead of 9 probes.
+        let g = 4u64;
+        let mut classes = Vec::new();
+        for container in 8u8..=16 {
+            let g_q = AcceleratorParams::g_q_for(64, container);
+            let key = (g_q, lcm(g, g_q));
+            if classes.last() != Some(&key) {
+                classes.push(key);
+            }
+        }
+        assert_eq!(classes.len(), 5);
+        // Runs are consecutive, so first-occurrence dedup caught them all.
+        let mut uniq: Vec<_> = classes.clone();
+        uniq.dedup();
+        assert_eq!(uniq, classes);
+    }
+
+    #[test]
+    fn ctx_matches_exhaustive_oracle_on_micro() {
+        let dev = zcu102();
+        let base = super::super::baseline::optimize_baseline(&micro().structure(None), &dev);
+        for bits in [1u8, 4, 6, 8] {
+            let s = micro().structure(Some(bits));
+            let want = optimize_for_bits_exhaustive(&s, &base, &dev, bits).unwrap();
+            for threads in [1usize, 2, 8] {
+                let ctx = SearchCtx::with_threads(threads);
+                let got = ctx.optimize_for_bits(&s, &base, &dev, bits).unwrap();
+                assert_eq!(got.params, want.params, "bits={bits} threads={threads}");
+                assert_eq!(
+                    got.summary.cycles_per_frame, want.summary.cycles_per_frame,
+                    "bits={bits} threads={threads}"
+                );
+                assert_eq!(got.adjustments, want.adjustments, "bits={bits} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn warm_result_is_identical_and_hits_the_memo() {
+        let dev = zcu102();
+        let ctx = SearchCtx::new();
+        let base = ctx.optimize_baseline(&micro().structure(None), &dev);
+        let s = micro().structure(Some(8));
+        let cold = ctx.optimize_for_bits(&s, &base, &dev, 8).unwrap();
+        let stats_cold = ctx.stats();
+        let warm = ctx.optimize_for_bits(&s, &base, &dev, 8).unwrap();
+        let stats_warm = ctx.stats();
+        assert_eq!(cold.params, warm.params);
+        assert_eq!(cold.adjustments, warm.adjustments);
+        assert_eq!(stats_warm.design_hits, stats_cold.design_hits + 1);
+        assert_eq!(
+            stats_warm.point_evals, stats_cold.point_evals,
+            "warm replay must not re-evaluate any grid point"
+        );
+    }
+
+    #[test]
+    fn derived_bound_unlocks_big_devices() {
+        // On a 4× zcu102 the old hardcoded cap (t_m_q ≤ 512) binds: the
+        // envelope-derived bound must find a strictly faster design with
+        // t_m_q > 512. (The satellite regression test for the 512 bug.)
+        let dev = mega_device(4);
+        let base = super::super::baseline::optimize_baseline(&deit_base().structure(None), &dev);
+        let s = deit_base().structure(Some(8));
+        let d = optimize_for_bits_exhaustive(&s, &base, &dev, 8).unwrap();
+        assert!(
+            d.params.t_m_q > 512,
+            "expected the derived bound to pass 512 on mega4, got {:?}",
+            d.params
+        );
+        let ctx = SearchCtx::new();
+        let fast = ctx.optimize_for_bits(&s, &base, &dev, 8).unwrap();
+        assert_eq!(fast.params, d.params);
+    }
+
+    #[test]
+    fn shape_key_ignores_names_but_not_dims() {
+        let a = micro().structure(Some(8));
+        let mut renamed = a.clone();
+        for l in &mut renamed.layers {
+            l.name = format!("x-{}", l.name);
+        }
+        assert!(ShapeKey::of(&a) == ShapeKey::of(&renamed));
+        let mut grown = a.clone();
+        grown.layers[0].m += 1;
+        assert!(ShapeKey::of(&a) != ShapeKey::of(&grown));
+    }
+}

@@ -22,19 +22,22 @@
 
 mod baseline;
 mod codegen;
+mod engine;
 mod params;
 mod report;
 mod search;
 
 pub use baseline::optimize_baseline;
 pub use codegen::{emit_config_json, emit_hls_cpp, params_from_json};
+pub use engine::{optimize_for_bits_exhaustive, SearchCtx, SearchStats};
 pub use params::{optimize_for_bits, DesignPoint};
 pub use report::{
-    render_table5, render_table6, table5_rows, table5_rows_with_baseline, table6_rows, Table6Row,
-    PAPER_TABLE5,
+    render_table5, render_table6, table5_rows, table5_rows_with_baseline,
+    table5_rows_with_baseline_ctx, table6_rows, Table6Row, PAPER_TABLE5,
 };
 pub use search::{
-    compile, compile_multi, compile_with_baseline, CompileOutcome, CompileRequest, SearchRound,
+    compile, compile_multi, compile_multi_with_ctx, compile_with_baseline,
+    compile_with_baseline_ctx, compile_with_ctx, CompileOutcome, CompileRequest, SearchRound,
 };
 
 #[cfg(test)]

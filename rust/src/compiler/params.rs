@@ -13,10 +13,21 @@
 //!    `T_m^q` while the design stays feasible and the predicted latency
 //!    improves — "T_m is reduced and T_m^q is increased until the FPGA
 //!    resources are fully exploited".
+//!
+//! The sweep itself lives in [`super::engine`]: container widths are
+//! deduped by `(G^q, lcm(G, G^q))` class, the `(T_m, T_m^q, T_n^q)` grid
+//! is pruned using the monotone resource structure, classes are evaluated
+//! in parallel, and the `T_m^q` upper bound is derived from the device's
+//! resource envelope rather than the old hardcoded 512 (which silently
+//! truncated the search space on large devices — see
+//! `engine::tests::derived_bound_unlocks_big_devices`). Results are
+//! byte-identical to the retained exhaustive oracle
+//! ([`super::optimize_for_bits_exhaustive`]); repeated callers should go
+//! through a [`super::SearchCtx`] to add memoization on top.
 
 use crate::hw::Device;
 use crate::model::VitStructure;
-use crate::perf::{model_cycles, resources_for, summarize, AcceleratorParams, PerfSummary};
+use crate::perf::{AcceleratorParams, PerfSummary};
 
 /// One fully-optimized accelerator design for a specific precision.
 #[derive(Debug, Clone)]
@@ -28,18 +39,6 @@ pub struct DesignPoint {
     pub adjustments: u32,
 }
 
-fn gcd(a: u64, b: u64) -> u64 {
-    if b == 0 {
-        a
-    } else {
-        gcd(b, a % b)
-    }
-}
-
-fn lcm(a: u64, b: u64) -> u64 {
-    a / gcd(a, b) * b
-}
-
 /// Optimize the accelerator parameters for activation precision `bits`,
 /// starting from the baseline design (§5.3.2).
 ///
@@ -47,158 +46,17 @@ fn lcm(a: u64, b: u64) -> u64 {
 /// 3-bit values in 4-bit nibbles): an awkward packing factor like
 /// `⌊64/3⌋ = 21` forces `lcm(G, G^q) = 84`-aligned tiles that waste the
 /// whole fabric, while nibble-padding costs only the unused bit. We probe
-/// every container width `c ∈ bits..=16` and keep the fastest design —
-/// this also guarantees FR(b) is monotone in `b` (a `b`-bit model can
-/// always ride a `c ≥ b` container), which the §3 binary search relies on.
+/// every container width `c ∈ bits..=16` (one probe per `(G^q, lcm)`
+/// equivalence class) and keep the fastest design — this also guarantees
+/// FR(b) is monotone in `b` (a `b`-bit model can always ride a `c ≥ b`
+/// container), which the §3 binary search relies on.
 pub fn optimize_for_bits(
     structure: &VitStructure,
     baseline: &AcceleratorParams,
     device: &Device,
     bits: u8,
 ) -> anyhow::Result<DesignPoint> {
-    anyhow::ensure!(
-        structure.act_bits == Some(bits),
-        "structure quantization ({:?}) must match requested bits ({bits})",
-        structure.act_bits
-    );
-    let mut best: Option<DesignPoint> = None;
-    let mut last_err = None;
-    for container in bits..=16 {
-        match optimize_with_container(structure, baseline, device, bits, container) {
-            Ok(d) => {
-                if best
-                    .as_ref()
-                    .map(|b| d.summary.cycles_per_frame < b.summary.cycles_per_frame)
-                    .unwrap_or(true)
-                {
-                    best = Some(d);
-                }
-            }
-            Err(e) => last_err = Some(e),
-        }
-    }
-    best.ok_or_else(|| last_err.unwrap_or_else(|| anyhow::anyhow!("no container feasible")))
-}
-
-/// §5.3.2 optimization for one specific storage container width.
-fn optimize_with_container(
-    structure: &VitStructure,
-    baseline: &AcceleratorParams,
-    device: &Device,
-    bits: u8,
-    container: u8,
-) -> anyhow::Result<DesignPoint> {
-    let g = baseline.g;
-    let g_q = AcceleratorParams::g_q_for(device.axi_port_bits, container);
-    let step = lcm(g, g_q);
-
-    // Rule 2: T_m near T_m^base, divisible by G and G^q.
-    let t_m0 = ((baseline.t_m + step - 1) / step * step).max(step);
-    // Rule 3.
-    let t_n = baseline.t_n;
-    let t_n_q = (t_n * g_q / g).max(1);
-
-    let mut params = AcceleratorParams {
-        t_m: t_m0,
-        t_n,
-        t_m_q: t_m0,
-        t_n_q,
-        g,
-        g_q,
-        p_h: baseline.p_h,
-        act_bits: Some(bits),
-    };
-
-    let mut adjustments = 0u32;
-
-    // Adjustment phase A: if the initial try does not "place and route"
-    // (resource-model infeasibility), shrink the tile that owns the
-    // oversubscribed resource: LUT/FF pressure comes from the quantized
-    // array (T_m^q), DSP pressure from the unquantized array (T_m), BRAM
-    // from both (shrink the larger).
-    loop {
-        let res = resources_for(structure, &params, device);
-        if res.feasible(device) {
-            break;
-        }
-        let lut_over = res.lut as f64 > device.budget.lut as f64 * device.r_lut
-            || res.ff > device.budget.ff;
-        let dsp_over = res.dsp as f64 > device.budget.dsp as f64 * device.r_dsp;
-        // LUT pressure is only relieved by shrinking the quantized array if
-        // that array is actually a significant consumer — otherwise the
-        // pressure comes from the glue around the DSP lanes and T_m must
-        // shrink instead.
-        let q_array_luts =
-            crate::perf::lut_cost_per_mac(container) * params.lut_macs();
-        let q_array_significant = q_array_luts * 8 > res.lut;
-        // DSP pressure can only come from the unquantized array — relieve
-        // it first (it also sheds the LUT glue around the DSP lanes).
-        let shrink_q =
-            !dsp_over && ((lut_over && q_array_significant) || params.t_m_q >= params.t_m);
-        if shrink_q {
-            if params.t_m_q > step {
-                params.t_m_q -= step;
-            } else if params.t_n_q > 1 {
-                // Last resort: narrow the quantized input unroll below the
-                // §5.3.2 rule value (costs BRAM efficiency, saves LUTs).
-                params.t_n_q = (params.t_n_q / 2).max(1);
-            } else {
-                anyhow::bail!(
-                    "no feasible design for {bits}-bit activations on {} (LUT-bound)",
-                    device.name
-                );
-            }
-        } else {
-            anyhow::ensure!(
-                params.t_m > step,
-                "no feasible design for {bits}-bit activations on {}",
-                device.name
-            );
-            params.t_m -= step;
-        }
-        adjustments += 1;
-    }
-
-    // Adjustment phase B: "T_m is reduced and T_m^q is increased until the
-    // FPGA resources are fully exploited" (§5.3.2). The paper walks this by
-    // repeated Vivado runs; our resource model is cheap enough to sweep the
-    // whole (T_m, T_m^q, T_n^q) grid exhaustively and take the latency
-    // argmin — the same fixed point the paper's iteration converges to.
-    let mut best_cycles = model_cycles(structure, &params, device).0;
-    let t_m_candidates: Vec<u64> = (step..=params.t_m).step_by(step as usize).collect();
-    let init = params;
-    for &t_m in &t_m_candidates {
-        for t_m_q in (step..=512).step_by(step as usize) {
-            // T_n^q: multiples of the §5.3.2 rule value (and of G^q below
-            // it) — the input unroll must stay word-aligned.
-            let mut t_n_q_cands: Vec<u64> = (1..=8).map(|k| k * t_n_q).collect();
-            t_n_q_cands.push(g_q);
-            for t_n_q_c in t_n_q_cands {
-                let cand = AcceleratorParams {
-                    t_m,
-                    t_m_q,
-                    t_n_q: t_n_q_c,
-                    ..init
-                };
-                if !resources_for(structure, &cand, device).feasible(device) {
-                    continue;
-                }
-                let c = model_cycles(structure, &cand, device).0;
-                if c < best_cycles {
-                    params = cand;
-                    best_cycles = c;
-                    adjustments += 1;
-                }
-            }
-        }
-    }
-
-    params.validate()?;
-    Ok(DesignPoint {
-        summary: summarize(structure, &params, device),
-        params,
-        adjustments,
-    })
+    super::engine::optimize_for_bits_pruned(structure, baseline, device, bits)
 }
 
 #[cfg(test)]

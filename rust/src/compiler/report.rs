@@ -46,6 +46,25 @@ pub fn table5_rows_with_baseline(
     Ok(rows)
 }
 
+/// [`table5_rows_with_baseline`] through a [`super::SearchCtx`] — the
+/// `api::Session::table5` path, where the per-precision designs land in
+/// (and are served from) the session's search memos.
+pub fn table5_rows_with_baseline_ctx(
+    model: &VitConfig,
+    device: &Device,
+    baseline: &crate::perf::AcceleratorParams,
+    precisions: &[u8],
+    ctx: &super::SearchCtx,
+) -> anyhow::Result<Vec<PerfSummary>> {
+    let unquant = model.structure(None);
+    let mut rows = vec![crate::perf::summarize(&unquant, baseline, device)];
+    for &bits in precisions {
+        let s = model.structure(Some(bits));
+        rows.push(ctx.optimize_for_bits(&s, baseline, device, bits)?.summary);
+    }
+    Ok(rows)
+}
+
 /// Render Table 5 ("Hardware resource utilization and performance of ViT
 /// accelerators with different frame rates and precisions").
 pub fn render_table5(rows: &[PerfSummary], device: &Device) -> String {

@@ -12,8 +12,10 @@ use std::time::Instant;
 use crate::hw::Device;
 use crate::model::VitConfig;
 use crate::perf::AcceleratorParams;
+use crate::util::parallel;
 
 use super::baseline::optimize_baseline;
+use super::engine::SearchCtx;
 use super::params::{optimize_for_bits, DesignPoint};
 
 /// What the user hands to `vaqf compile`.
@@ -63,7 +65,17 @@ pub struct CompileOutcome {
 pub fn compile(req: &CompileRequest) -> anyhow::Result<CompileOutcome> {
     let t0 = Instant::now();
     let baseline = optimize_baseline(&req.model.structure(None), &req.device);
-    compile_inner(req, baseline, t0)
+    compile_inner(req, baseline, t0, None)
+}
+
+/// [`compile`] through a [`SearchCtx`]: the baseline and every probed
+/// precision are memoized, so repeated compiles for one (model, device) —
+/// and the co-search/repartition paths that share the context — re-search
+/// warm instead of cold.
+pub fn compile_with_ctx(req: &CompileRequest, ctx: &SearchCtx) -> anyhow::Result<CompileOutcome> {
+    let t0 = Instant::now();
+    let baseline = ctx.optimize_baseline(&req.model.structure(None), &req.device);
+    compile_inner(req, baseline, t0, Some(ctx))
 }
 
 /// [`compile`] with a precomputed baseline parameterization — the facade's
@@ -73,17 +85,31 @@ pub fn compile_with_baseline(
     req: &CompileRequest,
     baseline: AcceleratorParams,
 ) -> anyhow::Result<CompileOutcome> {
-    compile_inner(req, baseline, Instant::now())
+    compile_inner(req, baseline, Instant::now(), None)
+}
+
+/// [`compile_with_baseline`] through a [`SearchCtx`] (both caches: the
+/// caller's baseline short-circuit and the context's design/point memos).
+pub fn compile_with_baseline_ctx(
+    req: &CompileRequest,
+    baseline: AcceleratorParams,
+    ctx: &SearchCtx,
+) -> anyhow::Result<CompileOutcome> {
+    compile_inner(req, baseline, Instant::now(), Some(ctx))
 }
 
 fn compile_inner(
     req: &CompileRequest,
     baseline: AcceleratorParams,
     t0: Instant,
+    ctx: Option<&SearchCtx>,
 ) -> anyhow::Result<CompileOutcome> {
     let probe = |bits: u8| -> anyhow::Result<DesignPoint> {
         let s = req.model.structure(Some(bits));
-        optimize_for_bits(&s, &baseline, &req.device, bits)
+        match ctx {
+            Some(ctx) => ctx.optimize_for_bits(&s, &baseline, &req.device, bits),
+            None => optimize_for_bits(&s, &baseline, &req.device, bits),
+        }
     };
 
     let mut rounds = Vec::new();
@@ -153,18 +179,48 @@ pub fn compile_multi(
     device: &Device,
     targets: &[f64],
 ) -> anyhow::Result<Vec<(f64, Option<CompileOutcome>)>> {
+    compile_multi_inner(model, device, targets, None)
+}
+
+/// [`compile_multi`] through a [`SearchCtx`] — the per-precision sweep
+/// fans out across the context's thread budget and lands in its memos.
+pub fn compile_multi_with_ctx(
+    model: &VitConfig,
+    device: &Device,
+    targets: &[f64],
+    ctx: &SearchCtx,
+) -> anyhow::Result<Vec<(f64, Option<CompileOutcome>)>> {
+    compile_multi_inner(model, device, targets, Some(ctx))
+}
+
+fn compile_multi_inner(
+    model: &VitConfig,
+    device: &Device,
+    targets: &[f64],
+    ctx: Option<&SearchCtx>,
+) -> anyhow::Result<Vec<(f64, Option<CompileOutcome>)>> {
     let t0 = Instant::now();
     let unquant = model.structure(None);
-    let baseline = optimize_baseline(&unquant, device);
+    let baseline = match ctx {
+        Some(ctx) => ctx.optimize_baseline(&unquant, device),
+        None => optimize_baseline(&unquant, device),
+    };
 
-    // One sweep over the precision range.
-    let mut designs: Vec<(u8, DesignPoint)> = Vec::new();
-    for bits in 1..=16u8 {
+    // One sweep over the precision range, one worker per precision
+    // (collected in bits order, so the assignment below is deterministic
+    // for every thread count).
+    let threads = ctx.map(|c| c.threads()).unwrap_or_else(parallel::default_threads);
+    let sweep = parallel::map_tasks(16, threads, parallel::MIN_WORK_PER_THREAD, |i| {
+        let bits = (i + 1) as u8;
         let s = model.structure(Some(bits));
-        if let Ok(d) = optimize_for_bits(&s, &baseline, device, bits) {
-            designs.push((bits, d));
+        match ctx {
+            Some(ctx) => ctx.optimize_for_bits(&s, &baseline, device, bits),
+            None => optimize_for_bits(&s, &baseline, device, bits),
         }
-    }
+        .ok()
+        .map(|d| (bits, d))
+    });
+    let designs: Vec<(u8, DesignPoint)> = sweep.into_iter().flatten().collect();
     anyhow::ensure!(!designs.is_empty(), "no feasible design at any precision");
     let fr_max = designs
         .iter()

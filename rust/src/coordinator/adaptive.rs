@@ -230,6 +230,32 @@ impl AdaptivePrecision {
         }
     }
 
+    /// Build a ladder of simulated-FPGA rungs from a compile session: one
+    /// design per precision in `bits` (highest precision first, per the
+    /// ladder convention), each wired as a [`SimBackend`] with weights
+    /// generated from `seed`. All rungs are compiled through the
+    /// session's shared design-space-search context, so the per-precision
+    /// searches overlap with — and are served from — whatever the session
+    /// has already compiled.
+    ///
+    /// [`SimBackend`]: crate::runtime::SimBackend
+    pub fn from_session(
+        session: &crate::api::Session,
+        bits: &[u8],
+        seed: u64,
+    ) -> Result<AdaptivePrecision, VaqfError> {
+        let mut ladder: Vec<(String, Box<dyn InferenceBackend>)> = Vec::with_capacity(bits.len());
+        for &b in bits {
+            let design = session.compile_for_bits(Some(b))?;
+            let backend = crate::runtime::SimBackend {
+                executor: design.simulator_with_seed(seed),
+                realtime: false,
+            };
+            ladder.push((design.summary().label.clone(), Box::new(backend)));
+        }
+        AdaptivePrecision::new(ladder)
+    }
+
     pub fn current_label(&self) -> &str {
         &self.ladder[self.controller.current()].0
     }
@@ -292,6 +318,27 @@ mod tests {
     fn starts_at_highest_precision() {
         let ap = ladder(0.01, 0.001);
         assert_eq!(ap.current_label(), "W1A8");
+    }
+
+    #[test]
+    fn from_session_builds_sim_rungs_and_warms_the_ctx() {
+        let session = crate::api::TargetSpec::new()
+            .model(crate::model::micro())
+            .device_preset("zcu102")
+            .target_fps(100.0)
+            .session()
+            .unwrap();
+        let mut ap = AdaptivePrecision::from_session(&session, &[8, 4], 7).unwrap();
+        assert_eq!(ap.current_label(), "W1A8");
+        ap.reset_to(1);
+        assert_eq!(ap.current_label(), "W1A4");
+        // Re-compiling either rung through the same session is a pure
+        // memo hit — the ladder and the session share one SearchCtx.
+        let before = session.search_ctx().stats();
+        session.compile_for_bits(Some(4)).unwrap();
+        let after = session.search_ctx().stats();
+        assert_eq!(after.design_hits, before.design_hits + 1);
+        assert_eq!(after.point_evals, before.point_evals);
     }
 
     #[test]

@@ -66,7 +66,7 @@ impl Precision {
 
 /// Host-side operation between matmul layers (paper §5.2: scaling, softmax
 /// and GELU run on the host CPU; LayerNorm params stay 16-bit on hardware).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum HostOp {
     LayerNorm,
     Softmax,

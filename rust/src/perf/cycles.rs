@@ -244,3 +244,23 @@ pub fn model_cycles_opt(
     let total = per_layer.iter().map(|c| c.total + c.host).sum();
     (total, per_layer)
 }
+
+/// Whole-model total cycles without materializing the per-layer
+/// breakdown — the design-space search evaluates tens of thousands of
+/// grid points and only ever reads the sum, so skipping the `Vec`
+/// allocation keeps the hot loop allocation-free.
+pub fn model_cycles_total(
+    structure: &VitStructure,
+    params: &AcceleratorParams,
+    device: &Device,
+) -> Cycles {
+    let opts = ModelOptions::default();
+    structure
+        .layers
+        .iter()
+        .map(|l| {
+            let c = layer_cycles_opt(l, params, device, &opts);
+            c.total + c.host
+        })
+        .sum()
+}

@@ -18,7 +18,10 @@ mod power;
 mod resources;
 mod summary;
 
-pub use cycles::{layer_cycles, layer_cycles_opt, model_cycles, model_cycles_opt, LayerCycles, ModelOptions};
+pub use cycles::{
+    layer_cycles, layer_cycles_opt, model_cycles, model_cycles_opt, model_cycles_total,
+    LayerCycles, ModelOptions,
+};
 pub use params::AcceleratorParams;
 pub use power::{power_watts, PowerModel};
 pub use resources::{lut_cost_per_mac, resources_for, ResourceModel};

@@ -11,7 +11,7 @@ use crate::quant::pack_factor;
 /// LUT add/sub) datapath. `p_h` — the number of attention heads processed in
 /// parallel — is shared. `act_bits` records the activation precision the
 /// design was generated for (`None` = unquantized baseline accelerator).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct AcceleratorParams {
     /// Output-channel tile for unquantized data (`T_m`).
     pub t_m: u64,

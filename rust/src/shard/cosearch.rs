@@ -12,11 +12,13 @@
 //! EXPERIMENTS.md §Sharding.)
 
 use std::ops::Range;
+use std::sync::Arc;
 
-use crate::compiler::{optimize_baseline, optimize_for_bits, DesignPoint};
+use crate::compiler::{DesignPoint, SearchCtx};
 use crate::hw::{Device, ResourceBudget};
 use crate::model::{VitConfig, VitStructure};
 use crate::perf::{model_cycles, resources_for, summarize, AcceleratorParams, PerfSummary};
+use crate::util::parallel;
 use crate::Cycles;
 
 use super::partition::{max_stage_cost, partition, segments_for, Segment, ShardPolicy};
@@ -96,6 +98,11 @@ pub struct ShardedDesign {
     /// The unsharded design the partition was costed against (and the
     /// speedup baseline).
     pub reference: DesignPoint,
+    /// The search context every stage was optimized through. Carried so a
+    /// live repartition (pipeline failover after a board crash) re-runs
+    /// the per-stage searches against warm memo tables — stages whose
+    /// layer slices survive the repartition are cache hits.
+    pub(crate) ctx: Arc<SearchCtx>,
 }
 
 impl ShardedDesign {
@@ -173,6 +180,33 @@ pub fn co_search(
     n: usize,
     policy: ShardPolicy,
 ) -> anyhow::Result<ShardedDesign> {
+    co_search_with_ctx(
+        model,
+        device,
+        act_bits,
+        reference,
+        n,
+        policy,
+        Arc::new(SearchCtx::new()),
+    )
+}
+
+/// [`co_search`] through a shared [`SearchCtx`]: the per-stage baseline
+/// and precision searches land in (and are served from) the context's
+/// memo tables, and stages are searched in parallel across the context's
+/// thread budget. Stage results are collected in stage order, so the
+/// design — and the first error, when one occurs — is byte-identical to
+/// the serial search for every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn co_search_with_ctx(
+    model: &VitConfig,
+    device: &Device,
+    act_bits: Option<u8>,
+    reference: &DesignPoint,
+    n: usize,
+    policy: ShardPolicy,
+    ctx: Arc<SearchCtx>,
+) -> anyhow::Result<ShardedDesign> {
     let structure = model.structure(act_bits);
     let unquantized = model.structure(None);
 
@@ -190,8 +224,11 @@ pub fn co_search(
     let patch_bits =
         (model.num_patches() * model.in_chans * model.patch_size * model.patch_size) as u64 * 16;
 
-    let mut stages = Vec::with_capacity(n);
-    for (index, seg_range) in ranges.into_iter().enumerate() {
+    // Each stage's search touches only its own layer slice, so the
+    // stages fan out across the context's thread budget; collecting in
+    // stage order keeps the result deterministic.
+    let search_stage = |index: usize| -> anyhow::Result<ShardStage> {
+        let seg_range = ranges[index].clone();
         let layer_range =
             segments[seg_range.start].layers.start..segments[seg_range.end - 1].layers.end;
         let label = if seg_range.len() == 1 {
@@ -230,10 +267,10 @@ pub fn co_search(
             "shard {index} ({label}) cannot fit on {} even at minimal tiling",
             device.name
         );
-        let baseline = optimize_baseline(&sub_unq, &stage_device);
+        let baseline = ctx.optimize_baseline(&sub_unq, &stage_device);
         let params = match act_bits {
             None => baseline,
-            Some(bits) => optimize_for_bits(&sub, &baseline, &stage_device, bits)?.params,
+            Some(bits) => ctx.optimize_for_bits(&sub, &baseline, &stage_device, bits)?.params,
         };
         // Summarize against the undivided board inventory so every
         // stage's utilization percentages share one denominator (the
@@ -243,7 +280,7 @@ pub fn co_search(
             None => summarize(&sub_unq, &params, device),
             Some(_) => summarize(&sub, &params, device),
         };
-        stages.push(ShardStage {
+        Ok(ShardStage {
             index,
             segment_range: seg_range,
             layer_range,
@@ -252,8 +289,16 @@ pub fn co_search(
             compute_cycles: summary.cycles_per_frame,
             summary,
             fifo,
-        });
-    }
+        })
+    };
+    let stages = parallel::map_tasks(
+        ranges.len(),
+        ctx.threads(),
+        parallel::MIN_WORK_PER_THREAD,
+        search_stage,
+    )
+    .into_iter()
+    .collect::<anyhow::Result<Vec<ShardStage>>>()?;
 
     Ok(ShardedDesign {
         model: model.clone(),
@@ -263,12 +308,14 @@ pub fn co_search(
         segments,
         stages,
         reference: reference.clone(),
+        ctx,
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compiler::{optimize_baseline, optimize_for_bits};
     use crate::hw::zcu102;
     use crate::model::micro;
 

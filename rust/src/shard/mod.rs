@@ -36,7 +36,7 @@ mod partition;
 mod pipeline;
 mod report;
 
-pub use cosearch::{co_search, FifoSpec, ShardStage, ShardedDesign};
+pub use cosearch::{co_search, co_search_with_ctx, FifoSpec, ShardStage, ShardedDesign};
 pub use exec::{ShardedExecutor, ShardedTrace, StageTrace};
 pub use partition::{max_stage_cost, partition, segments_for, Segment, ShardPolicy};
 pub use pipeline::{

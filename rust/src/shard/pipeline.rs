@@ -23,7 +23,7 @@ use crate::fault::{DowntimeTracker, FaultKind, FaultPlan, PipelineFaultSummary};
 use crate::util::stats::Summary;
 use crate::Cycles;
 
-use super::cosearch::{co_search, ShardedDesign};
+use super::cosearch::{co_search_with_ctx, ShardedDesign};
 
 /// Per-stage accounting of one pipeline run.
 #[derive(Debug, Clone)]
@@ -569,13 +569,18 @@ pub fn simulate_pipeline_faulty(
                         ids.sort_unstable();
                         backlog = ids.into();
                         slot_of_stage.remove(si);
-                        cur = co_search(
+                        // Re-search through the design's own context: the
+                        // surviving layer slices are warm memo hits, so
+                        // the live repartition costs only the genuinely
+                        // new stage shapes.
+                        cur = co_search_with_ctx(
                             &cur.model,
                             &cur.device,
                             cur.act_bits,
                             &cur.reference,
                             survivors,
                             cur.policy,
+                            cur.ctx.clone(),
                         )?;
                         stages = make_stages(&cur);
                         // Reconfiguration drains and refills the whole

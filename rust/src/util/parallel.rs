@@ -139,6 +139,28 @@ where
     });
 }
 
+/// [`for_each_task`] with a produced value per index: runs
+/// `f(0..n)` across up to `threads` workers and collects the results in
+/// index order. Same work cutoff and chunking as [`for_each_task`]; `f`
+/// must be pure in its index, so the output `Vec` is bit-for-bit the
+/// serial result for every thread count — the design-space search relies
+/// on that to keep its winner byte-identical under parallel candidate
+/// evaluation.
+pub fn map_tasks<R, F>(n: usize, threads: usize, work_per_item: u64, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for_each_task(&mut slots, threads, work_per_item, |i, slot| {
+        *slot = Some(f(i));
+    });
+    slots
+        .into_iter()
+        .map(|s| s.expect("map_tasks worker filled every slot"))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,5 +221,15 @@ mod tests {
         }
         let mut empty: Vec<u64> = vec![];
         for_each_task(&mut empty, 8, u64::MAX, |_, _| panic!("no items expected"));
+    }
+
+    #[test]
+    fn map_tasks_collects_in_index_order() {
+        let want: Vec<String> = (0..11).map(|i| format!("r{i}")).collect();
+        for threads in [1, 3, 11, 64] {
+            let got = map_tasks(11, threads, u64::MAX / 64, |i| format!("r{i}"));
+            assert_eq!(got, want, "threads={threads}");
+        }
+        assert!(map_tasks(0, 8, u64::MAX, |_| 0u8).is_empty());
     }
 }

@@ -1,0 +1,247 @@
+//! Design-space-search suite: the pruned + deduplicated + parallel
+//! engine (`compiler::engine`) against the literal exhaustive oracle,
+//! and the incremental `SearchCtx` memo across structure mutations.
+//!
+//! The contract under test is *bit-identical results*: pruning only
+//! skips points that provably cannot win (resource monotonicity),
+//! container-width dedup only collapses `(G_q, lcm)` classes that cost
+//! identically, and the parallel fold selects by a total order on
+//! `(cycles, legacy index)` — so the chosen `DesignPoint` (params,
+//! summary, adjustment count) must equal the oracle's everywhere, for
+//! every thread count.
+
+use vaqf::compiler::{
+    compile, compile_with_ctx, optimize_baseline, optimize_for_bits,
+    optimize_for_bits_exhaustive, CompileRequest, SearchCtx,
+};
+use vaqf::hw::{zcu102, zcu111, Device};
+use vaqf::model::VitConfig;
+use vaqf::util::rng::SplitMix64;
+
+fn gen_tiny_vit(rng: &mut SplitMix64, trial: u64) -> VitConfig {
+    let heads = 1 + rng.next_below(4) as usize;
+    let head_dim = *[2usize, 4, 8].get(rng.next_below(3) as usize).unwrap();
+    let patch = *[4usize, 8].get(rng.next_below(2) as usize).unwrap();
+    let grid = 1 + rng.next_below(3) as usize;
+    VitConfig {
+        name: format!("search-prop-{trial}"),
+        image_size: patch * grid,
+        patch_size: patch,
+        in_chans: 3,
+        embed_dim: heads * head_dim,
+        depth: 1 + rng.next_below(2) as usize,
+        num_heads: heads,
+        mlp_ratio: 2 + 2 * rng.next_below(2) as usize,
+        num_classes: 3 + rng.next_below(8) as usize,
+    }
+}
+
+fn devices() -> Vec<Device> {
+    vec![zcu102(), zcu111()]
+}
+
+/// The tentpole property: over random tiny models × both boards × every
+/// activation precision 1..=8 × thread counts {1, 2, 8}, the pruned
+/// parallel search returns exactly what the exhaustive oracle returns —
+/// same params, same cycle count, same adjustment count — and an
+/// infeasible case errors on both sides.
+#[test]
+fn prop_pruned_search_matches_exhaustive_oracle() {
+    let mut rng = SplitMix64::new(0x5EA8C);
+    for trial in 0..8u64 {
+        let cfg = gen_tiny_vit(&mut rng, trial);
+        for dev in devices() {
+            let baseline = optimize_baseline(&cfg.structure(None), &dev);
+            for bits in 1..=8u8 {
+                let s = cfg.structure(Some(bits));
+                let oracle = optimize_for_bits_exhaustive(&s, &baseline, &dev, bits);
+                // The ctx-free pruned path…
+                let pruned = optimize_for_bits(&s, &baseline, &dev, bits);
+                // …and the ctx path at several thread counts.
+                for threads in [1usize, 2, 8] {
+                    let ctx = SearchCtx::with_threads(threads);
+                    let got = ctx.optimize_for_bits(&s, &baseline, &dev, bits);
+                    match (&oracle, &got) {
+                        (Ok(want), Ok(d)) => {
+                            assert_eq!(
+                                d.params, want.params,
+                                "trial {trial} {} b{bits} t{threads}: params diverged",
+                                dev.name
+                            );
+                            assert_eq!(
+                                d.summary.cycles_per_frame, want.summary.cycles_per_frame,
+                                "trial {trial} {} b{bits} t{threads}: cycles diverged",
+                                dev.name
+                            );
+                            assert_eq!(
+                                d.adjustments, want.adjustments,
+                                "trial {trial} {} b{bits} t{threads}: adjustments diverged",
+                                dev.name
+                            );
+                        }
+                        (Err(_), Err(_)) => {}
+                        (want, d) => panic!(
+                            "trial {trial} {} b{bits} t{threads}: feasibility disagreement \
+                             oracle {want:?} vs pruned {d:?}",
+                            dev.name
+                        ),
+                    }
+                }
+                match (&oracle, &pruned) {
+                    (Ok(want), Ok(d)) => {
+                        assert_eq!(d.params, want.params, "ctx-free pruned path diverged");
+                        assert_eq!(d.adjustments, want.adjustments);
+                    }
+                    (Err(_), Err(_)) => {}
+                    (want, d) => {
+                        panic!("ctx-free feasibility disagreement: {want:?} vs {d:?}")
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Thread count must not leak into the result even when the class list
+/// is long (bits 8 on a 64-bit port ⇒ 5 dedup classes fanned out).
+#[test]
+fn thread_count_never_changes_the_winner() {
+    let cfg = vaqf::model::deit_tiny();
+    let dev = zcu102();
+    let baseline = optimize_baseline(&cfg.structure(None), &dev);
+    let s = cfg.structure(Some(8));
+    let want = SearchCtx::with_threads(1).optimize_for_bits(&s, &baseline, &dev, 8).unwrap();
+    for threads in [2usize, 3, 4, 8, 16] {
+        let got = SearchCtx::with_threads(threads)
+            .optimize_for_bits(&s, &baseline, &dev, 8)
+            .unwrap();
+        assert_eq!(got.params, want.params, "threads {threads}");
+        assert_eq!(got.adjustments, want.adjustments, "threads {threads}");
+    }
+}
+
+/// Incremental re-search: warm results are bit-identical to cold ones,
+/// surviving an interleaved search of a *mutated* structure (different
+/// shape key ⇒ different memo rows; the original rows must be untouched
+/// and still replay without a single grid-point evaluation).
+#[test]
+fn warm_ctx_equals_cold_after_structure_mutation() {
+    let mut rng = SplitMix64::new(0xCAFE);
+    let cfg = gen_tiny_vit(&mut rng, 99);
+    let dev = zcu102();
+    let ctx = SearchCtx::new();
+    let baseline = ctx.optimize_baseline(&cfg.structure(None), &dev);
+    let s = cfg.structure(Some(6));
+    let cold = ctx.optimize_for_bits(&s, &baseline, &dev, 6).unwrap();
+
+    // Mutate the model (one more encoder block): a different shape, so
+    // its search shares nothing with the first one's design memo row.
+    let mut bigger = cfg.clone();
+    bigger.depth += 1;
+    let sb = bigger.structure(Some(6));
+    let base_b = ctx.optimize_baseline(&bigger.structure(None), &dev);
+    let other = ctx.optimize_for_bits(&sb, &base_b, &dev, 6).unwrap();
+    assert_ne!(
+        cold.summary.cycles_per_frame, other.summary.cycles_per_frame,
+        "mutated model should not cost the same"
+    );
+
+    // Re-searching the ORIGINAL structure is a pure memo replay.
+    let before = ctx.stats();
+    let warm = ctx.optimize_for_bits(&s, &baseline, &dev, 6).unwrap();
+    let after = ctx.stats();
+    assert_eq!(warm.params, cold.params);
+    assert_eq!(warm.adjustments, cold.adjustments);
+    assert_eq!(warm.summary.cycles_per_frame, cold.summary.cycles_per_frame);
+    assert_eq!(after.design_hits, before.design_hits + 1);
+    assert_eq!(
+        after.point_evals, before.point_evals,
+        "warm replay must not re-evaluate any grid point"
+    );
+
+    // And a fresh cold ctx still agrees — the memo changed nothing.
+    let fresh = SearchCtx::new().optimize_for_bits(&s, &baseline, &dev, 6).unwrap();
+    assert_eq!(fresh.params, cold.params);
+}
+
+/// The ctx-carrying compile entry point returns exactly what the
+/// ctx-free `compile` returns, and a second identical request is served
+/// from the memo.
+#[test]
+fn compile_with_ctx_matches_compile_and_memoizes() {
+    let req = CompileRequest {
+        model: vaqf::model::micro(),
+        device: zcu102(),
+        target_fps: 100.0,
+    };
+    let want = compile(&req).unwrap();
+    let ctx = SearchCtx::new();
+    let got = compile_with_ctx(&req, &ctx).unwrap();
+    assert_eq!(got.act_bits, want.act_bits);
+    assert_eq!(got.design.params, want.design.params);
+    assert_eq!(got.rounds.len(), want.rounds.len());
+
+    let before = ctx.stats();
+    let again = compile_with_ctx(&req, &ctx).unwrap();
+    assert_eq!(again.design.params, want.design.params);
+    let after = ctx.stats();
+    assert!(
+        after.design_hits > before.design_hits,
+        "second compile should hit the design memo ({before:?} → {after:?})"
+    );
+    assert_eq!(
+        after.point_evals, before.point_evals,
+        "second compile must not re-evaluate grid points"
+    );
+}
+
+/// Sharded co-search under a shared ctx is identical to the ctx-free
+/// path, and a repeated co-search over the same shards is warm.
+#[test]
+fn co_search_with_ctx_matches_and_warms() {
+    use std::sync::Arc;
+    use vaqf::shard::{co_search, co_search_with_ctx, ShardPolicy};
+    let model = vaqf::model::micro();
+    let dev = zcu102();
+    let baseline = optimize_baseline(&model.structure(None), &dev);
+    let reference = optimize_for_bits(&model.structure(Some(8)), &baseline, &dev, 8).unwrap();
+
+    let want = co_search(&model, &dev, Some(8), &reference, 2, ShardPolicy::Balanced).unwrap();
+    let ctx = Arc::new(SearchCtx::new());
+    let got = co_search_with_ctx(
+        &model,
+        &dev,
+        Some(8),
+        &reference,
+        2,
+        ShardPolicy::Balanced,
+        ctx.clone(),
+    )
+    .unwrap();
+    for (g, w) in got.stages.iter().zip(&want.stages) {
+        assert_eq!(g.layer_range, w.layer_range);
+        assert_eq!(g.params, w.params);
+        assert_eq!(g.compute_cycles, w.compute_cycles);
+    }
+
+    let before = ctx.stats();
+    let again = co_search_with_ctx(
+        &model,
+        &dev,
+        Some(8),
+        &reference,
+        2,
+        ShardPolicy::Balanced,
+        ctx.clone(),
+    )
+    .unwrap();
+    let after = ctx.stats();
+    for (g, w) in again.stages.iter().zip(&want.stages) {
+        assert_eq!(g.params, w.params);
+    }
+    assert!(
+        after.design_hits > before.design_hits,
+        "repartition over the same shards should be memo-served"
+    );
+    assert_eq!(after.point_evals, before.point_evals);
+}
