@@ -185,6 +185,31 @@ fn main() -> Result<()> {
         "x",
     );
 
+    // ---- SearchCtx counter snapshot -------------------------------------
+    // The warm per-precision ctx from the §5.3.2 section above: how much
+    // work the engine did vs skipped (memo hits, pruned planes, dedup'd
+    // container classes) for one full b8 search.
+    let stats = warm_ctx.stats();
+    println!(
+        "\nsearch counters (warm b8 ctx): {ev} evals, {ph} point hits, \
+         {dh} design hits, {pp} planes pruned, {cd} classes deduped",
+        ev = stats.point_evals,
+        ph = stats.point_hits,
+        dh = stats.design_hits,
+        pp = stats.planes_pruned,
+        cd = stats.classes_deduped,
+    );
+    report.metric("search/point_evals", stats.point_evals as f64, "count");
+    report.metric("search/point_hits", stats.point_hits as f64, "count");
+    report.metric("search/design_hits", stats.design_hits as f64, "count");
+    report.metric("search/baseline_hits", stats.baseline_hits as f64, "count");
+    report.metric("search/planes_pruned", stats.planes_pruned as f64, "count");
+    report.metric(
+        "search/classes_deduped",
+        stats.classes_deduped as f64,
+        "count",
+    );
+
     // ---- search-round accounting ----------------------------------------
     println!("\nsearch-round accounting (paper: ≤4 rounds for range 1..16):");
     for fps in [5.0, 12.0, 24.0, 30.0, 40.0] {

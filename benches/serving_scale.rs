@@ -15,7 +15,7 @@
 //! Run with: `cargo bench --bench serving_scale` (append `-- --quick`
 //! for the CI-sized subset).
 
-use vaqf::api::{Result, ServeClock, TargetSpec};
+use vaqf::api::{Result, ServeClock, TargetSpec, TraceConfig};
 use vaqf::coordinator::POLICY_NAMES;
 use vaqf::util::bench::{bench_output_path, JsonReport};
 use vaqf::util::cli::Args;
@@ -97,6 +97,54 @@ fn main() -> Result<()> {
         }
         println!();
     }
+
+    // --- tracing overhead: the obs hook must be ~free when sampled ---
+    // The same saturated scenario with and without a TraceSink attached;
+    // best-of-k host time on each side (the min is the least-noise
+    // estimate of the loop cost). CI gates the ratio at 1.02.
+    println!("--- tracing overhead ---");
+    let overhead_frames = 2400u64;
+    let reps = 7;
+    let bench_run = |traced: bool| -> Result<(f64, u64)> {
+        let mut best = f64::INFINITY;
+        let mut events = 0u64;
+        for _ in 0..reps {
+            let b = design
+                .server()
+                .streams(streams)
+                .workers(4)
+                .policy("least-loaded")
+                .offered_fps(offered_fps)
+                .frames(overhead_frames)
+                .queue_depth(4)
+                .sla_ms(80.0)
+                .analytic()
+                .clock(ServeClock::Virtual)
+                .trace_config(TraceConfig {
+                    layer_detail_every: 64,
+                    ..TraceConfig::default()
+                });
+            let t0 = std::time::Instant::now();
+            if traced {
+                let (_, trace) = b.run_traced()?;
+                events = trace.len() as u64;
+            } else {
+                b.run()?;
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        Ok((best, events))
+    };
+    let (plain_s, _) = bench_run(false)?;
+    let (traced_s, events) = bench_run(true)?;
+    let ratio = traced_s / plain_s;
+    println!(
+        "disabled {plain_s:.4}s  traced {traced_s:.4}s  ratio {ratio:.3}×  ({events} events)"
+    );
+    report.metric("tracing/disabled_host_seconds", plain_s, "s");
+    report.metric("tracing/enabled_host_seconds", traced_s, "s");
+    report.metric("tracing/overhead_ratio", ratio, "x");
+    report.metric("tracing/events", events as f64, "count");
 
     report
         .write(bench_output_path("BENCH_serving.json"))

@@ -8,12 +8,15 @@
 //! returns a [`FleetReport`]. [`Session::compile_fleet`] is the one-call
 //! shortcut (compile, then fleet-builder with defaults).
 
+use std::path::PathBuf;
+
 use crate::coordinator::VirtualClock;
 use crate::fault::FaultPlan;
 use crate::fleet::{
-    balancer_for, simulate_fleet, FleetConfig, FleetReport, FleetTopology, ServingUnit, StageSpec,
-    TraceSource, TraceSpec, UnitKind, BALANCER_NAMES, TOPOLOGY_PRESETS,
+    balancer_for, simulate_fleet_traced, FleetConfig, FleetReport, FleetTopology, ServingUnit,
+    StageSpec, TraceSource, TraceSpec, UnitKind, BALANCER_NAMES, TOPOLOGY_PRESETS,
 };
+use crate::obs::{MetricsRegistry, Trace, TraceConfig, TraceSink};
 use crate::shard::ShardPolicy;
 
 use super::error::{Result, VaqfError};
@@ -37,6 +40,9 @@ pub struct FleetBuilder {
     source_seed: u64,
     faults: Option<FaultPlan>,
     shard_policy: ShardPolicy,
+    trace_out: Option<PathBuf>,
+    metrics_out: Option<PathBuf>,
+    trace_cfg: TraceConfig,
 }
 
 impl CompiledDesign {
@@ -56,6 +62,9 @@ impl CompiledDesign {
             source_seed: 11,
             faults: None,
             shard_policy: ShardPolicy::Balanced,
+            trace_out: None,
+            metrics_out: None,
+            trace_cfg: TraceConfig::default(),
         }
     }
 }
@@ -143,8 +152,71 @@ impl FleetBuilder {
         self
     }
 
-    /// Execute the run; returns the deterministic fleet report.
-    pub fn run(self) -> Result<FleetReport> {
+    /// Write a Chrome/Perfetto `trace_event` JSON of the run to `path`:
+    /// one track per stream, per serving unit (and per pipeline stage),
+    /// replica service spans nesting into the per-layer breakdown.
+    /// (`.trace(..)` is the arrival-trace knob, hence the `_out` name.)
+    pub fn trace_out(mut self, path: impl Into<PathBuf>) -> Self {
+        self.trace_out = Some(path.into());
+        self
+    }
+
+    /// Buffering and layer-detail sampling controls for
+    /// [`FleetBuilder::trace_out`] / [`FleetBuilder::run_traced`].
+    pub fn trace_config(mut self, cfg: TraceConfig) -> Self {
+        self.trace_cfg = cfg;
+        self
+    }
+
+    /// Write a JSON metrics snapshot (counters, gauges, latency
+    /// histograms from the final report) to `path`.
+    pub fn metrics_json(mut self, path: impl Into<PathBuf>) -> Self {
+        self.metrics_out = Some(path.into());
+        self
+    }
+
+    /// Execute the run; returns the deterministic fleet report. Writes
+    /// the artifacts requested with [`FleetBuilder::trace_out`] /
+    /// [`FleetBuilder::metrics_json`].
+    pub fn run(mut self) -> Result<FleetReport> {
+        let trace_out = self.trace_out.take();
+        let metrics_out = self.metrics_out.take();
+        let (report, trace) = if trace_out.is_some() {
+            let (report, trace) = self.run_traced()?;
+            (report, Some(trace))
+        } else {
+            (self.launch(None)?, None)
+        };
+        if let (Some(path), Some(trace)) = (&trace_out, &trace) {
+            trace.save_perfetto(path).map_err(VaqfError::runtime)?;
+        }
+        if let Some(path) = &metrics_out {
+            let mut reg = MetricsRegistry::new();
+            reg.publish_fleet(&report);
+            std::fs::write(path, reg.to_json().pretty())
+                .map_err(|e| VaqfError::io(path.display().to_string(), e))?;
+        }
+        Ok(report)
+    }
+
+    /// [`FleetBuilder::run`], also returning the collected [`Trace`].
+    /// The fleet simulator is always virtual-clocked, so every
+    /// configuration traces deterministically.
+    pub fn run_traced(mut self) -> Result<(FleetReport, Trace)> {
+        // Artifact paths are run()'s concern; a direct run_traced()
+        // caller gets the Trace and writes what it wants.
+        self.trace_out = None;
+        self.metrics_out = None;
+        let mut sink =
+            TraceSink::with_config(self.design.target().device.clock_mhz, self.trace_cfg);
+        sink.set_layer_template(self.design.layer_template());
+        let report = self.launch(Some(&mut sink))?;
+        Ok((report, sink.finish()))
+    }
+
+    /// Validate the configuration and run the simulator, recording into
+    /// `sink` when given.
+    fn launch(self, sink: Option<&mut TraceSink>) -> Result<FleetReport> {
         if self.streams == 0 {
             return Err(VaqfError::config("fleet needs at least 1 stream"));
         }
@@ -228,7 +300,7 @@ impl FleetBuilder {
             sla_ms: self.sla_ms,
             source_seed: self.source_seed,
         };
-        simulate_fleet(
+        simulate_fleet_traced(
             &self.design.target().model,
             clock_mhz,
             &units,
@@ -236,6 +308,7 @@ impl FleetBuilder {
             balancer,
             &cfg,
             self.faults.as_ref(),
+            sink,
         )
         .map_err(VaqfError::runtime)
     }

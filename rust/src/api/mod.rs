@@ -63,6 +63,7 @@ pub use crate::fault::{
 pub use crate::fleet::{FleetReport, FleetTopology, TraceSpec};
 pub use crate::hw::Device;
 pub use crate::model::VitConfig;
+pub use crate::obs::{MetricsRegistry, Trace, TraceConfig};
 pub use crate::perf::{AcceleratorParams, PerfSummary};
 pub use crate::shard::{
     FailoverStrategy, PipelineReport, ShardPolicy, ShardReport, ShardStage, ShardedDesign,

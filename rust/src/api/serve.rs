@@ -8,6 +8,7 @@
 //! * [`PjrtRuntime`] — the PJRT cross-check path (thread-affine client,
 //!   single-stream loop).
 
+use std::path::PathBuf;
 use std::rc::Rc;
 
 use crate::coordinator::{
@@ -16,6 +17,7 @@ use crate::coordinator::{
     WorkerModel, POLICY_NAMES,
 };
 use crate::fault::FaultPlan;
+use crate::obs::{MetricsRegistry, Trace, TraceConfig, TraceSink};
 use crate::runtime::{InferenceBackend, InferenceEngine, Manifest, PjrtBackend};
 
 use super::error::{Result, VaqfError};
@@ -66,6 +68,9 @@ pub struct ServerBuilder<'d> {
     /// `(label, frame latency seconds)` per rung, rung 0 first.
     ladder: Option<Vec<(String, f64)>>,
     hysteresis: HysteresisConfig,
+    trace_out: Option<PathBuf>,
+    metrics_out: Option<PathBuf>,
+    trace_cfg: TraceConfig,
 }
 
 impl CompiledDesign {
@@ -88,6 +93,9 @@ impl CompiledDesign {
             faults: None,
             ladder: None,
             hysteresis: HysteresisConfig::default(),
+            trace_out: None,
+            metrics_out: None,
+            trace_cfg: TraceConfig::default(),
         }
     }
 }
@@ -200,9 +208,76 @@ impl<'d> ServerBuilder<'d> {
         self
     }
 
+    /// Write a Chrome/Perfetto `trace_event` JSON of the run to `path`:
+    /// one track per stream and per worker, frame service spans nesting
+    /// into the analytic per-layer breakdown. Deterministic feature —
+    /// [`run`](ServerBuilder::run) rejects it under the wall clock.
+    pub fn trace(mut self, path: impl Into<PathBuf>) -> Self {
+        self.trace_out = Some(path.into());
+        self
+    }
+
+    /// Buffering and layer-detail sampling controls for
+    /// [`ServerBuilder::trace`] / [`ServerBuilder::run_traced`].
+    pub fn trace_config(mut self, cfg: TraceConfig) -> Self {
+        self.trace_cfg = cfg;
+        self
+    }
+
+    /// Write a JSON metrics snapshot (counters, gauges, latency
+    /// histograms from the final report) to `path`.
+    pub fn metrics_json(mut self, path: impl Into<PathBuf>) -> Self {
+        self.metrics_out = Some(path.into());
+        self
+    }
+
     /// Execute the run; blocks until every offered frame is served or
-    /// dropped.
-    pub fn run(self) -> Result<MultiServingReport> {
+    /// dropped. Writes the artifacts requested with
+    /// [`ServerBuilder::trace`] / [`ServerBuilder::metrics_json`].
+    pub fn run(mut self) -> Result<MultiServingReport> {
+        let trace_out = self.trace_out.take();
+        let metrics_out = self.metrics_out.take();
+        let (report, trace) = if trace_out.is_some() {
+            let (report, trace) = self.run_traced()?;
+            (report, Some(trace))
+        } else {
+            (self.launch(None)?, None)
+        };
+        if let (Some(path), Some(trace)) = (&trace_out, &trace) {
+            trace.save_perfetto(path).map_err(VaqfError::runtime)?;
+        }
+        if let Some(path) = &metrics_out {
+            let mut reg = MetricsRegistry::new();
+            reg.publish_serving(&report);
+            std::fs::write(path, reg.to_json().pretty())
+                .map_err(|e| VaqfError::io(path.display().to_string(), e))?;
+        }
+        Ok(report)
+    }
+
+    /// [`ServerBuilder::run`], also returning the collected [`Trace`]
+    /// for in-process inspection or export. Virtual clock only: the
+    /// trace is stamped in device cycles and must be byte-reproducible.
+    pub fn run_traced(mut self) -> Result<(MultiServingReport, Trace)> {
+        if self.clock != ServeClock::Virtual {
+            return Err(VaqfError::config(
+                "tracing is a deterministic feature: use .virtual_clock()",
+            ));
+        }
+        // Artifact paths are run()'s concern; a direct run_traced()
+        // caller gets the Trace and writes what it wants.
+        self.trace_out = None;
+        self.metrics_out = None;
+        let mut sink =
+            TraceSink::with_config(self.design.target().device.clock_mhz, self.trace_cfg);
+        sink.set_layer_template(self.design.layer_template());
+        let report = self.launch(Some(&mut sink))?;
+        Ok((report, sink.finish()))
+    }
+
+    /// Validate the configuration and run the scheduler, recording into
+    /// `trace` when given (virtual clock only — callers enforce it).
+    fn launch(self, trace: Option<&mut TraceSink>) -> Result<MultiServingReport> {
         if self.streams == 0 || self.workers == 0 {
             return Err(VaqfError::config(
                 "serving needs at least 1 stream and 1 worker",
@@ -296,7 +371,7 @@ impl<'d> ServerBuilder<'d> {
         }
         match self.clock {
             ServeClock::Virtual => scheduler
-                .run_virtual(self.design.target().device.clock_mhz)
+                .run_virtual_traced(self.design.target().device.clock_mhz, trace)
                 .map_err(VaqfError::runtime),
             ServeClock::Wall => scheduler.run_wall().map_err(VaqfError::runtime),
         }

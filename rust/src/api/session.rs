@@ -62,6 +62,14 @@ impl Session {
         &self.ctx
     }
 
+    /// A snapshot of the session's cumulative design-space-search
+    /// counters: point evaluations vs memo hits, pruned parallelism
+    /// planes, deduplicated layer classes. Grows monotonically across
+    /// every compile/sweep/shard call on this session.
+    pub fn search_stats(&self) -> crate::compiler::SearchStats {
+        self.ctx.stats()
+    }
+
     fn baseline_params(&self) -> AcceleratorParams {
         *self.baseline.get_or_init(|| {
             self.ctx
@@ -394,6 +402,29 @@ impl CompiledDesign {
     /// what analytic serving workers charge per frame.
     pub fn frame_latency_s(&self) -> f64 {
         1.0 / self.design.summary.fps
+    }
+
+    /// The analytic per-layer cycle breakdown `(layer name, cycles)` of
+    /// one frame through this design, in execution order — the template
+    /// trace sinks nest service spans into
+    /// ([`TraceSink::set_layer_template`](crate::obs::TraceSink::set_layer_template)).
+    pub fn layer_template(&self) -> Vec<(String, u64)> {
+        let structure = self.target.model.structure(self.act_bits);
+        let (_, per_layer) =
+            crate::perf::model_cycles(&structure, &self.design.params, &self.target.device);
+        structure
+            .layers
+            .iter()
+            .zip(per_layer)
+            .map(|(l, c)| (l.name.clone(), c.total + c.host))
+            .collect()
+    }
+
+    /// Cumulative design-space-search statistics of the session context
+    /// this design came from (memo hits, evaluations, pruned planes,
+    /// dedup classes) — see [`Session::search_stats`].
+    pub fn search_stats(&self) -> crate::compiler::SearchStats {
+        self.ctx.stats()
     }
 
     /// Partition this design's model across `n` pipeline stages

@@ -232,6 +232,27 @@ pub struct SearchStats {
     pub design_hits: u64,
     /// Whole baseline searches served from the memo.
     pub baseline_hits: u64,
+    /// `T_m` planes skipped because their minimal point could not place
+    /// (each plane is `|T_n^q cands| × |T_m^q range|` points never
+    /// visited).
+    pub planes_pruned: u64,
+    /// Container widths folded into an already-probed `(G^q, step)`
+    /// equivalence class instead of searched again.
+    pub classes_deduped: u64,
+}
+
+impl SearchStats {
+    /// Machine-readable snapshot — the shape `vaqf compile --json`, the
+    /// search bench and [`crate::obs::MetricsRegistry`] all quote.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .set("point_evals", self.point_evals)
+            .set("point_hits", self.point_hits)
+            .set("design_hits", self.design_hits)
+            .set("baseline_hits", self.baseline_hits)
+            .set("planes_pruned", self.planes_pruned)
+            .set("classes_deduped", self.classes_deduped)
+    }
 }
 
 /// The incremental re-search context: memo tables + thread budget shared
@@ -246,6 +267,8 @@ pub struct SearchCtx {
     point_hits: AtomicU64,
     design_hits: AtomicU64,
     baseline_hits: AtomicU64,
+    planes_pruned: AtomicU64,
+    classes_deduped: AtomicU64,
 }
 
 impl std::fmt::Debug for SearchCtx {
@@ -283,6 +306,8 @@ impl SearchCtx {
             point_hits: AtomicU64::new(0),
             design_hits: AtomicU64::new(0),
             baseline_hits: AtomicU64::new(0),
+            planes_pruned: AtomicU64::new(0),
+            classes_deduped: AtomicU64::new(0),
         }
     }
 
@@ -296,6 +321,8 @@ impl SearchCtx {
             point_hits: self.point_hits.load(Ordering::Relaxed),
             design_hits: self.design_hits.load(Ordering::Relaxed),
             baseline_hits: self.baseline_hits.load(Ordering::Relaxed),
+            planes_pruned: self.planes_pruned.load(Ordering::Relaxed),
+            classes_deduped: self.classes_deduped.load(Ordering::Relaxed),
         }
     }
 
@@ -454,6 +481,11 @@ fn search_classes(
             // classes are consecutive runs.
             classes.push((g_q, step));
         }
+    }
+    if let Some((ctx, _, _)) = ctx {
+        let scanned = (17 - bits as usize) as u64;
+        ctx.classes_deduped
+            .fetch_add(scanned - classes.len() as u64, Ordering::Relaxed);
     }
 
     // Evaluate every class, fanning out across the thread budget.
@@ -656,6 +688,11 @@ fn optimize_class(
             ..init
         };
         if !point_eval(ctx, structure, device, &plane_min).feasible {
+            // Every remaining plane is infeasible too (monotone in T_m).
+            if let Some((ctx, _, _)) = ctx {
+                ctx.planes_pruned
+                    .fetch_add((t_m_range.len() - tm_i) as u64, Ordering::Relaxed);
+            }
             break 'planes;
         }
         for (ci, &t_n_q_c) in cands.iter().enumerate() {

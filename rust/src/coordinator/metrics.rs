@@ -4,6 +4,7 @@
 
 use std::time::Instant;
 
+use crate::obs::{latency_pair, rate};
 use crate::util::json::Json;
 use crate::util::stats::{LatencyHistogram, Summary};
 
@@ -56,10 +57,13 @@ impl ServingReport {
         ServingReport {
             backend,
             offered_fps,
-            achieved_fps: metrics.completed as f64 / wall,
+            // Rate fields stay finite on empty traces: zero offered
+            // frames (or a zero-length wall interval) is a well-formed
+            // zero report, not NaN.
+            achieved_fps: rate(metrics.completed as f64, wall),
             completed: metrics.completed,
             dropped: metrics.dropped,
-            drop_rate: metrics.dropped as f64 / metrics.offered.max(1) as f64,
+            drop_rate: rate(metrics.dropped as f64, metrics.offered as f64),
             e2e_latency: Summary::from(&metrics.e2e),
             device_latency: Summary::from(&metrics.device),
             wall_seconds: wall,
@@ -67,27 +71,14 @@ impl ServingReport {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let j = Json::obj()
             .set("backend", self.backend.as_str())
             .set("offered_fps", self.offered_fps)
             .set("achieved_fps", self.achieved_fps)
             .set("completed", self.completed)
             .set("dropped", self.dropped)
-            .set("drop_rate", self.drop_rate)
-            .set(
-                "e2e_latency_ms",
-                Json::obj()
-                    .set("p50", self.e2e_latency.p50 * 1e3)
-                    .set("p95", self.e2e_latency.p95 * 1e3)
-                    .set("p99", self.e2e_latency.p99 * 1e3)
-                    .set("mean", self.e2e_latency.mean * 1e3),
-            )
-            .set(
-                "device_latency_ms",
-                Json::obj()
-                    .set("p50", self.device_latency.p50 * 1e3)
-                    .set("mean", self.device_latency.mean * 1e3),
-            )
+            .set("drop_rate", self.drop_rate);
+        latency_pair(j, &self.e2e_latency, &self.device_latency)
             .set("wall_seconds", self.wall_seconds)
     }
 
@@ -176,7 +167,7 @@ impl StreamReport {
             completed: stats.completed(),
             dropped: stats.dropped,
             failed: stats.failed,
-            drop_rate: stats.dropped as f64 / stats.offered.max(1) as f64,
+            drop_rate: rate(stats.dropped as f64, stats.offered as f64),
             sla_violations: stats.sla_violations,
             e2e_latency: Summary::from(&stats.e2e),
             device_latency: Summary::from(&stats.device),
@@ -192,9 +183,8 @@ impl StreamReport {
             .set("dropped", self.dropped)
             .set("failed", self.failed)
             .set("drop_rate", self.drop_rate)
-            .set("sla_violations", self.sla_violations)
-            .set("e2e_latency_ms", self.e2e_latency.to_ms_json())
-            .set("device_latency_ms", self.device_latency.to_ms_json());
+            .set("sla_violations", self.sla_violations);
+        j = latency_pair(j, &self.e2e_latency, &self.device_latency);
         if let Some(sla) = self.sla_ms {
             j = j.set("sla_ms", sla);
         }
@@ -242,16 +232,15 @@ pub struct AggregateReport {
 
 impl AggregateReport {
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let j = Json::obj()
             .set("offered", self.offered)
             .set("completed", self.completed)
             .set("dropped", self.dropped)
             .set("failed", self.failed)
             .set("drop_rate", self.drop_rate)
             .set("sla_violations", self.sla_violations)
-            .set("achieved_fps", self.achieved_fps)
-            .set("e2e_latency_ms", self.e2e_latency.to_ms_json())
-            .set("device_latency_ms", self.device_latency.to_ms_json())
+            .set("achieved_fps", self.achieved_fps);
+        latency_pair(j, &self.e2e_latency, &self.device_latency)
     }
 }
 

@@ -32,6 +32,7 @@ use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
 use crate::fault::{DowntimeTracker, FaultKind, FaultPlan, FaultSummary, Health, RecoveryConfig};
+use crate::obs::{TraceSink, TrackId, TrackKind};
 use crate::sim::ModelExecutor;
 use crate::util::stats::Summary;
 use crate::Cycles;
@@ -397,6 +398,22 @@ impl Scheduler {
     /// virtual clock, so an injected run is exactly as byte-reproducible
     /// as a fault-free one.
     pub fn run_virtual(self, clock_mhz: u64) -> anyhow::Result<MultiServingReport> {
+        self.run_virtual_traced(clock_mhz, None)
+    }
+
+    /// [`Scheduler::run_virtual`] with an optional [`TraceSink`]: every
+    /// simulation event additionally records a typed trace event (frame
+    /// emit/drop/dispatch/service/complete, fault inject/redispatch,
+    /// retry/timeout/fail) stamped at the cycle the loop processed it.
+    /// `None` is the plain run — one untaken branch per event, nothing
+    /// allocated. Because the loop is single-threaded over a
+    /// `(cycle, seq)`-ordered heap, the recorded trace is byte-identical
+    /// across runs and host thread counts.
+    pub fn run_virtual_traced(
+        self,
+        clock_mhz: u64,
+        mut trace: Option<&mut TraceSink>,
+    ) -> anyhow::Result<MultiServingReport> {
         let Scheduler {
             streams,
             sources,
@@ -429,6 +446,21 @@ impl Scheduler {
         let mut busy: Vec<bool> = vec![false; n_workers];
         let mut busy_s: Vec<f64> = vec![0.0; n_workers];
         let mut served: Vec<u64> = vec![0; n_workers];
+
+        // Tracks are registered once up front so recording inside the
+        // loop is an index, never a name lookup.
+        let (stream_tracks, worker_tracks, ctrl) = match trace.as_deref_mut() {
+            Some(sink) => (
+                (0..streams.len())
+                    .map(|s| sink.track(TrackKind::Stream, &format!("stream{s}")))
+                    .collect::<Vec<_>>(),
+                (0..n_workers)
+                    .map(|w| sink.track(TrackKind::Worker, &format!("worker{w}")))
+                    .collect::<Vec<_>>(),
+                sink.track(TrackKind::Control, "faults"),
+            ),
+            None => (Vec::new(), Vec::new(), TrackId(0)),
+        };
 
         // Fault-recovery state. All of it stays at its initial value on a
         // plan-free run, so the fault-free event sequence is untouched.
@@ -477,7 +509,27 @@ impl Scheduler {
                     };
                     frame.stream = stream;
                     frame.emitted_at = clock.now();
-                    queues[stream].push(frame);
+                    let id = frame.id;
+                    let outcome = queues[stream].push(frame);
+                    if let Some(sink) = trace.as_deref_mut() {
+                        sink.instant(
+                            stream_tracks[stream],
+                            "emit",
+                            clock.cycles(),
+                            vec![("frame", id.into())],
+                        );
+                        if outcome.dropped_oldest() {
+                            // Drop-oldest evicts the head, not the
+                            // arrival; the instant carries the arriving
+                            // frame that forced it.
+                            sink.instant(
+                                stream_tracks[stream],
+                                "drop",
+                                clock.cycles(),
+                                vec![("forced_by", id.into())],
+                            );
+                        }
+                    }
                     if idx + 1 < streams[stream].frames {
                         heap.push(Event {
                             cycle: clock.seconds_to_cycles(sources[stream].due_at(idx + 1)),
@@ -494,6 +546,16 @@ impl Scheduler {
                     let fev = &fault_events[index];
                     let w = fev.unit;
                     if w < n_workers {
+                        if let Some(sink) = trace.as_deref_mut() {
+                            let name = match fev.kind {
+                                FaultKind::Crash => "fault_crash",
+                                FaultKind::Recover => "fault_recover",
+                                FaultKind::SlowDown { .. } => "fault_slowdown",
+                                FaultKind::SlowEnd => "fault_slow_end",
+                                FaultKind::Corrupt => "fault_corrupt",
+                            };
+                            sink.instant(ctrl, name, clock.cycles(), vec![("worker", w.into())]);
+                        }
                         match fev.kind {
                             FaultKind::Crash => {
                                 if health[w] != Health::Down {
@@ -505,11 +567,26 @@ impl Scheduler {
                                     // for this dispatch become stale (the
                                     // dispatch id no longer matches).
                                     if let Some(fl) = inflight[w].take() {
+                                        if let Some(sink) = trace.as_deref_mut() {
+                                            // The crash truncates the
+                                            // in-flight service span.
+                                            sink.span(
+                                                worker_tracks[w],
+                                                "aborted",
+                                                fl.started,
+                                                clock.cycles() - fl.started,
+                                                vec![
+                                                    ("frame", fl.frame.id.into()),
+                                                    ("stream", fl.frame.stream.into()),
+                                                ],
+                                            );
+                                        }
                                         if !fl.abandoned {
                                             summary.redispatches += 1;
                                             schedule_retry(
                                                 fl.frame, &recovery, &clock, &mut heap,
                                                 &mut seq, &mut stats, &mut summary,
+                                                trace.as_deref_mut().map(|s| (s, ctrl)),
                                             );
                                         }
                                     }
@@ -561,11 +638,33 @@ impl Scheduler {
                         busy[worker] = false;
                         served[worker] += 1;
                         busy_s[worker] += device_s;
+                        if let Some(sink) = trace.as_deref_mut() {
+                            sink.service_span(
+                                worker_tracks[worker],
+                                "service",
+                                fl.started,
+                                clock.cycles() - fl.started,
+                                vec![
+                                    ("frame", fl.frame.id.into()),
+                                    ("stream", fl.frame.stream.into()),
+                                    ("rung", fl.rung.into()),
+                                ],
+                            );
+                        }
                         if fl.corrupted {
                             summary.corrupted_frames += 1;
+                            if let Some(sink) = trace.as_deref_mut() {
+                                sink.instant(
+                                    ctrl,
+                                    "corrupt_detected",
+                                    clock.cycles(),
+                                    vec![("frame", fl.frame.id.into()), ("worker", worker.into())],
+                                );
+                            }
                             schedule_retry(
                                 fl.frame, &recovery, &clock, &mut heap, &mut seq,
                                 &mut stats, &mut summary,
+                                trace.as_deref_mut().map(|s| (s, ctrl)),
                             );
                         } else if !fl.abandoned {
                             let e2e = clock.now() - fl.frame.emitted_at;
@@ -575,6 +674,17 @@ impl Scheduler {
                                 device_s,
                                 Self::is_violation(&streams[stream], e2e),
                             );
+                            if let Some(sink) = trace.as_deref_mut() {
+                                sink.instant(
+                                    stream_tracks[stream],
+                                    "complete",
+                                    clock.cycles(),
+                                    vec![
+                                        ("frame", fl.frame.id.into()),
+                                        ("e2e_ms", (e2e * 1e3).into()),
+                                    ],
+                                );
+                            }
                             if fl.rung > 0 {
                                 summary.degraded_frames += 1;
                             }
@@ -600,13 +710,30 @@ impl Scheduler {
                     };
                     if let Some(frame) = frame {
                         summary.timeouts += 1;
+                        if let Some(sink) = trace.as_deref_mut() {
+                            sink.instant(
+                                ctrl,
+                                "timeout",
+                                clock.cycles(),
+                                vec![("frame", frame.id.into()), ("worker", worker.into())],
+                            );
+                        }
                         schedule_retry(
                             frame, &recovery, &clock, &mut heap, &mut seq, &mut stats,
                             &mut summary,
+                            trace.as_deref_mut().map(|s| (s, ctrl)),
                         );
                     }
                 }
                 EventKind::Retry { frame } => {
+                    if let Some(sink) = trace.as_deref_mut() {
+                        sink.instant(
+                            ctrl,
+                            "retry",
+                            clock.cycles(),
+                            vec![("frame", frame.id.into()), ("stream", frame.stream.into())],
+                        );
+                    }
                     // Backoff elapsed: the frame re-enters contention ahead
                     // of the stream queues (it is the oldest work).
                     retry_pool.push_back(frame);
@@ -667,12 +794,26 @@ impl Scheduler {
                 busy[w] = true;
                 dispatch_counter += 1;
                 let corrupted = std::mem::take(&mut corrupt_next[w]);
+                if let Some(sink) = trace.as_deref_mut() {
+                    let emit_cycle = clock.seconds_to_cycles(frame.emitted_at);
+                    sink.instant(
+                        worker_tracks[w],
+                        "dispatch",
+                        clock.cycles(),
+                        vec![
+                            ("frame", frame.id.into()),
+                            ("stream", frame.stream.into()),
+                            ("wait_cycles", clock.cycles().saturating_sub(emit_cycle).into()),
+                        ],
+                    );
+                }
                 inflight[w] = Some(InFlight {
                     frame,
                     dispatch: dispatch_counter,
                     corrupted,
                     abandoned: false,
                     rung,
+                    started: clock.cycles(),
                 });
                 heap.push(Event {
                     cycle: clock.cycles() + service_cycles,
@@ -705,10 +846,26 @@ impl Scheduler {
         // recovery left in the schedule, frames strand in the queues and
         // the retry pool — they are `failed`, never silently lost.
         while let Some(f) = retry_pool.pop_front() {
+            if let Some(sink) = trace.as_deref_mut() {
+                sink.instant(
+                    ctrl,
+                    "fail",
+                    clock.cycles(),
+                    vec![("frame", f.id.into()), ("stream", f.stream.into())],
+                );
+            }
             stats[f.stream].failed += 1;
         }
         for q in &queues {
             while let Some(f) = q.try_pop() {
+                if let Some(sink) = trace.as_deref_mut() {
+                    sink.instant(
+                        ctrl,
+                        "fail",
+                        clock.cycles(),
+                        vec![("frame", f.id.into()), ("stream", f.stream.into())],
+                    );
+                }
                 stats[f.stream].failed += 1;
             }
         }
@@ -968,10 +1125,14 @@ struct InFlight {
     abandoned: bool,
     /// Degrade-ladder rung the frame was served at (0 = full precision).
     rung: usize,
+    /// Cycle the dispatch started — the service-span anchor when
+    /// tracing; unused (always stamped) otherwise.
+    started: Cycles,
 }
 
 /// Re-dispatch `frame` after exponential backoff, or account it as
 /// failed once the retry budget is spent. Never silently drops a frame.
+#[allow(clippy::too_many_arguments)]
 fn schedule_retry(
     mut frame: Frame,
     recovery: &RecoveryConfig,
@@ -980,9 +1141,18 @@ fn schedule_retry(
     seq: &mut u64,
     stats: &mut [StreamStats],
     summary: &mut FaultSummary,
+    trace: Option<(&mut TraceSink, TrackId)>,
 ) {
     frame.attempts += 1;
     if frame.attempts > recovery.max_retries {
+        if let Some((sink, ctrl)) = trace {
+            sink.instant(
+                ctrl,
+                "fail",
+                clock.cycles(),
+                vec![("frame", frame.id.into()), ("stream", frame.stream.into())],
+            );
+        }
         stats[frame.stream].failed += 1;
         return;
     }

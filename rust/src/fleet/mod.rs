@@ -31,6 +31,6 @@ pub use balancer::{
     SlaWeighted, UnitSnapshot, BALANCER_NAMES,
 };
 pub use report::{FleetFaultSummary, FleetReport, UnitReport};
-pub use sim::{simulate_fleet, FleetConfig, ServingUnit, StageSpec};
+pub use sim::{simulate_fleet, simulate_fleet_traced, FleetConfig, ServingUnit, StageSpec};
 pub use topology::{FleetTopology, UnitKind, TOPOLOGY_PRESETS};
 pub use trace::{TraceKind, TraceSource, TraceSpec};

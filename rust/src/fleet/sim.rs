@@ -26,6 +26,7 @@ use crate::coordinator::{
 };
 use crate::fault::{DowntimeTracker, FaultKind, FaultPlan, Health};
 use crate::model::VitConfig;
+use crate::obs::{TraceSink, TrackId, TrackKind};
 use crate::util::stats::Summary;
 use crate::Cycles;
 
@@ -112,6 +113,8 @@ struct InService {
     /// Dispatch id — a crash invalidates it, turning the pending
     /// `StageDone` into a deterministic no-op (scheduler idiom).
     dispatch: u64,
+    /// Cycle service began — the span anchor when tracing.
+    started: Cycles,
 }
 
 #[derive(Debug)]
@@ -120,8 +123,9 @@ struct Stage {
     capacity: usize,
     queue: VecDeque<Frame>,
     in_service: Option<InService>,
-    /// Finished this stage but waiting for room in the next FIFO.
-    blocked: Option<Frame>,
+    /// Finished this stage but waiting for room in the next FIFO, with
+    /// the cycle the stall began.
+    blocked: Option<(Frame, Cycles)>,
     busy_cycles: Cycles,
 }
 
@@ -216,10 +220,22 @@ fn scaled_cycles(service: Cycles, slow: f64) -> Cycles {
     ((service as f64) * slow).ceil().max(1.0) as Cycles
 }
 
+/// Registered tracks of a traced fleet run, bundled so the settle/route
+/// helpers take one `Option<&mut FleetTracer>`.
+struct FleetTracer<'a> {
+    sink: &'a mut TraceSink,
+    streams: Vec<TrackId>,
+    /// `units[u][s]`: the track of unit `u`, stage `s` (a single-stage
+    /// replica gets a Unit-kind track, pipeline stages Stage-kind).
+    units: Vec<Vec<TrackId>>,
+    ctrl: TrackId,
+}
+
 /// Let frames flow inside one unit until nothing moves: downstream-first
 /// unblock, then start service on idle stages — the
 /// `shard::simulate_pipeline` settle loop, driven by heap events instead
 /// of a closed-loop source.
+#[allow(clippy::too_many_arguments)]
 fn settle_unit(
     unit_idx: usize,
     unit: &mut Unit,
@@ -227,18 +243,30 @@ fn settle_unit(
     heap: &mut BinaryHeap<Event>,
     seq: &mut u64,
     dispatch_counter: &mut u64,
+    mut tracer: Option<&mut FleetTracer>,
 ) {
     let n = unit.stages.len();
     loop {
         let mut progressed = false;
         for i in (0..n).rev() {
             if i + 1 < n {
-                if let Some(frame) = unit.stages[i].blocked.take() {
+                if let Some((frame, since)) = unit.stages[i].blocked.take() {
                     if unit.stages[i + 1].queue.len() < unit.stages[i + 1].capacity {
+                        if let Some(tr) = tracer.as_deref_mut() {
+                            if now > since {
+                                tr.sink.span(
+                                    tr.units[unit_idx][i],
+                                    "backpressure",
+                                    since,
+                                    now - since,
+                                    vec![("frame", frame.id.into())],
+                                );
+                            }
+                        }
                         unit.stages[i + 1].queue.push_back(frame);
                         progressed = true;
                     } else {
-                        unit.stages[i].blocked = Some(frame);
+                        unit.stages[i].blocked = Some((frame, since));
                     }
                 }
             }
@@ -253,6 +281,7 @@ fn settle_unit(
                     unit.stages[i].in_service = Some(InService {
                         frame,
                         dispatch: *dispatch_counter,
+                        started: now,
                     });
                     heap.push(Event {
                         cycle: now + dur,
@@ -303,30 +332,69 @@ fn route(
     heap: &mut BinaryHeap<Event>,
     seq: &mut u64,
     dispatch_counter: &mut u64,
+    mut tracer: Option<&mut FleetTracer>,
 ) {
     let healthy = snapshots(units, clock);
     if healthy.is_empty() {
         // Nobody to serve: fresh arrivals are shed at admission, retried
         // frames exhaust their recovery (conservation either way).
         if is_retry {
+            if let Some(tr) = tracer.as_deref_mut() {
+                tr.sink.instant(
+                    tr.ctrl,
+                    "fail",
+                    clock.cycles(),
+                    vec![("frame", frame.id.into()), ("stream", frame.stream.into())],
+                );
+            }
             stats[frame.stream].failed += 1;
         } else {
+            if let Some(tr) = tracer.as_deref_mut() {
+                tr.sink.instant(
+                    tr.streams[frame.stream],
+                    "drop",
+                    clock.cycles(),
+                    vec![("frame", frame.id.into())],
+                );
+            }
             stats[frame.stream].dropped += 1;
         }
         return;
     }
     let u = healthy[balancer.pick_unit(&healthy)].unit;
+    let admitted = is_retry || units[u].has_room();
+    if let Some(tr) = tracer.as_deref_mut() {
+        if admitted {
+            tr.sink.instant(
+                tr.units[u][0],
+                "dispatch",
+                clock.cycles(),
+                vec![
+                    ("frame", frame.id.into()),
+                    ("stream", frame.stream.into()),
+                    ("retry", u64::from(is_retry).into()),
+                ],
+            );
+        } else {
+            tr.sink.instant(
+                tr.streams[frame.stream],
+                "drop",
+                clock.cycles(),
+                vec![("frame", frame.id.into())],
+            );
+        }
+    }
     if is_retry {
         // Oldest work jumps the admission gate, mirroring the
         // scheduler's retry pool jumping the stream queues.
         units[u].stages[0].queue.push_front(frame);
-    } else if units[u].has_room() {
+    } else if admitted {
         units[u].stages[0].queue.push_back(frame);
     } else {
         stats[frame.stream].dropped += 1;
         return;
     }
-    settle_unit(u, &mut units[u], clock.cycles(), heap, seq, dispatch_counter);
+    settle_unit(u, &mut units[u], clock.cycles(), heap, seq, dispatch_counter, tracer);
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -338,9 +406,18 @@ fn schedule_retry(
     seq: &mut u64,
     stats: &mut [StreamStats],
     summary: &mut FleetFaultSummary,
+    tracer: Option<&mut FleetTracer>,
 ) {
     frame.attempts += 1;
     if frame.attempts > recovery.max_retries {
+        if let Some(tr) = tracer {
+            tr.sink.instant(
+                tr.ctrl,
+                "fail",
+                clock.cycles(),
+                vec![("frame", frame.id.into()), ("stream", frame.stream.into())],
+            );
+        }
         stats[frame.stream].failed += 1;
         return;
     }
@@ -368,9 +445,29 @@ pub fn simulate_fleet(
     clock_mhz: u64,
     units_spec: &[ServingUnit],
     trace: &TraceSource,
+    balancer: Box<dyn BalancerPolicy>,
+    cfg: &FleetConfig,
+    faults: Option<&FaultPlan>,
+) -> anyhow::Result<FleetReport> {
+    simulate_fleet_traced(model, clock_mhz, units_spec, trace, balancer, cfg, faults, None)
+}
+
+/// [`simulate_fleet`] with an optional [`TraceSink`]: every event the
+/// loop processes additionally records a typed trace event (emit/drop at
+/// the streams, dispatch + per-stage service and backpressure spans at
+/// the units, fault/hot-swap/redispatch/retry/fail on the control
+/// track). The loop is single-threaded over a `(cycle, seq)` heap, so
+/// the trace is byte-identical across runs and host thread counts.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_fleet_traced(
+    model: &VitConfig,
+    clock_mhz: u64,
+    units_spec: &[ServingUnit],
+    trace: &TraceSource,
     mut balancer: Box<dyn BalancerPolicy>,
     cfg: &FleetConfig,
     faults: Option<&FaultPlan>,
+    mut sink: Option<&mut TraceSink>,
 ) -> anyhow::Result<FleetReport> {
     anyhow::ensure!(!units_spec.is_empty(), "fleet needs at least one serving unit");
     for u in units_spec {
@@ -409,6 +506,33 @@ pub fn simulate_fleet(
         })
         .collect();
     let n_units = units.len();
+
+    // All tracks up front, so in-loop recording is an index lookup.
+    let mut tracer: Option<FleetTracer> = sink.as_deref_mut().map(|sink| {
+        let streams = (0..n_streams)
+            .map(|s| sink.track(TrackKind::Stream, &format!("stream{s}")))
+            .collect();
+        let unit_tracks = units
+            .iter()
+            .enumerate()
+            .map(|(i, u)| {
+                if u.stages.len() == 1 {
+                    vec![sink.track(TrackKind::Unit, &format!("unit{i}"))]
+                } else {
+                    (0..u.stages.len())
+                        .map(|j| sink.track(TrackKind::Stage, &format!("unit{i}/stage{j}")))
+                        .collect()
+                }
+            })
+            .collect();
+        let ctrl = sink.track(TrackKind::Control, "faults");
+        FleetTracer {
+            sink,
+            streams,
+            units: unit_tracks,
+            ctrl,
+        }
+    });
 
     // Frame payloads replay through the existing FrameSource machinery:
     // arrival `idx` maps to stream `idx % n_streams`, frame ids count up
@@ -456,6 +580,14 @@ pub fn simulate_fleet(
                 let mut frame = sources[stream].make_stub(id);
                 frame.emitted_at = clock.now();
                 stats[stream].offered += 1;
+                if let Some(tr) = tracer.as_mut() {
+                    tr.sink.instant(
+                        tr.streams[stream],
+                        "emit",
+                        clock.cycles(),
+                        vec![("frame", id.into())],
+                    );
+                }
                 if (idx as usize) + 1 < trace.len() {
                     heap.push(Event {
                         cycle: clock.seconds_to_cycles(trace.arrivals()[idx as usize + 1]),
@@ -466,7 +598,7 @@ pub fn simulate_fleet(
                 }
                 route(
                     frame, false, &mut units, balancer.as_mut(), &mut stats, &clock,
-                    &mut heap, &mut seq, &mut dispatch_counter,
+                    &mut heap, &mut seq, &mut dispatch_counter, tracer.as_mut(),
                 );
             }
             EventKind::StageDone { unit, stage, dispatch } => {
@@ -484,12 +616,36 @@ pub fn simulate_fleet(
                         .expect("matched in-service frame");
                     let frame = done.frame;
                     let last = stage + 1 == units[unit].stages.len();
+                    if let Some(tr) = tracer.as_mut() {
+                        let args = vec![
+                            ("frame", frame.id.into()),
+                            ("stream", frame.stream.into()),
+                        ];
+                        let track = tr.units[unit][stage];
+                        let dur = clock.cycles() - done.started;
+                        // Only a single-stage replica serves the whole
+                        // design per span, so only it opens into the
+                        // per-layer template.
+                        if units[unit].stages.len() == 1 {
+                            tr.sink.service_span(track, "service", done.started, dur, args);
+                        } else {
+                            tr.sink.span(track, "service", done.started, dur, args);
+                        }
+                    }
                     if last {
                         if units[unit].corrupt_next {
                             // Corrupted completion: discard and re-run the
                             // final stage (shard-pipeline semantics).
                             units[unit].corrupt_next = false;
                             summary.rerun_frames += 1;
+                            if let Some(tr) = tracer.as_mut() {
+                                tr.sink.instant(
+                                    tr.ctrl,
+                                    "rerun",
+                                    clock.cycles(),
+                                    vec![("frame", frame.id.into()), ("unit", unit.into())],
+                                );
+                            }
                             units[unit].stages[stage].queue.push_front(frame);
                         } else {
                             units[unit].served += 1;
@@ -500,14 +656,25 @@ pub fn simulate_fleet(
                                 .sla_ms
                                 .map(|ms| e2e > ms / 1e3)
                                 .unwrap_or(false);
+                            if let Some(tr) = tracer.as_mut() {
+                                tr.sink.instant(
+                                    tr.streams[frame.stream],
+                                    "complete",
+                                    clock.cycles(),
+                                    vec![
+                                        ("frame", frame.id.into()),
+                                        ("e2e_ms", (e2e * 1e3).into()),
+                                    ],
+                                );
+                            }
                             stats[frame.stream].record(e2e, device_s, violation);
                         }
                     } else {
-                        units[unit].stages[stage].blocked = Some(frame);
+                        units[unit].stages[stage].blocked = Some((frame, clock.cycles()));
                     }
                     settle_unit(
                         unit, &mut units[unit], clock.cycles(), &mut heap, &mut seq,
-                        &mut dispatch_counter,
+                        &mut dispatch_counter, tracer.as_mut(),
                     );
                 }
             }
@@ -519,9 +686,17 @@ pub fn simulate_fleet(
                         Health::Up
                     };
                     tracker.mark_up(unit, clock.now());
+                    if let Some(tr) = tracer.as_mut() {
+                        tr.sink.instant(
+                            tr.ctrl,
+                            "unit_up",
+                            clock.cycles(),
+                            vec![("unit", unit.into())],
+                        );
+                    }
                     settle_unit(
                         unit, &mut units[unit], clock.cycles(), &mut heap, &mut seq,
-                        &mut dispatch_counter,
+                        &mut dispatch_counter, tracer.as_mut(),
                     );
                 }
             }
@@ -529,6 +704,16 @@ pub fn simulate_fleet(
                 let fev = &fault_events[index];
                 let u = fev.unit;
                 if u < n_units {
+                    if let Some(tr) = tracer.as_mut() {
+                        let name = match fev.kind {
+                            FaultKind::Crash => "fault_crash",
+                            FaultKind::Recover => "fault_recover",
+                            FaultKind::SlowDown { .. } => "fault_slowdown",
+                            FaultKind::SlowEnd => "fault_slow_end",
+                            FaultKind::Corrupt => "fault_corrupt",
+                        };
+                        tr.sink.instant(tr.ctrl, name, clock.cycles(), vec![("unit", u.into())]);
+                    }
                     match fev.kind {
                         FaultKind::Crash => {
                             if units[u].health != Health::Down {
@@ -539,20 +724,42 @@ pub fn simulate_fleet(
                                 // stage order, and re-route it through the
                                 // balancer on the retry path.
                                 let mut pulled: Vec<Frame> = Vec::new();
-                                for st in units[u].stages.iter_mut() {
+                                for (si, st) in units[u].stages.iter_mut().enumerate() {
                                     if let Some(s) = st.in_service.take() {
+                                        if let Some(tr) = tracer.as_mut() {
+                                            // The crash truncates the
+                                            // in-flight service span.
+                                            tr.sink.span(
+                                                tr.units[u][si],
+                                                "aborted",
+                                                s.started,
+                                                clock.cycles().saturating_sub(s.started),
+                                                vec![("frame", s.frame.id.into())],
+                                            );
+                                        }
                                         pulled.push(s.frame);
                                     }
-                                    if let Some(f) = st.blocked.take() {
+                                    if let Some((f, _)) = st.blocked.take() {
                                         pulled.push(f);
                                     }
                                     pulled.extend(st.queue.drain(..));
                                 }
                                 for frame in pulled {
                                     summary.redispatches += 1;
+                                    if let Some(tr) = tracer.as_mut() {
+                                        tr.sink.instant(
+                                            tr.ctrl,
+                                            "redispatch",
+                                            clock.cycles(),
+                                            vec![
+                                                ("frame", frame.id.into()),
+                                                ("unit", u.into()),
+                                            ],
+                                        );
+                                    }
                                     schedule_retry(
                                         frame, &recovery, &clock, &mut heap, &mut seq,
-                                        &mut stats, &mut summary,
+                                        &mut stats, &mut summary, tracer.as_mut(),
                                     );
                                 }
                                 if spares > 0 {
@@ -560,6 +767,14 @@ pub fn simulate_fleet(
                                     // the unit back up after `swap_s`.
                                     spares -= 1;
                                     summary.hot_swaps += 1;
+                                    if let Some(tr) = tracer.as_mut() {
+                                        tr.sink.instant(
+                                            tr.ctrl,
+                                            "hot_swap",
+                                            clock.cycles(),
+                                            vec![("unit", u.into())],
+                                        );
+                                    }
                                     heap.push(Event {
                                         cycle: clock.cycles()
                                             + clock.seconds_to_cycles(recovery.swap_s).max(1),
@@ -580,7 +795,7 @@ pub fn simulate_fleet(
                                 tracker.mark_up(u, clock.now());
                                 settle_unit(
                                     u, &mut units[u], clock.cycles(), &mut heap, &mut seq,
-                                    &mut dispatch_counter,
+                                    &mut dispatch_counter, tracer.as_mut(),
                                 );
                             }
                         }
@@ -605,9 +820,17 @@ pub fn simulate_fleet(
                 }
             }
             EventKind::Retry { frame } => {
+                if let Some(tr) = tracer.as_mut() {
+                    tr.sink.instant(
+                        tr.ctrl,
+                        "retry",
+                        clock.cycles(),
+                        vec![("frame", frame.id.into()), ("stream", frame.stream.into())],
+                    );
+                }
                 route(
                     frame, true, &mut units, balancer.as_mut(), &mut stats, &clock,
-                    &mut heap, &mut seq, &mut dispatch_counter,
+                    &mut heap, &mut seq, &mut dispatch_counter, tracer.as_mut(),
                 );
             }
         }
@@ -622,11 +845,19 @@ pub fn simulate_fleet(
             if let Some(s) = st.in_service.take() {
                 leftovers.push(s.frame);
             }
-            if let Some(f) = st.blocked.take() {
+            if let Some((f, _)) = st.blocked.take() {
                 leftovers.push(f);
             }
             leftovers.extend(st.queue.drain(..));
             for f in leftovers {
+                if let Some(tr) = tracer.as_mut() {
+                    tr.sink.instant(
+                        tr.ctrl,
+                        "fail",
+                        clock.cycles(),
+                        vec![("frame", f.id.into()), ("stream", f.stream.into())],
+                    );
+                }
                 stats[f.stream].failed += 1;
             }
         }

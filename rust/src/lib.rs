@@ -37,6 +37,7 @@
 //! | [`coordinator`] | serving: bounded queues, multi-stream scheduler, wall/virtual clocks |
 //! | [`fault`] | deterministic fault injection: crash/recover/throttle/corrupt plans, failover, availability accounting |
 //! | [`fleet`] | fleet-scale serving: replica/pipeline topologies, load balancers, trace-driven one-clock simulation |
+//! | [`obs`] | observability: deterministic trace events, metrics registry, Perfetto/flamegraph/timeline exporters |
 //! | [`config`] | TOML/JSON config system for models/devices/targets |
 //!
 //! [`api`] is the front door: a typed facade (`TargetSpec → Session →
@@ -53,6 +54,7 @@ pub mod fault;
 pub mod fleet;
 pub mod hw;
 pub mod model;
+pub mod obs;
 pub mod perf;
 pub mod quant;
 pub mod runtime;

@@ -26,7 +26,16 @@
 //!               [--streams N] [--queue-depth D] [--sla-ms MS]
 //!               [--shard-policy balanced|even|min-latency]
 //!               [--faults plan.json] [--spares N] [--json]
+//! vaqf trace    <serve|shard|fleet> --out DIR [run flags as above]
+//!               # writes trace.json (Perfetto), metrics.json,
+//!               # timeline.txt and folded.txt into DIR
 //! ```
+//!
+//! `serve`, `shard` and `fleet` also take `--metrics-json PATH` (JSON
+//! metrics snapshot of the final report) and — `serve --clock virtual` /
+//! `fleet` only — `--trace-out PATH` (Perfetto trace of the run).
+//! `compile --json` appends a machine-readable summary including the
+//! session's design-space-search statistics.
 //!
 //! Every subcommand is a thin layer over `vaqf::api`: flags feed a
 //! `TargetSpec`, which resolves model/device/backend/threads with one
@@ -39,12 +48,12 @@
 
 use vaqf::api::{
     render_table5, render_table6, table6_rows, FailoverStrategy, FaultPlan, HysteresisConfig,
-    PjrtRuntime, Result, ServeClock, ServeConfig, Session, ShardPolicy, TargetSpec, TraceSpec,
-    VaqfError,
+    MetricsRegistry, PjrtRuntime, Result, ServeClock, ServeConfig, Session, ShardPolicy,
+    TargetSpec, TraceConfig, TraceSpec, VaqfError,
 };
-use vaqf::shard::{simulate_pipeline, simulate_pipeline_faulty};
 use vaqf::model::micro;
 use vaqf::runtime::Manifest;
+use vaqf::shard::{simulate_pipeline, simulate_pipeline_faulty};
 use vaqf::util::cli::Args;
 
 /// Flag-parse failures (non-numeric `--fps` etc.) as typed config errors.
@@ -103,6 +112,20 @@ fn cmd_compile(args: &Args) -> Result<()> {
     if let Some(dir) = args.get("emit-dir") {
         let art = design.codegen(dir)?;
         println!("  emitted {}.cpp and {}.json", art.base, art.base);
+    }
+    if args.has_flag("json") {
+        let j = vaqf::util::json::Json::obj()
+            .set("model", target.model.name.as_str())
+            .set("device", target.device.name.as_str())
+            .set("target_fps", target.target_fps)
+            .set("act_bits", u64::from(out.act_bits))
+            .set("fr_max", out.fr_max)
+            .set("fps", s.fps)
+            .set("gops", s.gops)
+            .set("power_w", s.power_w)
+            .set("compile_seconds", out.compile_seconds)
+            .set("search", session.search_stats().to_json());
+        println!("{}", j.pretty());
     }
     Ok(())
 }
@@ -287,6 +310,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             } else {
                 builder.simulated(args.has_flag("realtime"))
             };
+            if let Some(path) = args.get("metrics-json") {
+                builder = builder.metrics_json(path);
+            }
+            if let Some(path) = args.get("trace-out") {
+                builder = builder.trace(path);
+            }
             let report = builder.run()?;
             println!("{}", report.render());
             if args.has_flag("json") {
@@ -382,10 +411,66 @@ fn cmd_shard(args: &Args) -> Result<()> {
         design: sharded,
     };
     print!("{}", report.render());
+    if let Some(path) = args.get("metrics-json") {
+        let mut reg = MetricsRegistry::new();
+        reg.publish_pipeline(&report.pipeline);
+        std::fs::write(path, reg.to_json().pretty())
+            .map_err(|e| VaqfError::io(path.to_string(), e))?;
+    }
     if args.has_flag("json") {
         println!("{}", report.to_json().pretty());
     }
     Ok(())
+}
+
+/// The `--trace` / `--trace-kind` arrival-trace flags shared by
+/// `vaqf fleet` and `vaqf trace fleet`: a recorded trace file, or a
+/// seeded generator (poisson/diurnal/flash-crowd/on-off). `None` when
+/// neither is given (callers fall back to their default load).
+fn parse_trace_spec(args: &Args) -> Result<Option<TraceSpec>> {
+    if let Some(path) = args.get("trace") {
+        return Ok(Some(TraceSpec::load(path).map_err(cli)?));
+    }
+    if args.get("trace-kind").is_none() && args.get("rate-hz").is_none() {
+        return Ok(None);
+    }
+    let horizon = args.get_f64("horizon-s").map_err(cli)?.unwrap_or(1.0);
+    let seed = args.get_u64("trace-seed").map_err(cli)?.unwrap_or(11);
+    let rate = args.get_f64("rate-hz").map_err(cli)?.unwrap_or(30.0);
+    // Unset shape parameters default to fractions of the horizon, so
+    // `--trace-kind flash-crowd --rate-hz 100` alone is a valid burst.
+    let spec = match args.get_or("trace-kind", "poisson") {
+        "poisson" => TraceSpec::poisson(rate, horizon, seed),
+        "diurnal" => TraceSpec::diurnal(
+            rate,
+            args.get_f64("amplitude-hz").map_err(cli)?.unwrap_or(0.5 * rate),
+            args.get_f64("period-s").map_err(cli)?.unwrap_or(horizon),
+            horizon,
+            seed,
+        ),
+        "flash-crowd" => TraceSpec::flash_crowd(
+            rate,
+            args.get_f64("peak-hz").map_err(cli)?.unwrap_or(4.0 * rate),
+            args.get_f64("at-s").map_err(cli)?.unwrap_or(0.3 * horizon),
+            args.get_f64("ramp-s").map_err(cli)?.unwrap_or(0.05 * horizon),
+            args.get_f64("hold-s").map_err(cli)?.unwrap_or(0.2 * horizon),
+            horizon,
+            seed,
+        ),
+        "on-off" => TraceSpec::on_off(
+            rate,
+            args.get_f64("on-s").map_err(cli)?.unwrap_or(0.1 * horizon),
+            args.get_f64("off-s").map_err(cli)?.unwrap_or(0.1 * horizon),
+            horizon,
+            seed,
+        ),
+        other => {
+            return Err(VaqfError::config(format!(
+                "unknown trace kind `{other}` (poisson|diurnal|flash-crowd|on-off)"
+            )))
+        }
+    };
+    Ok(Some(spec))
 }
 
 /// `vaqf fleet` — carve a board budget into replica / pipeline serving
@@ -420,45 +505,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         })?;
         builder = builder.shard_policy(policy);
     }
-    if let Some(path) = args.get("trace") {
-        builder = builder.trace(TraceSpec::load(path).map_err(cli)?);
-    } else if args.get("trace-kind").is_some() || args.get("rate-hz").is_some() {
-        let horizon = args.get_f64("horizon-s").map_err(cli)?.unwrap_or(1.0);
-        let seed = args.get_u64("trace-seed").map_err(cli)?.unwrap_or(11);
-        let rate = args.get_f64("rate-hz").map_err(cli)?.unwrap_or(30.0);
-        // Unset shape parameters default to fractions of the horizon, so
-        // `--trace-kind flash-crowd --rate-hz 100` alone is a valid burst.
-        let spec = match args.get_or("trace-kind", "poisson") {
-            "poisson" => TraceSpec::poisson(rate, horizon, seed),
-            "diurnal" => TraceSpec::diurnal(
-                rate,
-                args.get_f64("amplitude-hz").map_err(cli)?.unwrap_or(0.5 * rate),
-                args.get_f64("period-s").map_err(cli)?.unwrap_or(horizon),
-                horizon,
-                seed,
-            ),
-            "flash-crowd" => TraceSpec::flash_crowd(
-                rate,
-                args.get_f64("peak-hz").map_err(cli)?.unwrap_or(4.0 * rate),
-                args.get_f64("at-s").map_err(cli)?.unwrap_or(0.3 * horizon),
-                args.get_f64("ramp-s").map_err(cli)?.unwrap_or(0.05 * horizon),
-                args.get_f64("hold-s").map_err(cli)?.unwrap_or(0.2 * horizon),
-                horizon,
-                seed,
-            ),
-            "on-off" => TraceSpec::on_off(
-                rate,
-                args.get_f64("on-s").map_err(cli)?.unwrap_or(0.1 * horizon),
-                args.get_f64("off-s").map_err(cli)?.unwrap_or(0.1 * horizon),
-                horizon,
-                seed,
-            ),
-            other => {
-                return Err(VaqfError::config(format!(
-                    "unknown trace kind `{other}` (poisson|diurnal|flash-crowd|on-off)"
-                )))
-            }
-        };
+    if let Some(spec) = parse_trace_spec(args)? {
         builder = builder.trace(spec);
     }
     if let Some(path) = args.get("faults") {
@@ -468,6 +515,12 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         }
         builder = builder.faults(plan);
     }
+    if let Some(path) = args.get("metrics-json") {
+        builder = builder.metrics_json(path);
+    }
+    if let Some(path) = args.get("trace-out") {
+        builder = builder.trace_out(path);
+    }
     let report = builder.run()?;
     print!("{}", report.render());
     if args.has_flag("json") {
@@ -476,7 +529,122 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     Ok(())
 }
 
-const USAGE: &str = "usage: vaqf <compile|search|report|codegen|simulate|serve|shard|fleet> [--options]
+/// `vaqf trace <serve|shard|fleet>` — run one deterministic
+/// virtual-clock scenario and dump its observability artifacts into
+/// `--out DIR`: `trace.json` (Chrome/Perfetto `trace_event`),
+/// `metrics.json` (counters/gauges/histograms), `timeline.txt` (plain
+/// text, golden-friendly) and `folded.txt` (flamegraph folded stacks).
+/// Every knob is seeded and simulated, so two identical invocations
+/// write byte-identical artifacts — CI diffs them.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("fleet");
+    let out = args.get_or("out", "trace-out");
+    std::fs::create_dir_all(out).map_err(|e| VaqfError::io(out.to_string(), e))?;
+    let session = TargetSpec::from_cli_args(args, "backend")?
+        .default_model(micro())
+        .session()?;
+    let bits = args.get_u64("bits").map_err(cli)?.map(|b| b as u8);
+    let design = match bits {
+        Some(b) => session.compile_for_bits(Some(b))?,
+        None => session.compile()?,
+    };
+    let frames = args.get_u64("frames").map_err(cli)?.unwrap_or(120);
+    let faults = match args.get("faults") {
+        Some(path) => Some(FaultPlan::load(path).map_err(cli)?),
+        None => None,
+    };
+    // Full layer detail multiplies the event count by the layer count;
+    // sample it down by default, the CLI is for whole-run timelines.
+    let cfg = TraceConfig {
+        layer_detail_every: args.get_u64("layer-detail-every").map_err(cli)?.unwrap_or(8),
+        ..TraceConfig::default()
+    };
+
+    let (trace, reg, rendered) = match what {
+        "serve" => {
+            let mut b = design
+                .server()
+                .virtual_clock()
+                .analytic()
+                .streams(args.get_u64("streams").map_err(cli)?.unwrap_or(2) as usize)
+                .workers(args.get_u64("workers").map_err(cli)?.unwrap_or(2) as usize)
+                .policy(args.get_or("policy", "round-robin"))
+                .offered_fps(args.get_f64("fps").map_err(cli)?.unwrap_or(30.0))
+                .frames(frames)
+                .queue_depth(args.get_u64("queue-depth").map_err(cli)?.unwrap_or(2) as usize)
+                .source_seed(args.get_u64("seed").map_err(cli)?.unwrap_or(11))
+                .trace_config(cfg);
+            if let Some(ms) = args.get_f64("sla-ms").map_err(cli)? {
+                b = b.sla_ms(ms);
+            }
+            if let Some(plan) = faults {
+                b = b.faults(plan);
+            }
+            let (report, trace) = b.run_traced()?;
+            let mut reg = MetricsRegistry::new();
+            reg.publish_serving(&report);
+            (trace, reg, report.render())
+        }
+        "shard" => {
+            let shards = args.get_u64("shards").map_err(cli)?.unwrap_or(2) as usize;
+            let sharded = design.shards(shards)?;
+            let (pipeline, trace) = sharded.simulate_pipeline_with_trace(frames, cfg);
+            let mut reg = MetricsRegistry::new();
+            reg.publish_pipeline(&pipeline);
+            let report = vaqf::shard::ShardReport {
+                pipeline,
+                design: sharded,
+            };
+            (trace, reg, report.render())
+        }
+        "fleet" => {
+            let mut b = design
+                .fleet()
+                .boards(args.get_u64("boards").map_err(cli)?.unwrap_or(4) as usize)
+                .topology(args.get_or("topology", "replicated"))
+                .balancer(args.get_or("balancer", "round-robin"))
+                .streams(args.get_u64("streams").map_err(cli)?.unwrap_or(1) as usize)
+                .queue_depth(args.get_u64("queue-depth").map_err(cli)?.unwrap_or(2) as usize)
+                .seed(args.get_u64("seed").map_err(cli)?.unwrap_or(11))
+                .trace_config(cfg);
+            if let Some(ms) = args.get_f64("sla-ms").map_err(cli)? {
+                b = b.sla_ms(ms);
+            }
+            if let Some(spec) = parse_trace_spec(args)? {
+                b = b.trace(spec);
+            }
+            if let Some(plan) = faults {
+                b = b.faults(plan);
+            }
+            let (report, trace) = b.run_traced()?;
+            let mut reg = MetricsRegistry::new();
+            reg.publish_fleet(&report);
+            (trace, reg, report.render())
+        }
+        other => {
+            return Err(VaqfError::config(format!(
+                "unknown trace mode `{other}` (serve|shard|fleet)"
+            )))
+        }
+    };
+    print!("{rendered}");
+    let path = |name: &str| format!("{out}/{name}");
+    trace.save_perfetto(path("trace.json")).map_err(VaqfError::runtime)?;
+    trace.save_timeline(path("timeline.txt")).map_err(VaqfError::runtime)?;
+    trace.save_folded(path("folded.txt")).map_err(VaqfError::runtime)?;
+    std::fs::write(path("metrics.json"), reg.to_json().pretty())
+        .map_err(|e| VaqfError::io(path("metrics.json"), e))?;
+    println!(
+        "wrote {out}/{{trace.json,metrics.json,timeline.txt,folded.txt}} — \
+         {n} events on {t} tracks ({e} evicted)",
+        n = trace.len(),
+        t = trace.tracks.len(),
+        e = trace.evicted,
+    );
+    Ok(())
+}
+
+const USAGE: &str = "usage: vaqf <compile|search|report|codegen|simulate|serve|shard|fleet|trace> [--options]
 see README.md for per-command options";
 
 fn main() {
@@ -491,6 +659,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "shard" => cmd_shard(&args),
         "fleet" => cmd_fleet(&args),
+        "trace" => cmd_trace(&args),
         _ => {
             eprintln!("{USAGE}");
             std::process::exit(2);

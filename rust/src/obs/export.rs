@@ -1,0 +1,276 @@
+//! Trace exporters: Chrome/Perfetto `trace_event` JSON, flamegraph
+//! folded stacks, and a plain-text timeline for goldens.
+//!
+//! All three are pure functions of a [`Trace`] — integer cycles in, the
+//! only floating point being the exact division by the clock rate that
+//! converts cycles to the microsecond timestamps the `trace_event` format
+//! wants — so a deterministic trace exports byte-identically.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::Cycles;
+
+use super::trace::{ArgValue, Trace, TraceEvent, TrackKind};
+
+impl ArgValue {
+    fn to_json(&self) -> Json {
+        match self {
+            ArgValue::U64(v) => Json::from(*v),
+            ArgValue::F64(v) => Json::from(*v),
+            ArgValue::Str(v) => Json::from(v.as_str()),
+        }
+    }
+
+    fn render(&self) -> String {
+        match self {
+            ArgValue::U64(v) => format!("{v}"),
+            ArgValue::F64(v) => format!("{v}"),
+            ArgValue::Str(v) => v.clone(),
+        }
+    }
+}
+
+impl Trace {
+    fn us(&self, cycles: Cycles) -> f64 {
+        // clock_mhz cycles per microsecond, exactly.
+        cycles as f64 / self.clock_mhz as f64
+    }
+
+    /// Chrome/Perfetto `trace_event` JSON: one process per [`TrackKind`],
+    /// one thread per track, `X` (complete) events for spans — nested
+    /// frame→layer by time containment — and thread-scoped `i` instants.
+    /// Load the file in `ui.perfetto.dev` or `chrome://tracing`.
+    pub fn to_perfetto(&self) -> Json {
+        let mut evs: Vec<Json> = Vec::new();
+        let mut pids_seen: Vec<TrackKind> = Vec::new();
+        for t in &self.tracks {
+            if !pids_seen.contains(&t.kind) {
+                pids_seen.push(t.kind);
+                evs.push(
+                    Json::obj()
+                        .set("ph", "M")
+                        .set("pid", t.kind.pid())
+                        .set("name", "process_name")
+                        .set("args", Json::obj().set("name", t.kind.process_name())),
+                );
+                evs.push(
+                    Json::obj()
+                        .set("ph", "M")
+                        .set("pid", t.kind.pid())
+                        .set("name", "process_sort_index")
+                        .set("args", Json::obj().set("sort_index", t.kind.pid())),
+                );
+            }
+        }
+        for (i, t) in self.tracks.iter().enumerate() {
+            let tid = (i + 1) as u64;
+            evs.push(
+                Json::obj()
+                    .set("ph", "M")
+                    .set("pid", t.kind.pid())
+                    .set("tid", tid)
+                    .set("name", "thread_name")
+                    .set("args", Json::obj().set("name", t.name.as_str())),
+            );
+            evs.push(
+                Json::obj()
+                    .set("ph", "M")
+                    .set("pid", t.kind.pid())
+                    .set("tid", tid)
+                    .set("name", "thread_sort_index")
+                    .set("args", Json::obj().set("sort_index", tid)),
+            );
+        }
+        for e in &self.events {
+            let track = &self.tracks[e.track.0];
+            let mut args = Json::obj();
+            for (k, v) in &e.args {
+                args = args.set(k, v.to_json());
+            }
+            let mut j = Json::obj()
+                .set("pid", track.kind.pid())
+                .set("tid", (e.track.0 + 1) as u64)
+                .set("ts", self.us(e.start))
+                .set("name", e.name.as_ref())
+                .set("args", args);
+            j = match e.dur {
+                Some(d) => j.set("ph", "X").set("dur", self.us(d)),
+                None => j.set("ph", "i").set("s", "t"),
+            };
+            evs.push(j);
+        }
+        Json::obj()
+            .set("displayTimeUnit", "ms")
+            .set("traceEvents", Json::Arr(evs))
+            .set(
+                "otherData",
+                Json::obj()
+                    .set("clock_mhz", self.clock_mhz)
+                    .set("evicted_events", self.evicted),
+            )
+    }
+
+    /// Flamegraph folded stacks: one `track;span;nested-span <cycles>`
+    /// line per distinct stack, self-cycles (child time subtracted from
+    /// the parent), sorted by stack path. Feed to `flamegraph.pl` or any
+    /// folded-stack viewer for per-layer cycle aggregation.
+    pub fn to_folded(&self) -> String {
+        let mut agg: BTreeMap<String, u64> = BTreeMap::new();
+        for (ti, track) in self.tracks.iter().enumerate() {
+            // Spans of this track, sorted parent-first: by start, then
+            // longest-duration (a parent fully contains its children).
+            let mut spans: Vec<&TraceEvent> = self
+                .events
+                .iter()
+                .filter(|e| e.track.0 == ti && e.dur.is_some())
+                .collect();
+            spans.sort_by(|a, b| {
+                a.start
+                    .cmp(&b.start)
+                    .then(b.dur.unwrap().cmp(&a.dur.unwrap()))
+            });
+            // (name, end, self_cycles) — nesting by time containment.
+            let mut stack: Vec<(String, Cycles, u64)> = Vec::new();
+            let mut pop = |stack: &mut Vec<(String, Cycles, u64)>,
+                           agg: &mut BTreeMap<String, u64>| {
+                let (name, _, self_c) = stack.pop().expect("pop on non-empty stack");
+                if self_c > 0 {
+                    let mut path = track.name.clone();
+                    for (n, _, _) in stack.iter() {
+                        path.push(';');
+                        path.push_str(n);
+                    }
+                    path.push(';');
+                    path.push_str(&name);
+                    *agg.entry(path).or_insert(0) += self_c;
+                }
+            };
+            for s in spans {
+                let dur = s.dur.unwrap();
+                while stack.last().map(|&(_, end, _)| s.start >= end).unwrap_or(false) {
+                    pop(&mut stack, &mut agg);
+                }
+                if let Some(top) = stack.last_mut() {
+                    top.2 = top.2.saturating_sub(dur);
+                }
+                stack.push((s.name.to_string(), s.start + dur, dur));
+            }
+            while !stack.is_empty() {
+                pop(&mut stack, &mut agg);
+            }
+        }
+        let mut out = String::new();
+        for (path, cycles) in agg {
+            let _ = writeln!(out, "{path} {cycles}");
+        }
+        out
+    }
+
+    /// Plain-text timeline in record order — the golden-friendly dump:
+    /// one line per event, integer cycles only.
+    pub fn to_timeline(&self) -> String {
+        let mut out = format!(
+            "# vaqf trace: {} events, {} tracks, clock {} MHz, {} evicted\n",
+            self.events.len(),
+            self.tracks.len(),
+            self.clock_mhz,
+            self.evicted
+        );
+        for e in &self.events {
+            let track = &self.tracks[e.track.0];
+            let _ = write!(
+                out,
+                "@{:>12} {:<24} {}",
+                e.start,
+                format!("{}/{}", track.kind.process_name(), track.name),
+                e.name
+            );
+            if let Some(d) = e.dur {
+                let _ = write!(out, " dur={d}");
+            }
+            for (k, v) in &e.args {
+                let _ = write!(out, " {k}={}", v.render());
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the Perfetto JSON to `path`.
+    pub fn save_perfetto(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_perfetto().pretty())
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Write the folded-stacks text to `path`.
+    pub fn save_folded(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_folded())
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// Write the plain-text timeline to `path`.
+    pub fn save_timeline(&self, path: impl AsRef<Path>) -> anyhow::Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_timeline())
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::trace::{TraceSink, TrackKind};
+
+    #[test]
+    fn perfetto_export_nests_spans_and_is_deterministic() {
+        let build = || {
+            let mut sink = TraceSink::new(150);
+            let w = sink.track(TrackKind::Worker, "worker 0");
+            let s = sink.track(TrackKind::Stream, "stream 0");
+            sink.set_layer_template(vec![
+                ("embed".to_string(), 30),
+                ("head".to_string(), 70),
+            ]);
+            sink.instant(s, "emit", 10, vec![("frame", 0u64.into())]);
+            sink.service_span(w, "service", 100, 200, vec![("frame", 0u64.into())]);
+            sink.finish()
+        };
+        let a = build().to_perfetto().pretty();
+        let b = build().to_perfetto().pretty();
+        assert_eq!(a, b, "export must be byte-identical across runs");
+        assert!(a.contains("\"ph\": \"X\"") || a.contains("\"ph\":\"X\""));
+        assert!(a.contains("embed") && a.contains("head"));
+        assert!(a.contains("thread_name"));
+    }
+
+    #[test]
+    fn folded_stacks_subtract_child_time() {
+        let mut sink = TraceSink::new(100);
+        let w = sink.track(TrackKind::Worker, "w0");
+        sink.span(w, "service", 0, 100, vec![]);
+        sink.span(w, "embed", 0, 40, vec![]);
+        sink.span(w, "head", 40, 60, vec![]);
+        let folded = sink.finish().to_folded();
+        // service self time is fully attributed to its children.
+        assert!(folded.contains("w0;service;embed 40\n"), "{folded}");
+        assert!(folded.contains("w0;service;head 60\n"), "{folded}");
+        assert!(!folded.contains("w0;service 100"), "{folded}");
+    }
+
+    #[test]
+    fn timeline_lists_every_event() {
+        let mut sink = TraceSink::new(100);
+        let s = sink.track(TrackKind::Stream, "s0");
+        sink.instant(s, "emit", 5, vec![]);
+        sink.span(s, "wait", 5, 12, vec![("frame", 3u64.into())]);
+        let text = sink.finish().to_timeline();
+        assert!(text.contains("emit"));
+        assert!(text.contains("dur=12"));
+        assert!(text.contains("frame=3"));
+        assert_eq!(text.lines().count(), 3);
+    }
+}

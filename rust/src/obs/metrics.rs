@@ -1,0 +1,245 @@
+//! Named counters / gauges / histograms, published by the serving
+//! scheduler, the fleet balancer, the fault trackers and the compiler's
+//! `SearchCtx`, snapshot-exportable as JSON — plus the one canonical
+//! latency-block serializer every report shares.
+//!
+//! The registry is plain data over `BTreeMap`s, so a snapshot serializes
+//! in deterministic key order, like every other report in the crate.
+
+use std::collections::BTreeMap;
+
+use crate::compiler::SearchStats;
+use crate::coordinator::MultiServingReport;
+use crate::fleet::FleetReport;
+use crate::shard::PipelineReport;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// The canonical latency block (`Summary::to_ms_json`) — the single
+/// helper the coordinator, shard and fleet reports all route through, so
+/// every latency object in every report JSON has the same shape.
+pub fn latency_ms(s: &Summary) -> Json {
+    s.to_ms_json()
+}
+
+/// Set the standard `e2e_latency_ms` / `device_latency_ms` pair on a
+/// report object.
+pub fn latency_pair(j: Json, e2e: &Summary, device: &Summary) -> Json {
+    j.set("e2e_latency_ms", latency_ms(e2e))
+        .set("device_latency_ms", latency_ms(device))
+}
+
+/// Division that returns a well-formed 0.0 instead of NaN/∞ when the
+/// denominator is zero — rate fields on empty traces stay finite.
+pub fn rate(num: f64, den: f64) -> f64 {
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// A registry of named metrics. Counters are monotone integers, gauges
+/// are point-in-time floats, histograms are frozen [`Summary`] snapshots
+/// (reusing `util::stats` — the same quantile implementation every
+/// report quotes).
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Summary>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `by` to the counter `name` (creating it at 0).
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Set the gauge `name`.
+    pub fn gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    /// Record the histogram `name` from a frozen summary.
+    pub fn histogram(&mut self, name: &str, summary: &Summary) {
+        self.histograms.insert(name.to_string(), *summary);
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.get(name).copied()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Deterministic JSON snapshot: `{counters, gauges, histograms}` in
+    /// key order; histograms carry the full summary in native units.
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters = counters.set(k, *v);
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &self.gauges {
+            gauges = gauges.set(k, *v);
+        }
+        let mut hists = Json::obj();
+        for (k, s) in &self.histograms {
+            hists = hists.set(
+                k,
+                Json::obj()
+                    .set("n", s.n)
+                    .set("mean", s.mean)
+                    .set("min", s.min)
+                    .set("p50", s.p50)
+                    .set("p95", s.p95)
+                    .set("p99", s.p99)
+                    .set("max", s.max),
+            );
+        }
+        Json::obj()
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", hists)
+    }
+
+    /// Publish a multi-stream serving run: scheduler conservation
+    /// counters, per-worker utilization gauges, latency histograms, and
+    /// the fault tracker's accounting when a plan was attached.
+    pub fn publish_serving(&mut self, r: &MultiServingReport) {
+        let a = &r.aggregate;
+        self.inc("serving.offered", a.offered);
+        self.inc("serving.completed", a.completed);
+        self.inc("serving.dropped", a.dropped);
+        self.inc("serving.failed", a.failed);
+        self.inc("serving.sla_violations", a.sla_violations);
+        self.gauge("serving.achieved_fps", a.achieved_fps);
+        self.gauge("serving.drop_rate", a.drop_rate);
+        self.gauge("serving.elapsed_seconds", r.elapsed_seconds);
+        self.histogram("serving.e2e_latency_s", &a.e2e_latency);
+        self.histogram("serving.device_latency_s", &a.device_latency);
+        for w in &r.workers {
+            self.inc(&format!("serving.worker{}.served", w.worker), w.served);
+            self.gauge(
+                &format!("serving.worker{}.utilization", w.worker),
+                w.utilization,
+            );
+        }
+        if let Some(f) = &r.faults {
+            self.inc("serving.faults.injected_crashes", f.injected_crashes);
+            self.inc("serving.faults.injected_slowdowns", f.injected_slowdowns);
+            self.inc("serving.faults.injected_corruptions", f.injected_corruptions);
+            self.inc("serving.faults.retries", f.retries);
+            self.inc("serving.faults.redispatches", f.redispatches);
+            self.inc("serving.faults.timeouts", f.timeouts);
+            self.inc("serving.faults.corrupted_frames", f.corrupted_frames);
+            self.inc("serving.faults.degraded_frames", f.degraded_frames);
+            self.gauge("serving.faults.availability", f.availability);
+            self.gauge("serving.faults.mttr_s", f.mttr_s);
+        }
+    }
+
+    /// Publish a fleet run: balancer-level conservation, per-unit served
+    /// counters and utilization gauges, and fleet failover accounting.
+    pub fn publish_fleet(&mut self, r: &FleetReport) {
+        let a = &r.aggregate;
+        self.inc("fleet.offered", a.offered);
+        self.inc("fleet.completed", a.completed);
+        self.inc("fleet.dropped", a.dropped);
+        self.inc("fleet.failed", a.failed);
+        self.inc("fleet.sla_violations", a.sla_violations);
+        self.gauge("fleet.achieved_fps", a.achieved_fps);
+        self.gauge("fleet.drop_rate", a.drop_rate);
+        self.gauge("fleet.elapsed_seconds", r.elapsed_seconds);
+        self.histogram("fleet.e2e_latency_s", &a.e2e_latency);
+        for u in &r.units {
+            self.inc(&format!("fleet.unit{}.served", u.unit), u.served);
+            self.gauge(&format!("fleet.unit{}.utilization", u.unit), u.utilization);
+        }
+        if let Some(f) = &r.faults {
+            self.inc("fleet.faults.injected_crashes", f.injected_crashes);
+            self.inc("fleet.faults.injected_slowdowns", f.injected_slowdowns);
+            self.inc("fleet.faults.injected_corruptions", f.injected_corruptions);
+            self.inc("fleet.faults.hot_swaps", f.hot_swaps);
+            self.inc("fleet.faults.redispatches", f.redispatches);
+            self.inc("fleet.faults.retries", f.retries);
+            self.inc("fleet.faults.rerun_frames", f.rerun_frames);
+            self.gauge("fleet.faults.availability", f.availability);
+            self.gauge("fleet.faults.mttr_s", f.mttr_s);
+        }
+    }
+
+    /// Publish a shard-pipeline run: throughput gauges, per-stage
+    /// occupancy, and the failover summary for faulty runs.
+    pub fn publish_pipeline(&mut self, r: &PipelineReport) {
+        self.inc("pipeline.frames", r.frames);
+        self.gauge("pipeline.steady_fps", r.steady_fps);
+        self.gauge("pipeline.overall_fps", r.overall_fps);
+        self.gauge("pipeline.fill_cycles", r.fill_cycles as f64);
+        self.histogram("pipeline.latency_s", &r.latency);
+        for s in &r.stages {
+            self.inc(&format!("pipeline.stage{}.served", s.stage), s.served);
+            self.gauge(&format!("pipeline.stage{}.busy_frac", s.stage), s.busy_frac);
+            self.gauge(
+                &format!("pipeline.stage{}.blocked_frac", s.stage),
+                s.blocked_frac,
+            );
+        }
+        if let Some(f) = &r.faults {
+            self.inc("pipeline.faults.injected_crashes", f.injected_crashes);
+            self.inc("pipeline.faults.hot_swaps", f.hot_swaps);
+            self.inc("pipeline.faults.repartitions", f.repartitions);
+            self.inc("pipeline.faults.rerun_frames", f.rerun_frames);
+            self.gauge("pipeline.faults.availability", f.availability);
+            self.gauge("pipeline.faults.mttr_s", f.mttr_s);
+        }
+    }
+
+    /// Publish the compiler search telemetry from a [`SearchStats`]
+    /// snapshot (a `SearchCtx`'s counters are monotone, so snapshots at
+    /// run boundaries compose).
+    pub fn publish_search(&mut self, s: &SearchStats) {
+        self.inc("search.point_evals", s.point_evals);
+        self.inc("search.point_hits", s.point_hits);
+        self.inc("search.design_hits", s.design_hits);
+        self.inc("search.baseline_hits", s.baseline_hits);
+        self.inc("search.planes_pruned", s.planes_pruned);
+        self.inc("search.classes_deduped", s.classes_deduped);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_is_deterministic_and_typed() {
+        let mut m = MetricsRegistry::new();
+        m.inc("b.count", 2);
+        m.inc("a.count", 1);
+        m.inc("b.count", 3);
+        m.gauge("util", 0.5);
+        m.histogram("lat", &Summary::from(&[1.0, 2.0, 3.0]));
+        let a = m.to_json().pretty();
+        let b = m.to_json().pretty();
+        assert_eq!(a, b);
+        assert_eq!(m.counter("b.count"), Some(5));
+        // BTreeMap order: a.count before b.count.
+        assert!(a.find("a.count").unwrap() < a.find("b.count").unwrap());
+        assert!(a.contains("\"p99\""));
+    }
+
+    #[test]
+    fn rate_guards_zero_denominators() {
+        assert_eq!(rate(5.0, 0.0), 0.0);
+        assert_eq!(rate(5.0, -1.0), 0.0);
+        assert_eq!(rate(6.0, 2.0), 3.0);
+        assert!(rate(0.0, 0.0) == 0.0);
+    }
+}

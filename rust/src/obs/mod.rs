@@ -1,0 +1,41 @@
+//! `vaqf::obs` — deterministic tracing, metrics registry, and
+//! Perfetto-exportable timelines across serving, pipeline, fleet, and
+//! search.
+//!
+//! The paper's whole pitch is cycle *attribution* (Eqs. 7–11 break a
+//! frame into input/weight/output/compute cycles per layer); this module
+//! extends that attribution from a single analytic number to observed
+//! runs. Three pieces:
+//!
+//! * [`TraceSink`] / [`Trace`] — typed span/instant events (frame
+//!   lifecycle emit→enqueue→dispatch→service→complete/drop/retry,
+//!   pipeline stage occupancy and FIFO backpressure stalls, fault
+//!   inject/failover/repartition, search rounds) stamped in integer
+//!   cycles from the shared virtual clock. Virtual-clock traces are
+//!   byte-identical across runs and thread counts; buffering is a
+//!   bounded ring with layer-detail sampling ([`TraceConfig`]) so the
+//!   serving-bench overhead stays under 2%.
+//! * [`MetricsRegistry`] — named counters/gauges/histograms (reusing
+//!   `util::stats::Summary`) that the scheduler, fleet balancer, fault
+//!   trackers and `SearchCtx` publish into; JSON snapshots are
+//!   deterministic.
+//! * Exporters on [`Trace`]: Chrome/Perfetto `trace_event` JSON (one
+//!   track per worker/stage/unit; frame spans nest into the per-layer
+//!   `LayerCycles` breakdown), flamegraph folded stacks, and a
+//!   plain-text timeline for goldens.
+//!
+//! Surfaced as `server().trace(..)` / `fleet().trace_out(..)` /
+//! `ShardedDesign::simulate_pipeline_traced`, the `vaqf trace` CLI
+//! subcommand, and `--metrics-json` on the serving subcommands.
+//!
+//! Disabled tracing is a single `Option` branch per simulator event —
+//! nothing is allocated, sampled or formatted.
+
+mod export;
+mod metrics;
+mod trace;
+
+pub use metrics::{latency_ms, latency_pair, rate, MetricsRegistry};
+pub use trace::{
+    ArgValue, Trace, TraceConfig, TraceEvent, TraceSink, Track, TrackId, TrackKind,
+};

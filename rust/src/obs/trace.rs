@@ -1,0 +1,420 @@
+//! Deterministic trace collection: typed span/instant events stamped in
+//! integer [`Cycles`] from the shared virtual clock.
+//!
+//! The serving scheduler, the shard pipeline and the fleet simulator are
+//! all single-threaded discrete-event loops over `(cycle, seq)`-ordered
+//! heaps, so recording an event at the point the simulation processes it
+//! yields a trace that is a pure function of the scenario — byte-identical
+//! across runs *and* across thread counts (threads only fan out the
+//! compiler search and the executor's inner loops, never the event
+//! order). Timestamps are integer cycles; floating point enters only at
+//! export time, and there as exact divisions by the clock rate.
+//!
+//! Overhead discipline: every instrumented loop holds an
+//! `Option<&mut TraceSink>` — a disabled run pays one branch per event
+//! and allocates nothing. An enabled sink buffers into a bounded ring
+//! ([`TraceConfig::capacity`]): when full, the *oldest* event is evicted
+//! (the tail of a long run is usually the interesting part) and the
+//! eviction is counted, never silent.
+
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+use crate::Cycles;
+
+/// Which exported "process" a track belongs to. Perfetto groups tracks
+/// (threads) under processes; we use one process per subsystem so a
+/// fleet trace reads top-down: traffic → workers → units → control.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrackKind {
+    /// A traffic stream (frame emit / enqueue / drop / complete instants).
+    Stream,
+    /// A scheduler worker (service spans).
+    Worker,
+    /// A fleet serving unit (replica service spans, dispatch instants).
+    Unit,
+    /// A pipeline stage of a sharded unit (service + blocked spans).
+    Stage,
+    /// Control-plane events: faults, failover, retries, search rounds.
+    Control,
+}
+
+impl TrackKind {
+    /// Stable Perfetto pid for the kind's process group.
+    pub fn pid(self) -> u64 {
+        match self {
+            TrackKind::Stream => 1,
+            TrackKind::Worker => 2,
+            TrackKind::Unit => 3,
+            TrackKind::Stage => 4,
+            TrackKind::Control => 5,
+        }
+    }
+
+    pub fn process_name(self) -> &'static str {
+        match self {
+            TrackKind::Stream => "streams",
+            TrackKind::Worker => "workers",
+            TrackKind::Unit => "units",
+            TrackKind::Stage => "stages",
+            TrackKind::Control => "control",
+        }
+    }
+}
+
+/// Handle to a registered track (index into [`Trace::tracks`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrackId(pub(crate) usize);
+
+/// One named timeline in the trace (a Perfetto "thread").
+#[derive(Debug, Clone)]
+pub struct Track {
+    pub kind: TrackKind,
+    pub name: String,
+}
+
+/// A typed event argument. Kept as a tiny enum (not `Json`) so recording
+/// an event never builds a tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgValue {
+    U64(u64),
+    F64(f64),
+    Str(String),
+}
+
+impl From<u64> for ArgValue {
+    fn from(v: u64) -> ArgValue {
+        ArgValue::U64(v)
+    }
+}
+
+impl From<usize> for ArgValue {
+    fn from(v: usize) -> ArgValue {
+        ArgValue::U64(v as u64)
+    }
+}
+
+impl From<u32> for ArgValue {
+    fn from(v: u32) -> ArgValue {
+        ArgValue::U64(u64::from(v))
+    }
+}
+
+impl From<f64> for ArgValue {
+    fn from(v: f64) -> ArgValue {
+        ArgValue::F64(v)
+    }
+}
+
+impl From<&str> for ArgValue {
+    fn from(v: &str) -> ArgValue {
+        ArgValue::Str(v.to_string())
+    }
+}
+
+impl From<String> for ArgValue {
+    fn from(v: String) -> ArgValue {
+        ArgValue::Str(v)
+    }
+}
+
+/// One trace event: an instant (`dur == None`) or a completed span
+/// `[start, start + dur]` on `track`.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub track: TrackId,
+    pub name: Cow<'static, str>,
+    pub start: Cycles,
+    pub dur: Option<Cycles>,
+    pub args: Vec<(&'static str, ArgValue)>,
+}
+
+/// Buffering and sampling controls for a [`TraceSink`].
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    /// Ring capacity in events; the oldest event is evicted (and counted
+    /// in [`Trace::evicted`]) once the buffer is full.
+    pub capacity: usize,
+    /// Emit the nested per-layer breakdown under every `k`-th service
+    /// span (`1` = every frame, `0` = never). Layer detail multiplies the
+    /// event count by the layer count, so long runs sample it down.
+    pub layer_detail_every: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            capacity: 1 << 20,
+            layer_detail_every: 1,
+        }
+    }
+}
+
+/// Collects events during a run; [`TraceSink::finish`] freezes it into a
+/// [`Trace`] for export.
+pub struct TraceSink {
+    clock_mhz: u64,
+    cfg: TraceConfig,
+    tracks: Vec<Track>,
+    events: VecDeque<TraceEvent>,
+    evicted: u64,
+    service_seq: u64,
+    /// Per-frame layer template `(name, cycles)` — the analytic
+    /// `LayerCycles` breakdown a service span opens into.
+    layers: Vec<(String, Cycles)>,
+    layers_total: Cycles,
+}
+
+impl TraceSink {
+    pub fn new(clock_mhz: u64) -> TraceSink {
+        TraceSink::with_config(clock_mhz, TraceConfig::default())
+    }
+
+    pub fn with_config(clock_mhz: u64, cfg: TraceConfig) -> TraceSink {
+        TraceSink {
+            clock_mhz: clock_mhz.max(1),
+            cfg: TraceConfig {
+                capacity: cfg.capacity.max(1),
+                ..cfg
+            },
+            tracks: Vec::new(),
+            events: VecDeque::new(),
+            evicted: 0,
+            service_seq: 0,
+            layers: Vec::new(),
+            layers_total: 0,
+        }
+    }
+
+    pub fn clock_mhz(&self) -> u64 {
+        self.clock_mhz
+    }
+
+    /// Register (or look up) the track `(kind, name)`. Tracks are few and
+    /// registered once per run, so the scan is fine.
+    pub fn track(&mut self, kind: TrackKind, name: &str) -> TrackId {
+        if let Some(i) = self
+            .tracks
+            .iter()
+            .position(|t| t.kind == kind && t.name == name)
+        {
+            return TrackId(i);
+        }
+        self.tracks.push(Track {
+            kind,
+            name: name.to_string(),
+        });
+        TrackId(self.tracks.len() - 1)
+    }
+
+    /// Install the per-frame layer template: `(layer name, cycles)` in
+    /// execution order. Service spans recorded via [`Self::service_span`]
+    /// open into child spans scaled to the span's actual duration.
+    pub fn set_layer_template(&mut self, layers: Vec<(String, Cycles)>) {
+        self.layers_total = layers.iter().map(|(_, c)| *c).sum();
+        self.layers = layers;
+    }
+
+    fn record(&mut self, ev: TraceEvent) {
+        if self.events.len() == self.cfg.capacity {
+            self.events.pop_front();
+            self.evicted += 1;
+        }
+        self.events.push_back(ev);
+    }
+
+    /// Record an instant event at `at`.
+    pub fn instant(
+        &mut self,
+        track: TrackId,
+        name: impl Into<Cow<'static, str>>,
+        at: Cycles,
+        args: Vec<(&'static str, ArgValue)>,
+    ) {
+        self.record(TraceEvent {
+            track,
+            name: name.into(),
+            start: at,
+            dur: None,
+            args,
+        });
+    }
+
+    /// Record a completed span `[start, start + dur]`.
+    pub fn span(
+        &mut self,
+        track: TrackId,
+        name: impl Into<Cow<'static, str>>,
+        start: Cycles,
+        dur: Cycles,
+        args: Vec<(&'static str, ArgValue)>,
+    ) {
+        self.record(TraceEvent {
+            track,
+            name: name.into(),
+            start,
+            dur: Some(dur),
+            args,
+        });
+    }
+
+    /// Record a frame-service span plus (subject to
+    /// [`TraceConfig::layer_detail_every`] sampling) the nested per-layer
+    /// attribution, each layer's sub-span scaled from the template to the
+    /// span's actual duration with exact integer arithmetic.
+    pub fn service_span(
+        &mut self,
+        track: TrackId,
+        name: impl Into<Cow<'static, str>>,
+        start: Cycles,
+        dur: Cycles,
+        args: Vec<(&'static str, ArgValue)>,
+    ) {
+        self.span(track, name, start, dur, args);
+        self.service_seq += 1;
+        let every = self.cfg.layer_detail_every;
+        if every == 0 || self.layers_total == 0 || (self.service_seq - 1) % every != 0 {
+            return;
+        }
+        let total = u128::from(self.layers_total);
+        let mut prefix: u128 = 0;
+        let layers = std::mem::take(&mut self.layers);
+        for (lname, lcycles) in &layers {
+            let c_start = start + (prefix * u128::from(dur) / total) as Cycles;
+            prefix += u128::from(*lcycles);
+            let c_end = start + (prefix * u128::from(dur) / total) as Cycles;
+            self.record(TraceEvent {
+                track,
+                name: Cow::Owned(lname.clone()),
+                start: c_start,
+                dur: Some(c_end - c_start),
+                args: Vec::new(),
+            });
+        }
+        self.layers = layers;
+    }
+
+    /// Freeze into an immutable, exportable [`Trace`].
+    pub fn finish(self) -> Trace {
+        Trace {
+            clock_mhz: self.clock_mhz,
+            tracks: self.tracks,
+            events: self.events.into_iter().collect(),
+            evicted: self.evicted,
+        }
+    }
+}
+
+/// A finished trace: tracks + events in deterministic record order, ready
+/// for the exporters in [`super::export`].
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub clock_mhz: u64,
+    pub tracks: Vec<Track>,
+    pub events: Vec<TraceEvent>,
+    /// Events lost to the ring bound (0 unless the run outgrew
+    /// [`TraceConfig::capacity`]).
+    pub evicted: u64,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events with the given name (ledger cross-checks count lifecycle
+    /// instants against the report's conservation totals).
+    pub fn count(&self, name: &str) -> u64 {
+        self.events.iter().filter(|e| e.name == name).count() as u64
+    }
+
+    /// Event-name histogram in name order.
+    pub fn counts(&self) -> BTreeMap<String, u64> {
+        let mut m = BTreeMap::new();
+        for e in &self.events {
+            *m.entry(e.name.to_string()).or_insert(0u64) += 1;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_bound_evicts_oldest() {
+        let mut sink = TraceSink::with_config(
+            100,
+            TraceConfig {
+                capacity: 3,
+                layer_detail_every: 1,
+            },
+        );
+        let t = sink.track(TrackKind::Stream, "s0");
+        for i in 0..5u64 {
+            sink.instant(t, "emit", i, vec![("frame", i.into())]);
+        }
+        let trace = sink.finish();
+        assert_eq!(trace.len(), 3);
+        assert_eq!(trace.evicted, 2);
+        assert_eq!(trace.events[0].start, 2);
+    }
+
+    #[test]
+    fn layer_template_partitions_the_service_span_exactly() {
+        let mut sink = TraceSink::new(100);
+        let t = sink.track(TrackKind::Worker, "w0");
+        sink.set_layer_template(vec![
+            ("embed".to_string(), 10),
+            ("enc0".to_string(), 25),
+            ("head".to_string(), 5),
+        ]);
+        // A service span whose duration differs from the template total:
+        // the children must tile [start, start+dur] without gaps.
+        sink.service_span(t, "service", 1000, 97, vec![]);
+        let trace = sink.finish();
+        assert_eq!(trace.len(), 4);
+        let kids = &trace.events[1..];
+        assert_eq!(kids[0].start, 1000);
+        let mut end = 1000;
+        for k in kids {
+            assert_eq!(k.start, end, "children tile the parent span");
+            end = k.start + k.dur.unwrap();
+        }
+        assert_eq!(end, 1097);
+    }
+
+    #[test]
+    fn layer_detail_sampling_skips_frames() {
+        let mut sink = TraceSink::with_config(
+            100,
+            TraceConfig {
+                capacity: 1 << 10,
+                layer_detail_every: 2,
+            },
+        );
+        let t = sink.track(TrackKind::Worker, "w0");
+        sink.set_layer_template(vec![("embed".to_string(), 10)]);
+        for i in 0..4u64 {
+            sink.service_span(t, "service", i * 100, 50, vec![]);
+        }
+        // 4 service spans, layer detail on frames 0 and 2 only.
+        assert_eq!(sink.finish().len(), 6);
+    }
+
+    #[test]
+    fn track_registration_dedupes() {
+        let mut sink = TraceSink::new(100);
+        let a = sink.track(TrackKind::Unit, "u0");
+        let b = sink.track(TrackKind::Unit, "u0");
+        let c = sink.track(TrackKind::Stage, "u0");
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -20,6 +20,7 @@ use std::collections::VecDeque;
 
 use crate::coordinator::VirtualClock;
 use crate::fault::{DowntimeTracker, FaultKind, FaultPlan, PipelineFaultSummary};
+use crate::obs::{TraceSink, TrackKind};
 use crate::util::stats::Summary;
 use crate::Cycles;
 
@@ -95,9 +96,32 @@ pub fn simulate_pipeline(
     frames: u64,
     fifo_frames: Option<u64>,
 ) -> PipelineReport {
+    simulate_pipeline_traced(design, frames, fifo_frames, None)
+}
+
+/// [`simulate_pipeline`] with an optional [`TraceSink`]: records frame
+/// emit/complete instants on a `source` track, per-stage service spans,
+/// and a `backpressure` span for every interval a stage held a finished
+/// frame against a full downstream FIFO. The loop is single-threaded on
+/// the virtual clock, so traces are byte-identical across runs.
+pub fn simulate_pipeline_traced(
+    design: &ShardedDesign,
+    frames: u64,
+    fifo_frames: Option<u64>,
+    mut sink: Option<&mut TraceSink>,
+) -> PipelineReport {
     assert!(frames > 0, "simulate at least one frame");
     let clock = VirtualClock::new(design.device.clock_mhz);
     let n = design.shards();
+    let (src_track, stage_tracks) = match sink.as_deref_mut() {
+        Some(s) => (
+            Some(s.track(TrackKind::Stream, "source")),
+            (0..n)
+                .map(|i| Some(s.track(TrackKind::Stage, &format!("stage{i}"))))
+                .collect::<Vec<_>>(),
+        ),
+        None => (None, vec![None; n]),
+    };
     let mut stages: Vec<StageState> = design
         .stages
         .iter()
@@ -128,7 +152,8 @@ pub fn simulate_pipeline(
     let settle = |stages: &mut Vec<StageState>,
                   emitted: &mut u64,
                   emit_cycle: &mut Vec<Cycles>,
-                  now: Cycles| {
+                  now: Cycles,
+                  mut sink: Option<&mut TraceSink>| {
         loop {
             let mut progressed = false;
             for i in (0..n).rev() {
@@ -144,6 +169,17 @@ pub fn simulate_pipeline(
                         stages[i + 1].peak_queue = stages[i + 1].peak_queue.max(occ);
                         stages[i].blocked = None;
                         stages[i].blocked_cycles += now - since;
+                        if let Some(s) = sink.as_deref_mut() {
+                            if now > since {
+                                s.span(
+                                    stage_tracks[i].expect("tracks registered"),
+                                    "backpressure",
+                                    since,
+                                    now - since,
+                                    vec![("frame", frame.into())],
+                                );
+                            }
+                        }
                         progressed = true;
                     }
                 }
@@ -166,6 +202,14 @@ pub fn simulate_pipeline(
                 let occ = stages[0].queue.len();
                 stages[0].peak_queue = stages[0].peak_queue.max(occ);
                 emit_cycle[*emitted as usize] = now;
+                if let Some(s) = sink.as_deref_mut() {
+                    s.instant(
+                        src_track.expect("tracks registered"),
+                        "emit",
+                        now,
+                        vec![("frame", (*emitted).into())],
+                    );
+                }
                 *emitted += 1;
                 progressed = true;
             }
@@ -175,7 +219,7 @@ pub fn simulate_pipeline(
         }
     };
 
-    settle(&mut stages, &mut emitted, &mut emit_cycle, 0);
+    settle(&mut stages, &mut emitted, &mut emit_cycle, 0, sink.as_deref_mut());
     while completed < frames {
         // Next event: the earliest in-flight completion.
         let now = stages
@@ -189,12 +233,32 @@ pub fn simulate_pipeline(
                 if done == now {
                     stages[i].in_service = None;
                     stages[i].served += 1;
+                    if let Some(s) = sink.as_deref_mut() {
+                        // Plain-path service time is exactly the stage's
+                        // service cycles, so the span start is recoverable
+                        // at completion.
+                        s.span(
+                            stage_tracks[i].expect("tracks registered"),
+                            "service",
+                            now - stages[i].service,
+                            stages[i].service,
+                            vec![("frame", frame.into())],
+                        );
+                    }
                     if i + 1 == n {
                         let lat = now - emit_cycle[frame as usize];
                         latencies_s.push(clock.cycles_to_seconds(lat));
                         first_done.get_or_insert(now);
                         last_done = now;
                         completed += 1;
+                        if let Some(s) = sink.as_deref_mut() {
+                            s.instant(
+                                src_track.expect("tracks registered"),
+                                "complete",
+                                now,
+                                vec![("frame", frame.into()), ("latency_cycles", lat.into())],
+                            );
+                        }
                     } else {
                         // Hand off (or block) — settled below.
                         stages[i].blocked = Some((frame, now));
@@ -202,7 +266,7 @@ pub fn simulate_pipeline(
                 }
             }
         }
-        settle(&mut stages, &mut emitted, &mut emit_cycle, now);
+        settle(&mut stages, &mut emitted, &mut emit_cycle, now, sink.as_deref_mut());
     }
 
     let elapsed = last_done.max(1);
@@ -243,6 +307,19 @@ impl ShardedDesign {
     /// with the co-searched FIFO depths.
     pub fn simulate_pipeline(&self, frames: u64) -> PipelineReport {
         simulate_pipeline(self, frames, None)
+    }
+
+    /// [`ShardedDesign::simulate_pipeline`] with tracing: returns the
+    /// report plus the frozen [`crate::obs::Trace`] (stage service +
+    /// backpressure spans, source emit/complete instants).
+    pub fn simulate_pipeline_with_trace(
+        &self,
+        frames: u64,
+        cfg: crate::obs::TraceConfig,
+    ) -> (PipelineReport, crate::obs::Trace) {
+        let mut sink = TraceSink::with_config(self.device.clock_mhz, cfg);
+        let report = simulate_pipeline_traced(self, frames, None, Some(&mut sink));
+        (report, sink.finish())
     }
 }
 
@@ -375,10 +452,33 @@ pub fn simulate_pipeline_faulty(
     plan: &FaultPlan,
     strategy: FailoverStrategy,
 ) -> anyhow::Result<PipelineReport> {
+    simulate_pipeline_faulty_traced(design, frames, fifo_frames, plan, strategy, None)
+}
+
+/// [`simulate_pipeline_faulty`] with an optional [`TraceSink`]. The
+/// faulty path traces the *control plane* — fault injections, hot-swaps,
+/// re-partitions, slot restorations, corrupted-frame re-runs, frame
+/// completions — rather than per-stage spans, because a re-partition
+/// moves stage boundaries mid-run and would orphan the stage tracks.
+pub fn simulate_pipeline_faulty_traced(
+    design: &ShardedDesign,
+    frames: u64,
+    fifo_frames: Option<u64>,
+    plan: &FaultPlan,
+    strategy: FailoverStrategy,
+    mut sink: Option<&mut TraceSink>,
+) -> anyhow::Result<PipelineReport> {
     anyhow::ensure!(frames > 0, "simulate at least one frame");
     let clock = VirtualClock::new(design.device.clock_mhz);
     let recovery = plan.recovery;
     let n0 = design.shards();
+    let (src_track, ctrl_track) = match sink.as_deref_mut() {
+        Some(s) => (
+            Some(s.track(TrackKind::Stream, "source")),
+            Some(s.track(TrackKind::Control, "faults")),
+        ),
+        None => (None, None),
+    };
 
     let make_stages = |d: &ShardedDesign| -> Vec<StageState> {
         d.stages
@@ -466,6 +566,14 @@ pub fn simulate_pipeline_faulty(
                         // on this stage.
                         corrupt_slot[slot] = false;
                         summary.rerun_frames += 1;
+                        if let Some(s) = sink.as_deref_mut() {
+                            s.instant(
+                                ctrl_track.expect("tracks registered"),
+                                "rerun",
+                                now,
+                                vec![("frame", frame.into()), ("slot", slot.into())],
+                            );
+                        }
                         stages[i].queue.push_front(QueuedFrame {
                             id: frame,
                             enqueued_at: now,
@@ -479,6 +587,14 @@ pub fn simulate_pipeline_faulty(
                         first_done.get_or_insert(now);
                         last_done = now;
                         completed += 1;
+                        if let Some(s) = sink.as_deref_mut() {
+                            s.instant(
+                                src_track.expect("tracks registered"),
+                                "complete",
+                                now,
+                                vec![("frame", frame.into()), ("latency_cycles", lat.into())],
+                            );
+                        }
                     } else {
                         stages[i].blocked = Some((frame, now));
                     }
@@ -491,6 +607,14 @@ pub fn simulate_pipeline_faulty(
             if matches!(down_of_slot[slot], Some(t) if t <= now) {
                 down_of_slot[slot] = None;
                 tracker.mark_up(slot, clock.now());
+                if let Some(s) = sink.as_deref_mut() {
+                    s.instant(
+                        ctrl_track.expect("tracks registered"),
+                        "slot_up",
+                        now,
+                        vec![("slot", slot.into())],
+                    );
+                }
             }
         }
 
@@ -500,6 +624,21 @@ pub fn simulate_pipeline_faulty(
             fidx += 1;
             if ev.unit >= n0 {
                 continue; // plan written for a larger fleet
+            }
+            if let Some(s) = sink.as_deref_mut() {
+                let name = match ev.kind {
+                    FaultKind::Crash => "fault_crash",
+                    FaultKind::Recover => "fault_recover",
+                    FaultKind::SlowDown { .. } => "fault_slowdown",
+                    FaultKind::SlowEnd => "fault_slow_end",
+                    FaultKind::Corrupt => "fault_corrupt",
+                };
+                s.instant(
+                    ctrl_track.expect("tracks registered"),
+                    name,
+                    now,
+                    vec![("slot", ev.unit.into())],
+                );
             }
             match ev.kind {
                 FaultKind::Crash => {
@@ -538,6 +677,14 @@ pub fn simulate_pipeline_faulty(
                             * stages[si].queue.len() as u64;
                         let cost = clock.seconds_to_cycles(recovery.swap_s).max(1) + refill;
                         down_of_slot[ev.unit] = Some(now + cost);
+                        if let Some(s) = sink.as_deref_mut() {
+                            s.instant(
+                                ctrl_track.expect("tracks registered"),
+                                "hot_swap",
+                                now,
+                                vec![("slot", ev.unit.into()), ("cost_cycles", cost.into())],
+                            );
+                        }
                     } else {
                         let survivors = stages.len() - 1;
                         anyhow::ensure!(
@@ -589,6 +736,18 @@ pub fn simulate_pipeline_faulty(
                         for &slot in &slot_of_stage {
                             tracker.mark_down(slot, clock.now());
                             down_of_slot[slot] = Some(resume);
+                        }
+                        if let Some(s) = sink.as_deref_mut() {
+                            s.instant(
+                                ctrl_track.expect("tracks registered"),
+                                "repartition",
+                                now,
+                                vec![
+                                    ("lost_slot", ev.unit.into()),
+                                    ("stages", survivors.into()),
+                                    ("replayed", backlog.len().into()),
+                                ],
+                            );
                         }
                     }
                 }

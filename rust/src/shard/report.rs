@@ -1,6 +1,7 @@
 //! Rendering for sharded designs: human-readable table + deterministic
 //! JSON (golden-snapshotted in `rust/tests/golden_files.rs`).
 
+use crate::obs::latency_ms;
 use crate::util::json::Json;
 
 use super::cosearch::{ShardStage, ShardedDesign};
@@ -112,7 +113,7 @@ impl ShardReport {
             .set("frames", p.frames)
             .set("fill_ms", d.device.cycles_to_seconds(p.fill_cycles) * 1e3)
             .set("elapsed_ms", d.device.cycles_to_seconds(p.elapsed_cycles) * 1e3)
-            .set("latency_ms", p.latency.to_ms_json())
+            .set("latency_ms", latency_ms(&p.latency))
             .set(
                 "occupancy",
                 Json::Arr(

@@ -135,6 +135,35 @@ fn golden_serving_report_faults_micro_w1a8() {
 }
 
 #[test]
+fn golden_trace_micro_serving() {
+    // The exported Perfetto trace (and its plain-text timeline) of a
+    // small virtual-clock serving run: integer-cycle timestamps and
+    // deterministic event order make both exports pure functions of the
+    // configuration, so they pin byte-exact.
+    let design = micro_session()
+        .compile_for_bits(Some(8))
+        .expect("micro W1A8 compiles on zcu102");
+    let (_, trace) = design
+        .server()
+        .streams(2)
+        .workers(2)
+        .policy("round-robin")
+        .offered_fps(150.0)
+        .frames(10)
+        .queue_depth(2)
+        .analytic()
+        .virtual_clock()
+        .trace_config(vaqf::api::TraceConfig {
+            layer_detail_every: 4,
+            ..Default::default()
+        })
+        .run_traced()
+        .expect("traced serving run completes");
+    check_golden("trace_micro_serving.json", &trace.to_perfetto().pretty());
+    check_golden("trace_micro_serving_timeline.txt", &trace.to_timeline());
+}
+
+#[test]
 fn golden_shard_report_faults_micro_w1a8() {
     let design = micro_session()
         .compile_for_bits(Some(8))

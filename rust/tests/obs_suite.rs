@@ -1,0 +1,286 @@
+//! Observability suite: trace determinism, ledger cross-checks and the
+//! zero-overhead-when-disabled contract of `vaqf::obs`.
+//!
+//! The load-bearing property is *byte-identical traces*: every traced
+//! simulator is a single-threaded discrete-event loop on the virtual
+//! clock, so the exported Perfetto JSON must be a pure function of the
+//! scenario — across repeated runs AND across executor thread counts
+//! (threads parallelize the design-space search and kernel inner loops,
+//! never event order).
+
+use vaqf::api::{FaultPlan, RecoveryConfig, TargetSpec, Trace, TraceConfig};
+use vaqf::fleet::{FleetTopology, TraceSpec};
+
+fn micro_design(threads: usize) -> vaqf::api::CompiledDesign {
+    TargetSpec::new()
+        .model(vaqf::model::micro())
+        .device_preset("zcu102")
+        .target_fps(100.0)
+        .threads(threads)
+        .session()
+        .expect("micro session resolves")
+        .compile_for_bits(Some(8))
+        .expect("micro W1A8 compiles on zcu102")
+}
+
+/// The determinism workout: a flash-crowd burst over a mixed
+/// replica + pipeline fleet, with a mid-burst crash and spare failover.
+fn fleet_trace(threads: usize) -> (vaqf::api::FleetReport, Trace) {
+    let design = micro_design(threads);
+    let base = design.frame_latency_s();
+    let trace = TraceSpec::flash_crowd(
+        1.0 / base,
+        8.0 / base,
+        60.0 * base,
+        10.0 * base,
+        40.0 * base,
+        200.0 * base,
+        13,
+    );
+    let plan = FaultPlan::new().crash_at(70.0 * base, 0).recovery(RecoveryConfig {
+        spares: 1,
+        swap_s: 2.0 * base,
+        ..Default::default()
+    });
+    design
+        .fleet()
+        .layout(FleetTopology::new().replicas(2).pipeline(2))
+        .balancer("sla-weighted")
+        .streams(2)
+        .sla_ms(6.0 * base * 1e3)
+        .trace(trace)
+        .faults(plan)
+        .run_traced()
+        .expect("fleet run completes")
+}
+
+#[test]
+fn fleet_trace_is_byte_identical_across_runs_and_threads() {
+    let (r1, t1) = fleet_trace(1);
+    let (r2, t2) = fleet_trace(1);
+    let base = t1.to_perfetto().pretty();
+    assert!(!t1.is_empty(), "the scenario produces events");
+    assert_eq!(
+        base,
+        t2.to_perfetto().pretty(),
+        "two identical runs must export byte-identical traces"
+    );
+    assert_eq!(r1.to_json().pretty(), r2.to_json().pretty());
+    for threads in [2usize, 8] {
+        let (_, t) = fleet_trace(threads);
+        assert_eq!(
+            base,
+            t.to_perfetto().pretty(),
+            "trace must not depend on the thread budget ({threads} threads)"
+        );
+    }
+}
+
+#[test]
+fn fleet_trace_ledger_matches_report() {
+    let (report, trace) = fleet_trace(1);
+    let a = &report.aggregate;
+    assert_eq!(trace.count("emit"), a.offered, "one emit per offered frame");
+    assert_eq!(trace.count("complete"), a.completed);
+    assert_eq!(trace.count("drop"), a.dropped);
+    assert_eq!(trace.count("fail"), a.failed);
+    assert_eq!(
+        a.offered,
+        a.completed + a.dropped + a.failed,
+        "frame conservation"
+    );
+    // The crash actually showed up on the control track.
+    assert_eq!(trace.count("fault_crash"), 1);
+    assert!(trace.count("service") > 0, "replica service spans recorded");
+}
+
+#[test]
+fn serving_trace_ledger_matches_report() {
+    let design = micro_design(1);
+    let base = design.frame_latency_s();
+    let plan = FaultPlan::new()
+        .crash_at(0.01, 0)
+        .recover_at(0.05, 0)
+        .slow_down_at(0.03, 1, 3.0)
+        .slow_end_at(0.08, 1)
+        .corrupt_at(0.06, 1);
+    let (report, trace) = design
+        .server()
+        .streams(2)
+        .workers(2)
+        .policy("weighted-sla")
+        .offered_fps(200.0)
+        .frames(25)
+        .queue_depth(4)
+        .sla_ms(base * 2.0 * 1e3)
+        .analytic()
+        .virtual_clock()
+        .faults(plan)
+        .run_traced()
+        .expect("fault-injected serving run completes");
+    let a = &report.aggregate;
+    assert_eq!(trace.count("emit"), a.offered);
+    assert_eq!(trace.count("complete"), a.completed);
+    assert_eq!(trace.count("drop"), a.dropped);
+    assert_eq!(trace.count("fail"), a.failed);
+    assert_eq!(a.offered, a.completed + a.dropped + a.failed);
+    assert_eq!(trace.count("fault_crash"), 1);
+    assert_eq!(trace.count("corrupt_detected"), 1);
+}
+
+#[test]
+fn serving_trace_is_byte_identical_across_runs() {
+    let run = || {
+        let design = micro_design(1);
+        design
+            .server()
+            .streams(3)
+            .workers(2)
+            .policy("least-loaded")
+            .offered_fps(300.0)
+            .frames(40)
+            .queue_depth(2)
+            .analytic()
+            .virtual_clock()
+            .run_traced()
+            .expect("serving run completes")
+    };
+    let (_, t1) = run();
+    let (_, t2) = run();
+    assert!(!t1.is_empty());
+    assert_eq!(t1.to_perfetto().pretty(), t2.to_perfetto().pretty());
+    assert_eq!(t1.to_timeline(), t2.to_timeline());
+    assert_eq!(t1.to_folded(), t2.to_folded());
+}
+
+#[test]
+fn service_spans_nest_into_the_layer_template() {
+    let design = micro_design(1);
+    let layers = design.layer_template();
+    assert!(!layers.is_empty(), "micro model has layers");
+    let (_, trace) = design
+        .server()
+        .streams(1)
+        .workers(1)
+        .offered_fps(100.0)
+        .frames(5)
+        .analytic()
+        .virtual_clock()
+        .trace_config(TraceConfig {
+            layer_detail_every: 1,
+            ..TraceConfig::default()
+        })
+        .run_traced()
+        .expect("serving run completes");
+    let services = trace.count("service");
+    assert!(services > 0);
+    // Every service span opened into one child span per model layer.
+    let first_layer = layers[0].0.as_str();
+    assert_eq!(trace.count(first_layer), services);
+    // And sampling turns them off without touching the parent spans.
+    let (_, sampled) = design
+        .server()
+        .streams(1)
+        .workers(1)
+        .offered_fps(100.0)
+        .frames(5)
+        .analytic()
+        .virtual_clock()
+        .trace_config(TraceConfig {
+            layer_detail_every: 0,
+            ..TraceConfig::default()
+        })
+        .run_traced()
+        .expect("serving run completes");
+    assert_eq!(sampled.count("service"), services);
+    assert_eq!(sampled.count(first_layer), 0);
+}
+
+#[test]
+fn tracing_does_not_change_the_report() {
+    let design = micro_design(1);
+    let build = || {
+        design
+            .server()
+            .streams(2)
+            .workers(2)
+            .offered_fps(250.0)
+            .frames(30)
+            .queue_depth(2)
+            .analytic()
+            .virtual_clock()
+    };
+    let plain = build().run().expect("plain run completes");
+    let (traced, _) = build().run_traced().expect("traced run completes");
+    assert_eq!(plain.to_json().pretty(), traced.to_json().pretty());
+}
+
+#[test]
+fn run_traced_rejects_the_wall_clock() {
+    let design = micro_design(1);
+    let err = design
+        .server()
+        .frames(1)
+        .analytic()
+        .run_traced()
+        .expect_err("tracing under the wall clock is a config error");
+    assert!(
+        err.to_string().contains("virtual_clock"),
+        "error should point at .virtual_clock(): {err}"
+    );
+}
+
+#[test]
+fn empty_run_is_a_well_formed_zero_report() {
+    // Zero offered frames: every rate field must be a finite zero, not
+    // NaN, and the trace must be empty of lifecycle events.
+    let design = micro_design(1);
+    let (report, trace) = design
+        .server()
+        .streams(1)
+        .workers(1)
+        .offered_fps(30.0)
+        .frames(0)
+        .analytic()
+        .virtual_clock()
+        .run_traced()
+        .expect("empty run completes");
+    let a = &report.aggregate;
+    assert_eq!(a.offered, 0);
+    assert_eq!(a.drop_rate, 0.0);
+    assert!(a.drop_rate.is_finite() && a.achieved_fps.is_finite());
+    for s in &report.streams {
+        assert!(s.drop_rate.is_finite());
+    }
+    assert_eq!(trace.count("emit"), 0);
+}
+
+#[test]
+fn sharded_pipeline_trace_counts_match_the_report() {
+    let design = micro_design(1);
+    let sharded = design.shards(2).expect("micro splits across 2 shards");
+    let frames = 32;
+    let (report, trace) = sharded.simulate_pipeline_with_trace(frames, TraceConfig::default());
+    assert_eq!(report.frames, frames);
+    assert_eq!(trace.count("emit"), frames);
+    assert_eq!(trace.count("complete"), frames);
+    // One service span per frame per stage.
+    assert_eq!(trace.count("service"), frames * sharded.shards() as u64);
+    // Deterministic too.
+    let (_, again) = sharded.simulate_pipeline_with_trace(frames, TraceConfig::default());
+    assert_eq!(trace.to_perfetto().pretty(), again.to_perfetto().pretty());
+}
+
+#[test]
+fn metrics_registry_snapshots_the_fleet_run() {
+    let (report, _) = fleet_trace(1);
+    let mut reg = vaqf::api::MetricsRegistry::new();
+    reg.publish_fleet(&report);
+    let json = reg.to_json().pretty();
+    assert!(json.contains("offered"), "snapshot carries counters: {json}");
+    assert_eq!(
+        reg.counter("fleet.offered"),
+        Some(report.aggregate.offered),
+        "published counter mirrors the report"
+    );
+}
